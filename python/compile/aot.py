@@ -1,0 +1,144 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts per model variant m in {mlp,cnn} x {digits,cifar}:
+    init_<m>.hlo.txt    (seed)                      -> params
+    train_<m>.hlo.txt   (params, xs, ys, lr)        -> (params', mean_loss)
+    eval_<m>.hlo.txt    (params, x, y)              -> (correct, loss_sum)
+    agg_<m>.hlo.txt     (models_ext[N+1,D], coeffs) -> params        (Eq. 14)
+    dist_<m>.hlo.txt    (models[N,D], ref)          -> divergences   (IV-C1)
+
+plus `manifest.txt`, the machine-readable registry the Rust runtime
+parses (shapes, dtypes, tuple arity, training geometry).
+
+Run via `make artifacts`:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Training geometry (paper Table I scaled — see DESIGN.md §5): J local
+# SGD steps of batch b per dispatch; eval streams in chunks of EVAL_B.
+LOCAL_STEPS = 10
+BATCH = 32
+EVAL_B = 256
+# Aggregation slab: previous global model + up to N_SATS local models.
+N_SATS = 40
+
+VARIANTS = [(k, d) for k in ("mlp", "cnn") for d in ("digits", "cifar")]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return f"{dtype}[{','.join(str(s) for s in shape)}]"
+
+
+def _lower(fn, args):
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build_all(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    manifest.append(f"config local_steps={LOCAL_STEPS} batch={BATCH} "
+                    f"eval_batch={EVAL_B} n_sats={N_SATS}")
+
+    f32 = jnp.float32
+    for kind, dataset in VARIANTS:
+        name = f"{kind}_{dataset}"
+        ds = model.DATASETS[dataset]
+        feat = ds["h"] * ds["w"] * ds["c"]
+        k = ds["classes"]
+        dim = model.param_dim(kind, dataset)
+        s = LOCAL_STEPS * BATCH
+
+        jobs = {
+            f"init_{name}": (
+                model.make_init_fn(kind, dataset),
+                [jax.ShapeDtypeStruct((), jnp.int32)],
+                [_spec((), "i32")],
+                [_spec((dim,))],
+            ),
+            f"train_{name}": (
+                model.make_train_fn(kind, dataset, LOCAL_STEPS, BATCH),
+                [
+                    jax.ShapeDtypeStruct((dim,), f32),
+                    jax.ShapeDtypeStruct((s, feat), f32),
+                    jax.ShapeDtypeStruct((s, k), f32),
+                    jax.ShapeDtypeStruct((), f32),
+                ],
+                [_spec((dim,)), _spec((s, feat)), _spec((s, k)), _spec(())],
+                [_spec((dim,)), _spec(())],
+            ),
+            f"eval_{name}": (
+                model.make_eval_fn(kind, dataset),
+                [
+                    jax.ShapeDtypeStruct((dim,), f32),
+                    jax.ShapeDtypeStruct((EVAL_B, feat), f32),
+                    jax.ShapeDtypeStruct((EVAL_B, k), f32),
+                ],
+                [_spec((dim,)), _spec((EVAL_B, feat)), _spec((EVAL_B, k))],
+                [_spec(()), _spec(())],
+            ),
+            f"agg_{name}": (
+                model.make_agg_fn(N_SATS + 1, dim),
+                [
+                    jax.ShapeDtypeStruct((N_SATS + 1, dim), f32),
+                    jax.ShapeDtypeStruct((N_SATS + 1,), f32),
+                ],
+                [_spec((N_SATS + 1, dim)), _spec((N_SATS + 1,))],
+                [_spec((dim,))],
+            ),
+            f"dist_{name}": (
+                model.make_dist_fn(N_SATS, dim),
+                [
+                    jax.ShapeDtypeStruct((N_SATS, dim), f32),
+                    jax.ShapeDtypeStruct((dim,), f32),
+                ],
+                [_spec((N_SATS, dim)), _spec((dim,))],
+                [_spec((N_SATS,))],
+            ),
+        }
+        manifest.append(f"model {name} dim={dim} feat={feat} classes={k}")
+        for art_name, (fn, args, in_specs, out_specs) in jobs.items():
+            path = os.path.join(out_dir, f"{art_name}.hlo.txt")
+            text = _lower(fn, args)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(
+                f"artifact {art_name} file={art_name}.hlo.txt "
+                f"in={';'.join(in_specs)} out={';'.join(out_specs)}"
+            )
+            print(f"  wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir}/manifest.txt ({len(manifest)} entries)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: staleness-discounted model aggregation (Eq. 14).
+
+    w^{beta+1}[d] = coeffs[0] * w^beta[d] + sum_n coeffs[n] * w_n[d]
+
+which we express as a single matvec over an extended model slab
+models_ext[N+1, D] whose row 0 is the previous global model. The Rust
+coordinator computes `coeffs` from the grouping + staleness metadata
+(Eq. 13) and calls this compiled artifact on its aggregation hot path —
+this is the parameter-server (sink-HAP) compute of the paper.
+
+TPU mapping: the parameter axis D streams through VMEM in TILE_D-wide
+slabs while the (small, N+1 ≤ 41) model axis stays resident; one grid
+step touches (N+1)·TILE_D + TILE_D floats ≈ 41·2048·4 B ≈ 336 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_D = 2048
+
+
+def _agg_kernel(m_ref, c_ref, o_ref):
+    # [N+1, TD] slab · [N+1] coeffs -> [TD]
+    o_ref[...] = jnp.einsum(
+        "n,nd->d", c_ref[...], m_ref[...],
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def aggregate(models_ext, coeffs, tile_d=DEFAULT_TILE_D, interpret=True):
+    """models_ext: [N+1, D], coeffs: [N+1] -> [D] weighted sum."""
+    n1, d = models_ext.shape
+    assert coeffs.shape == (n1,)
+    td = min(tile_d, d)
+    dp = (d + td - 1) // td * td
+    mp = jnp.pad(models_ext, ((0, 0), (0, dp - d)))
+    out = pl.pallas_call(
+        _agg_kernel,
+        out_shape=jax.ShapeDtypeStruct((dp,), models_ext.dtype),
+        grid=(dp // td,),
+        in_specs=[
+            pl.BlockSpec((n1, td), lambda i: (0, i)),
+            pl.BlockSpec((n1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((td,), lambda i: (i,)),
+        interpret=interpret,
+    )(mp, coeffs)
+    return out[:d]
+
+
+def vmem_bytes(n1, tile_d=DEFAULT_TILE_D, dtype_bytes=4):
+    """Static VMEM footprint estimate for one grid step (perf model)."""
+    return dtype_bytes * (n1 * tile_d + n1 + tile_d)

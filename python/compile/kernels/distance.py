@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: batched model weight-divergence (grouping metric).
+
+    dist[n] = || models[n, :] - ref[:] ||_2
+
+Used by the sink HAP for satellite grouping (paper Sec. IV-C1): orbit
+partial models are compared against the initial global model w^0 and
+orbits with similar divergence are grouped together.
+
+TPU mapping: sequential-grid reduction — the D axis streams in TILE_D
+slabs; the [N] partial sum-of-squares accumulates in the output ref
+across grid steps (all steps map to the same output block), initialised
+at step 0 with `pl.when`. The sqrt is applied on the final grid step so
+the artifact's output is directly the Euclidean distance.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_D = 2048
+
+
+def _dist_kernel(m_ref, r_ref, o_ref, *, nsteps):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    diff = m_ref[...] - r_ref[...][None, :]
+    o_ref[...] += jnp.sum(diff * diff, axis=1).astype(o_ref.dtype)
+
+    @pl.when(pl.program_id(0) == nsteps - 1)
+    def _finish():
+        o_ref[...] = jnp.sqrt(o_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def distance(models, ref, tile_d=DEFAULT_TILE_D, interpret=True):
+    """models: [N, D], ref: [D] -> [N] Euclidean distances."""
+    n, d = models.shape
+    assert ref.shape == (d,)
+    td = min(tile_d, d)
+    dp = (d + td - 1) // td * td
+    mp = jnp.pad(models, ((0, 0), (0, dp - d)))
+    rp = jnp.pad(ref, (0, dp - d))
+    nsteps = dp // td
+    return pl.pallas_call(
+        functools.partial(_dist_kernel, nsteps=nsteps),
+        out_shape=jax.ShapeDtypeStruct((n,), models.dtype),
+        grid=(nsteps,),
+        in_specs=[
+            pl.BlockSpec((n, td), lambda i: (0, i)),
+            pl.BlockSpec((td,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),
+        interpret=interpret,
+    )(mp, rp)
+
+
+def vmem_bytes(n, tile_d=DEFAULT_TILE_D, dtype_bytes=4):
+    """Static VMEM footprint estimate for one grid step (perf model)."""
+    return dtype_bytes * (n * tile_d + tile_d + n)

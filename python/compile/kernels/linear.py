@@ -1,0 +1,136 @@
+"""L1 Pallas kernel: fused linear layer  o = act(x @ W + b).
+
+This is the compute hot-spot of every satellite's on-board training step
+(the dense layers of the MLP and the CNN head), and it dominates the
+FLOPs of both the forward and — through its transposes — the backward
+pass that `jax.grad` derives from it.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the
+output into (BM, BN) blocks targeted at the MXU systolic array; each grid
+step keeps one x-slab [BM, K], one W-panel [K, BN] and the accumulator
+[BM, BN] resident in VMEM. For the model sizes in this repo
+(K ≤ 3136) the full contraction axis fits comfortably in VMEM
+(BM·K + K·BN + BM·BN ≈ 32·3136 + 3136·128 + 32·128 floats ≈ 2.0 MiB ≪
+16 MiB), so K is not tiled; the BlockSpec index maps express the
+HBM↔VMEM schedule that a CUDA implementation would express with
+threadblocks.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact executes on the Rust side. Real-TPU VMEM/MXU estimates live in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shape: BM matches the training mini-batch (32); BN is an
+# MXU-friendly 128 multiple (the hidden width). Both are overridable for
+# the hypothesis sweep in python/tests/.
+DEFAULT_BM = 32
+DEFAULT_BN = 128
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    """One (BM, BN) output block: full-K contraction in VMEM."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _pad_to(n, mult):
+    return (n + mult - 1) // mult * mult
+
+
+def _fused_linear_impl(x, w, b, activation, bm, bn, interpret):
+    """Fused act(x @ w + b) via a tiled Pallas kernel.
+
+    x: [M, K], w: [K, N], b: [N]. Arbitrary M, N: inputs are zero-padded
+    to the block grid and the result sliced back (zero columns of W and
+    zero rows of x contribute zeros, so padding is exact for both
+    activations).
+    """
+    if activation not in ("relu", "none"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+
+    bm_eff = min(bm, _pad_to(m, 8))
+    bn_eff = min(bn, _pad_to(n, 8))
+    mp, np_ = _pad_to(m, bm_eff), _pad_to(n, bn_eff)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+
+    grid = (mp // bm_eff, np_ // bn_eff)
+    out = pl.pallas_call(
+        functools.partial(_linear_kernel, activation=activation),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_eff, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn_eff), lambda i, j: (0, j)),
+            pl.BlockSpec((bn_eff,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_eff, bn_eff), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+# ----------------------------------------------------------------------
+# Autodiff: Pallas calls have no built-in VJP, so we define one whose
+# backward matmuls (dx = g·Wᵀ, dW = xᵀ·g) ALSO route through the kernel —
+# the backward pass of on-board training is the other half of the
+# hot-spot FLOPs.
+# ----------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _fused_linear(x, w, b, activation, bm, bn, interpret):
+    return _fused_linear_impl(x, w, b, activation, bm, bn, interpret)
+
+
+def _fused_linear_fwd(x, w, b, activation, bm, bn, interpret):
+    o = _fused_linear_impl(x, w, b, activation, bm, bn, interpret)
+    # For relu the mask (o > 0) is all we need; keep o as the residual.
+    res = (x, w, o if activation == "relu" else None)
+    return o, res
+
+
+def _fused_linear_bwd(activation, bm, bn, interpret, res, g):
+    x, w, o = res
+    if activation == "relu":
+        g = g * (o > 0.0).astype(g.dtype)
+    k = x.shape[1]
+    n = w.shape[1]
+    zk = jnp.zeros((k,), g.dtype)
+    zn = jnp.zeros((n,), g.dtype)
+    dx = _fused_linear_impl(g, w.T, zk, "none", bm, bn, interpret)
+    dw = _fused_linear_impl(x.T, g, zn, "none", bm, bn, interpret)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+_fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bn", "interpret")
+)
+def fused_linear(x, w, b, activation="relu", bm=DEFAULT_BM, bn=DEFAULT_BN,
+                 interpret=True):
+    """Differentiable fused act(x @ w + b). See `_fused_linear_impl`."""
+    return _fused_linear(x, w, b, activation, bm, bn, interpret)
+
+
+def vmem_bytes(m, k, n, bm=DEFAULT_BM, bn=DEFAULT_BN, dtype_bytes=4):
+    """Static VMEM footprint estimate for one grid step (perf model)."""
+    del m
+    return dtype_bytes * (bm * k + k * bn + bn + bm * bn)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has an entry here with the *same signature*;
+pytest (python/tests/) asserts allclose between kernel and oracle across a
+hypothesis sweep of shapes and dtypes. The oracles are also what the L2
+model would use if the Pallas path were disabled, so they double as the
+semantic spec.
+"""
+
+import jax.numpy as jnp
+
+
+def fused_linear_ref(x, w, b, activation="relu"):
+    """o = act(x @ w + b).
+
+    x: [M, K] float, w: [K, N], b: [N].
+    activation: "relu" | "none".
+    """
+    o = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        o = jnp.maximum(o, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return o.astype(x.dtype)
+
+
+def aggregate_ref(models_ext, coeffs):
+    """Staleness-discounted model aggregation (paper Eq. 14).
+
+    models_ext: [N+1, D] — row 0 is the previous global model w^beta,
+        rows 1..N are the selected local models.
+    coeffs: [N+1] — coeffs[0] = (1 - gamma), coeffs[1:] = per-model
+        discounted weights gamma_n (zero for excluded models).
+    Returns [D]: sum_n coeffs[n] * models_ext[n].
+    """
+    return jnp.einsum("n,nd->d", coeffs, models_ext).astype(models_ext.dtype)
+
+
+def distance_ref(models, ref):
+    """Weight divergence used for satellite grouping (paper Sec. IV-C1).
+
+    models: [N, D] local (or orbit-partial) models, ref: [D] the initial
+    global model w^0. Returns [N] Euclidean distances ||w_n - w^0||_2.
+    """
+    diff = models - ref[None, :]
+    return jnp.sqrt(jnp.sum(diff * diff, axis=1)).astype(models.dtype)

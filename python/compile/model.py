@@ -1,0 +1,252 @@
+"""L2: the satellites' on-board compute graphs, in JAX.
+
+Defines the two paper models (CNN and MLP, Sec. V-A) over the two
+dataset geometries (digits 28x28x1, cifar 32x32x3), with:
+
+  * flat-parameter packing — the Rust coordinator only ever sees a
+    single f32[D] vector per model, which makes model relay, grouping
+    distances and aggregation trivial buffer operations on L3;
+  * a `lax.scan`-folded local-SGD train step (J mini-batch steps per
+    dispatch) so one PJRT execute == one on-board training visit;
+  * an eval step returning (correct_count, loss_sum) partial sums so L3
+    can stream the test set through fixed-size chunks.
+
+All dense layers go through the L1 Pallas kernel
+(`kernels.linear.fused_linear`); convolutions are lowered to im2col +
+the same Pallas kernel (see `_im2col3`), so every matmul FLOP of the
+forward AND backward pass runs on L1.
+
+This module is build-time only: `aot.py` lowers everything to HLO text
+and Python never runs at L3.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.linear import fused_linear
+
+# ----------------------------------------------------------------------
+# Model specs
+# ----------------------------------------------------------------------
+
+DATASETS = {
+    "digits": dict(h=28, w=28, c=1, classes=10),
+    "cifar": dict(h=32, w=32, c=3, classes=10),
+}
+
+HIDDEN = 128
+CONV1, CONV2 = 8, 16
+POOL = 4
+
+
+def layer_shapes(kind, dataset):
+    """Ordered (name, shape, fan_in) for flat packing. Order is frozen:
+    it defines the layout of the f32[D] vector the Rust side handles."""
+    ds = DATASETS[dataset]
+    h, w, c, k = ds["h"], ds["w"], ds["c"], ds["classes"]
+    feat = h * w * c
+    if kind == "mlp":
+        return [
+            ("w1", (feat, HIDDEN), feat),
+            ("b1", (HIDDEN,), feat),
+            ("w2", (HIDDEN, k), HIDDEN),
+            ("b2", (k,), HIDDEN),
+        ]
+    if kind == "cnn":
+        hp, wp = h // POOL, w // POOL
+        flat = hp * wp * CONV2
+        return [
+            ("k1", (3, 3, c, CONV1), 9 * c),
+            ("c1", (CONV1,), 9 * c),
+            ("k2", (3, 3, CONV1, CONV2), 9 * CONV1),
+            ("c2", (CONV2,), 9 * CONV1),
+            ("w1", (flat, HIDDEN), flat),
+            ("b1", (HIDDEN,), flat),
+            ("w2", (HIDDEN, k), HIDDEN),
+            ("b2", (k,), HIDDEN),
+        ]
+    raise ValueError(f"unknown model kind {kind!r}")
+
+
+def param_dim(kind, dataset):
+    return sum(
+        int(functools.reduce(lambda a, b: a * b, s, 1))
+        for _, s, _ in layer_shapes(kind, dataset)
+    )
+
+
+def unpack(flat, kind, dataset):
+    """f32[D] -> dict of named arrays (frozen layout)."""
+    out, off = {}, 0
+    for name, shape, _ in layer_shapes(kind, dataset):
+        size = int(functools.reduce(lambda a, b: a * b, shape, 1))
+        out[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def pack(tree, kind, dataset):
+    """dict -> f32[D] (inverse of unpack)."""
+    return jnp.concatenate(
+        [tree[name].reshape(-1) for name, _, _ in layer_shapes(kind, dataset)]
+    )
+
+
+# ----------------------------------------------------------------------
+# Forward passes
+# ----------------------------------------------------------------------
+
+
+def _im2col3(x):
+    """[B,H,W,C] -> [B*H*W, 9C] patches of the SAME-padded 3x3 window.
+
+    Convolution is lowered to im2col + the L1 Pallas matmul so the conv
+    FLOPs (and, through the custom VJP, their backward) run on the same
+    fused kernel as the dense layers. The shifted-slice construction has
+    exact, cheap VJPs (pad/slice), unlike lax.conv's CPU transpose path.
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = [
+        xp[:, di : di + h, dj : dj + w, :]
+        for di in range(3)
+        for dj in range(3)
+    ]
+    return jnp.concatenate(cols, axis=-1).reshape(n * h * w, 9 * c)
+
+
+def _conv(x, k, b):
+    """3x3 SAME conv + bias + relu via im2col + fused Pallas linear."""
+    n, h, w, c = x.shape
+    oc = k.shape[-1]
+    patches = _im2col3(x)                      # [B*H*W, 9C]
+    kmat = k.reshape(9 * c, oc)                # HWIO rows match patch order
+    o = fused_linear(patches, kmat, b, "relu", bm=8192, bn=32)
+    return o.reshape(n, h, w, oc)
+
+
+def _avg_pool(x, p):
+    n, h, w, c = x.shape
+    return jnp.mean(x.reshape(n, h // p, p, w // p, p, c), axis=(2, 4))
+
+
+def forward(flat, x, kind, dataset, interpret=True):
+    """flat: f32[D] params, x: f32[B, H*W*C] flattened images -> logits."""
+    p = unpack(flat, kind, dataset)
+    ds = DATASETS[dataset]
+    if kind == "mlp":
+        h = fused_linear(x, p["w1"], p["b1"], "relu", interpret=interpret)
+        return fused_linear(h, p["w2"], p["b2"], "none", interpret=interpret)
+    # CNN
+    img = x.reshape(-1, ds["h"], ds["w"], ds["c"])
+    o = _conv(img, p["k1"], p["c1"])
+    o = _conv(o, p["k2"], p["c2"])
+    o = _avg_pool(o, POOL)
+    o = o.reshape(o.shape[0], -1)
+    h = fused_linear(o, p["w1"], p["b1"], "relu", interpret=interpret)
+    return fused_linear(h, p["w2"], p["b2"], "none", interpret=interpret)
+
+
+def loss_fn(flat, x, y_onehot, kind, dataset, interpret=True):
+    """Mean softmax cross-entropy."""
+    logits = forward(flat, x, kind, dataset, interpret=interpret)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+# ----------------------------------------------------------------------
+# AOT entry points (what aot.py lowers)
+# ----------------------------------------------------------------------
+
+
+def make_train_fn(kind, dataset, local_steps, batch, interpret=True):
+    """(params f32[D], xs f32[J*b, F], ys f32[J*b, K], lr f32[]) ->
+    (params' f32[D], mean_loss f32[]) — J SGD steps folded by scan.
+    One call == one on-board local-training dispatch (paper Eq. 3)."""
+    feat = DATASETS[dataset]["h"] * DATASETS[dataset]["w"] * DATASETS[dataset]["c"]
+    k = DATASETS[dataset]["classes"]
+
+    grad_fn = jax.value_and_grad(
+        lambda p, x, y: loss_fn(p, x, y, kind, dataset, interpret=interpret)
+    )
+
+    def train(params, xs, ys, lr):
+        xs = xs.reshape(local_steps, batch, feat)
+        ys = ys.reshape(local_steps, batch, k)
+
+        def step(p, xy):
+            x, y = xy
+            l, g = grad_fn(p, x, y)
+            return p - lr * g, l
+
+        params, losses = lax.scan(step, params, (xs, ys))
+        return params, jnp.mean(losses)
+
+    return train
+
+
+def make_eval_fn(kind, dataset, interpret=True):
+    """(params f32[D], x f32[B, F], y f32[B, K]) ->
+    (correct f32[], loss_sum f32[]) partial sums over the chunk.
+    Rows with all-zero labels (padding of the final chunk) count 0."""
+
+    def evaluate(params, x, y_onehot):
+        logits = forward(params, x, kind, dataset, interpret=interpret)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        valid = jnp.sum(y_onehot, axis=-1)  # 1 for real rows, 0 for pad
+        pred = jnp.argmax(logits, axis=-1)
+        label = jnp.argmax(y_onehot, axis=-1)
+        correct = jnp.sum((pred == label).astype(jnp.float32) * valid)
+        loss_sum = -jnp.sum(jnp.sum(y_onehot * logp, axis=-1))
+        return correct, loss_sum
+
+    return evaluate
+
+
+def make_init_fn(kind, dataset):
+    """(seed i32[]) -> params f32[D]: He-normal weights, zero biases.
+    Lowered to an artifact so L3 and L2 agree on init numerics."""
+    shapes = layer_shapes(kind, dataset)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        parts = []
+        for i, (name, shape, fan_in) in enumerate(shapes):
+            if len(shape) == 1:  # bias
+                parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+            else:
+                sub = jax.random.fold_in(key, i)
+                scale = jnp.sqrt(2.0 / fan_in)
+                parts.append(
+                    (jax.random.normal(sub, shape, jnp.float32) * scale).reshape(-1)
+                )
+        return jnp.concatenate(parts)
+
+    return init
+
+
+def make_agg_fn(n_slab, dim, tile_d=2048, interpret=True):
+    """(models_ext f32[N+1, D], coeffs f32[N+1]) -> f32[D] (Eq. 14)."""
+    from .kernels.aggregate import aggregate
+
+    def agg(models_ext, coeffs):
+        return aggregate(models_ext, coeffs, tile_d=min(tile_d, dim),
+                         interpret=interpret)
+
+    del n_slab
+    return agg
+
+
+def make_dist_fn(n_rows, dim, tile_d=2048, interpret=True):
+    """(models f32[N, D], ref f32[D]) -> f32[N] divergences (Sec. IV-C1)."""
+    from .kernels.distance import distance
+
+    def dist(models, ref):
+        return distance(models, ref, tile_d=min(tile_d, dim),
+                        interpret=interpret)
+
+    del n_rows
+    return dist

@@ -1,0 +1,175 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes/dtypes/block sizes; assert_allclose against the
+oracle is the CORE correctness signal for everything the Rust runtime
+will later execute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import aggregate, distance, linear, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+# ----------------------------------------------------------------------
+# fused_linear
+# ----------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 96),
+    n=st.integers(1, 40),
+    bm=st.sampled_from([8, 32, 64]),
+    bn=st.sampled_from([8, 16, 128]),
+    act=st.sampled_from(["relu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, bm, bn, act, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), np.float32)
+    w = _rand(rng, (k, n), np.float32)
+    b = _rand(rng, (n,), np.float32)
+    got = linear.fused_linear(x, w, b, act, bm=bm, bn=bn)
+    want = ref.fused_linear_ref(x, w, b, act)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(2, 33),
+    k=st.integers(2, 48),
+    n=st.integers(2, 24),
+    act=st.sampled_from(["relu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_grads_match_ref(m, k, n, act, seed):
+    """The custom VJP (backward also via Pallas) must match jnp autodiff."""
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (m, k), np.float32)
+    w = _rand(rng, (k, n), np.float32)
+    b = _rand(rng, (n,), np.float32)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(linear.fused_linear(x, w, b, act) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.fused_linear_ref(x, w, b, act) ** 2)
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(g1, g2):
+        assert_allclose(np.asarray(a), np.asarray(b_), rtol=2e-4, atol=2e-4)
+
+
+def test_fused_linear_rejects_bad_activation():
+    x = jnp.zeros((2, 2))
+    w = jnp.zeros((2, 2))
+    b = jnp.zeros((2,))
+    with pytest.raises(ValueError):
+        linear.fused_linear(x, w, b, "gelu")
+
+
+def test_fused_linear_relu_clamps():
+    x = -jnp.ones((4, 4), jnp.float32)
+    w = jnp.eye(4, dtype=jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+    out = linear.fused_linear(x, w, b, "relu")
+    assert float(jnp.max(out)) == 0.0
+
+
+def test_vmem_estimate_within_budget():
+    # DESIGN.md perf target: one grid step's working set far below 16 MiB.
+    assert linear.vmem_bytes(320, 3136, 128) < 4 * 2**20
+    assert aggregate.vmem_bytes(41) < 1 * 2**20
+    assert distance.vmem_bytes(40) < 1 * 2**20
+
+
+# ----------------------------------------------------------------------
+# aggregate (Eq. 14)
+# ----------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n1=st.integers(1, 41),
+    d=st.integers(1, 5000),
+    tile=st.sampled_from([64, 512, 2048]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aggregate_matches_ref(n1, d, tile, seed):
+    rng = np.random.default_rng(seed)
+    m = _rand(rng, (n1, d), np.float32)
+    c = _rand(rng, (n1,), np.float32)
+    got = aggregate.aggregate(m, c, tile_d=tile)
+    want = ref.aggregate_ref(m, c)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_aggregate_identity_coeffs():
+    """coeffs = e_0 returns the previous global model exactly."""
+    rng = np.random.default_rng(0)
+    m = _rand(rng, (5, 1000), np.float32)
+    c = jnp.zeros((5,), jnp.float32).at[0].set(1.0)
+    got = aggregate.aggregate(m, c)
+    assert_allclose(np.asarray(got), np.asarray(m[0]), rtol=1e-6)
+
+
+def test_aggregate_convex_mean():
+    """Uniform coeffs over identical models is a fixpoint."""
+    row = np.arange(700, dtype=np.float32)
+    m = jnp.asarray(np.tile(row, (4, 1)))
+    c = jnp.full((4,), 0.25, jnp.float32)
+    got = aggregate.aggregate(m, c)
+    assert_allclose(np.asarray(got), row, rtol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# distance (Sec. IV-C1 grouping metric)
+# ----------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 40),
+    d=st.integers(1, 5000),
+    tile=st.sampled_from([64, 512, 2048]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_distance_matches_ref(n, d, tile, seed):
+    rng = np.random.default_rng(seed)
+    m = _rand(rng, (n, d), np.float32)
+    r = _rand(rng, (d,), np.float32)
+    got = distance.distance(m, r, tile_d=tile)
+    want = ref.distance_ref(m, r)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_distance_zero_for_identical():
+    m = jnp.ones((3, 4096), jnp.float32)
+    r = jnp.ones((4096,), jnp.float32)
+    got = distance.distance(m, r)
+    assert_allclose(np.asarray(got), np.zeros(3), atol=1e-6)
+
+
+def test_distance_scale_invariance_relation():
+    """||2w - 0|| = 2 ||w - 0||."""
+    rng = np.random.default_rng(3)
+    w = _rand(rng, (1, 3000), np.float32)
+    r = jnp.zeros((3000,), jnp.float32)
+    d1 = distance.distance(w, r)
+    d2 = distance.distance(2 * w, r)
+    assert_allclose(np.asarray(d2), 2 * np.asarray(d1), rtol=1e-5)

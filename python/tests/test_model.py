@@ -1,0 +1,159 @@
+"""L2 correctness: model graphs — shapes, packing, learning, eval."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+VARIANTS = [(k, d) for k in ("mlp", "cnn") for d in ("digits", "cifar")]
+
+
+def _feat(ds):
+    d = model.DATASETS[ds]
+    return d["h"] * d["w"] * d["c"]
+
+
+@pytest.mark.parametrize("kind,ds", VARIANTS)
+def test_param_dim_matches_layer_shapes(kind, ds):
+    total = 0
+    for _, shape, _ in model.layer_shapes(kind, ds):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    assert model.param_dim(kind, ds) == total
+
+
+@pytest.mark.parametrize("kind,ds", VARIANTS)
+def test_pack_unpack_roundtrip(kind, ds):
+    dim = model.param_dim(kind, ds)
+    flat = jnp.arange(dim, dtype=jnp.float32)
+    tree = model.unpack(flat, kind, ds)
+    back = model.pack(tree, kind, ds)
+    assert_allclose(np.asarray(back), np.asarray(flat))
+
+
+@pytest.mark.parametrize("kind,ds", VARIANTS)
+def test_init_deterministic_and_shaped(kind, ds):
+    f = jax.jit(model.make_init_fn(kind, ds))
+    p1, p2 = f(7), f(7)
+    assert p1.shape == (model.param_dim(kind, ds),)
+    assert_allclose(np.asarray(p1), np.asarray(p2))
+    p3 = f(8)
+    assert float(jnp.max(jnp.abs(p1 - p3))) > 0.0
+
+
+@pytest.mark.parametrize("kind,ds", VARIANTS)
+def test_init_bias_zero_weights_scaled(kind, ds):
+    p = jax.jit(model.make_init_fn(kind, ds))(0)
+    tree = model.unpack(p, kind, ds)
+    for name, shape, fan_in in model.layer_shapes(kind, ds):
+        arr = np.asarray(tree[name])
+        if len(shape) == 1:
+            assert_allclose(arr, np.zeros(shape))
+        else:
+            # He-normal: std should be near sqrt(2/fan_in)
+            expect = np.sqrt(2.0 / fan_in)
+            assert 0.3 * expect < arr.std() < 3.0 * expect
+
+
+@pytest.mark.parametrize("kind,ds", VARIANTS)
+def test_forward_shapes(kind, ds):
+    p = jax.jit(model.make_init_fn(kind, ds))(0)
+    x = jnp.zeros((5, _feat(ds)), jnp.float32)
+    logits = model.forward(p, x, kind, ds)
+    assert logits.shape == (5, 10)
+
+
+def test_conv_matches_lax_conv():
+    from jax import lax
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, 8, 3)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(3, 3, 3, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    want = lax.conv_general_dilated(
+        x, k, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ) + b[None, None, None, :]
+    want = jnp.maximum(want, 0.0)
+    got = model._conv(x, k, b)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    h=st.sampled_from([4, 8]),
+    c=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_im2col_patch_count_and_center(b, h, c, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, h, h, c)).astype(np.float32))
+    cols = model._im2col3(x)
+    assert cols.shape == (b * h * h, 9 * c)
+    # the center column (di=dj=1) is the unpadded input itself
+    center = np.asarray(cols).reshape(b, h, h, 9, c)[:, :, :, 4, :]
+    assert_allclose(center, np.asarray(x), rtol=1e-6)
+
+
+@pytest.mark.parametrize("kind,ds", VARIANTS)
+def test_training_reduces_loss(kind, ds):
+    """A few dispatches on separable synthetic data must cut loss >2x."""
+    feat = _feat(ds)
+    rng = np.random.default_rng(1)
+    protos = rng.normal(size=(10, feat)).astype(np.float32)
+    y = rng.integers(0, 10, 320)
+    xs = jnp.asarray(protos[y] + 0.4 * rng.normal(size=(320, feat)).astype(np.float32))
+    ys = jnp.asarray(np.eye(10, dtype=np.float32)[y])
+
+    p = jax.jit(model.make_init_fn(kind, ds))(0)
+    train = jax.jit(model.make_train_fn(kind, ds, 10, 32))
+    p, l0 = train(p, xs, ys, jnp.float32(0.05))
+    l_first = float(l0)
+    for _ in range(3):
+        p, l = train(p, xs, ys, jnp.float32(0.05))
+    assert float(l) < l_first / 2.0
+
+
+def test_eval_counts_and_padding():
+    kind, ds = "mlp", "digits"
+    p = jax.jit(model.make_init_fn(kind, ds))(0)
+    ev = jax.jit(model.make_eval_fn(kind, ds))
+    x = jnp.zeros((8, 784), jnp.float32)
+    y = jnp.zeros((8, 10), jnp.float32)
+    # all-padding chunk counts zero correct, zero loss
+    c, ls = ev(p, x, y)
+    assert float(c) == 0.0 and float(ls) == 0.0
+    # real rows count at most their number
+    y = y.at[0, 3].set(1.0).at[1, 4].set(1.0)
+    c, _ = ev(p, x, y)
+    assert 0.0 <= float(c) <= 2.0
+
+
+def test_train_then_eval_accuracy_high():
+    kind, ds = "mlp", "digits"
+    feat = _feat(ds)
+    rng = np.random.default_rng(2)
+    protos = rng.normal(size=(10, feat)).astype(np.float32)
+
+    def make(n):
+        y = rng.integers(0, 10, n)
+        x = protos[y] + 0.4 * rng.normal(size=(n, feat)).astype(np.float32)
+        return jnp.asarray(x), jnp.asarray(np.eye(10, dtype=np.float32)[y])
+
+    p = jax.jit(model.make_init_fn(kind, ds))(0)
+    train = jax.jit(model.make_train_fn(kind, ds, 10, 32))
+    ev = jax.jit(model.make_eval_fn(kind, ds))
+    xs, ys = make(320)
+    for _ in range(5):
+        p, _ = train(p, xs, ys, jnp.float32(0.05))
+    xt, yt = make(256)
+    c, _ = ev(p, xt, yt)
+    assert float(c) / 256 > 0.9

@@ -1,0 +1,49 @@
+//! Fig. 6 bench: accuracy-vs-time curve generation for the three
+//! AsyncFLEO variants against the strongest baseline (FedHAP), on the
+//! surrogate backend. Measures the coordinator cost of producing each
+//! full curve and prints the regenerated series.
+//!
+//! Run: `cargo bench --offline --bench bench_fig6`
+
+use asyncfleo::bench::{bench, print_header, BenchConfig};
+use asyncfleo::config::{ExperimentConfig, PsPlacement, SchemeKind};
+use asyncfleo::coordinator::SimEnv;
+use asyncfleo::fl::make_strategy;
+use asyncfleo::train::SurrogateBackend;
+
+const SERIES: &[(&str, SchemeKind, PsPlacement)] = &[
+    ("AsyncFLEO-GS", SchemeKind::AsyncFleo, PsPlacement::GsRolla),
+    ("AsyncFLEO-HAP", SchemeKind::AsyncFleo, PsPlacement::HapRolla),
+    ("AsyncFLEO-twoHAP", SchemeKind::AsyncFleo, PsPlacement::TwoHaps),
+    ("FedHAP", SchemeKind::FedHap, PsPlacement::HapRolla),
+];
+
+fn main() {
+    print_header("Fig. 6 curves (surrogate backend)");
+    let bcfg = BenchConfig::endtoend();
+    let mut reports = Vec::new();
+
+    for &(label, scheme, placement) in SERIES {
+        let mut cfg = ExperimentConfig::paper_defaults();
+        cfg.fl.scheme = scheme;
+        cfg.placement = placement;
+        cfg.fl.horizon_s = 48.0 * 3600.0;
+        cfg.fl.max_epochs = 40;
+        let run_once = || {
+            let mut backend = SurrogateBackend::paper_split(5, 8, false, 100);
+            let mut env = SimEnv::new(&cfg, &mut backend);
+            make_strategy(scheme).run(&mut env)
+        };
+        let r = run_once();
+        println!("\n{label}: {} curve points", r.curve.points.len());
+        for p in r.curve.points.iter().step_by(3) {
+            println!("  t={:>6.2}h  acc={:>6.2}%", p.time_s / 3600.0, p.accuracy * 100.0);
+        }
+        reports.push(bench(label, &bcfg, run_once));
+    }
+
+    print_header("wall-clock per curve");
+    for r in &reports {
+        println!("{}", r.report());
+    }
+}

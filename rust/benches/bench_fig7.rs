@@ -1,0 +1,59 @@
+//! Fig. 7 bench: AsyncFLEO setting grid on the digits geometry —
+//! IID vs non-IID x GS/HAP/two-HAP placements, surrogate backend.
+//! Measures per-cell coordinator cost and prints the regenerated
+//! convergence summaries (the PJRT CNN/MLP split is exercised by
+//! `asyncfleo exp fig7a..c`).
+//!
+//! Run: `cargo bench --offline --bench bench_fig7`
+
+use asyncfleo::bench::{bench, print_header, BenchConfig};
+use asyncfleo::config::{ExperimentConfig, PsPlacement, SchemeKind};
+use asyncfleo::coordinator::SimEnv;
+use asyncfleo::fl::make_strategy;
+use asyncfleo::train::SurrogateBackend;
+use asyncfleo::util::fmt_hm;
+
+fn main() {
+    print_header("Fig. 7 grid (surrogate backend)");
+    let bcfg = BenchConfig::endtoend();
+    let mut reports = Vec::new();
+
+    println!("\n{:<28} {:>9} {:>12} {:>7}", "cell", "acc(%)", "conv(h:mm)", "epochs");
+    for iid in [true, false] {
+        for placement in [PsPlacement::GsRolla, PsPlacement::HapRolla, PsPlacement::TwoHaps] {
+            let mut cfg = ExperimentConfig::paper_defaults();
+            cfg.fl.scheme = SchemeKind::AsyncFleo;
+            cfg.placement = placement;
+            cfg.fl.horizon_s = 48.0 * 3600.0;
+            cfg.fl.max_epochs = 40;
+            let label = format!(
+                "{}/{}",
+                if iid { "iid" } else { "non-iid" },
+                placement.name()
+            );
+            let run_once = || {
+                let mut backend = SurrogateBackend::paper_split(5, 8, iid, 100);
+                let mut env = SimEnv::new(&cfg, &mut backend);
+                make_strategy(SchemeKind::AsyncFleo).run(&mut env)
+            };
+            let r = run_once();
+            let (conv_t, acc) = match r.converged {
+                Some((t, a)) => (t, a),
+                None => (cfg.fl.horizon_s, r.final_accuracy),
+            };
+            println!(
+                "{:<28} {:>9.2} {:>12} {:>7}",
+                label,
+                acc * 100.0,
+                fmt_hm(conv_t),
+                r.epochs
+            );
+            reports.push(bench(&label, &bcfg, run_once));
+        }
+    }
+
+    print_header("wall-clock per cell");
+    for r in &reports {
+        println!("{}", r.report());
+    }
+}

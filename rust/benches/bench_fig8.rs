@@ -1,0 +1,76 @@
+//! Fig. 8 bench: the CIFAR-scale variant of the setting grid. At L3
+//! the CIFAR experiments differ from Fig. 7 by the model payload size
+//! (larger parameter vectors -> longer transmission delays -> slower
+//! propagation), so this bench sweeps the *payload* dimension to show
+//! the coordinator's sensitivity, using the surrogate for compute.
+//! The real CIFAR CNN/MLP runs are `asyncfleo exp fig8a..c`.
+//!
+//! Run: `cargo bench --offline --bench bench_fig8`
+
+use asyncfleo::bench::{bench, print_header, BenchConfig};
+use asyncfleo::comm::delay::{model_bits, total_delay_s};
+use asyncfleo::comm::LinkParams;
+use asyncfleo::config::{ExperimentConfig, PsPlacement, SchemeKind};
+use asyncfleo::coordinator::SimEnv;
+use asyncfleo::fl::make_strategy;
+use asyncfleo::train::SurrogateBackend;
+use asyncfleo::util::fmt_hm;
+
+fn main() {
+    print_header("Fig. 8 (CIFAR-scale payloads)");
+
+    // payload sensitivity: the four real model variants
+    let link = LinkParams::default();
+    println!("\nmodel payload -> one-hop transfer delay @2000 km:");
+    for (name, dim) in [
+        ("mlp_digits", 101_770usize),
+        ("cnn_digits", 103_018),
+        ("cnn_cifar", 133_882),
+        ("mlp_cifar", 394_634),
+    ] {
+        let d = total_delay_s(&link, model_bits(dim), 2000.0);
+        println!("  {name:<12} D={dim:>7}  {d:>6.3} s");
+    }
+
+    let bcfg = BenchConfig::endtoend();
+    let mut reports = Vec::new();
+    println!("\n{:<28} {:>9} {:>12} {:>7}", "cell", "acc(%)", "conv(h:mm)", "epochs");
+    for iid in [true, false] {
+        for placement in [PsPlacement::HapRolla, PsPlacement::TwoHaps] {
+            let mut cfg = ExperimentConfig::paper_defaults();
+            cfg.fl.scheme = SchemeKind::AsyncFleo;
+            cfg.fl.dataset = asyncfleo::data::DatasetKind::Cifar;
+            cfg.placement = placement;
+            cfg.fl.horizon_s = 48.0 * 3600.0;
+            cfg.fl.max_epochs = 40;
+            let label = format!(
+                "cifar/{}/{}",
+                if iid { "iid" } else { "non-iid" },
+                placement.name()
+            );
+            let run_once = || {
+                let mut backend = SurrogateBackend::paper_split(5, 8, iid, 100);
+                let mut env = SimEnv::new(&cfg, &mut backend);
+                make_strategy(SchemeKind::AsyncFleo).run(&mut env)
+            };
+            let r = run_once();
+            let (conv_t, acc) = match r.converged {
+                Some((t, a)) => (t, a),
+                None => (cfg.fl.horizon_s, r.final_accuracy),
+            };
+            println!(
+                "{:<28} {:>9.2} {:>12} {:>7}",
+                label,
+                acc * 100.0,
+                fmt_hm(conv_t),
+                r.epochs
+            );
+            reports.push(bench(&label, &bcfg, run_once));
+        }
+    }
+
+    print_header("wall-clock per cell");
+    for r in &reports {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,203 @@
+//! Micro-benchmarks of the L3 substrates and the PJRT artifact hot
+//! paths (the per-operation costs every experiment is built from).
+//!
+//! Run: `cargo bench --offline --bench bench_micro`
+
+use asyncfleo::bench::{bench, black_box, print_header, BenchConfig};
+use asyncfleo::coordinator::ContactPlan;
+use asyncfleo::fl::aggregation::{select_and_weigh, Candidate};
+use asyncfleo::model::{ModelMetadata, ModelParams};
+use asyncfleo::orbit::{GeodeticSite, WalkerConstellation};
+use asyncfleo::runtime::executor::Input;
+use asyncfleo::runtime::Runtime;
+use asyncfleo::sim::{Event, EventKind, EventQueue};
+use asyncfleo::util::Rng;
+use std::rc::Rc;
+
+fn main() {
+    let cfg = BenchConfig::default();
+    print_header("substrate micro-benchmarks");
+
+    // PRNG
+    let mut rng = Rng::new(1);
+    println!(
+        "{}",
+        bench("rng: 1k gaussians", &cfg, || {
+            (0..1000).map(|_| rng.gaussian()).sum::<f64>()
+        })
+        .report()
+    );
+
+    // Event queue
+    println!(
+        "{}",
+        bench("event queue: 10k push+pop", &cfg, || {
+            let mut q = EventQueue::new();
+            for i in 0..10_000 {
+                q.push(Event::new((i % 997) as f64, EventKind::Sweep));
+            }
+            while q.pop().is_some() {}
+        })
+        .report()
+    );
+
+    // Orbit propagation + visibility predicate
+    let constellation = WalkerConstellation::paper();
+    let hap = GeodeticSite::rolla_hap();
+    println!(
+        "{}",
+        bench("orbit: 40-sat snapshot + elevation", &cfg, || {
+            let t = 4321.0;
+            let site = hap.position_eci(t);
+            (0..40)
+                .map(|s| {
+                    asyncfleo::orbit::elevation_deg(site, constellation.position(s, t))
+                })
+                .sum::<f64>()
+        })
+        .report()
+    );
+
+    // Contact plan construction (the big precompute)
+    let plan_cfg = BenchConfig { warmup_iters: 1, sample_iters: 5, max_seconds: 60.0 };
+    println!(
+        "{}",
+        bench("contact plan: 40 sats x 1 site x 24h", &plan_cfg, || {
+            ContactPlan::build(&constellation, &[hap], 10.0, 86_400.0)
+        })
+        .report()
+    );
+    let plan = ContactPlan::build(&constellation, &[hap], 10.0, 86_400.0);
+    println!(
+        "{}",
+        bench("contact plan: 1k next_visible queries", &cfg, || {
+            (0..1000)
+                .map(|i| plan.next_visible(0, i % 40, (i * 61) as f64).unwrap_or(0.0))
+                .sum::<f64>()
+        })
+        .report()
+    );
+
+    // Aggregation decision (Eq. 13/14 coefficient computation)
+    let candidates: Vec<Candidate> = (0..40)
+        .map(|i| Candidate {
+            meta: ModelMetadata {
+                sat_id: i,
+                orbit: i / 8,
+                data_size: 100 + i,
+                loc_rad: 0.0,
+                ts_s: 0.0,
+                epoch: (i % 5) as u64,
+            },
+            group: i / 14,
+        })
+        .collect();
+    println!(
+        "{}",
+        bench("aggregation: select+weigh 40 candidates", &cfg, || {
+            select_and_weigh(black_box(&candidates), 4, 8000)
+        })
+        .report()
+    );
+
+    // Pure-rust weighted sum at real model size (fallback path)
+    let dim = 101_770;
+    let mut r2 = Rng::new(2);
+    let models: Vec<ModelParams> =
+        (0..10).map(|_| ModelParams::random(dim, 0.1, &mut r2)).collect();
+    let refs: Vec<&ModelParams> = models.iter().collect();
+    let ws = vec![0.1f32; 10];
+    println!(
+        "{}",
+        bench("rust weighted_sum: 10 x 101k params", &cfg, || {
+            ModelParams::weighted_sum(black_box(&refs), black_box(&ws))
+        })
+        .report()
+    );
+
+    // PJRT artifact hot paths (needs `make artifacts`)
+    match Runtime::new(Runtime::default_dir()) {
+        Ok(rt) => pjrt_benches(Rc::new(rt)),
+        Err(e) => println!("(skipping PJRT benches: {e})"),
+    }
+}
+
+fn pjrt_benches(rt: Rc<Runtime>) {
+    print_header("PJRT artifact hot paths (L1/L2 compute)");
+    let cfg = BenchConfig { warmup_iters: 2, sample_iters: 10, max_seconds: 120.0 };
+
+    let init = rt.compile("init_mlp_digits").unwrap();
+    let params = init.run(&[Input::I32(&[0])]).unwrap().remove(0);
+    let mut rng = Rng::new(3);
+    let xs: Vec<f32> = (0..320 * 784).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+    let mut ys = vec![0.0f32; 320 * 10];
+    for i in 0..320 {
+        ys[i * 10 + i % 10] = 1.0;
+    }
+
+    let train = rt.compile("train_mlp_digits").unwrap();
+    println!(
+        "{}",
+        bench("train_mlp_digits: 1 dispatch (10 SGD steps)", &cfg, || {
+            train
+                .run(&[
+                    Input::F32(&params),
+                    Input::F32(&xs),
+                    Input::F32(&ys),
+                    Input::F32(&[0.05]),
+                ])
+                .unwrap()
+        })
+        .report()
+    );
+
+    let train_cnn = rt.compile("train_cnn_digits").unwrap();
+    let init_cnn = rt.compile("init_cnn_digits").unwrap();
+    let params_cnn = init_cnn.run(&[Input::I32(&[0])]).unwrap().remove(0);
+    println!(
+        "{}",
+        bench("train_cnn_digits: 1 dispatch (10 SGD steps)", &cfg, || {
+            train_cnn
+                .run(&[
+                    Input::F32(&params_cnn),
+                    Input::F32(&xs),
+                    Input::F32(&ys),
+                    Input::F32(&[0.05]),
+                ])
+                .unwrap()
+        })
+        .report()
+    );
+
+    let eval = rt.compile("eval_mlp_digits").unwrap();
+    let ex: Vec<f32> = xs[..256 * 784].to_vec();
+    let ey: Vec<f32> = ys[..256 * 10].to_vec();
+    println!(
+        "{}",
+        bench("eval_mlp_digits: 256-sample chunk", &cfg, || {
+            eval.run(&[Input::F32(&params), Input::F32(&ex), Input::F32(&ey)]).unwrap()
+        })
+        .report()
+    );
+
+    let agg = rt.compile("agg_mlp_digits").unwrap();
+    let slab: Vec<f32> = (0..41 * 101_770).map(|_| 0.01f32).collect();
+    let coeffs = vec![1.0 / 41.0; 41];
+    println!(
+        "{}",
+        bench("agg_mlp_digits: 41 x 101k slab (Eq. 14)", &cfg, || {
+            agg.run(&[Input::F32(&slab), Input::F32(&coeffs)]).unwrap()
+        })
+        .report()
+    );
+
+    let dist = rt.compile("dist_mlp_digits").unwrap();
+    let dslab: Vec<f32> = (0..40 * 101_770).map(|_| 0.01f32).collect();
+    println!(
+        "{}",
+        bench("dist_mlp_digits: 40 x 101k rows (IV-C1)", &cfg, || {
+            dist.run(&[Input::F32(&dslab), Input::F32(&params)]).unwrap()
+        })
+        .report()
+    );
+}

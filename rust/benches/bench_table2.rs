@@ -1,0 +1,66 @@
+//! Table II end-to-end bench: runs every scheme of the paper's
+//! comparison on the surrogate backend (pure-L3: geometry + DES +
+//! coordinator — the thing this bench is supposed to measure) and
+//! reports both wall-clock cost and the regenerated table rows.
+//!
+//! The PJRT (real-training) version of the same table is
+//! `asyncfleo exp table2`; its compute is dominated by L1/L2 and is
+//! benchmarked per-artifact in bench_micro.
+//!
+//! Run: `cargo bench --offline --bench bench_table2`
+
+use asyncfleo::bench::{bench, print_header, BenchConfig};
+use asyncfleo::config::ExperimentConfig;
+use asyncfleo::coordinator::SimEnv;
+use asyncfleo::experiments::TABLE2_ROWS;
+use asyncfleo::fl::make_strategy;
+use asyncfleo::train::SurrogateBackend;
+use asyncfleo::util::fmt_hm;
+
+fn main() {
+    print_header("Table II end-to-end (surrogate backend, 40 sats, 72 h horizon)");
+    let bcfg = BenchConfig::endtoend();
+
+    println!(
+        "\n{:<20} {:>9} {:>12} {:>7}   (regenerated rows)",
+        "scheme", "acc(%)", "conv(h:mm)", "epochs"
+    );
+    let mut reports = Vec::new();
+    for &(label, scheme, placement) in TABLE2_ROWS {
+        let mut cfg = ExperimentConfig::paper_defaults();
+        cfg.fl.scheme = scheme;
+        cfg.placement = placement;
+        cfg.fl.horizon_s = 72.0 * 3600.0;
+        cfg.fl.max_epochs = 40;
+
+        // regenerate the row once (printed), then time repeated runs
+        let run_once = || {
+            let mut backend = SurrogateBackend::paper_split(
+                cfg.constellation.n_orbits,
+                cfg.constellation.sats_per_orbit,
+                false,
+                100,
+            );
+            let mut env = SimEnv::new(&cfg, &mut backend);
+            make_strategy(scheme).run(&mut env)
+        };
+        let r = run_once();
+        let (conv_t, acc) = match r.converged {
+            Some((t, a)) => (t, a),
+            None => (r.curve.points.last().map(|p| p.time_s).unwrap_or(0.0), r.final_accuracy),
+        };
+        println!(
+            "{:<20} {:>9.2} {:>12} {:>7}",
+            label,
+            acc * 100.0,
+            fmt_hm(conv_t),
+            r.epochs
+        );
+        reports.push(bench(label, &bcfg, run_once));
+    }
+
+    print_header("wall-clock per full run (coordinator + DES + surrogate)");
+    for r in &reports {
+        println!("{}", r.report());
+    }
+}

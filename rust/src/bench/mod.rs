@@ -1,0 +1,137 @@
+//! Micro-benchmark harness substrate (no `criterion` offline).
+//!
+//! Warmup + timed iterations + summary statistics, with the classic
+//! `black_box` to defeat constant folding. `cargo bench` targets under
+//! `rust/benches/` (harness = false) drive this.
+
+use crate::util::stats::{summarize, Summary};
+use std::time::Instant;
+
+/// Prevent the optimizer from eliding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    /// Hard cap on total wall time, seconds (long end-to-end benches
+    /// sample fewer iterations rather than exceeding it).
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, sample_iters: 20, max_seconds: 60.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Config for expensive end-to-end benches (one warmup, few samples).
+    pub fn endtoend() -> Self {
+        BenchConfig { warmup_iters: 1, sample_iters: 3, max_seconds: 600.0 }
+    }
+}
+
+/// One benchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub stats: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.stats;
+        format!(
+            "{:<42} {:>12} {:>12} {:>12} {:>12}  (n={})",
+            self.name,
+            fmt_duration(s.mean),
+            fmt_duration(s.p50),
+            fmt_duration(s.p95),
+            fmt_duration(s.std),
+            s.n
+        )
+    }
+}
+
+/// Human-friendly duration formatting.
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.1} ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{:.3} s", seconds)
+    }
+}
+
+/// Run one benchmark: `f` is invoked repeatedly; its return value is
+/// black-boxed.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        black_box(f());
+    }
+    let started = Instant::now();
+    let mut samples = Vec::with_capacity(cfg.sample_iters);
+    for _ in 0..cfg.sample_iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if started.elapsed().as_secs_f64() > cfg.max_seconds && samples.len() >= 3 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), stats: summarize(&samples).expect("samples") }
+}
+
+/// Print the standard report header (aligns with [`BenchResult::report`]).
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<42} {:>12} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "p50", "p95", "std"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let cfg = BenchConfig { warmup_iters: 1, sample_iters: 5, max_seconds: 10.0 };
+        let r = bench("noop", &cfg, || 1 + 1);
+        assert_eq!(r.stats.n, 5);
+        assert!(r.stats.mean >= 0.0);
+    }
+
+    #[test]
+    fn bench_time_cap() {
+        let cfg = BenchConfig { warmup_iters: 0, sample_iters: 1000, max_seconds: 0.05 };
+        let r = bench("sleepy", &cfg, || std::thread::sleep(std::time::Duration::from_millis(20)));
+        assert!(r.stats.n < 1000, "cap should stop early, got {}", r.stats.n);
+        assert!(r.stats.n >= 3);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with("s"));
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let cfg = BenchConfig { warmup_iters: 0, sample_iters: 3, max_seconds: 1.0 };
+        let r = bench("my_bench", &cfg, || 42);
+        assert!(r.report().contains("my_bench"));
+    }
+}

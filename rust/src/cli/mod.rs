@@ -1,0 +1,146 @@
+//! Command-line argument parser substrate (no `clap` offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`
+//! options, and positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name). `known_flags` lists
+    /// boolean flags (which consume no value); everything else starting
+    /// with `--` is a key-value option.
+    pub fn parse(
+        argv: &[String],
+        expect_subcommand: bool,
+        known_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if expect_subcommand {
+            match it.peek() {
+                Some(s) if !s.starts_with('-') => {
+                    out.subcommand = Some(it.next().unwrap().clone());
+                }
+                _ => {}
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` ends option parsing
+                    out.positional.extend(it.cloned());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("option --{body} expects a value"))?;
+                    out.options.insert(body.to_string(), v.clone());
+                }
+            } else if arg.starts_with('-') && arg.len() > 1 {
+                return Err(format!("unknown short option {arg} (use --long form)"));
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("option --{name}: cannot parse {s:?}")),
+        }
+    }
+
+    /// Option names that were provided (for unknown-option checks).
+    pub fn option_names(&self) -> impl Iterator<Item = &str> {
+        self.options.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse(&sv(&["exp", "--out", "results", "--seed=7"]), true, &[]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.opt("out"), Some("results"));
+        assert_eq!(a.opt("seed"), Some("7"));
+    }
+
+    #[test]
+    fn flags_consume_no_value() {
+        let a = Args::parse(&sv(&["run", "--verbose", "pos1"]), true, &["verbose"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Args::parse(&sv(&["--out"]), false, &[]).unwrap_err();
+        assert!(e.contains("--out"));
+    }
+
+    #[test]
+    fn double_dash_ends_options() {
+        let a = Args::parse(&sv(&["--", "--not-an-option"]), false, &[]).unwrap();
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn opt_parse_types() {
+        let a = Args::parse(&sv(&["--n", "12", "--x", "1.5"]), false, &[]).unwrap();
+        assert_eq!(a.opt_parse::<usize>("n").unwrap(), Some(12));
+        assert_eq!(a.opt_parse::<f64>("x").unwrap(), Some(1.5));
+        assert_eq!(a.opt_parse::<usize>("missing").unwrap(), None);
+        let a = Args::parse(&sv(&["--n", "abc"]), false, &[]).unwrap();
+        assert!(a.opt_parse::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn short_options_rejected() {
+        assert!(Args::parse(&sv(&["-x"]), false, &[]).is_err());
+    }
+
+    #[test]
+    fn no_subcommand_when_option_first() {
+        let a = Args::parse(&sv(&["--out", "x"]), true, &[]).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.opt("out"), Some("x"));
+    }
+}

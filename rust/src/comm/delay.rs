@@ -1,0 +1,77 @@
+//! Delay composition t_c = t_t + t_p + t_x + t_y (paper Eqs. 7–8).
+
+use super::link::LinkParams;
+use crate::util::SPEED_OF_LIGHT_KM_S;
+
+/// The four delay components of one transfer over one hop.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DelayBreakdown {
+    /// Transmission delay t_t = bits / R.
+    pub transmission_s: f64,
+    /// Propagation delay t_p = d / c.
+    pub propagation_s: f64,
+    /// Processing at both endpoints (t_x + t_y).
+    pub processing_s: f64,
+}
+
+impl DelayBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.transmission_s + self.propagation_s + self.processing_s
+    }
+}
+
+/// Delay of transferring `payload_bits` over `distance_km` with `p`.
+pub fn delay_breakdown(p: &LinkParams, payload_bits: f64, distance_km: f64) -> DelayBreakdown {
+    DelayBreakdown {
+        transmission_s: payload_bits / p.data_rate_bps,
+        propagation_s: distance_km / SPEED_OF_LIGHT_KM_S,
+        processing_s: 2.0 * p.processing_delay_s,
+    }
+}
+
+/// Total single-hop delay in seconds (paper Eq. 7).
+pub fn total_delay_s(p: &LinkParams, payload_bits: f64, distance_km: f64) -> f64 {
+    delay_breakdown(p, payload_bits, distance_km).total_s()
+}
+
+/// Size of a serialized model in bits: D f32 parameters + metadata.
+pub fn model_bits(n_params: usize) -> f64 {
+    (n_params * 32 + 1024) as f64 // 1 kbit header: the metadata tuple
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_transfer_delay_dominated_by_transmission() {
+        // A ~100k-param model at 16 Mb/s is ~0.2 s of transmission,
+        // while 2000 km of propagation is only ~6.7 ms.
+        let p = LinkParams::default();
+        let d = delay_breakdown(&p, model_bits(101_770), 2000.0);
+        assert!(d.transmission_s > d.propagation_s);
+        assert!((0.1..0.5).contains(&d.transmission_s), "{d:?}");
+        assert!((d.propagation_s - 2000.0 / SPEED_OF_LIGHT_KM_S).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_is_sum_of_parts() {
+        let p = LinkParams::default();
+        let d = delay_breakdown(&p, 1e6, 1500.0);
+        assert!((d.total_s() - (d.transmission_s + d.propagation_s + d.processing_s)).abs() < 1e-15);
+        assert_eq!(d.total_s(), total_delay_s(&p, 1e6, 1500.0));
+    }
+
+    #[test]
+    fn delay_monotone_in_payload_and_distance() {
+        let p = LinkParams::default();
+        assert!(total_delay_s(&p, 2e6, 1000.0) > total_delay_s(&p, 1e6, 1000.0));
+        assert!(total_delay_s(&p, 1e6, 2000.0) > total_delay_s(&p, 1e6, 1000.0));
+    }
+
+    #[test]
+    fn model_bits_counts_header() {
+        assert_eq!(model_bits(0), 1024.0);
+        assert_eq!(model_bits(10), 10.0 * 32.0 + 1024.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Link budget: FSPL, SNR, Shannon rate (paper Eqs. 5, 6, 9; Table I).
+
+/// Boltzmann constant, J/K.
+pub const BOLTZMANN: f64 = 1.380_649e-23;
+
+/// RF link parameters. Defaults are the paper's Table I.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkParams {
+    /// Transmission power, dBm (Table I: 40 dBm).
+    pub tx_power_dbm: f64,
+    /// Transmitter antenna gain, dBi (Table I: 6.98 dBi).
+    pub tx_gain_dbi: f64,
+    /// Receiver antenna gain, dBi (Table I: 6.98 dBi).
+    pub rx_gain_dbi: f64,
+    /// Carrier frequency, Hz (Table I: 2.4 GHz).
+    pub carrier_hz: f64,
+    /// Noise temperature, K (Table I: 354.81 K).
+    pub noise_temp_k: f64,
+    /// Channel bandwidth, Hz.
+    pub bandwidth_hz: f64,
+    /// Fixed data rate actually provisioned, bits/s (Table I: 16 Mb/s).
+    /// The paper fixes R rather than running at Shannon capacity; we
+    /// keep both and assert R is achievable (see `rate_feasible`).
+    pub data_rate_bps: f64,
+    /// Per-endpoint processing delay t_x = t_y, seconds.
+    pub processing_delay_s: f64,
+}
+
+impl Default for LinkParams {
+    fn default() -> Self {
+        LinkParams {
+            tx_power_dbm: 40.0,
+            tx_gain_dbi: 6.98,
+            rx_gain_dbi: 6.98,
+            carrier_hz: 2.4e9,
+            noise_temp_k: 354.81,
+            bandwidth_hz: 20.0e6,
+            data_rate_bps: 16.0e6,
+            processing_delay_s: 0.05,
+        }
+    }
+}
+
+impl LinkParams {
+    /// Free-space path loss (linear), Eq. 6: (4*pi*d*f/c)^2.
+    pub fn fspl_linear(&self, distance_km: f64) -> f64 {
+        let d_m = distance_km * 1000.0;
+        let c = 299_792_458.0;
+        let x = 4.0 * std::f64::consts::PI * d_m * self.carrier_hz / c;
+        x * x
+    }
+
+    /// SNR (linear), Eq. 5: P_t G_x G_y / (k_B T B L).
+    pub fn snr_linear(&self, distance_km: f64) -> f64 {
+        let p_t = 10f64.powf((self.tx_power_dbm - 30.0) / 10.0); // dBm -> W
+        let g = 10f64.powf((self.tx_gain_dbi + self.rx_gain_dbi) / 10.0);
+        let noise = BOLTZMANN * self.noise_temp_k * self.bandwidth_hz;
+        p_t * g / (noise * self.fspl_linear(distance_km))
+    }
+
+    /// SNR in dB.
+    pub fn snr_db(&self, distance_km: f64) -> f64 {
+        10.0 * self.snr_linear(distance_km).log10()
+    }
+
+    /// Shannon capacity, Eq. 9: B log2(1 + SNR), bits/s.
+    pub fn shannon_rate_bps(&self, distance_km: f64) -> f64 {
+        self.bandwidth_hz * (1.0 + self.snr_linear(distance_km)).log2()
+    }
+
+    /// Is the provisioned fixed rate within Shannon capacity at range?
+    pub fn rate_feasible(&self, distance_km: f64) -> bool {
+        self.data_rate_bps <= self.shannon_rate_bps(distance_km)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fspl_grows_quadratically() {
+        let p = LinkParams::default();
+        let l1 = p.fspl_linear(1000.0);
+        let l2 = p.fspl_linear(2000.0);
+        assert!((l2 / l1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snr_decreases_with_distance() {
+        let p = LinkParams::default();
+        assert!(p.snr_db(500.0) > p.snr_db(2000.0));
+        assert!(p.snr_db(2000.0) > p.snr_db(8000.0));
+    }
+
+    #[test]
+    fn paper_rate_feasible_at_short_range_only() {
+        // Table I provisions a fixed 16 Mb/s. With the table's own
+        // 40 dBm / 6.98 dBi / 2.4 GHz numbers that rate is within
+        // Shannon capacity only at short range — at 2000 km slant range
+        // capacity is ~1.8 Mb/s. The paper nevertheless uses R = 16 Mb/s
+        // for its delay model, so we follow it (delays use the fixed
+        // provisioned rate) and record the inconsistency here.
+        let p = LinkParams::default();
+        assert!(p.rate_feasible(100.0), "snr={} dB", p.snr_db(100.0));
+        assert!(
+            !p.rate_feasible(2000.0),
+            "Table I params cannot actually sustain 16 Mb/s at 2000 km \
+             (snr={} dB) — documented paper inconsistency",
+            p.snr_db(2000.0)
+        );
+    }
+
+    #[test]
+    fn shannon_rate_monotone_in_bandwidth_at_fixed_snr() {
+        // Doubling B with noise scaled by B: capacity still increases.
+        let p1 = LinkParams::default();
+        let p2 = LinkParams { bandwidth_hz: 2.0 * p1.bandwidth_hz, ..p1 };
+        assert!(p2.shannon_rate_bps(3000.0) > p1.shannon_rate_bps(3000.0));
+    }
+
+    #[test]
+    fn snr_db_linear_roundtrip() {
+        let p = LinkParams::default();
+        let lin = p.snr_linear(1234.0);
+        let db = p.snr_db(1234.0);
+        assert!((10f64.powf(db / 10.0) - lin).abs() / lin < 1e-12);
+    }
+
+    #[test]
+    fn more_tx_power_more_snr() {
+        let p1 = LinkParams::default();
+        let p2 = LinkParams { tx_power_dbm: 43.0, ..p1 };
+        let d = p2.snr_db(2000.0) - p1.snr_db(2000.0);
+        assert!((d - 3.0).abs() < 1e-9, "3 dB power = 3 dB SNR, got {d}");
+    }
+}

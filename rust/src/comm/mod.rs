@@ -1,0 +1,13 @@
+//! RF link-budget and delay model (paper Sec. III-B, Eqs. 5–9).
+//!
+//! All links (SAT↔SAT ISL, SAT↔HAP, HAP↔HAP IHL, SAT↔GS) are modelled
+//! as RF for a fair comparison with the paper's baselines; Table I's
+//! parameters are the defaults. The model computes free-space path
+//! loss, SNR, Shannon capacity, and the total delay decomposition
+//! `t_c = t_t + t_p + t_x + t_y`.
+
+pub mod delay;
+pub mod link;
+
+pub use delay::{total_delay_s, DelayBreakdown};
+pub use link::LinkParams;

@@ -1,0 +1,486 @@
+//! Typed, validated experiment configuration (Table I defaults).
+//!
+//! Configs load from a TOML-subset file ([`parser`]) or start from
+//! [`ExperimentConfig::paper_defaults`] and are adjusted
+//! programmatically by the experiment drivers. Every run embeds its
+//! full config in the output CSV header for reproducibility.
+
+pub mod parser;
+
+use crate::comm::LinkParams;
+use crate::data::{DatasetKind, Partition};
+use parser::{Doc, ParseError, Value};
+
+/// FL scheme under test (AsyncFLEO + the paper's baselines, Sec. V-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchemeKind {
+    /// This paper's contribution (Algorithms 1 & 2).
+    AsyncFleo,
+    /// Plain synchronous FedAvg star topology (McMahan et al.).
+    FedAvg,
+    /// FedISL: synchronous + intra-orbit ISL relay (Razmi et al.).
+    FedIsl,
+    /// FedISL's "ideal setup": GS at the North Pole.
+    FedIslIdeal,
+    /// FedSat: asynchronous, per-visit update, NP ground station.
+    FedSat,
+    /// FedSpace: scheduled aggregation needing uploaded data fractions.
+    FedSpace,
+    /// FedHAP: synchronous FL with HAP parameter servers.
+    FedHap,
+}
+
+impl SchemeKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "asyncfleo" => SchemeKind::AsyncFleo,
+            "fedavg" => SchemeKind::FedAvg,
+            "fedisl" => SchemeKind::FedIsl,
+            "fedisl-ideal" => SchemeKind::FedIslIdeal,
+            "fedsat" => SchemeKind::FedSat,
+            "fedspace" => SchemeKind::FedSpace,
+            "fedhap" => SchemeKind::FedHap,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeKind::AsyncFleo => "asyncfleo",
+            SchemeKind::FedAvg => "fedavg",
+            SchemeKind::FedIsl => "fedisl",
+            SchemeKind::FedIslIdeal => "fedisl-ideal",
+            SchemeKind::FedSat => "fedsat",
+            SchemeKind::FedSpace => "fedspace",
+            SchemeKind::FedHap => "fedhap",
+        }
+    }
+
+    /// Synchronous schemes wait for every satellite each round.
+    pub fn is_synchronous(&self) -> bool {
+        matches!(
+            self,
+            SchemeKind::FedAvg | SchemeKind::FedIsl | SchemeKind::FedIslIdeal | SchemeKind::FedHap
+        )
+    }
+}
+
+/// Model architecture (paper: CNN and MLP).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Mlp,
+    Cnn,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mlp" => Some(ModelKind::Mlp),
+            "cnn" => Some(ModelKind::Cnn),
+            _ => None,
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Cnn => "cnn",
+        }
+    }
+}
+
+/// Where the parameter server(s) sit (paper Sec. V-A scenarios).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PsPlacement {
+    /// Single GS in Rolla, MO.
+    GsRolla,
+    /// Single HAP above Rolla, MO.
+    HapRolla,
+    /// Two HAPs: Rolla + Portland.
+    TwoHaps,
+    /// The FedISL/FedSat "ideal setup": GS at the North Pole.
+    GsNorthPole,
+}
+
+impl PsPlacement {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "gs" | "gs-rolla" => PsPlacement::GsRolla,
+            "hap" | "hap-rolla" => PsPlacement::HapRolla,
+            "two-haps" | "twohap" => PsPlacement::TwoHaps,
+            "gs-np" | "north-pole" => PsPlacement::GsNorthPole,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PsPlacement::GsRolla => "gs-rolla",
+            PsPlacement::HapRolla => "hap-rolla",
+            PsPlacement::TwoHaps => "two-haps",
+            PsPlacement::GsNorthPole => "gs-np",
+        }
+    }
+
+    pub fn sites(&self) -> Vec<crate::orbit::GeodeticSite> {
+        use crate::orbit::GeodeticSite as S;
+        match self {
+            PsPlacement::GsRolla => vec![S::rolla_gs()],
+            PsPlacement::HapRolla => vec![S::rolla_hap()],
+            PsPlacement::TwoHaps => vec![S::rolla_hap(), S::portland_hap()],
+            PsPlacement::GsNorthPole => vec![S::north_pole_gs()],
+        }
+    }
+}
+
+/// Constellation geometry (paper Sec. V-A defaults).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConstellationConfig {
+    pub n_orbits: usize,
+    pub sats_per_orbit: usize,
+    pub altitude_km: f64,
+    pub inclination_deg: f64,
+    pub phasing: usize,
+}
+
+/// FL hyper-parameters and run control.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlConfig {
+    pub scheme: SchemeKind,
+    pub model: ModelKind,
+    pub dataset: DatasetKind,
+    pub partition: Partition,
+    /// Learning rate η (Table I: 0.01).
+    pub lr: f32,
+    /// Local training dispatches per global-model receipt. Each
+    /// dispatch runs the AOT-folded J SGD steps; the paper's I = 100
+    /// local epochs map to `dispatches * J` steps through the on-board
+    /// compute-time model (DESIGN.md §5).
+    pub local_dispatches: usize,
+    /// Stop after this many global epochs (safety bound).
+    pub max_epochs: u64,
+    /// Stop when simulated time exceeds this horizon, seconds.
+    pub horizon_s: f64,
+    /// On-board seconds of compute the satellite spends per dispatch
+    /// (models the paper's I=100 local epochs of on-board training).
+    pub train_time_s: f64,
+}
+
+/// Data sizing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DataConfig {
+    pub train_samples: usize,
+    pub test_samples: usize,
+}
+
+/// The complete experiment configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub constellation: ConstellationConfig,
+    pub placement: PsPlacement,
+    pub link: LinkParams,
+    pub fl: FlConfig,
+    pub data: DataConfig,
+    pub seed: u64,
+    /// Minimum elevation angle θ_min, degrees (Table: 10°).
+    pub min_elevation_deg: f64,
+}
+
+impl ExperimentConfig {
+    /// The paper's Table I + Sec. V-A setup.
+    pub fn paper_defaults() -> Self {
+        ExperimentConfig {
+            constellation: ConstellationConfig {
+                n_orbits: 5,
+                sats_per_orbit: 8,
+                altitude_km: 2000.0,
+                inclination_deg: 80.0,
+                phasing: 1,
+            },
+            placement: PsPlacement::HapRolla,
+            link: LinkParams::default(),
+            fl: FlConfig {
+                scheme: SchemeKind::AsyncFleo,
+                model: ModelKind::Cnn,
+                dataset: DatasetKind::Digits,
+                partition: Partition::NonIidPaper,
+                lr: 0.01,
+                local_dispatches: 2,
+                max_epochs: 60,
+                horizon_s: 3.0 * 86_400.0, // paper: 3-day trajectories
+                // on-board compute model: the paper's I = 100 local
+                // epochs of on-board training take ~20 min of satellite
+                // compute (DESIGN.md §5 maps I to dispatches*J steps)
+                train_time_s: 1200.0,
+            },
+            data: DataConfig { train_samples: 8000, test_samples: 2000 },
+            seed: 42,
+            min_elevation_deg: 10.0,
+        }
+    }
+
+    /// A reduced configuration for fast tests: 2 orbits x 3 sats, tiny
+    /// datasets, short horizon.
+    pub fn test_small() -> Self {
+        let mut c = Self::paper_defaults();
+        c.constellation.n_orbits = 2;
+        c.constellation.sats_per_orbit = 3;
+        c.data = DataConfig { train_samples: 600, test_samples: 200 };
+        c.fl.max_epochs = 3;
+        c.fl.horizon_s = 6.0 * 3600.0;
+        c.fl.model = ModelKind::Mlp;
+        c
+    }
+
+    pub fn n_sats(&self) -> usize {
+        self.constellation.n_orbits * self.constellation.sats_per_orbit
+    }
+
+    /// Artifact-name fragment, e.g. "cnn_digits".
+    pub fn model_tag(&self) -> String {
+        format!("{}_{}", self.fl.model.tag(), self.fl.dataset.tag())
+    }
+
+    /// Validate invariants; returns a list of problems (empty = OK).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let c = &self.constellation;
+        if c.n_orbits == 0 || c.sats_per_orbit == 0 {
+            errs.push("constellation must have at least one satellite".into());
+        }
+        if !(100.0..=3000.0).contains(&c.altitude_km) {
+            errs.push(format!("altitude {} km outside LEO band", c.altitude_km));
+        }
+        if !(0.0..=180.0).contains(&c.inclination_deg) {
+            errs.push(format!("inclination {} out of range", c.inclination_deg));
+        }
+        if self.fl.lr <= 0.0 || self.fl.lr > 1.0 {
+            errs.push(format!("lr {} out of (0, 1]", self.fl.lr));
+        }
+        if self.fl.horizon_s <= 0.0 {
+            errs.push("horizon must be positive".into());
+        }
+        if self.data.train_samples < self.n_sats() {
+            errs.push("fewer training samples than satellites".into());
+        }
+        if !(0.0..90.0).contains(&self.min_elevation_deg) {
+            errs.push(format!("min elevation {} out of [0, 90)", self.min_elevation_deg));
+        }
+        errs
+    }
+
+    /// Load from a TOML-subset string; unspecified keys keep paper
+    /// defaults.
+    pub fn from_toml(input: &str) -> Result<Self, ParseError> {
+        let doc = parser::parse(input)?;
+        let mut cfg = Self::paper_defaults();
+        cfg.apply_doc(&doc)
+            .map_err(|msg| ParseError { line: 0, msg })?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_toml(&text).map_err(|e| e.to_string())
+    }
+
+    fn apply_doc(&mut self, doc: &Doc) -> Result<(), String> {
+        for (key, val) in doc {
+            self.apply_key(key, val)?;
+        }
+        Ok(())
+    }
+
+    fn apply_key(&mut self, key: &str, val: &Value) -> Result<(), String> {
+        let need_f64 = || val.as_f64().ok_or(format!("{key}: expected number"));
+        let need_usize = || {
+            val.as_i64()
+                .filter(|v| *v >= 0)
+                .map(|v| v as usize)
+                .ok_or(format!("{key}: expected non-negative integer"))
+        };
+        let need_str = || val.as_str().ok_or(format!("{key}: expected string"));
+        match key {
+            "constellation.orbits" => self.constellation.n_orbits = need_usize()?,
+            "constellation.sats_per_orbit" => self.constellation.sats_per_orbit = need_usize()?,
+            "constellation.altitude_km" => self.constellation.altitude_km = need_f64()?,
+            "constellation.inclination_deg" => self.constellation.inclination_deg = need_f64()?,
+            "constellation.phasing" => self.constellation.phasing = need_usize()?,
+            "ps.placement" => {
+                self.placement = PsPlacement::parse(need_str()?)
+                    .ok_or(format!("{key}: unknown placement"))?
+            }
+            "ps.min_elevation_deg" => self.min_elevation_deg = need_f64()?,
+            "link.tx_power_dbm" => self.link.tx_power_dbm = need_f64()?,
+            "link.antenna_gain_dbi" => {
+                let g = need_f64()?;
+                self.link.tx_gain_dbi = g;
+                self.link.rx_gain_dbi = g;
+            }
+            "link.carrier_ghz" => self.link.carrier_hz = need_f64()? * 1e9,
+            "link.noise_temp_k" => self.link.noise_temp_k = need_f64()?,
+            "link.data_rate_mbps" => self.link.data_rate_bps = need_f64()? * 1e6,
+            "link.bandwidth_mhz" => self.link.bandwidth_hz = need_f64()? * 1e6,
+            "fl.scheme" => {
+                self.fl.scheme =
+                    SchemeKind::parse(need_str()?).ok_or(format!("{key}: unknown scheme"))?
+            }
+            "fl.model" => {
+                self.fl.model =
+                    ModelKind::parse(need_str()?).ok_or(format!("{key}: unknown model"))?
+            }
+            "fl.dataset" => {
+                self.fl.dataset = match need_str()? {
+                    "digits" | "mnist" => DatasetKind::Digits,
+                    "cifar" | "cifar10" => DatasetKind::Cifar,
+                    other => return Err(format!("{key}: unknown dataset {other}")),
+                }
+            }
+            "fl.partition" => {
+                self.fl.partition = match need_str()? {
+                    "iid" => Partition::Iid,
+                    "non-iid" | "noniid" => Partition::NonIidPaper,
+                    other => return Err(format!("{key}: unknown partition {other}")),
+                }
+            }
+            "fl.lr" => self.fl.lr = need_f64()? as f32,
+            "fl.local_dispatches" => self.fl.local_dispatches = need_usize()?,
+            "fl.max_epochs" => self.fl.max_epochs = need_usize()? as u64,
+            "fl.horizon_hours" => self.fl.horizon_s = need_f64()? * 3600.0,
+            "fl.train_time_s" => self.fl.train_time_s = need_f64()?,
+            "data.train_samples" => self.data.train_samples = need_usize()?,
+            "data.test_samples" => self.data.test_samples = need_usize()?,
+            "seed" => self.seed = need_usize()? as u64,
+            other => return Err(format!("unknown config key: {other}")),
+        }
+        Ok(())
+    }
+
+    /// Serialize back to the TOML subset (round-trips through
+    /// [`Self::from_toml`]; embedded in result CSVs).
+    pub fn to_toml(&self) -> String {
+        format!(
+            "seed = {}\n\n[constellation]\norbits = {}\nsats_per_orbit = {}\naltitude_km = {}\ninclination_deg = {}\nphasing = {}\n\n[ps]\nplacement = \"{}\"\nmin_elevation_deg = {}\n\n[link]\ntx_power_dbm = {}\nantenna_gain_dbi = {}\ncarrier_ghz = {}\nnoise_temp_k = {}\ndata_rate_mbps = {}\nbandwidth_mhz = {}\n\n[fl]\nscheme = \"{}\"\nmodel = \"{}\"\ndataset = \"{}\"\npartition = \"{}\"\nlr = {}\nlocal_dispatches = {}\nmax_epochs = {}\nhorizon_hours = {}\ntrain_time_s = {}\n\n[data]\ntrain_samples = {}\ntest_samples = {}\n",
+            self.seed,
+            self.constellation.n_orbits,
+            self.constellation.sats_per_orbit,
+            self.constellation.altitude_km,
+            self.constellation.inclination_deg,
+            self.constellation.phasing,
+            self.placement.name(),
+            self.min_elevation_deg,
+            self.link.tx_power_dbm,
+            self.link.tx_gain_dbi,
+            self.link.carrier_hz / 1e9,
+            self.link.noise_temp_k,
+            self.link.data_rate_bps / 1e6,
+            self.link.bandwidth_hz / 1e6,
+            self.fl.scheme.name(),
+            self.fl.model.tag(),
+            self.fl.dataset.tag(),
+            match self.fl.partition {
+                Partition::Iid => "iid",
+                Partition::NonIidPaper => "non-iid",
+            },
+            self.fl.lr,
+            self.fl.local_dispatches,
+            self.fl.max_epochs,
+            self.fl.horizon_s / 3600.0,
+            self.fl.train_time_s,
+            self.data.train_samples,
+            self.data.test_samples,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_table1() {
+        let c = ExperimentConfig::paper_defaults();
+        assert_eq!(c.n_sats(), 40);
+        assert_eq!(c.constellation.altitude_km, 2000.0);
+        assert_eq!(c.constellation.inclination_deg, 80.0);
+        assert_eq!(c.link.tx_power_dbm, 40.0);
+        assert_eq!(c.link.tx_gain_dbi, 6.98);
+        assert_eq!(c.link.carrier_hz, 2.4e9);
+        assert_eq!(c.link.noise_temp_k, 354.81);
+        assert_eq!(c.link.data_rate_bps, 16.0e6);
+        assert_eq!(c.fl.lr, 0.01);
+        assert_eq!(c.min_elevation_deg, 10.0);
+        assert!(c.validate().is_empty());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c0 = ExperimentConfig::paper_defaults();
+        let c1 = ExperimentConfig::from_toml(&c0.to_toml()).unwrap();
+        assert_eq!(c0, c1);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let c = ExperimentConfig::from_toml(
+            "[fl]\nscheme = \"fedhap\"\nmodel = \"mlp\"\n[constellation]\norbits = 3\n",
+        )
+        .unwrap();
+        assert_eq!(c.fl.scheme, SchemeKind::FedHap);
+        assert_eq!(c.fl.model, ModelKind::Mlp);
+        assert_eq!(c.constellation.n_orbits, 3);
+        assert_eq!(c.constellation.sats_per_orbit, 8); // default kept
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ExperimentConfig::from_toml("nope = 1\n").is_err());
+    }
+
+    #[test]
+    fn validation_catches_problems() {
+        let mut c = ExperimentConfig::paper_defaults();
+        c.fl.lr = 0.0;
+        c.constellation.altitude_km = 50_000.0;
+        let errs = c.validate();
+        assert_eq!(errs.len(), 2, "{errs:?}");
+    }
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for s in [
+            SchemeKind::AsyncFleo,
+            SchemeKind::FedAvg,
+            SchemeKind::FedIsl,
+            SchemeKind::FedIslIdeal,
+            SchemeKind::FedSat,
+            SchemeKind::FedSpace,
+            SchemeKind::FedHap,
+        ] {
+            assert_eq!(SchemeKind::parse(s.name()), Some(s));
+        }
+        assert_eq!(SchemeKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn sync_flags() {
+        assert!(SchemeKind::FedHap.is_synchronous());
+        assert!(SchemeKind::FedIsl.is_synchronous());
+        assert!(!SchemeKind::AsyncFleo.is_synchronous());
+        assert!(!SchemeKind::FedSat.is_synchronous());
+        assert!(!SchemeKind::FedSpace.is_synchronous());
+    }
+
+    #[test]
+    fn placement_sites() {
+        assert_eq!(PsPlacement::TwoHaps.sites().len(), 2);
+        assert_eq!(PsPlacement::GsRolla.sites().len(), 1);
+        assert_eq!(PsPlacement::GsNorthPole.sites()[0].lat_deg, 90.0);
+    }
+
+    #[test]
+    fn test_small_is_valid() {
+        assert!(ExperimentConfig::test_small().validate().is_empty());
+    }
+}

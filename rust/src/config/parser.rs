@@ -1,0 +1,261 @@
+//! Minimal TOML-subset parser (no `toml`/`serde` crates offline).
+//!
+//! Supports what experiment configs need: `[section.sub]` headers,
+//! `key = value` with string / integer / float / bool / homogeneous
+//! array values, `#` comments, and blank lines. Keys are flattened to
+//! dotted paths (`section.sub.key`).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Flattened key→value document.
+pub type Doc = BTreeMap<String, Value>;
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<Doc, ParseError> {
+    let mut doc = Doc::new();
+    let mut section = String::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| ParseError { line: lineno + 1, msg: msg.to_string() };
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(err("empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let val_str = line[eq + 1..].trim();
+        let value = parse_value(val_str).map_err(|m| err(&m))?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        doc.insert(full, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: comments only outside strings in our configs
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            split_top_level(inner).iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+/// Split an array body on commas not inside strings or nested arrays.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(doc["a"], Value::Int(1));
+        assert_eq!(doc["b"], Value::Float(2.5));
+        assert_eq!(doc["c"], Value::Str("hi".into()));
+        assert_eq!(doc["d"], Value::Bool(true));
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let doc = parse("[fl]\nlr = 0.01\n[fl.deep]\nx = 2\n").unwrap();
+        assert_eq!(doc["fl.lr"], Value::Float(0.01));
+        assert_eq!(doc["fl.deep.x"], Value::Int(2));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let doc = parse("# top\na = 1  # trailing\n\nb = \"x # not comment\"\n").unwrap();
+        assert_eq!(doc["a"], Value::Int(1));
+        assert_eq!(doc["b"], Value::Str("x # not comment".into()));
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nempty = []\n").unwrap();
+        assert_eq!(
+            doc["xs"],
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+        assert_eq!(doc["ys"].as_array().unwrap().len(), 2);
+        assert_eq!(doc["empty"], Value::Array(vec![]));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = parse("m = [[1, 2], [3, 4]]\n").unwrap();
+        let outer = doc["m"].as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_array().unwrap()[1], Value::Int(2));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[oops\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("x = \"unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn negative_and_exp_floats() {
+        let doc = parse("a = -4\nb = 1e6\nc = -2.5e-3\n").unwrap();
+        assert_eq!(doc["a"], Value::Int(-4));
+        assert_eq!(doc["b"], Value::Float(1e6));
+        assert_eq!(doc["c"], Value::Float(-2.5e-3));
+    }
+
+    #[test]
+    fn as_f64_accepts_int() {
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Str("x".into()).as_f64(), None);
+    }
+
+    #[test]
+    fn later_keys_override() {
+        let doc = parse("a = 1\na = 2\n").unwrap();
+        assert_eq!(doc["a"], Value::Int(2));
+    }
+}

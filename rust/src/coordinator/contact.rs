@@ -1,0 +1,183 @@
+//! Pre-computed contact plan: visibility windows between every
+//! satellite and every PS site over the experiment horizon.
+//!
+//! The PS knows each satellite's TLE (paper Sec. V-A) and can predict
+//! visits; pre-computing the windows once keeps the event loop free of
+//! trigonometry (perf: the coordinator must never be the bottleneck).
+
+use crate::orbit::{
+    contact_windows, elevation_deg, ContactWindow, GeodeticSite, WalkerConstellation,
+};
+
+/// Contact windows for all (satellite, site) pairs over `[0, horizon]`.
+pub struct ContactPlan {
+    /// windows[site][sat] sorted by start time.
+    windows: Vec<Vec<Vec<ContactWindow>>>,
+    pub horizon_s: f64,
+}
+
+/// Sampling step for window extraction (edges refined by bisection).
+const SCAN_STEP_S: f64 = 30.0;
+
+impl ContactPlan {
+    pub fn build(
+        constellation: &WalkerConstellation,
+        sites: &[GeodeticSite],
+        min_elev_deg: f64,
+        horizon_s: f64,
+    ) -> Self {
+        let windows = sites
+            .iter()
+            .map(|site| {
+                // HAPs gain horizon dip: theta_min is measured from the
+                // apparent horizon (the paper's "slightly better
+                // visibility" of elevated platforms).
+                let eff_min = site.effective_min_elevation_deg(min_elev_deg);
+                (0..constellation.len())
+                    .map(|sat| {
+                        contact_windows(
+                            |t| {
+                                elevation_deg(
+                                    site.position_eci(t),
+                                    constellation.position(sat, t),
+                                ) >= eff_min
+                            },
+                            horizon_s,
+                            SCAN_STEP_S,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        ContactPlan { windows, horizon_s }
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn windows(&self, site: usize, sat: usize) -> &[ContactWindow] {
+        &self.windows[site][sat]
+    }
+
+    /// Is `sat` visible from `site` at time `t`?
+    pub fn visible(&self, site: usize, sat: usize, t: f64) -> bool {
+        self.window_at(site, sat, t).is_some()
+    }
+
+    /// The window containing `t`, if any (binary search).
+    pub fn window_at(&self, site: usize, sat: usize, t: f64) -> Option<ContactWindow> {
+        let ws = &self.windows[site][sat];
+        let idx = ws.partition_point(|w| w.end_s < t);
+        ws.get(idx).filter(|w| w.contains(t)).copied()
+    }
+
+    /// Earliest time ≥ `t` at which `sat` is visible from `site`
+    /// (start of the next window, or `t` itself if inside one).
+    pub fn next_visible(&self, site: usize, sat: usize, t: f64) -> Option<f64> {
+        let ws = &self.windows[site][sat];
+        let idx = ws.partition_point(|w| w.end_s < t);
+        ws.get(idx).map(|w| w.start_s.max(t))
+    }
+
+    /// All satellites visible from `site` at `t`.
+    pub fn visible_sats(&self, site: usize, t: f64) -> Vec<usize> {
+        (0..self.windows[site].len()).filter(|&s| self.visible(site, s, t)).collect()
+    }
+
+    /// Earliest time ≥ `t` at which `sat` is visible from *any* site;
+    /// returns `(time, site)`.
+    pub fn next_visible_any(&self, sat: usize, t: f64) -> Option<(f64, usize)> {
+        (0..self.n_sites())
+            .filter_map(|site| self.next_visible(site, sat, t).map(|tt| (tt, site)))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+    }
+
+    /// Fraction of the horizon that `sat` is visible from `site`.
+    pub fn visibility_fraction(&self, site: usize, sat: usize) -> f64 {
+        self.windows[site][sat].iter().map(|w| w.duration_s()).sum::<f64>() / self.horizon_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::GeodeticSite;
+
+    fn plan() -> (WalkerConstellation, ContactPlan) {
+        let c = WalkerConstellation::paper();
+        let sites = [GeodeticSite::rolla_hap(), GeodeticSite::portland_hap()];
+        let p = ContactPlan::build(&c, &sites, 10.0, 86_400.0);
+        (c, p)
+    }
+
+    #[test]
+    fn consistency_with_live_predicate() {
+        let (c, p) = plan();
+        let site = GeodeticSite::rolla_hap();
+        let eff = site.effective_min_elevation_deg(10.0);
+        // away from window edges the plan matches the live predicate
+        for sat in [0usize, 13, 39] {
+            for i in 0..48 {
+                let t = i as f64 * 1800.0;
+                let live =
+                    elevation_deg(site.position_eci(t), c.position(sat, t)) >= eff;
+                let planned = p.visible(0, sat, t);
+                if live != planned {
+                    // tolerate only near-edge disagreement (< 60 s)
+                    let near_edge = p.windows(0, sat).iter().any(|w| {
+                        (w.start_s - t).abs() < 60.0 || (w.end_s - t).abs() < 60.0
+                    });
+                    assert!(near_edge, "sat {sat} t {t}: live {live} vs plan {planned}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn next_visible_is_window_start_or_now() {
+        let (_, p) = plan();
+        let ws = p.windows(0, 0);
+        assert!(!ws.is_empty());
+        let w0 = ws[0];
+        if w0.start_s > 10.0 {
+            assert_eq!(p.next_visible(0, 0, 0.0), Some(w0.start_s));
+        }
+        let inside = 0.5 * (w0.start_s + w0.end_s);
+        assert_eq!(p.next_visible(0, 0, inside), Some(inside));
+        // after the window: the next one
+        if ws.len() > 1 {
+            assert_eq!(p.next_visible(0, 0, w0.end_s + 1.0), Some(ws[1].start_s));
+        }
+    }
+
+    #[test]
+    fn every_sat_gets_contact_within_a_day() {
+        let (_, p) = plan();
+        for sat in 0..40 {
+            assert!(
+                p.next_visible_any(sat, 0.0).is_some(),
+                "sat {sat} never visible from either HAP in 24 h"
+            );
+        }
+    }
+
+    #[test]
+    fn visible_sats_matches_visible() {
+        let (_, p) = plan();
+        let t = 43_200.0;
+        let vs = p.visible_sats(0, t);
+        for sat in 0..40 {
+            assert_eq!(vs.contains(&sat), p.visible(0, sat, t));
+        }
+    }
+
+    #[test]
+    fn visibility_fraction_sporadic() {
+        let (_, p) = plan();
+        for sat in 0..40 {
+            let f = p.visibility_fraction(0, sat);
+            assert!((0.0..0.6).contains(&f), "sat {sat} fraction {f}");
+        }
+    }
+}

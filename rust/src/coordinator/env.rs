@@ -1,0 +1,197 @@
+//! The simulation environment handed to every FL strategy.
+
+use super::contact::ContactPlan;
+use crate::comm::delay::{model_bits, total_delay_s};
+use crate::comm::LinkParams;
+use crate::config::ExperimentConfig;
+use crate::metrics::{Curve, CurvePoint};
+use crate::orbit::{GeodeticSite, WalkerConstellation};
+use crate::train::Backend;
+use crate::util::Rng;
+
+/// Everything a strategy needs: geometry, contacts, delays, compute.
+pub struct SimEnv<'a> {
+    pub cfg: ExperimentConfig,
+    pub constellation: WalkerConstellation,
+    pub sites: Vec<GeodeticSite>,
+    pub plan: ContactPlan,
+    pub link: LinkParams,
+    pub backend: &'a mut dyn Backend,
+    pub rng: Rng,
+    pub curve: Curve,
+    /// Count of model transfers (uplink+downlink+relay hops), for the
+    /// communication-cost accounting in EXPERIMENTS.md.
+    pub transfers: u64,
+}
+
+impl<'a> SimEnv<'a> {
+    /// Build the environment: constellation + contact plan from config.
+    pub fn new(cfg: &ExperimentConfig, backend: &'a mut dyn Backend) -> Self {
+        let constellation = WalkerConstellation::new(
+            cfg.constellation.n_orbits,
+            cfg.constellation.sats_per_orbit,
+            cfg.constellation.altitude_km,
+            cfg.constellation.inclination_deg,
+            cfg.constellation.phasing,
+        );
+        assert_eq!(
+            constellation.len(),
+            backend.n_sats(),
+            "backend shard count must match constellation size"
+        );
+        let sites = cfg.placement.sites();
+        let plan = ContactPlan::build(
+            &constellation,
+            &sites,
+            cfg.min_elevation_deg,
+            cfg.fl.horizon_s,
+        );
+        SimEnv {
+            cfg: cfg.clone(),
+            constellation,
+            sites,
+            plan,
+            link: cfg.link,
+            backend,
+            rng: Rng::new(cfg.seed ^ 0xE5E57),
+            curve: Curve::default(),
+            transfers: 0,
+        }
+    }
+
+    /// Model payload size in bits for the current model dimension.
+    pub fn payload_bits(&self) -> f64 {
+        model_bits(self.backend.dim())
+    }
+
+    /// SAT↔site transfer delay at time `t` (Eq. 7).
+    pub fn site_link_delay(&mut self, site: usize, sat: usize, t: f64) -> f64 {
+        self.transfers += 1;
+        let d = self.sites[site]
+            .position_eci(t)
+            .distance(self.constellation.position(sat, t));
+        total_delay_s(&self.link, self.payload_bits(), d)
+    }
+
+    /// Intra-orbit ISL hop delay between ring neighbours at time `t`.
+    pub fn isl_hop_delay(&mut self, sat_a: usize, sat_b: usize, t: f64) -> f64 {
+        self.transfers += 1;
+        let d = self
+            .constellation
+            .position(sat_a, t)
+            .distance(self.constellation.position(sat_b, t));
+        total_delay_s(&self.link, self.payload_bits(), d)
+    }
+
+    /// HAP↔HAP (IHL) hop delay at time `t`.
+    pub fn ihl_hop_delay(&mut self, site_a: usize, site_b: usize, t: f64) -> f64 {
+        self.transfers += 1;
+        let d = self.sites[site_a]
+            .position_eci(t)
+            .distance(self.sites[site_b].position_eci(t));
+        total_delay_s(&self.link, self.payload_bits(), d)
+    }
+
+    /// Record an evaluation point on the run curve.
+    pub fn record(&mut self, t: f64, epoch: u64, accuracy: f64, loss: f64) {
+        self.curve.push(CurvePoint { time_s: t, epoch, accuracy, loss });
+    }
+
+    /// On-board training wall time per visit (the compute-time model:
+    /// the paper's I=100 local epochs of on-board compute).
+    pub fn train_time_s(&self) -> f64 {
+        self.cfg.fl.train_time_s
+    }
+}
+
+/// Outcome of one strategy run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub scheme: &'static str,
+    pub curve: Curve,
+    /// (convergence time s, plateau accuracy) per Curve::convergence.
+    pub converged: Option<(f64, f64)>,
+    pub final_accuracy: f64,
+    pub epochs: u64,
+    pub transfers: u64,
+}
+
+impl RunResult {
+    pub fn from_env(scheme: &'static str, env: &SimEnv, epochs: u64) -> Self {
+        RunResult {
+            scheme,
+            converged: env.curve.convergence(0.005, 3),
+            final_accuracy: env.curve.final_accuracy().unwrap_or(0.0),
+            curve: env.curve.clone(),
+            epochs,
+            transfers: env.transfers,
+        }
+    }
+
+    /// Convergence time in simulated hours (horizon if never converged).
+    pub fn convergence_hours(&self) -> f64 {
+        self.converged.map(|(t, _)| t / 3600.0).unwrap_or(f64::INFINITY)
+    }
+
+    /// Earliest simulated time (seconds) the accuracy curve reaches
+    /// `target` — a stopping-rule-independent speed metric for
+    /// cross-scheme comparisons.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.curve.points.iter().find(|p| p.accuracy >= target).map(|p| p.time_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::train::SurrogateBackend;
+
+    fn small_env(backend: &mut SurrogateBackend) -> SimEnv<'_> {
+        let mut cfg = ExperimentConfig::test_small();
+        cfg.fl.horizon_s = 3600.0 * 12.0;
+        SimEnv::new(&cfg, backend)
+    }
+
+    #[test]
+    fn env_builds_and_delays_positive() {
+        let cfg = ExperimentConfig::test_small();
+        let mut b = SurrogateBackend::paper_split(
+            cfg.constellation.n_orbits,
+            cfg.constellation.sats_per_orbit,
+            true,
+            100,
+        );
+        let mut env = small_env(&mut b);
+        let d = env.site_link_delay(0, 0, 1000.0);
+        assert!(d > 0.0 && d < 10.0, "delay {d}");
+        let d2 = env.isl_hop_delay(0, 1, 1000.0);
+        assert!(d2 > 0.0 && d2 < 10.0);
+        assert_eq!(env.transfers, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn backend_size_mismatch_panics() {
+        let cfg = ExperimentConfig::test_small();
+        let mut b = SurrogateBackend::paper_split(5, 8, true, 100); // 40 != 6
+        SimEnv::new(&cfg, &mut b);
+    }
+
+    #[test]
+    fn record_builds_curve() {
+        let cfg = ExperimentConfig::test_small();
+        let mut b = SurrogateBackend::paper_split(
+            cfg.constellation.n_orbits,
+            cfg.constellation.sats_per_orbit,
+            true,
+            100,
+        );
+        let mut env = small_env(&mut b);
+        env.record(0.0, 0, 0.1, 2.3);
+        env.record(100.0, 1, 0.5, 1.0);
+        let r = RunResult::from_env("test", &env, 2);
+        assert_eq!(r.final_accuracy, 0.5);
+        assert_eq!(r.epochs, 2);
+    }
+}

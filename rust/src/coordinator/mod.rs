@@ -1,0 +1,9 @@
+//! The L3 orchestrator: wires constellation geometry, contact plans,
+//! link delays, the event queue and a compute [`crate::train::Backend`]
+//! into a [`SimEnv`] that FL strategies run against.
+
+pub mod contact;
+pub mod env;
+
+pub use contact::ContactPlan;
+pub use env::{RunResult, SimEnv};

@@ -1,0 +1,15 @@
+//! Dataset substrate: synthetic Earth-observation stand-ins + FL
+//! partitioning (paper Sec. V-A; substitution documented in DESIGN.md §1).
+//!
+//! No network access means no MNIST/CIFAR download, so we generate
+//! class-structured, separable synthetic image datasets with the same
+//! geometry (28x28x1 / 32x32x3, 10 classes) — what the FL dynamics
+//! under test actually depend on — and partition them IID or with the
+//! paper's exact non-IID split (two orbits hold 4 classes, the other
+//! three hold the remaining 6).
+
+pub mod partition;
+pub mod synth;
+
+pub use partition::{partition, Partition, Shard};
+pub use synth::{Dataset, DatasetKind};

@@ -1,0 +1,197 @@
+//! FL data partitioning across the constellation (paper Sec. V-A).
+//!
+//! * **IID** — samples shuffled and spread evenly: every satellite holds
+//!   all 10 classes.
+//! * **Non-IID (the paper's split)** — satellites of two orbits hold 4
+//!   classes, satellites of the other three orbits hold the remaining
+//!   6 classes. Because orbits sweep different geographic bands this is
+//!   the natural non-IID structure for Satcom.
+//!
+//! Shard sizes vary mildly (±25%) to exercise the data-size weighting
+//! in Eq. (12)–(13).
+
+use super::synth::Dataset;
+use crate::util::Rng;
+
+/// How data is spread over satellites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Partition {
+    Iid,
+    /// The paper's orbit-wise label split (2 orbits: classes 0..4,
+    /// 3 orbits: classes 4..10).
+    NonIidPaper,
+}
+
+/// One satellite's shard: indices into the shared [`Dataset`].
+#[derive(Clone, Debug, Default)]
+pub struct Shard {
+    pub indices: Vec<usize>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+}
+
+/// Split `data` into `n_orbits * sats_per_orbit` shards.
+pub fn partition(
+    data: &Dataset,
+    scheme: Partition,
+    n_orbits: usize,
+    sats_per_orbit: usize,
+    seed: u64,
+) -> Vec<Shard> {
+    let n_sats = n_orbits * sats_per_orbit;
+    let mut rng = Rng::new(seed ^ 0x5A4D);
+    match scheme {
+        Partition::Iid => {
+            let mut idx: Vec<usize> = (0..data.len()).collect();
+            rng.shuffle(&mut idx);
+            deal_with_jitter(&idx, n_sats, &mut rng)
+        }
+        Partition::NonIidPaper => {
+            // Orbits 0..2 -> classes 0..4; orbits 2..n -> classes 4..10.
+            let k = data.kind.classes() as u8;
+            let split = 4u8.min(k);
+            let mut low: Vec<usize> = (0..data.len()).filter(|&i| data.y[i] < split).collect();
+            let mut high: Vec<usize> = (0..data.len()).filter(|&i| data.y[i] >= split).collect();
+            rng.shuffle(&mut low);
+            rng.shuffle(&mut high);
+            let low_orbits = 2.min(n_orbits);
+            let low_sats = low_orbits * sats_per_orbit;
+            let high_sats = n_sats - low_sats;
+            let mut shards = deal_with_jitter(&low, low_sats.max(1), &mut rng);
+            if high_sats > 0 {
+                shards.extend(deal_with_jitter(&high, high_sats, &mut rng));
+            }
+            shards.truncate(n_sats);
+            while shards.len() < n_sats {
+                shards.push(Shard::default());
+            }
+            shards
+        }
+    }
+}
+
+/// Deal indices across `n` shards with ±25% size jitter.
+fn deal_with_jitter(idx: &[usize], n: usize, rng: &mut Rng) -> Vec<Shard> {
+    assert!(n > 0);
+    // draw relative weights in [0.75, 1.25], normalize to partition.
+    let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.75, 1.25)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut shards = Vec::with_capacity(n);
+    let mut cursor = 0usize;
+    for (i, w) in weights.iter().enumerate() {
+        let take = if i + 1 == n {
+            idx.len() - cursor
+        } else {
+            ((w / total) * idx.len() as f64).round() as usize
+        };
+        let take = take.min(idx.len() - cursor);
+        shards.push(Shard { indices: idx[cursor..cursor + take].to_vec() });
+        cursor += take;
+    }
+    shards
+}
+
+/// Distinct classes present in a shard.
+pub fn shard_classes(data: &Dataset, shard: &Shard) -> Vec<u8> {
+    let mut seen = [false; 256];
+    for &i in &shard.indices {
+        seen[data.y[i] as usize] = true;
+    }
+    (0..=255u8).filter(|&c| seen[c as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, DatasetKind};
+
+    fn data() -> Dataset {
+        generate(DatasetKind::Digits, 0, 4000)
+    }
+
+    #[test]
+    fn iid_partition_covers_all_disjointly() {
+        let d = data();
+        let shards = partition(&d, Partition::Iid, 5, 8, 1);
+        assert_eq!(shards.len(), 40);
+        let mut all: Vec<usize> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..4000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn iid_shards_have_most_classes() {
+        let d = data();
+        let shards = partition(&d, Partition::Iid, 5, 8, 1);
+        for s in &shards {
+            assert!(shard_classes(&d, s).len() >= 8, "IID shard missing classes");
+        }
+    }
+
+    #[test]
+    fn non_iid_respects_orbit_class_split() {
+        let d = data();
+        let shards = partition(&d, Partition::NonIidPaper, 5, 8, 1);
+        assert_eq!(shards.len(), 40);
+        // first two orbits (sats 0..16): only classes 0..4
+        for s in &shards[..16] {
+            for c in shard_classes(&d, s) {
+                assert!(c < 4, "low orbit has class {c}");
+            }
+        }
+        // remaining orbits: only classes 4..10
+        for s in &shards[16..] {
+            for c in shard_classes(&d, s) {
+                assert!((4..10).contains(&c), "high orbit has class {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_iid_covers_all_disjointly() {
+        let d = data();
+        let shards = partition(&d, Partition::NonIidPaper, 5, 8, 1);
+        let mut all: Vec<usize> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..4000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shard_sizes_vary_but_bounded() {
+        let d = data();
+        let shards = partition(&d, Partition::Iid, 5, 8, 2);
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(min > 0);
+        assert!(max as f64 / min as f64 <= 2.0, "sizes {min}..{max}");
+        assert!(max != min, "jitter should vary sizes");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let d = data();
+        let a = partition(&d, Partition::NonIidPaper, 5, 8, 3);
+        let b = partition(&d, Partition::NonIidPaper, 5, 8, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices, y.indices);
+        }
+    }
+
+    #[test]
+    fn small_constellations_work() {
+        let d = generate(DatasetKind::Digits, 1, 300);
+        let shards = partition(&d, Partition::NonIidPaper, 3, 2, 0);
+        assert_eq!(shards.len(), 6);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 300);
+    }
+}

@@ -1,0 +1,394 @@
+//! Drivers regenerating every table & figure of the paper's evaluation
+//! (Sec. V), plus the ablations called out in DESIGN.md §4.
+//!
+//! Each driver writes `results/<name>.csv` with the full experiment
+//! config embedded as header comments, and prints the paper-style
+//! summary rows to stdout.
+
+use crate::config::{ExperimentConfig, ModelKind, PsPlacement, SchemeKind};
+use crate::coordinator::{RunResult, SimEnv};
+use crate::data::{DatasetKind, Partition};
+use crate::fl::{asyncfleo::AsyncFleo, make_strategy, Strategy};
+use crate::metrics::csv::{f, i, s, CsvWriter};
+use crate::train::{PjrtBackend, SurrogateBackend};
+use crate::util::fmt_hm;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Options common to all experiment drivers.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    pub out_dir: PathBuf,
+    /// Reduced sizes for a quick pass (CI / smoke).
+    pub fast: bool,
+    /// Use the analytic surrogate backend instead of PJRT (pure-L3
+    /// topology studies; also what the coordinator benches use).
+    pub surrogate: bool,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions { out_dir: PathBuf::from("results"), fast: false, surrogate: false, seed: 42 }
+    }
+}
+
+/// All experiment names, in DESIGN.md §4 order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "table2", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b", "fig8c",
+    "ablate-grouping", "ablate-staleness", "ablate-relay",
+];
+
+/// Entry point: run one experiment (or "all" / "fig6" alias).
+pub fn run_experiment(name: &str, opts: &ExpOptions) -> Result<()> {
+    match name {
+        "table2" | "fig6" => table2(opts),
+        "fig7a" => fig_grid(opts, "fig7a", DatasetKind::Digits, Partition::Iid, false),
+        "fig7b" => fig_grid(opts, "fig7b", DatasetKind::Digits, Partition::NonIidPaper, false),
+        "fig7c" => fig_grid(opts, "fig7c", DatasetKind::Digits, Partition::Iid, true),
+        "fig8a" => fig_grid(opts, "fig8a", DatasetKind::Cifar, Partition::Iid, false),
+        "fig8b" => fig_grid(opts, "fig8b", DatasetKind::Cifar, Partition::NonIidPaper, false),
+        "fig8c" => fig_grid(opts, "fig8c", DatasetKind::Cifar, Partition::Iid, true),
+        "ablate-grouping" => ablation(opts, "ablate-grouping"),
+        "ablate-staleness" => ablation(opts, "ablate-staleness"),
+        "ablate-relay" => ablation(opts, "ablate-relay"),
+        "all" => {
+            for e in ALL_EXPERIMENTS {
+                run_experiment(e, opts)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; try one of {ALL_EXPERIMENTS:?} or `all`"),
+    }
+}
+
+/// Base config for an experiment run.
+fn base_config(opts: &ExpOptions) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_defaults();
+    cfg.seed = opts.seed;
+    // sized so the full suite completes on a CPU testbed; the FL
+    // dynamics (visit pattern, staleness, grouping) are unaffected
+    cfg.data.train_samples = if opts.fast { 2000 } else { 4000 };
+    cfg.data.test_samples = if opts.fast { 500 } else { 1000 };
+    if opts.fast {
+        // simulated time is free; only compute per epoch costs wall
+        // time. 60 epochs x 40 MLP dispatches is still < 1 min/run.
+        cfg.fl.max_epochs = 60;
+        cfg.fl.horizon_s = 72.0 * 3600.0;
+    }
+    cfg
+}
+
+/// Run one configured scheme with the scheme's default strategy.
+pub fn run_one(cfg: &ExperimentConfig, opts: &ExpOptions) -> Result<RunResult> {
+    run_one_with(cfg, opts, make_strategy(cfg.fl.scheme))
+}
+
+/// Run one configured scheme with an explicit strategy object
+/// (ablations pass customized AsyncFLEO instances).
+pub fn run_one_with(
+    cfg: &ExperimentConfig,
+    opts: &ExpOptions,
+    mut strategy: Box<dyn Strategy>,
+) -> Result<RunResult> {
+    if opts.surrogate {
+        let mut backend = SurrogateBackend::paper_split(
+            cfg.constellation.n_orbits,
+            cfg.constellation.sats_per_orbit,
+            cfg.fl.partition == Partition::Iid,
+            cfg.data.train_samples / cfg.n_sats().max(1),
+        );
+        let mut env = SimEnv::new(cfg, &mut backend);
+        Ok(strategy.run(&mut env))
+    } else {
+        let runtime = runtime_handle()?;
+        let mut backend = PjrtBackend::from_config(runtime, cfg)?;
+        let mut env = SimEnv::new(cfg, &mut backend);
+        Ok(strategy.run(&mut env))
+    }
+}
+
+thread_local! {
+    static RUNTIME: std::cell::RefCell<Option<Rc<crate::runtime::Runtime>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Process-wide PJRT runtime (artifact compilations are cached in it).
+pub fn runtime_handle() -> Result<Rc<crate::runtime::Runtime>> {
+    RUNTIME.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let rt = crate::runtime::Runtime::new(crate::runtime::Runtime::default_dir())
+                .context("creating PJRT runtime (run `make artifacts`?)")?;
+            *slot = Some(Rc::new(rt));
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+// ----------------------------------------------------------------------
+// E2: Table II + Fig. 6 — scheme comparison, SynthDigits non-IID, CNN
+// ----------------------------------------------------------------------
+
+/// The paper's Table II rows: (label, scheme, placement).
+pub const TABLE2_ROWS: &[(&str, SchemeKind, PsPlacement)] = &[
+    ("FedISL", SchemeKind::FedIsl, PsPlacement::GsRolla),
+    ("FedISL-ideal", SchemeKind::FedIslIdeal, PsPlacement::GsNorthPole),
+    ("FedSat-ideal", SchemeKind::FedSat, PsPlacement::GsNorthPole),
+    ("FedSpace", SchemeKind::FedSpace, PsPlacement::GsRolla),
+    ("FedHAP", SchemeKind::FedHap, PsPlacement::HapRolla),
+    ("AsyncFLEO-GS", SchemeKind::AsyncFleo, PsPlacement::GsRolla),
+    ("AsyncFLEO-HAP", SchemeKind::AsyncFleo, PsPlacement::HapRolla),
+    ("AsyncFLEO-twoHAP", SchemeKind::AsyncFleo, PsPlacement::TwoHaps),
+];
+
+fn table2(opts: &ExpOptions) -> Result<()> {
+    let mut cfg0 = base_config(opts);
+    // paper: CNN. On a single-core testbed the full-fidelity CNN table
+    // takes ~1 h of wall time; --fast records the MLP variant (same
+    // coordinator dynamics, ~40x cheaper dispatch) — the CNN path is
+    // exercised end-to-end by examples/end_to_end_train.
+    cfg0.fl.model = if opts.fast { ModelKind::Mlp } else { ModelKind::Cnn };
+    cfg0.fl.dataset = DatasetKind::Digits;
+    cfg0.fl.partition = Partition::NonIidPaper;
+
+    let mut table = CsvWriter::create(
+        opts.out_dir.join("table2.csv"),
+        &[&format!("Table II: comparison with SOTA (SynthDigits non-IID, {})", cfg0.fl.model.tag()), &cfg0.to_toml()],
+        &["label", "scheme", "placement", "accuracy_pct", "convergence_h", "convergence_hm",
+          "epochs", "transfers"],
+    )?;
+    let mut fig6 = CsvWriter::create(
+        opts.out_dir.join("fig6.csv"),
+        &["Fig. 6: accuracy vs convergence time (same runs as Table II)"],
+        &["label", "time_h", "epoch", "accuracy", "loss"],
+    )?;
+
+    println!("\n=== Table II (SynthDigits non-IID, {}) ===", cfg0.fl.model.tag());
+    println!("{:<20} {:>9} {:>12} {:>7}", "scheme", "acc(%)", "conv(h:mm)", "epochs");
+    for &(label, scheme, placement) in TABLE2_ROWS {
+        let mut cfg = cfg0.clone();
+        cfg.fl.scheme = scheme;
+        cfg.placement = placement;
+        let r = run_one(&cfg, opts)?;
+        let (conv_t, acc) = summary_of(&r);
+        table.row(&[
+            s(label),
+            s(scheme.name()),
+            s(placement.name()),
+            f(acc * 100.0),
+            f(conv_t / 3600.0),
+            s(&fmt_hm(conv_t)),
+            i(r.epochs),
+            i(r.transfers),
+        ])?;
+        for p in &r.curve.points {
+            fig6.row(&[
+                s(label),
+                f(p.time_s / 3600.0),
+                i(p.epoch),
+                f(p.accuracy),
+                f(p.loss),
+            ])?;
+        }
+        println!(
+            "{:<20} {:>9.2} {:>12} {:>7}",
+            label,
+            acc * 100.0,
+            fmt_hm(conv_t),
+            r.epochs
+        );
+    }
+    table.flush()?;
+    fig6.flush()?;
+    Ok(())
+}
+
+/// Convergence summary: (time, accuracy) — plateau if detected, else
+/// (last-time, final accuracy).
+fn summary_of(r: &RunResult) -> (f64, f64) {
+    match r.converged {
+        Some((t, acc)) => (t, acc),
+        None => (
+            r.curve.points.last().map(|p| p.time_s).unwrap_or(0.0),
+            r.final_accuracy,
+        ),
+    }
+}
+
+// ----------------------------------------------------------------------
+// E3–E8: Fig. 7 / Fig. 8 grids — AsyncFLEO across settings
+// ----------------------------------------------------------------------
+
+fn fig_grid(
+    opts: &ExpOptions,
+    name: &str,
+    dataset: DatasetKind,
+    partition: Partition,
+    two_haps: bool,
+) -> Result<()> {
+    let mut w = CsvWriter::create(
+        opts.out_dir.join(format!("{name}.csv")),
+        &[&format!(
+            "{name}: AsyncFLEO on {dataset:?} partition {partition:?} two_haps={two_haps}"
+        )],
+        &["model", "placement", "partition", "time_h", "epoch", "accuracy", "loss"],
+    )?;
+    println!("\n=== {name} ({dataset:?}) ===");
+
+    // fig7c/fig8c sweep partitions at the fixed two-HAP placement; the
+    // a/b panels sweep placement at a fixed partition.
+    let cells: Vec<(ModelKind, PsPlacement, Partition)> = if two_haps {
+        [Partition::Iid, Partition::NonIidPaper]
+            .iter()
+            .flat_map(|&p| {
+                [
+                    (ModelKind::Cnn, PsPlacement::TwoHaps, p),
+                    (ModelKind::Mlp, PsPlacement::TwoHaps, p),
+                ]
+            })
+            .collect()
+    } else {
+        [PsPlacement::HapRolla, PsPlacement::GsRolla]
+            .iter()
+            .flat_map(|&pl| [(ModelKind::Cnn, pl, partition), (ModelKind::Mlp, pl, partition)])
+            .collect()
+    };
+
+    for (model, placement, part) in cells {
+        let mut cfg = base_config(opts);
+        cfg.fl.scheme = SchemeKind::AsyncFleo;
+        cfg.fl.model = model;
+        cfg.fl.dataset = dataset;
+        cfg.fl.partition = part;
+        cfg.placement = placement;
+        let r = run_one(&cfg, opts)?;
+        let part_name = if part == Partition::Iid { "iid" } else { "non-iid" };
+        for p in &r.curve.points {
+            w.row(&[
+                s(model.tag()),
+                s(placement.name()),
+                s(part_name),
+                f(p.time_s / 3600.0),
+                i(p.epoch),
+                f(p.accuracy),
+                f(p.loss),
+            ])?;
+        }
+        let (conv_t, acc) = summary_of(&r);
+        println!(
+            "{:<5} {:<10} {:<8} acc {:>6.2}%  conv {}",
+            model.tag(),
+            placement.name(),
+            part_name,
+            acc * 100.0,
+            fmt_hm(conv_t)
+        );
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ----------------------------------------------------------------------
+// A1–A3: ablations of AsyncFLEO's design choices
+// ----------------------------------------------------------------------
+
+fn ablation(opts: &ExpOptions, which: &str) -> Result<()> {
+    let mut cfg = base_config(opts);
+    cfg.fl.scheme = SchemeKind::AsyncFleo;
+    cfg.fl.model = ModelKind::Mlp; // ablations probe the coordinator
+    cfg.fl.dataset = DatasetKind::Digits;
+    cfg.fl.partition = Partition::NonIidPaper;
+    cfg.placement = PsPlacement::HapRolla;
+
+    let variants: Vec<(&str, AsyncFleo)> = match which {
+        "ablate-grouping" => vec![
+            ("grouping-on", AsyncFleo::default()),
+            ("grouping-off", AsyncFleo { disable_grouping: true, ..Default::default() }),
+        ],
+        "ablate-staleness" => vec![
+            ("discount-on", AsyncFleo::default()),
+            ("discount-off", AsyncFleo { disable_staleness_discount: true, ..Default::default() }),
+        ],
+        "ablate-relay" => vec![
+            ("relay-on", AsyncFleo::default()),
+            ("relay-off", AsyncFleo { disable_isl_relay: true, ..Default::default() }),
+        ],
+        other => bail!("unknown ablation {other}"),
+    };
+
+    let mut w = CsvWriter::create(
+        opts.out_dir.join(format!("{which}.csv")),
+        &[&format!("{which}: AsyncFLEO design ablation (SynthDigits non-IID, MLP)"), &cfg.to_toml()],
+        &["variant", "accuracy_pct", "convergence_h", "epochs", "transfers"],
+    )?;
+    println!("\n=== {which} ===");
+    for (label, strat) in variants {
+        let r = run_one_with(&cfg, opts, Box::new(strat))?;
+        let (conv_t, acc) = summary_of(&r);
+        w.row(&[s(label), f(acc * 100.0), f(conv_t / 3600.0), i(r.epochs), i(r.transfers)])?;
+        println!(
+            "{label:<14} acc {:>6.2}%  conv {}  epochs {}",
+            acc * 100.0,
+            fmt_hm(conv_t),
+            r.epochs
+        );
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Print environment / manifest information (CLI `info`).
+pub fn print_info(artifact_dir: &Path) -> Result<()> {
+    println!("asyncfleo — paper reproduction build");
+    match crate::runtime::Manifest::load(artifact_dir) {
+        Ok(m) => {
+            println!(
+                "artifacts: {} ({} models, {} artifacts)",
+                artifact_dir.display(),
+                m.models.len(),
+                m.artifacts.len()
+            );
+            println!(
+                "train geometry: J={} steps x b={} per dispatch, eval chunk {}",
+                m.local_steps, m.batch, m.eval_batch
+            );
+            for (name, me) in &m.models {
+                println!("  model {:<12} D={:>7} feat={:>5}", name, me.dim, me.feat);
+            }
+        }
+        Err(e) => println!("artifacts: NOT READY ({e})"),
+    }
+    let cfg = ExperimentConfig::paper_defaults();
+    println!(
+        "paper constellation: {} orbits x {} sats @ {} km, incl {} deg",
+        cfg.constellation.n_orbits,
+        cfg.constellation.sats_per_orbit,
+        cfg.constellation.altitude_km,
+        cfg.constellation.inclination_deg
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        let opts = ExpOptions { surrogate: true, ..Default::default() };
+        assert!(run_experiment("nope", &opts).is_err());
+    }
+
+    #[test]
+    fn table2_rows_cover_paper() {
+        assert_eq!(TABLE2_ROWS.len(), 8);
+        // three AsyncFLEO variants as in the paper
+        let ours = TABLE2_ROWS
+            .iter()
+            .filter(|(_, s, _)| *s == SchemeKind::AsyncFleo)
+            .count();
+        assert_eq!(ours, 3);
+    }
+}

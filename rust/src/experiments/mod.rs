@@ -1,0 +1,6 @@
+//! Experiment drivers regenerating every paper table & figure
+//! (DESIGN.md §4 maps each driver to its paper artifact).
+
+pub mod drivers;
+
+pub use drivers::{run_experiment, ExpOptions, ALL_EXPERIMENTS, TABLE2_ROWS};

@@ -1,0 +1,218 @@
+//! Model selection + staleness-discounted aggregation coefficients
+//! (paper Sec. IV-C2, Eqs. 13–14).
+//!
+//! Per group G_i: if *any* member model is fresh (its `epoch` equals
+//! the current β), only the fresh members are selected and the stale
+//! ones discarded *for this epoch*; if a group has only stale models
+//! they are all selected but discounted.
+//!
+//! The paper's Eq. 13 defines the discount mass
+//! γ = Σ_n (D_n/D)(k_n/β) over the selected models, where **D is the
+//! total data size of *all* satellites** (not just the selected ones),
+//! and Eq. 14 mixes `(1-γ)·w^β + Σ γ_n·w_n` with per-model
+//! γ_n = (D_n/D)·(k_n/β) so that Σγ_n = γ and the update is a convex
+//! combination. Two consequences the paper's rationale leans on:
+//! * **partial participation is anchored** — if only a quarter of the
+//!   constellation's data is represented this epoch, γ ≈ 0.25 and the
+//!   previous global model keeps most of its weight (without this the
+//!   global model oscillates with whatever subset arrives first);
+//! * **staleness discounts** — a model trained against epoch k_n < β
+//!   enters with its share scaled by k_n/β, and only when its whole
+//!   group is stale (fresh models are preferred by selection).
+//! When every satellite is selected and fresh, γ = 1 and the update
+//! reduces to plain data-size-weighted FedAvg (Eq. 4).
+
+use crate::model::ModelMetadata;
+
+/// One candidate model at the sink: its metadata + its group id.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub meta: ModelMetadata,
+    pub group: usize,
+}
+
+/// The outcome of selection: which candidates participate (by index
+/// into the candidate slice) and with what coefficient; plus the
+/// coefficient of the previous global model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Selection {
+    pub chosen: Vec<(usize, f32)>,
+    pub coeff_prev: f32,
+    /// γ of Eq. 13 (= Σ of chosen coefficients).
+    pub gamma: f32,
+}
+
+/// Apply the group-wise fresh/stale selection rule (Sec. IV-C2).
+/// Returns indices into `candidates` that participate this epoch.
+pub fn select_models(candidates: &[Candidate], current_epoch: u64) -> Vec<usize> {
+    let n_groups = candidates.iter().map(|c| c.group).max().map_or(0, |g| g + 1);
+    let mut selected = Vec::new();
+    for g in 0..n_groups {
+        let members: Vec<usize> =
+            (0..candidates.len()).filter(|&i| candidates[i].group == g).collect();
+        if members.is_empty() {
+            continue;
+        }
+        let any_fresh = members.iter().any(|&i| candidates[i].meta.is_fresh(current_epoch));
+        for &i in &members {
+            if !any_fresh || candidates[i].meta.is_fresh(current_epoch) {
+                selected.push(i);
+            }
+        }
+    }
+    selected
+}
+
+/// Compute the aggregation coefficients (Eqs. 13–14) for the selected
+/// candidates. `total_data` is D of Eq. 13: the total data size of the
+/// whole constellation (pass the sum over *all* satellites; 0 falls
+/// back to the selected sum, losing the partial-participation anchor).
+pub fn staleness_coefficients(
+    candidates: &[Candidate],
+    selected: &[usize],
+    current_epoch: u64,
+    total_data: usize,
+) -> Selection {
+    if selected.is_empty() {
+        return Selection { chosen: vec![], coeff_prev: 1.0, gamma: 0.0 };
+    }
+    let selected_sum: f64 =
+        selected.iter().map(|&i| candidates[i].meta.data_size as f64).sum();
+    let d_total = if total_data > 0 { total_data as f64 } else { selected_sum };
+    let mut chosen = Vec::with_capacity(selected.len());
+    let mut gamma = 0.0f64;
+    for &i in selected {
+        let m = &candidates[i].meta;
+        let share = if d_total > 0.0 { m.data_size as f64 / d_total } else { 0.0 };
+        let g_n = share * m.staleness_ratio(current_epoch);
+        gamma += g_n;
+        chosen.push((i, g_n as f32));
+    }
+    let gamma = gamma.clamp(0.0, 1.0);
+    Selection { chosen, coeff_prev: (1.0 - gamma) as f32, gamma: gamma as f32 }
+}
+
+/// Convenience: full selection + coefficients in one call.
+pub fn select_and_weigh(
+    candidates: &[Candidate],
+    current_epoch: u64,
+    total_data: usize,
+) -> Selection {
+    let selected = select_models(candidates, current_epoch);
+    staleness_coefficients(candidates, &selected, current_epoch, total_data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(sat: usize, group: usize, epoch: u64, size: usize) -> Candidate {
+        Candidate {
+            meta: ModelMetadata {
+                sat_id: sat,
+                orbit: group,
+                data_size: size,
+                loc_rad: 0.0,
+                ts_s: 0.0,
+                epoch,
+            },
+            group,
+        }
+    }
+
+    #[test]
+    fn all_fresh_is_fedavg() {
+        let cs = vec![cand(0, 0, 5, 100), cand(1, 0, 5, 300), cand(2, 1, 5, 100)];
+        // whole constellation participating: D = sum of shard sizes
+        let sel = select_and_weigh(&cs, 5, 500);
+        assert_eq!(sel.chosen.len(), 3);
+        assert!((sel.gamma - 1.0).abs() < 1e-6);
+        assert!(sel.coeff_prev.abs() < 1e-6);
+        // weights proportional to data size
+        let w: Vec<f32> = sel.chosen.iter().map(|&(_, w)| w).collect();
+        assert!((w[0] - 0.2).abs() < 1e-6);
+        assert!((w[1] - 0.6).abs() < 1e-6);
+        assert!((w[2] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stale_discarded_when_group_has_fresh() {
+        let cs = vec![cand(0, 0, 5, 100), cand(1, 0, 3, 100)];
+        let selected = select_models(&cs, 5);
+        assert_eq!(selected, vec![0]);
+    }
+
+    #[test]
+    fn all_stale_group_kept_with_discount() {
+        let cs = vec![cand(0, 0, 2, 100), cand(1, 0, 3, 100)];
+        let sel = select_and_weigh(&cs, 4, 200);
+        assert_eq!(sel.chosen.len(), 2);
+        // gamma = 0.5*(2/4) + 0.5*(3/4) = 0.625
+        assert!((sel.gamma - 0.625).abs() < 1e-6);
+        assert!((sel.coeff_prev - 0.375).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mixed_groups_independent() {
+        // group 0 has a fresh model; group 1 only stale
+        let cs = vec![cand(0, 0, 6, 100), cand(1, 0, 2, 100), cand(2, 1, 3, 100)];
+        let selected = select_models(&cs, 6);
+        assert_eq!(selected, vec![0, 2]);
+        let sel = staleness_coefficients(&cs, &selected, 6, 200);
+        // fresh share 0.5*1.0 + stale share 0.5*(3/6) = 0.75
+        assert!((sel.gamma - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn partial_participation_anchors_previous_global() {
+        // Eq. 13's D is the WHOLE constellation's data: with only a
+        // quarter of the data represented, gamma ~ 0.25 and the
+        // previous global model keeps ~0.75 weight.
+        let cs = vec![cand(0, 0, 5, 100), cand(1, 1, 5, 150)];
+        let sel = select_and_weigh(&cs, 5, 1000);
+        assert!((sel.gamma - 0.25).abs() < 1e-6, "gamma {}", sel.gamma);
+        assert!((sel.coeff_prev - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_candidates() {
+        let sel = select_and_weigh(&[], 3, 1000);
+        assert!(sel.chosen.is_empty());
+        assert_eq!(sel.coeff_prev, 1.0);
+    }
+
+    #[test]
+    fn coefficients_form_convex_combination() {
+        crate::testkit::forall(|rng| {
+            let n = rng.range_usize(1, 20);
+            let beta = rng.range_usize(1, 10) as u64;
+            let cs: Vec<Candidate> = (0..n)
+                .map(|i| {
+                    cand(
+                        i,
+                        rng.below(4),
+                        rng.below(beta as usize + 1) as u64,
+                        rng.range_usize(10, 500),
+                    )
+                })
+                .collect();
+            // D >= sum of candidate sizes (non-participants exist too)
+            let total_data: usize = cs.iter().map(|c| c.meta.data_size).sum::<usize>()
+                + rng.range_usize(0, 5000);
+            let sel = select_and_weigh(&cs, beta, total_data);
+            let total: f32 =
+                sel.coeff_prev + sel.chosen.iter().map(|&(_, w)| w).sum::<f32>();
+            assert!((total - 1.0).abs() < 1e-4, "total {total}");
+            for &(_, w) in &sel.chosen {
+                assert!((0.0..=1.0).contains(&w));
+            }
+        });
+    }
+
+    #[test]
+    fn epoch_zero_counts_as_fresh() {
+        let cs = vec![cand(0, 0, 0, 100)];
+        let sel = select_and_weigh(&cs, 0, 100);
+        assert!((sel.gamma - 1.0).abs() < 1e-6);
+    }
+}

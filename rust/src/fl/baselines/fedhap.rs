@@ -1,0 +1,63 @@
+//! FedHAP (Elmahallawy & Luo [6]): synchronous FL with HAPs as
+//! collaborative parameter servers. Satellites exchange models with
+//! whichever HAP sees them first; the round still waits for the whole
+//! constellation (synchronous), which is why the paper reports ~30 h
+//! convergence despite the improved HAP visibility.
+
+use crate::coordinator::{RunResult, SimEnv};
+use crate::fl::Strategy;
+
+pub struct FedHap;
+
+impl Strategy for FedHap {
+    fn name(&self) -> &'static str {
+        "fedhap"
+    }
+
+    fn run(&mut self, env: &mut SimEnv) -> RunResult {
+        run_synchronous_hap(env)
+    }
+}
+
+fn run_synchronous_hap(env: &mut SimEnv) -> RunResult {
+    // Mechanically the sync engine with the configured HAP placement;
+    // multi-HAP collaboration enters through next_visible_any (a
+    // satellite deals with the HAP that sees it first).
+    super::run_synchronous(env, "fedhap", false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, PsPlacement};
+    use crate::coordinator::SimEnv;
+    use crate::train::SurrogateBackend;
+
+    fn run(placement: PsPlacement) -> RunResult {
+        let mut cfg = ExperimentConfig::paper_defaults();
+        cfg.placement = placement;
+        cfg.fl.horizon_s = 96.0 * 3600.0;
+        cfg.fl.max_epochs = 10;
+        let mut b = SurrogateBackend::paper_split(5, 8, false, 100);
+        let mut env = SimEnv::new(&cfg, &mut b);
+        FedHap.run(&mut env)
+    }
+
+    #[test]
+    fn hap_rounds_complete() {
+        let r = run(PsPlacement::HapRolla);
+        assert!(r.epochs >= 1);
+        assert!(r.final_accuracy > 0.5);
+    }
+
+    #[test]
+    fn two_haps_round_no_slower() {
+        let one = run(PsPlacement::HapRolla);
+        let two = run(PsPlacement::TwoHaps);
+        if one.epochs >= 1 && two.epochs >= 1 {
+            let t1 = one.curve.points[1].time_s;
+            let t2 = two.curve.points[1].time_s;
+            assert!(t2 <= t1 + 60.0, "two-HAP first round {t2} vs one-HAP {t1}");
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Federated-learning strategies: AsyncFLEO (the paper's contribution,
+//! Sec. IV) and the five baselines it is evaluated against (Sec. V).
+//!
+//! Every strategy implements [`Strategy`] and runs against a
+//! [`SimEnv`]: geometry and link delays drive the *simulated clock*
+//! (the paper's convergence-time axis) while all model compute goes
+//! through the env's [`crate::train::Backend`] (AOT JAX/Pallas
+//! artifacts in real runs).
+
+pub mod aggregation;
+pub mod asyncfleo;
+pub mod baselines;
+pub mod grouping;
+pub mod propagation;
+
+use crate::config::SchemeKind;
+use crate::coordinator::{RunResult, SimEnv};
+
+/// A runnable FL scheme.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+    fn run(&mut self, env: &mut SimEnv) -> RunResult;
+}
+
+/// Instantiate the strategy for a scheme.
+pub fn make_strategy(kind: SchemeKind) -> Box<dyn Strategy> {
+    match kind {
+        SchemeKind::AsyncFleo => Box::new(asyncfleo::AsyncFleo::default()),
+        SchemeKind::FedAvg => Box::new(baselines::fedavg::FedAvg),
+        SchemeKind::FedIsl => Box::new(baselines::fedisl::FedIsl),
+        SchemeKind::FedIslIdeal => Box::new(baselines::fedisl::FedIsl),
+        SchemeKind::FedSat => Box::new(baselines::fedsat::FedSat::default()),
+        SchemeKind::FedSpace => Box::new(baselines::fedspace::FedSpace::default()),
+        SchemeKind::FedHap => Box::new(baselines::fedhap::FedHap),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_covers_all_schemes() {
+        for kind in [
+            SchemeKind::AsyncFleo,
+            SchemeKind::FedAvg,
+            SchemeKind::FedIsl,
+            SchemeKind::FedIslIdeal,
+            SchemeKind::FedSat,
+            SchemeKind::FedSpace,
+            SchemeKind::FedHap,
+        ] {
+            let s = make_strategy(kind);
+            assert!(!s.name().is_empty());
+        }
+    }
+}

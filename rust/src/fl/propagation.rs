@@ -1,0 +1,257 @@
+//! Model propagation timing (paper Algorithm 1, Sec. IV-B).
+//!
+//! Algorithm 1 relays models hop-by-hop: global models flow source-HAP
+//! → ring → all HAPs → star-downlink → visible satellites → intra-orbit
+//! ISL to the invisible ones; local models flow the reverse way, each
+//! satellite relaying toward whichever ring position reaches a HAP
+//! soonest. We implement the algorithm as a *path oracle*: for each
+//! model we compute the arrival time the relay achieves (per-hop link
+//! delays from the geometry at relay time), which is exactly the
+//! event-timing the hop-by-hop process produces, without paying one
+//! queue event per hop. Hop counts still enter the transfer accounting.
+
+use crate::coordinator::SimEnv;
+use crate::topology::HapRing;
+
+/// Receive time of the global model at every HAP when `source` starts
+/// the ring relay at `t` (Sec. IV-B1; Fig. 4a). Index = site id.
+pub fn hap_ring_receive_times(env: &mut SimEnv, ring: &HapRing, source: usize, t: f64) -> Vec<f64> {
+    let n = ring.len();
+    let mut recv = vec![f64::INFINITY; n];
+    recv[source] = t;
+    // Relay along the plan: each forwarding hop adds one IHL delay.
+    for (h, fwds) in ring.relay_plan(source) {
+        for fwd in fwds {
+            let t_h = recv[h];
+            debug_assert!(t_h.is_finite(), "relay plan visits {h} before receiving");
+            let d = env.ihl_hop_delay(h, fwd, t_h);
+            recv[fwd] = recv[fwd].min(t_h + d);
+        }
+    }
+    recv
+}
+
+/// Receive time of the global model at every satellite, given the HAP
+/// broadcast instants `bcasts[site]` (Sec. IV-B2; Fig. 4b).
+///
+/// Visible satellites receive by star downlink; the rest by intra-orbit
+/// ISL relay from whoever got it first. An orbit with nobody visible at
+/// broadcast time receives at its earliest subsequent site contact.
+/// Returns `f64::INFINITY` past-horizon entries when an orbit never
+/// makes contact.
+pub fn sat_receive_times(env: &mut SimEnv, bcasts: &[f64]) -> Vec<f64> {
+    let n_sats = env.constellation.len();
+    let mut recv = vec![f64::INFINITY; n_sats];
+
+    // 1. direct star downlink to currently-visible satellites
+    for (site, &tb) in bcasts.iter().enumerate() {
+        if !tb.is_finite() {
+            continue;
+        }
+        for sat in env.plan.visible_sats(site, tb) {
+            let d = env.site_link_delay(site, sat, tb);
+            recv[sat] = recv[sat].min(tb + d);
+        }
+    }
+
+    // 2. per-orbit: seed stranded orbits, then ISL ring relaxation
+    for orbit in 0..env.constellation.n_orbits {
+        let members = env.constellation.orbit_members(orbit);
+        if members.iter().all(|&m| !recv[m].is_finite()) {
+            // nobody visible at broadcast: earliest later contact wins
+            let mut best: Option<(f64, usize, usize)> = None; // (time, sat, site)
+            for &m in &members {
+                for (site, &tb) in bcasts.iter().enumerate() {
+                    if !tb.is_finite() {
+                        continue;
+                    }
+                    if let Some(tv) = env.plan.next_visible(site, m, tb) {
+                        if best.map_or(true, |b| tv < b.0) {
+                            best = Some((tv, m, site));
+                        }
+                    }
+                }
+            }
+            if let Some((tv, m, site)) = best {
+                let d = env.site_link_delay(site, m, tv);
+                recv[m] = tv + d;
+            } else {
+                continue; // orbit unreachable within horizon
+            }
+        }
+        relax_ring(env, &members, &mut recv);
+    }
+    recv
+}
+
+/// Bidirectional ring relaxation of receive times within one orbit.
+fn relax_ring(env: &mut SimEnv, members: &[usize], recv: &mut [f64]) {
+    let n = members.len();
+    if n <= 1 {
+        return;
+    }
+    // repeated sweeps until fixpoint (≤ n/2 hops from any seed)
+    for _ in 0..n {
+        let mut changed = false;
+        for i in 0..n {
+            let cur = members[i];
+            if !recv[cur].is_finite() {
+                continue;
+            }
+            for nb in [members[(i + 1) % n], members[(i + n - 1) % n]] {
+                let d = env.isl_hop_delay(cur, nb, recv[cur]);
+                if recv[cur] + d < recv[nb] {
+                    recv[nb] = recv[cur] + d;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+}
+
+/// Where a finished local model ends up: the satellite relays it along
+/// its orbit's ring to whichever member can hand it to a site soonest
+/// (Sec. IV-B2 last paragraph). Returns `(site, arrival_time, hops)`,
+/// or `None` if no member ever sees a site again within the horizon.
+pub fn uplink_route(env: &mut SimEnv, sat: usize, t_ready: f64) -> Option<(usize, f64, usize)> {
+    let orbit = env.constellation.satellites[sat].orbit;
+    let members = env.constellation.orbit_members(orbit);
+    let n = members.len();
+    let my_slot = env.constellation.satellites[sat].slot;
+
+    // Estimate the (near-constant) intra-orbit hop delay once.
+    let hop_delay = if n > 1 {
+        let (prev, _) = env.constellation.ring_neighbors(sat);
+        env.isl_hop_delay(sat, prev, t_ready)
+    } else {
+        0.0
+    };
+
+    let mut best: Option<(usize, f64, usize)> = None;
+    for (j_idx, &j) in members.iter().enumerate() {
+        let fwd = (j_idx + n - my_slot) % n;
+        let hops = fwd.min(n - fwd);
+        let t_at_j = t_ready + hops as f64 * hop_delay;
+        if let Some((tv, site)) = env.plan.next_visible_any(j, t_at_j) {
+            let d_up = env.site_link_delay(site, j, tv);
+            let arrival = tv + d_up;
+            if best.map_or(true, |b| arrival < b.1) {
+                best = Some((site, arrival, hops));
+            }
+        }
+    }
+    // account the relay hops as transfers
+    if let Some((_, _, hops)) = best {
+        env.transfers += hops as u64;
+    }
+    best
+}
+
+/// Arrival time at the sink HAP of a local-model batch handed to
+/// `from_site` at `t` (Sec. IV-B3: relayed along the ring to the sink).
+pub fn ihl_to_sink(env: &mut SimEnv, ring: &HapRing, from_site: usize, t: f64) -> f64 {
+    let mut cur = from_site;
+    let mut time = t;
+    while let Some(next) = ring.next_hop_toward(cur, ring.sink()) {
+        time += env.ihl_hop_delay(cur, next, time);
+        cur = next;
+    }
+    time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::SimEnv;
+    use crate::train::SurrogateBackend;
+
+    fn env_with(placement: crate::config::PsPlacement) -> (ExperimentConfig, SurrogateBackend) {
+        let mut cfg = ExperimentConfig::paper_defaults();
+        cfg.placement = placement;
+        cfg.fl.horizon_s = 86_400.0;
+        let b = SurrogateBackend::paper_split(5, 8, false, 100);
+        (cfg, b)
+    }
+
+    #[test]
+    fn hap_ring_two_haps() {
+        let (cfg, mut b) = env_with(crate::config::PsPlacement::TwoHaps);
+        let mut env = SimEnv::new(&cfg, &mut b);
+        let ring = HapRing::new(2);
+        let recv = hap_ring_receive_times(&mut env, &ring, 0, 100.0);
+        assert_eq!(recv[0], 100.0);
+        assert!(recv[1] > 100.0 && recv[1] < 101.0, "IHL delay ~0.2s, got {}", recv[1] - 100.0);
+    }
+
+    #[test]
+    fn sat_receive_times_cover_constellation() {
+        let (cfg, mut b) = env_with(crate::config::PsPlacement::TwoHaps);
+        let mut env = SimEnv::new(&cfg, &mut b);
+        let recv = sat_receive_times(&mut env, &[0.0, 0.3]);
+        let finite = recv.iter().filter(|r| r.is_finite()).count();
+        assert_eq!(finite, 40, "all sats reachable within a day: {recv:?}");
+        // visible sats receive almost immediately; stranded orbits later
+        let min = recv.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min < 10.0, "someone visible at t=0 gets it fast");
+    }
+
+    #[test]
+    fn isl_relay_beats_waiting() {
+        // satellites in an orbit with one visible member must receive
+        // within a few ISL hops (~seconds), not wait for their own pass
+        let (cfg, mut b) = env_with(crate::config::PsPlacement::HapRolla);
+        let mut env = SimEnv::new(&cfg, &mut b);
+        let t0 = env.plan.windows(0, 0).first().map(|w| w.start_s + 1.0).unwrap_or(0.0);
+        let recv = sat_receive_times(&mut env, &[t0]);
+        let visible = env.plan.visible_sats(0, t0);
+        for &v in &visible {
+            let orbit = env.constellation.satellites[v].orbit;
+            for &m in &env.constellation.orbit_members(orbit) {
+                assert!(
+                    recv[m] - t0 < 60.0,
+                    "sat {m} in seeded orbit {orbit} took {}s",
+                    recv[m] - t0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn uplink_route_exists_and_is_causal() {
+        let (cfg, mut b) = env_with(crate::config::PsPlacement::HapRolla);
+        let mut env = SimEnv::new(&cfg, &mut b);
+        for sat in [0usize, 7, 21, 39] {
+            let (site, arrival, hops) = uplink_route(&mut env, sat, 1000.0).unwrap();
+            assert!(site < 1 + 0 + 1);
+            assert!(arrival > 1000.0);
+            assert!(hops <= 4, "ring of 8: at most 4 hops");
+        }
+    }
+
+    #[test]
+    fn uplink_route_visible_sat_is_fast() {
+        let (cfg, mut b) = env_with(crate::config::PsPlacement::HapRolla);
+        let mut env = SimEnv::new(&cfg, &mut b);
+        // find a moment a satellite is visible
+        let w = env.plan.windows(0, 5).first().copied().expect("sat 5 window");
+        let t = 0.5 * (w.start_s + w.end_s);
+        let (_, arrival, hops) = uplink_route(&mut env, 5, t).unwrap();
+        assert_eq!(hops, 0, "already visible: no relay needed");
+        assert!(arrival - t < 5.0, "direct uplink, got {}", arrival - t);
+    }
+
+    #[test]
+    fn sink_forwarding_adds_delay() {
+        let (cfg, mut b) = env_with(crate::config::PsPlacement::TwoHaps);
+        let mut env = SimEnv::new(&cfg, &mut b);
+        let ring = HapRing::new(2);
+        let t_sink = ihl_to_sink(&mut env, &ring, 0, 500.0);
+        assert!(t_sink > 500.0);
+        let t_already = ihl_to_sink(&mut env, &ring, ring.sink(), 500.0);
+        assert_eq!(t_already, 500.0);
+    }
+}

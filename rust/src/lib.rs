@@ -1,0 +1,52 @@
+//! # AsyncFLEO — asynchronous federated learning for LEO constellations
+//!
+//! Reproduction of *"AsyncFLEO: Asynchronous Federated Learning for LEO
+//! Satellite Constellations with High-Altitude Platforms"*
+//! (Elmahallawy & Luo, 2022) as a three-layer Rust + JAX + Pallas system.
+//!
+//! This crate is **Layer 3**: the coordination contribution of the paper
+//! plus every substrate it depends on —
+//!
+//! * [`orbit`] — Keplerian constellation propagation, Walker-delta
+//!   builder, ground/HAP sites, visibility and contact windows;
+//! * [`comm`] — the paper's RF link model (Eqs. 5–9): FSPL, SNR,
+//!   Shannon rate, delay composition;
+//! * [`topology`] — the ring-of-stars SAT↔HAP topology (Sec. IV-A);
+//! * [`sim`] — a discrete-event simulation engine (the "event loop");
+//! * [`data`] — synthetic class-structured datasets + IID / paper
+//!   non-IID partitioning (MNIST/CIFAR stand-ins, DESIGN.md §1);
+//! * [`model`] — flat `f32` parameter buffers and satellite metadata;
+//! * [`runtime`] — the PJRT bridge: loads the AOT HLO artifacts emitted
+//!   by `python/compile/aot.py` and executes them (L2/L1 compute);
+//! * [`train`] — per-satellite local training / evaluation on top of
+//!   [`runtime`];
+//! * [`fl`] — the FL strategies: AsyncFLEO (grouping, staleness
+//!   discounting, model propagation — Algorithms 1 & 2) and the five
+//!   baselines (FedAvg, FedISL, FedSat, FedSpace, FedHAP);
+//! * [`coordinator`] — the orchestrator that drives everything;
+//! * [`experiments`] — drivers regenerating every paper table & figure;
+//! * [`config`], [`cli`], [`metrics`], [`bench`], [`testkit`],
+//!   [`util`] — supporting substrates built from scratch (crates.io is
+//!   unreachable; see DESIGN.md §1).
+//!
+//! Python never runs at this layer: `make artifacts` AOT-compiles the
+//! JAX/Pallas compute once, and the `asyncfleo` binary is self-contained
+//! afterwards.
+
+pub mod bench;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod fl;
+pub mod metrics;
+pub mod model;
+pub mod orbit;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod topology;
+pub mod train;
+pub mod util;

@@ -1,0 +1,157 @@
+//! `asyncfleo` — launcher CLI for the AsyncFLEO paper reproduction.
+//!
+//! ```text
+//! asyncfleo exp <name>|all [--out DIR] [--fast] [--surrogate] [--seed N]
+//! asyncfleo run [--config FILE] [--scheme S] [--placement P] ...
+//! asyncfleo info
+//! ```
+
+use asyncfleo::cli::Args;
+use asyncfleo::config::{ExperimentConfig, ModelKind, PsPlacement, SchemeKind};
+use asyncfleo::experiments::drivers::{print_info, run_one, ExpOptions};
+use asyncfleo::experiments::run_experiment;
+use asyncfleo::util::fmt_hm;
+
+const USAGE: &str = "\
+asyncfleo — AsyncFLEO paper reproduction (Rust + JAX + Pallas)
+
+USAGE:
+  asyncfleo exp <name>|all [--out DIR] [--fast] [--surrogate] [--seed N]
+      Regenerate a paper table/figure (table2 fig6 fig7a-c fig8a-c,
+      ablate-{grouping,staleness,relay}) into DIR (default: results/).
+
+  asyncfleo run [--config FILE] [--scheme S] [--placement P]
+                [--model mlp|cnn] [--dataset digits|cifar]
+                [--partition iid|non-iid] [--horizon-hours H]
+                [--max-epochs N] [--seed N] [--surrogate]
+      Run a single FL experiment and print its curve.
+
+  asyncfleo info
+      Show artifact manifest + paper constellation info.
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv, true, &["fast", "surrogate", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return;
+    }
+    let result = match args.subcommand.as_deref().unwrap() {
+        "exp" => cmd_exp(&args),
+        "run" => cmd_run(&args),
+        "info" => print_info(&asyncfleo::runtime::Runtime::default_dir()),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let opts = ExpOptions {
+        out_dir: args.opt_or("out", "results").into(),
+        fast: args.flag("fast"),
+        surrogate: args.flag("surrogate"),
+        seed: args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)?.unwrap_or(42),
+    };
+    run_experiment(name, &opts)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => ExperimentConfig::from_file(path).map_err(anyhow::Error::msg)?,
+        None => ExperimentConfig::paper_defaults(),
+    };
+    if let Some(s) = args.opt("scheme") {
+        cfg.fl.scheme =
+            SchemeKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scheme {s}"))?;
+    }
+    if let Some(p) = args.opt("placement") {
+        cfg.placement =
+            PsPlacement::parse(p).ok_or_else(|| anyhow::anyhow!("unknown placement {p}"))?;
+    }
+    if let Some(m) = args.opt("model") {
+        cfg.fl.model = ModelKind::parse(m).ok_or_else(|| anyhow::anyhow!("unknown model {m}"))?;
+    }
+    if let Some(d) = args.opt("dataset") {
+        cfg.fl.dataset = match d {
+            "digits" | "mnist" => asyncfleo::data::DatasetKind::Digits,
+            "cifar" | "cifar10" => asyncfleo::data::DatasetKind::Cifar,
+            _ => anyhow::bail!("unknown dataset {d}"),
+        };
+    }
+    if let Some(p) = args.opt("partition") {
+        cfg.fl.partition = match p {
+            "iid" => asyncfleo::data::Partition::Iid,
+            "non-iid" | "noniid" => asyncfleo::data::Partition::NonIidPaper,
+            _ => anyhow::bail!("unknown partition {p}"),
+        };
+    }
+    if let Some(h) = args.opt_parse::<f64>("horizon-hours").map_err(anyhow::Error::msg)? {
+        cfg.fl.horizon_s = h * 3600.0;
+    }
+    if let Some(n) = args.opt_parse::<u64>("max-epochs").map_err(anyhow::Error::msg)? {
+        cfg.fl.max_epochs = n;
+    }
+    if let Some(n) = args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
+        cfg.seed = n;
+    }
+    let errs = cfg.validate();
+    if !errs.is_empty() {
+        anyhow::bail!("invalid config: {}", errs.join("; "));
+    }
+
+    let opts = ExpOptions { surrogate: args.flag("surrogate"), ..Default::default() };
+    println!(
+        "running {} @ {} ({}, {}, {})",
+        cfg.fl.scheme.name(),
+        cfg.placement.name(),
+        cfg.model_tag(),
+        if cfg.fl.partition == asyncfleo::data::Partition::Iid { "iid" } else { "non-iid" },
+        if opts.surrogate { "surrogate" } else { "pjrt" },
+    );
+    let r = run_one(&cfg, &opts)?;
+    if r.curve.points.len() >= 2 {
+        println!("\n{}", asyncfleo::metrics::chart::render_curve(&r.curve, 64, 14));
+    }
+    println!("\n  time(h:mm)  epoch  accuracy    loss");
+    for p in &r.curve.points {
+        println!(
+            "  {:>9}  {:>5}  {:>8.4}  {:>7.4}",
+            fmt_hm(p.time_s),
+            p.epoch,
+            p.accuracy,
+            p.loss
+        );
+    }
+    match r.converged {
+        Some((t, acc)) => println!(
+            "\nconverged at {} with plateau accuracy {:.2}% ({} epochs, {} transfers)",
+            fmt_hm(t),
+            acc * 100.0,
+            r.epochs,
+            r.transfers
+        ),
+        None => println!(
+            "\ndid not converge within horizon (final accuracy {:.2}%)",
+            r.final_accuracy * 100.0
+        ),
+    }
+    Ok(())
+}

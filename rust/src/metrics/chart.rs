@@ -1,0 +1,125 @@
+//! ASCII line charts for accuracy/loss curves (terminal-friendly
+//! rendering of the paper's Fig. 6–8 series; used by the CLI and the
+//! examples — no plotting library offline).
+
+use super::Curve;
+
+/// Render one curve as an ASCII chart of `width` x `height` cells.
+/// X = simulated hours, Y = accuracy in [0, 1].
+pub fn render_curve(curve: &Curve, width: usize, height: usize) -> String {
+    render_multi(&[("", curve)], width, height)
+}
+
+/// Render several named curves on shared axes; each series gets a
+/// distinct glyph.
+pub fn render_multi(series: &[(&str, &Curve)], width: usize, height: usize) -> String {
+    assert!(width >= 16 && height >= 4, "chart too small");
+    const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+    let t_max = series
+        .iter()
+        .flat_map(|(_, c)| c.points.last())
+        .map(|p| p.time_s)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, curve)) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        // piecewise-linear resample onto the grid columns
+        for col in 0..width {
+            let t = t_max * col as f64 / (width - 1) as f64;
+            if let Some(acc) = sample_at(curve, t) {
+                let row = ((1.0 - acc.clamp(0.0, 1.0)) * (height - 1) as f64).round() as usize;
+                grid[row.min(height - 1)][col] = glyph;
+            }
+        }
+    }
+
+    let mut out = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let y = 1.0 - r as f64 / (height - 1) as f64;
+        out.push_str(&format!("{:>5.2} |", y));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("      +{}\n", "-".repeat(width)));
+    out.push_str(&format!(
+        "       0h{:>width$.1}h\n",
+        t_max / 3600.0,
+        width = width - 2
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        if !name.is_empty() {
+            out.push_str(&format!("       {} {}\n", GLYPHS[si % GLYPHS.len()], name));
+        }
+    }
+    out
+}
+
+/// Linear interpolation of the accuracy curve at time `t` (None before
+/// the first point).
+fn sample_at(curve: &Curve, t: f64) -> Option<f64> {
+    let pts = &curve.points;
+    if pts.is_empty() || t < pts[0].time_s {
+        return None;
+    }
+    match pts.iter().position(|p| p.time_s > t) {
+        None => Some(pts.last().unwrap().accuracy),
+        Some(0) => Some(pts[0].accuracy),
+        Some(i) => {
+            let (a, b) = (&pts[i - 1], &pts[i]);
+            let span = (b.time_s - a.time_s).max(1e-12);
+            let w = (t - a.time_s) / span;
+            Some(crate::util::lerp(a.accuracy, b.accuracy, w))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::CurvePoint;
+
+    fn curve(pts: &[(f64, f64)]) -> Curve {
+        let mut c = Curve::default();
+        for (i, &(t, a)) in pts.iter().enumerate() {
+            c.push(CurvePoint { time_s: t, epoch: i as u64, accuracy: a, loss: 0.0 });
+        }
+        c
+    }
+
+    #[test]
+    fn renders_with_axes() {
+        let c = curve(&[(0.0, 0.1), (3600.0, 0.5), (7200.0, 0.9)]);
+        let s = render_curve(&c, 40, 10);
+        assert!(s.contains('*'));
+        assert!(s.contains("0h"));
+        assert!(s.contains("2.0h"));
+        assert_eq!(s.lines().count(), 12);
+    }
+
+    #[test]
+    fn sample_interpolates() {
+        let c = curve(&[(0.0, 0.0), (100.0, 1.0)]);
+        assert_eq!(sample_at(&c, 50.0), Some(0.5));
+        assert_eq!(sample_at(&c, 0.0), Some(0.0));
+        assert_eq!(sample_at(&c, 1000.0), Some(1.0));
+        assert_eq!(sample_at(&Curve::default(), 1.0), None);
+    }
+
+    #[test]
+    fn multi_series_distinct_glyphs() {
+        let a = curve(&[(0.0, 0.2), (1000.0, 0.8)]);
+        let b = curve(&[(0.0, 0.8), (1000.0, 0.2)]);
+        let s = render_multi(&[("up", &a), ("down", &b)], 30, 8);
+        assert!(s.contains('*') && s.contains('o'));
+        assert!(s.contains("up") && s.contains("down"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_small_panics() {
+        render_curve(&Curve::default(), 4, 2);
+    }
+}

@@ -1,0 +1,92 @@
+//! Tiny CSV writer for experiment outputs (results/*.csv).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with `#`-prefixed header comments (we embed the
+/// full experiment config so every table regenerates from its CSV).
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create(
+        path: impl AsRef<Path>,
+        comments: &[&str],
+        header: &[&str],
+    ) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        for c in comments {
+            for line in c.lines() {
+                writeln!(out, "# {line}")?;
+            }
+        }
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, columns: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.columns, "row arity mismatch");
+        writeln!(self.out, "{}", fields.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Escape-free field formatting helpers.
+pub fn f(v: f64) -> String {
+    format!("{v:.6}")
+}
+
+pub fn i(v: u64) -> String {
+    v.to_string()
+}
+
+pub fn s(v: &str) -> String {
+    assert!(!v.contains(','), "CSV fields must not contain commas");
+    v.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_comments_rows() {
+        let dir = std::env::temp_dir().join("asyncfleo_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut w =
+                CsvWriter::create(&path, &["cfg line1\nline2"], &["a", "b"]).unwrap();
+            w.row(&[f(1.0), i(2)]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("# cfg line1\n# line2\na,b\n"));
+        assert!(text.contains("1.000000,2"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let dir = std::env::temp_dir().join("asyncfleo_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = CsvWriter::create(dir.join("u.csv"), &[], &["a", "b"]).unwrap();
+        let _ = w.row(&[f(1.0)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn comma_in_string_panics() {
+        s("a,b");
+    }
+}

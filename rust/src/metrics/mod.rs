@@ -1,0 +1,179 @@
+//! Run metrics: accuracy/loss curves, convergence detection, CSV output.
+//!
+//! The paper reports *accuracy vs. convergence time* (Table II, Figs.
+//! 6–8) where convergence time is the simulated clock at which the
+//! accuracy curve reaches its plateau. [`ConvergenceDetector`]
+//! implements that: earliest time after which accuracy never drops more
+//! than `tolerance` below the final plateau.
+
+pub mod chart;
+pub mod csv;
+
+pub use csv::CsvWriter;
+
+/// One evaluation point on the training curve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CurvePoint {
+    /// Simulated time, seconds.
+    pub time_s: f64,
+    /// Global epoch β at evaluation.
+    pub epoch: u64,
+    /// Test accuracy in [0, 1].
+    pub accuracy: f64,
+    /// Mean test loss.
+    pub loss: f64,
+}
+
+/// A recorded accuracy/loss curve for one run.
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub points: Vec<CurvePoint>,
+}
+
+impl Curve {
+    pub fn push(&mut self, p: CurvePoint) {
+        if let Some(last) = self.points.last() {
+            assert!(p.time_s >= last.time_s, "curve must be time-ordered");
+        }
+        self.points.push(p);
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.points.last().map(|p| p.accuracy)
+    }
+
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.points.iter().map(|p| p.accuracy).fold(None, |acc, a| {
+            Some(match acc {
+                None => a,
+                Some(b) => b.max(a),
+            })
+        })
+    }
+
+    /// Convergence point: the earliest recorded time from which the
+    /// accuracy stays within `tolerance` of the final plateau (mean of
+    /// the last `tail` points). Returns `(time_s, plateau_accuracy)`.
+    pub fn convergence(&self, tolerance: f64, tail: usize) -> Option<(f64, f64)> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let tail = tail.max(1).min(self.points.len());
+        let plateau: f64 = self.points[self.points.len() - tail..]
+            .iter()
+            .map(|p| p.accuracy)
+            .sum::<f64>()
+            / tail as f64;
+        // earliest index from which all accuracies >= plateau - tolerance
+        let mut idx = self.points.len() - 1;
+        for i in (0..self.points.len()).rev() {
+            if self.points[i].accuracy >= plateau - tolerance {
+                idx = i;
+            } else {
+                break;
+            }
+        }
+        Some((self.points[idx].time_s, plateau))
+    }
+}
+
+/// Streaming convergence check used to stop runs early.
+#[derive(Clone, Debug)]
+pub struct ConvergenceDetector {
+    /// Stop when this many consecutive evaluations improve less than
+    /// `min_delta` over the running best.
+    pub patience: usize,
+    pub min_delta: f64,
+    best: f64,
+    stale: usize,
+}
+
+impl ConvergenceDetector {
+    pub fn new(patience: usize, min_delta: f64) -> Self {
+        ConvergenceDetector { patience, min_delta, best: f64::NEG_INFINITY, stale: 0 }
+    }
+
+    /// Feed an accuracy; returns true when converged.
+    pub fn update(&mut self, accuracy: f64) -> bool {
+        if accuracy > self.best + self.min_delta {
+            self.best = accuracy;
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+        }
+        self.stale >= self.patience
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(points: &[(f64, f64)]) -> Curve {
+        let mut c = Curve::default();
+        for (i, &(t, a)) in points.iter().enumerate() {
+            c.push(CurvePoint { time_s: t, epoch: i as u64, accuracy: a, loss: 1.0 - a });
+        }
+        c
+    }
+
+    #[test]
+    fn convergence_simple_plateau() {
+        let c = curve(&[(0.0, 0.1), (1.0, 0.5), (2.0, 0.8), (3.0, 0.81), (4.0, 0.805)]);
+        let (t, plateau) = c.convergence(0.02, 3).unwrap();
+        assert_eq!(t, 2.0);
+        assert!((plateau - 0.805).abs() < 0.01);
+    }
+
+    #[test]
+    fn convergence_handles_monotone() {
+        let c = curve(&[(0.0, 0.2), (1.0, 0.4), (2.0, 0.6)]);
+        let (t, _) = c.convergence(0.01, 1).unwrap();
+        assert_eq!(t, 2.0);
+    }
+
+    #[test]
+    fn convergence_empty_none() {
+        assert!(Curve::default().convergence(0.01, 3).is_none());
+    }
+
+    #[test]
+    fn best_and_final() {
+        let c = curve(&[(0.0, 0.3), (1.0, 0.9), (2.0, 0.7)]);
+        assert_eq!(c.best_accuracy(), Some(0.9));
+        assert_eq!(c.final_accuracy(), Some(0.7));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_time_regression() {
+        let mut c = Curve::default();
+        c.push(CurvePoint { time_s: 2.0, epoch: 0, accuracy: 0.5, loss: 0.5 });
+        c.push(CurvePoint { time_s: 1.0, epoch: 1, accuracy: 0.6, loss: 0.4 });
+    }
+
+    #[test]
+    fn detector_stops_on_plateau() {
+        let mut d = ConvergenceDetector::new(3, 0.005);
+        assert!(!d.update(0.5));
+        assert!(!d.update(0.6));
+        assert!(!d.update(0.601)); // stale 1
+        assert!(!d.update(0.602)); // stale 2
+        assert!(d.update(0.6)); // stale 3 -> converged
+        assert!((d.best() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn detector_resets_on_improvement() {
+        let mut d = ConvergenceDetector::new(2, 0.0);
+        assert!(!d.update(0.5));
+        assert!(!d.update(0.5)); // stale 1
+        assert!(!d.update(0.7)); // improvement resets
+        assert!(!d.update(0.7)); // stale 1
+        assert!(d.update(0.69)); // stale 2
+    }
+}

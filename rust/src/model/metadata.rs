@@ -1,0 +1,64 @@
+//! The paper's satellite metadata tuple ⟨ID, size, loc, ts, epoch⟩
+//! (Sec. IV-C1) attached to every relayed local model.
+
+/// Metadata accompanying a local model on its way to the PS.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelMetadata {
+    /// Satellite ID (dense index; the paper's (orbit#, sat#) maps to it).
+    pub sat_id: usize,
+    /// Orbit index — used for orbit-wise partial models (Eq. 10–11).
+    pub orbit: usize,
+    /// Training-data size of the satellite (paper `size`, enters Eq. 12/13).
+    pub data_size: usize,
+    /// Angular position (argument of latitude) when transmitted, rad
+    /// (paper `loc`; the PS uses it to predict the next visit).
+    pub loc_rad: f64,
+    /// Simulated timestamp of transmission (paper `ts`), seconds.
+    pub ts_s: f64,
+    /// Last global epoch this satellite's model was trained against
+    /// (paper `epoch`; freshness = epoch == current β).
+    pub epoch: u64,
+}
+
+impl ModelMetadata {
+    /// Freshness test (Sec. IV-C1): trained against the current global
+    /// epoch?
+    pub fn is_fresh(&self, current_epoch: u64) -> bool {
+        self.epoch == current_epoch
+    }
+
+    /// Staleness ratio k_n/β of Eq. 13 (1.0 when fresh; →0 with age).
+    /// β = 0 is defined as fresh (first epoch has nothing to be stale
+    /// against).
+    pub fn staleness_ratio(&self, current_epoch: u64) -> f64 {
+        if current_epoch == 0 {
+            1.0
+        } else {
+            (self.epoch.min(current_epoch) as f64) / (current_epoch as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn md(epoch: u64) -> ModelMetadata {
+        ModelMetadata { sat_id: 1, orbit: 0, data_size: 100, loc_rad: 0.0, ts_s: 0.0, epoch }
+    }
+
+    #[test]
+    fn freshness() {
+        assert!(md(5).is_fresh(5));
+        assert!(!md(4).is_fresh(5));
+    }
+
+    #[test]
+    fn staleness_ratio_bounds() {
+        assert_eq!(md(5).staleness_ratio(5), 1.0);
+        assert_eq!(md(0).staleness_ratio(0), 1.0);
+        assert_eq!(md(2).staleness_ratio(4), 0.5);
+        // future-tagged models clamp to 1 (defensive)
+        assert_eq!(md(9).staleness_ratio(4), 1.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Model state as the L3 coordinator sees it: flat `f32` parameter
+//! buffers plus the paper's per-satellite metadata tuple
+//! ⟨ID, size, loc, ts, epoch⟩ (Sec. IV-C1).
+//!
+//! The flat layout is frozen by `python/compile/model.py::layer_shapes`;
+//! L3 never interprets the contents — it relays, groups, distances and
+//! aggregates whole buffers (the latter two through the compiled L1
+//! kernels on the hot path, with pure-Rust fallbacks here for tests and
+//! for simulator-only runs).
+
+pub mod metadata;
+pub mod params;
+
+pub use metadata::ModelMetadata;
+pub use params::ModelParams;

@@ -1,0 +1,132 @@
+//! Flat model parameter buffers and the linear algebra the coordinator
+//! needs on them.
+
+use crate::util::Rng;
+
+/// A model's parameters: one contiguous f32 vector whose layout is
+/// defined by the AOT manifest (python/compile/model.py).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelParams {
+    pub data: Vec<f32>,
+}
+
+impl ModelParams {
+    pub fn zeros(dim: usize) -> Self {
+        ModelParams { data: vec![0.0; dim] }
+    }
+
+    /// Random init for simulator-only runs / tests (the real runs use
+    /// the AOT `init_*` artifact so L2/L3 agree on numerics).
+    pub fn random(dim: usize, std: f32, rng: &mut Rng) -> Self {
+        ModelParams { data: (0..dim).map(|_| rng.normal(0.0, std as f64) as f32).collect() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Euclidean distance ‖self − other‖₂ (pure-Rust fallback of the
+    /// `dist_*` artifact; used for grouping in simulator-only mode and
+    /// to cross-check the kernel in tests).
+    pub fn l2_distance(&self, other: &ModelParams) -> f64 {
+        assert_eq!(self.dim(), other.dim());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|a| (*a as f64) * (*a as f64)).sum::<f64>().sqrt()
+    }
+
+    /// self += k * other.
+    pub fn axpy(&mut self, k: f32, other: &ModelParams) {
+        assert_eq!(self.dim(), other.dim());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += k * b;
+        }
+    }
+
+    /// self *= k.
+    pub fn scale(&mut self, k: f32) {
+        for a in self.data.iter_mut() {
+            *a *= k;
+        }
+    }
+
+    /// Weighted sum Σ wᵢ·modelsᵢ (pure-Rust fallback of the `agg_*`
+    /// artifact — Eq. 14 with coeffs computed by the caller).
+    pub fn weighted_sum(models: &[&ModelParams], weights: &[f32]) -> ModelParams {
+        assert_eq!(models.len(), weights.len());
+        assert!(!models.is_empty());
+        let dim = models[0].dim();
+        let mut out = ModelParams::zeros(dim);
+        for (m, &w) in models.iter().zip(weights) {
+            out.axpy(w, m);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_dim() {
+        let p = ModelParams::zeros(10);
+        assert_eq!(p.dim(), 10);
+        assert_eq!(p.l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn distance_triangle_symmetric() {
+        let mut rng = Rng::new(0);
+        let a = ModelParams::random(100, 1.0, &mut rng);
+        let b = ModelParams::random(100, 1.0, &mut rng);
+        let c = ModelParams::random(100, 1.0, &mut rng);
+        assert!((a.l2_distance(&b) - b.l2_distance(&a)).abs() < 1e-9);
+        assert!(a.l2_distance(&c) <= a.l2_distance(&b) + b.l2_distance(&c) + 1e-9);
+        assert_eq!(a.l2_distance(&a), 0.0);
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let mut a = ModelParams { data: vec![1.0, 2.0] };
+        let b = ModelParams { data: vec![10.0, 20.0] };
+        a.axpy(0.5, &b);
+        assert_eq!(a.data, vec![6.0, 12.0]);
+        a.scale(2.0);
+        assert_eq!(a.data, vec![12.0, 24.0]);
+    }
+
+    #[test]
+    fn weighted_sum_is_convex_mean_for_uniform() {
+        let a = ModelParams { data: vec![1.0, 3.0] };
+        let b = ModelParams { data: vec![3.0, 5.0] };
+        let m = ModelParams::weighted_sum(&[&a, &b], &[0.5, 0.5]);
+        assert_eq!(m.data, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn weighted_sum_identity() {
+        let a = ModelParams { data: vec![1.0, 3.0] };
+        let b = ModelParams { data: vec![9.0, 9.0] };
+        let m = ModelParams::weighted_sum(&[&a, &b], &[1.0, 0.0]);
+        assert_eq!(m.data, a.data);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_dims_panic() {
+        let a = ModelParams::zeros(3);
+        let b = ModelParams::zeros(4);
+        a.l2_distance(&b);
+    }
+}

@@ -1,0 +1,154 @@
+//! Doppler-shift analysis (paper Sec. IV-A).
+//!
+//! The paper restricts ISLs to satellites *within the same orbit*
+//! because "satellites from different orbits have very high relative
+//! velocity and hence the impact of Doppler shift will become
+//! prominent and make communication unstable". This module quantifies
+//! that claim: the radial-velocity Doppler shift between any two
+//! constellation nodes, used by `examples/visibility_windows` and the
+//! topology tests to verify the design rule the paper asserts.
+
+use super::propagation::{satellite_position_eci, satellite_velocity_eci};
+use super::walker::WalkerConstellation;
+use crate::util::SPEED_OF_LIGHT_KM_S;
+
+/// Doppler shift in Hz between a transmitter and receiver with the
+/// given positions (km) and velocities (km/s), at carrier `f_hz`.
+///
+/// Non-relativistic: Δf = -(dR/dt) · f / c where dR/dt is the radial
+/// (range-rate) component of the relative velocity.
+pub fn doppler_shift_hz(
+    pos_tx: crate::util::Vec3,
+    vel_tx: crate::util::Vec3,
+    pos_rx: crate::util::Vec3,
+    vel_rx: crate::util::Vec3,
+    f_hz: f64,
+) -> f64 {
+    let rel = pos_rx - pos_tx;
+    let dist = rel.norm();
+    if dist == 0.0 {
+        return 0.0;
+    }
+    let range_rate = (vel_rx - vel_tx).dot(rel) * (1.0 / dist); // km/s
+    -range_rate * f_hz / SPEED_OF_LIGHT_KM_S
+}
+
+/// Doppler shift between two satellites of a constellation at time `t`.
+pub fn sat_sat_doppler_hz(
+    c: &WalkerConstellation,
+    a: usize,
+    b: usize,
+    t: f64,
+    f_hz: f64,
+) -> f64 {
+    let ea = &c.satellites[a].elements;
+    let eb = &c.satellites[b].elements;
+    doppler_shift_hz(
+        satellite_position_eci(ea, t),
+        satellite_velocity_eci(ea, t),
+        satellite_position_eci(eb, t),
+        satellite_velocity_eci(eb, t),
+        f_hz,
+    )
+}
+
+/// Worst-case |Doppler| between two satellites over a sampled window.
+pub fn max_abs_doppler_hz(
+    c: &WalkerConstellation,
+    a: usize,
+    b: usize,
+    horizon_s: f64,
+    step_s: f64,
+    f_hz: f64,
+) -> f64 {
+    let mut worst: f64 = 0.0;
+    let mut t = 0.0;
+    while t <= horizon_s {
+        worst = worst.max(sat_sat_doppler_hz(c, a, b, t, f_hz).abs());
+        t += step_s;
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const F: f64 = 2.4e9; // Table I carrier
+
+    #[test]
+    fn intra_orbit_doppler_is_negligible() {
+        // Same-orbit satellites keep constant separation: range rate ~0.
+        let c = WalkerConstellation::paper();
+        for (a, b) in [(0usize, 1usize), (3, 4), (6, 7)] {
+            let worst = max_abs_doppler_hz(&c, a, b, 7200.0, 60.0, F);
+            assert!(
+                worst < 100.0,
+                "intra-orbit pair ({a},{b}) Doppler {worst} Hz should be ~0"
+            );
+        }
+    }
+
+    #[test]
+    fn inter_orbit_doppler_is_prominent() {
+        // Cross-plane pairs close at up to ~2x orbital velocity:
+        // tens of kHz at 2.4 GHz — the paper's instability argument.
+        let c = WalkerConstellation::paper();
+        let worst = max_abs_doppler_hz(&c, 0, 8, 7200.0, 60.0, F);
+        assert!(
+            worst > 10_000.0,
+            "inter-orbit Doppler {worst} Hz should be prominent"
+        );
+    }
+
+    #[test]
+    fn inter_orbit_dwarfs_intra_orbit() {
+        let c = WalkerConstellation::paper();
+        let intra = max_abs_doppler_hz(&c, 0, 1, 7200.0, 60.0, F);
+        let inter = max_abs_doppler_hz(&c, 0, 8, 7200.0, 60.0, F);
+        assert!(
+            inter > 100.0 * intra.max(1.0),
+            "inter {inter} Hz vs intra {intra} Hz"
+        );
+    }
+
+    #[test]
+    fn doppler_sign_matches_geometry() {
+        // Approaching -> positive shift; receding -> negative.
+        use crate::util::Vec3;
+        let p1 = Vec3::new(0.0, 0.0, 0.0);
+        let p2 = Vec3::new(1000.0, 0.0, 0.0);
+        let approaching = doppler_shift_hz(
+            p1,
+            Vec3::new(0.0, 0.0, 0.0),
+            p2,
+            Vec3::new(-5.0, 0.0, 0.0), // rx moving toward tx
+            F,
+        );
+        assert!(approaching > 0.0);
+        let receding = doppler_shift_hz(
+            p1,
+            Vec3::new(0.0, 0.0, 0.0),
+            p2,
+            Vec3::new(5.0, 0.0, 0.0),
+            F,
+        );
+        assert!(receding < 0.0);
+        assert!((approaching + receding).abs() < 1e-9);
+    }
+
+    #[test]
+    fn doppler_scale_sanity() {
+        // 5 km/s radial at 2.4 GHz is ~40 kHz.
+        use crate::util::Vec3;
+        let d = doppler_shift_hz(
+            Vec3::ZERO,
+            Vec3::ZERO,
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(-5.0, 0.0, 0.0),
+            F,
+        );
+        assert!((d - 5.0 * F / SPEED_OF_LIGHT_KM_S).abs() < 1e-6);
+        assert!((d - 40_028.0).abs() < 100.0, "{d}");
+    }
+}

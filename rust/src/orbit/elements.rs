@@ -1,0 +1,97 @@
+//! Orbital elements and physical constants (paper Sec. III).
+
+/// Mean Earth radius, km (the paper's R_E).
+pub const EARTH_RADIUS_KM: f64 = 6371.0;
+
+/// Standard gravitational parameter GM of the Earth, km^3/s^2.
+pub const MU_EARTH: f64 = 398_600.4418;
+
+/// Earth rotation rate, rad/s (sidereal).
+pub const EARTH_ROTATION_RAD_S: f64 = 7.292_115_9e-5;
+
+/// Circular-orbit elements for one satellite.
+///
+/// The paper's constellation is circular Walker-delta, so eccentricity
+/// and argument of perigee are fixed at zero and the state is fully
+/// described by altitude, inclination, RAAN and initial phase.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrbitalElements {
+    /// Orbital altitude above the surface, km (paper h_o).
+    pub altitude_km: f64,
+    /// Inclination, radians.
+    pub inclination_rad: f64,
+    /// Right ascension of the ascending node, radians.
+    pub raan_rad: f64,
+    /// Phase (argument of latitude) at t = 0, radians.
+    pub phase_rad: f64,
+}
+
+impl OrbitalElements {
+    /// Semi-major axis = R_E + h_o, km.
+    pub fn semi_major_axis_km(&self) -> f64 {
+        EARTH_RADIUS_KM + self.altitude_km
+    }
+
+    /// Orbital velocity v_o = sqrt(GM / (R_E + h_o)), km/s (paper Sec. III).
+    pub fn velocity_km_s(&self) -> f64 {
+        (MU_EARTH / self.semi_major_axis_km()).sqrt()
+    }
+
+    /// Orbital period T_o = 2*pi*(R_E + h_o) / v_o, seconds (paper Sec. III).
+    pub fn period_s(&self) -> f64 {
+        2.0 * std::f64::consts::PI * self.semi_major_axis_km() / self.velocity_km_s()
+    }
+
+    /// Mean motion n = 2*pi / T_o, rad/s.
+    pub fn mean_motion_rad_s(&self) -> f64 {
+        2.0 * std::f64::consts::PI / self.period_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_orbit() -> OrbitalElements {
+        // Sec. V-A: h_o = 2000 km, inclination 80 deg.
+        OrbitalElements {
+            altitude_km: 2000.0,
+            inclination_rad: 80f64.to_radians(),
+            raan_rad: 0.0,
+            phase_rad: 0.0,
+        }
+    }
+
+    #[test]
+    fn velocity_near_paper_figure() {
+        // Paper Sec. IV-C1 quotes ~25,000 km/h orbital velocity.
+        let v_kmh = paper_orbit().velocity_km_s() * 3600.0;
+        assert!(
+            (23_000.0..27_000.0).contains(&v_kmh),
+            "v = {v_kmh} km/h should be near the paper's ~25,000 km/h"
+        );
+    }
+
+    #[test]
+    fn period_about_127_minutes() {
+        // T = 2*pi*sqrt(a^3/mu) at a = 8371 km is ~127 min.
+        let t_min = paper_orbit().period_s() / 60.0;
+        assert!((125.0..130.0).contains(&t_min), "T = {t_min} min");
+    }
+
+    #[test]
+    fn period_consistent_with_kepler_third_law() {
+        let e = paper_orbit();
+        let a = e.semi_major_axis_km();
+        let kepler = 2.0 * std::f64::consts::PI * (a * a * a / MU_EARTH).sqrt();
+        assert!((e.period_s() - kepler).abs() / kepler < 1e-12);
+    }
+
+    #[test]
+    fn higher_orbit_slower() {
+        let lo = OrbitalElements { altitude_km: 500.0, ..paper_orbit() };
+        let hi = OrbitalElements { altitude_km: 2000.0, ..paper_orbit() };
+        assert!(lo.velocity_km_s() > hi.velocity_km_s());
+        assert!(lo.period_s() < hi.period_s());
+    }
+}

@@ -1,0 +1,136 @@
+//! Ground stations and high-altitude platforms anchored to the rotating
+//! Earth (paper Sec. III / V-A).
+//!
+//! A HAP is modelled exactly as the paper describes: a semi-static
+//! stratospheric platform hovering at a fixed geodetic location
+//! (~20 km altitude), i.e. a ground site with extra altitude — which is
+//! where its slightly better satellite visibility comes from.
+
+use super::elements::{EARTH_RADIUS_KM, EARTH_ROTATION_RAD_S};
+use crate::util::Vec3;
+
+/// What kind of parameter-server site this is (affects nothing but
+/// reporting; the geometry model is identical, per the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteKind {
+    GroundStation,
+    Hap,
+}
+
+/// A fixed geodetic site: latitude/longitude in degrees, altitude km.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GeodeticSite {
+    pub kind: SiteKind,
+    pub lat_deg: f64,
+    pub lon_deg: f64,
+    pub alt_km: f64,
+}
+
+impl GeodeticSite {
+    /// GS in Rolla, Missouri (paper Sec. V-A).
+    pub fn rolla_gs() -> Self {
+        GeodeticSite { kind: SiteKind::GroundStation, lat_deg: 37.95, lon_deg: -91.77, alt_km: 0.0 }
+    }
+
+    /// HAP above Rolla, Missouri at 20 km (paper Sec. V-A).
+    pub fn rolla_hap() -> Self {
+        GeodeticSite { kind: SiteKind::Hap, lat_deg: 37.95, lon_deg: -91.77, alt_km: 20.0 }
+    }
+
+    /// HAP above Portland, Oregon at 20 km (paper Sec. V-A).
+    pub fn portland_hap() -> Self {
+        GeodeticSite { kind: SiteKind::Hap, lat_deg: 45.52, lon_deg: -122.68, alt_km: 20.0 }
+    }
+
+    /// GS at the North Pole — the "ideal setup" of FedISL / FedSat.
+    pub fn north_pole_gs() -> Self {
+        GeodeticSite { kind: SiteKind::GroundStation, lat_deg: 90.0, lon_deg: 0.0, alt_km: 0.0 }
+    }
+
+    /// Horizon dip in degrees: an observer at altitude h sees the true
+    /// horizon `acos(R_E/(R_E+h))` below the local horizontal. This is
+    /// precisely the HAP's visibility advantage over a GS the paper
+    /// leans on (a 20 km HAP gains ~4.5°).
+    pub fn horizon_dip_deg(&self) -> f64 {
+        let r = EARTH_RADIUS_KM;
+        (r / (r + self.alt_km.max(0.0))).acos().to_degrees()
+    }
+
+    /// Effective minimum elevation for satellite visibility: the device
+    /// constraint `theta_min` measured from the *apparent* horizon.
+    pub fn effective_min_elevation_deg(&self, theta_min_deg: f64) -> f64 {
+        theta_min_deg - self.horizon_dip_deg()
+    }
+
+    /// Position in ECI at simulated time `t` (spherical Earth + spin).
+    ///
+    /// The Earth rotation angle is `theta = omega * t` (we set GMST(0)=0;
+    /// an arbitrary offset only shifts the whole contact pattern, which
+    /// the paper's 3-day horizon averages out).
+    pub fn position_eci(&self, t: f64) -> Vec3 {
+        let lat = self.lat_deg.to_radians();
+        let lon = self.lon_deg.to_radians() + EARTH_ROTATION_RAD_S * t;
+        let r = EARTH_RADIUS_KM + self.alt_km;
+        Vec3::new(r * lat.cos() * lon.cos(), r * lat.cos() * lon.sin(), r * lat.sin())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn radius_includes_altitude() {
+        let hap = GeodeticSite::rolla_hap();
+        let r = hap.position_eci(0.0).norm();
+        assert!((r - (EARTH_RADIUS_KM + 20.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn north_pole_is_on_axis_and_static() {
+        let np = GeodeticSite::north_pole_gs();
+        let p0 = np.position_eci(0.0);
+        let p1 = np.position_eci(86_400.0);
+        assert!(p0.x.abs() < 1e-6 && p0.y.abs() < 1e-6);
+        assert!(p0.distance(p1) < 1e-6, "pole does not move with spin");
+    }
+
+    #[test]
+    fn equatorial_site_rotates() {
+        let eq = GeodeticSite { kind: SiteKind::GroundStation, lat_deg: 0.0, lon_deg: 0.0, alt_km: 0.0 };
+        let p0 = eq.position_eci(0.0);
+        // Quarter sidereal day ~ 21541 s -> ~90 degrees of rotation.
+        let quarter = std::f64::consts::FRAC_PI_2 / EARTH_ROTATION_RAD_S;
+        let p1 = eq.position_eci(quarter);
+        assert!((p0.angle_to(p1) - std::f64::consts::FRAC_PI_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rotation_preserves_latitude() {
+        let s = GeodeticSite::rolla_gs();
+        for i in 0..10 {
+            let p = s.position_eci(i as f64 * 10_000.0);
+            let lat = (p.z / p.norm()).asin().to_degrees();
+            assert!((lat - 37.95).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn horizon_dip_grows_with_altitude() {
+        assert_eq!(GeodeticSite::rolla_gs().horizon_dip_deg(), 0.0);
+        let dip = GeodeticSite::rolla_hap().horizon_dip_deg();
+        assert!((4.0..5.2).contains(&dip), "20 km dip = {dip}");
+        assert!(
+            GeodeticSite::rolla_hap().effective_min_elevation_deg(10.0) < 10.0
+        );
+    }
+
+    #[test]
+    fn hap_sits_above_its_gs() {
+        let gs = GeodeticSite::rolla_gs().position_eci(1234.0);
+        let hap = GeodeticSite::rolla_hap().position_eci(1234.0);
+        // Same direction from Earth center, larger radius.
+        assert!(gs.angle_to(hap) < 1e-9);
+        assert!(hap.norm() > gs.norm());
+    }
+}

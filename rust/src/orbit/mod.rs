@@ -1,0 +1,27 @@
+//! Orbital-mechanics substrate (paper Sec. III).
+//!
+//! The paper's experiments need, for every instant over a multi-day
+//! horizon: the position of each LEO satellite, the position of each
+//! HAP/GS anchored to the rotating Earth, the elevation-angle
+//! visibility predicate between any pair, and the resulting *contact
+//! windows* whose sporadic, irregular pattern is the whole reason
+//! AsyncFLEO exists.
+//!
+//! We implement circular two-body (Keplerian) propagation — the paper's
+//! TLE propagation over a simulated Walker-delta constellation differs
+//! only by perturbation noise that does not change the contact-pattern
+//! statistics (DESIGN.md §1).
+
+pub mod doppler;
+pub mod elements;
+pub mod ground;
+pub mod propagation;
+pub mod visibility;
+pub mod walker;
+
+pub use doppler::{doppler_shift_hz, sat_sat_doppler_hz};
+pub use elements::{OrbitalElements, EARTH_RADIUS_KM, MU_EARTH};
+pub use ground::{GeodeticSite, SiteKind};
+pub use propagation::satellite_position_eci;
+pub use visibility::{contact_windows, elevation_deg, sat_sat_los, ContactWindow};
+pub use walker::{Satellite, WalkerConstellation};

@@ -1,0 +1,97 @@
+//! Circular two-body propagation: elements + time -> ECI position.
+
+use super::elements::OrbitalElements;
+use crate::util::Vec3;
+
+/// Position of a satellite in the Earth-centered inertial frame at
+/// simulated time `t` seconds.
+///
+/// For a circular orbit the argument of latitude advances uniformly:
+/// `u(t) = phase + n * t`; the in-plane position is then rotated by the
+/// inclination about X and the RAAN about Z.
+pub fn satellite_position_eci(e: &OrbitalElements, t: f64) -> Vec3 {
+    let u = e.phase_rad + e.mean_motion_rad_s() * t;
+    let r = e.semi_major_axis_km();
+    let in_plane = Vec3::new(r * u.cos(), r * u.sin(), 0.0);
+    in_plane.rot_x(e.inclination_rad).rot_z(e.raan_rad)
+}
+
+/// Velocity vector in ECI, km/s (tangential for circular orbits).
+pub fn satellite_velocity_eci(e: &OrbitalElements, t: f64) -> Vec3 {
+    let u = e.phase_rad + e.mean_motion_rad_s() * t;
+    let v = e.velocity_km_s();
+    let in_plane = Vec3::new(-v * u.sin(), v * u.cos(), 0.0);
+    in_plane.rot_x(e.inclination_rad).rot_z(e.raan_rad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::elements::{EARTH_RADIUS_KM, MU_EARTH};
+
+    fn e() -> OrbitalElements {
+        OrbitalElements {
+            altitude_km: 2000.0,
+            inclination_rad: 80f64.to_radians(),
+            raan_rad: 0.7,
+            phase_rad: 0.3,
+        }
+    }
+
+    #[test]
+    fn radius_constant_over_time() {
+        let e = e();
+        let r0 = e.semi_major_axis_km();
+        for i in 0..50 {
+            let t = i as f64 * 431.7;
+            let r = satellite_position_eci(&e, t).norm();
+            assert!((r - r0).abs() < 1e-6, "t={t}: r={r} vs {r0}");
+        }
+    }
+
+    #[test]
+    fn returns_to_start_after_one_period() {
+        let e = e();
+        let p0 = satellite_position_eci(&e, 0.0);
+        let p1 = satellite_position_eci(&e, e.period_s());
+        assert!(p0.distance(p1) < 1e-6);
+    }
+
+    #[test]
+    fn half_period_is_antipodal() {
+        let e = e();
+        let p0 = satellite_position_eci(&e, 0.0);
+        let ph = satellite_position_eci(&e, e.period_s() / 2.0);
+        assert!(p0.distance(-ph) < 1e-6);
+    }
+
+    #[test]
+    fn velocity_orthogonal_to_position() {
+        let e = e();
+        for i in 0..10 {
+            let t = i as f64 * 997.0;
+            let p = satellite_position_eci(&e, t);
+            let v = satellite_velocity_eci(&e, t);
+            assert!(p.dot(v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn speed_matches_vis_viva() {
+        let e = e();
+        let v = satellite_velocity_eci(&e, 123.0).norm();
+        let expect = (MU_EARTH / (EARTH_RADIUS_KM + 2000.0)).sqrt();
+        assert!((v - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inclination_bounds_z_extent() {
+        let e = e();
+        // |z| <= a * sin(i)
+        let bound = e.semi_major_axis_km() * e.inclination_rad.sin() + 1e-6;
+        for i in 0..200 {
+            let p = satellite_position_eci(&e, i as f64 * 61.3);
+            assert!(p.z.abs() <= bound);
+        }
+    }
+}

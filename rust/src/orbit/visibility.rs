@@ -1,0 +1,258 @@
+//! Visibility predicates and contact-window extraction (paper Sec. III-B).
+//!
+//! A satellite is visible from a site when the elevation angle above
+//! the local horizon is at least `theta_min` (the paper's
+//! `vartheta(t) <= pi/2 - vartheta_min` condition expressed the usual
+//! way). Satellite-to-satellite line-of-sight requires the chord not to
+//! intersect the Earth (plus an atmospheric grazing margin).
+
+use super::elements::EARTH_RADIUS_KM;
+use crate::util::Vec3;
+
+/// Atmospheric grazing margin for ISL line-of-sight, km. Links whose
+/// chord dips below R_E + this margin are considered blocked.
+pub const LOS_ATMOSPHERE_MARGIN_KM: f64 = 80.0;
+
+/// Elevation of `target` above the local horizon of `site`, degrees.
+///
+/// elevation = 90 deg − angle(r_site, target − site).
+pub fn elevation_deg(site: Vec3, target: Vec3) -> f64 {
+    let rho = target - site;
+    90.0 - site.angle_to(rho).to_degrees()
+}
+
+/// Is `target` visible from `site` with minimum elevation `min_elev_deg`?
+pub fn site_visible(site: Vec3, target: Vec3, min_elev_deg: f64) -> bool {
+    elevation_deg(site, target) >= min_elev_deg
+}
+
+/// Line-of-sight between two satellites: does the segment a—b stay
+/// above the (margin-padded) Earth sphere?
+pub fn sat_sat_los(a: Vec3, b: Vec3) -> bool {
+    let r_block = EARTH_RADIUS_KM + LOS_ATMOSPHERE_MARGIN_KM;
+    let ab = b - a;
+    let t = crate::util::clamp(-a.dot(ab) / ab.norm2(), 0.0, 1.0);
+    let closest = a + ab * t;
+    closest.norm() >= r_block
+}
+
+/// A closed interval of continuous visibility.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ContactWindow {
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl ContactWindow {
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+
+    pub fn contains(&self, t: f64) -> bool {
+        t >= self.start_s && t <= self.end_s
+    }
+}
+
+/// Extract contact windows of a time-dependent visibility predicate
+/// over `[0, horizon_s]`, sampling every `step_s` and refining each
+/// edge by bisection to ~1 s accuracy.
+pub fn contact_windows(
+    mut visible: impl FnMut(f64) -> bool,
+    horizon_s: f64,
+    step_s: f64,
+) -> Vec<ContactWindow> {
+    assert!(step_s > 0.0 && horizon_s > 0.0);
+    let mut windows = Vec::new();
+    let mut prev_t = 0.0;
+    let mut prev_v = visible(0.0);
+    let mut start = if prev_v { Some(0.0) } else { None };
+
+    let mut t = step_s;
+    while t <= horizon_s + step_s * 0.5 {
+        let tc = t.min(horizon_s);
+        let v = visible(tc);
+        if v != prev_v {
+            let edge = bisect_edge(&mut visible, prev_t, tc, prev_v);
+            if v {
+                start = Some(edge);
+            } else if let Some(s) = start.take() {
+                windows.push(ContactWindow { start_s: s, end_s: edge });
+            }
+        }
+        prev_t = tc;
+        prev_v = v;
+        if (tc - horizon_s).abs() < 1e-9 {
+            break;
+        }
+        t += step_s;
+    }
+    if let Some(s) = start {
+        windows.push(ContactWindow { start_s: s, end_s: horizon_s });
+    }
+    windows
+}
+
+/// Bisection: predicate flips between lo (value `lo_v`) and hi.
+fn bisect_edge(visible: &mut impl FnMut(f64) -> bool, mut lo: f64, mut hi: f64, lo_v: bool) -> f64 {
+    for _ in 0..32 {
+        if hi - lo < 1.0 {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        if visible(mid) == lo_v {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::ground::GeodeticSite;
+    use crate::orbit::walker::WalkerConstellation;
+
+    #[test]
+    fn zenith_has_90_elevation() {
+        let site = Vec3::new(EARTH_RADIUS_KM, 0.0, 0.0);
+        let sat = Vec3::new(EARTH_RADIUS_KM + 2000.0, 0.0, 0.0);
+        assert!((elevation_deg(site, sat) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn horizon_has_zero_elevation() {
+        let site = Vec3::new(EARTH_RADIUS_KM, 0.0, 0.0);
+        // A target in the local tangent plane (pure +Y offset).
+        let sat = Vec3::new(EARTH_RADIUS_KM, 500.0, 0.0);
+        assert!(elevation_deg(site, sat).abs() < 1e-9);
+    }
+
+    #[test]
+    fn antipodal_satellite_invisible() {
+        let site = Vec3::new(EARTH_RADIUS_KM, 0.0, 0.0);
+        let sat = Vec3::new(-(EARTH_RADIUS_KM + 2000.0), 0.0, 0.0);
+        assert!(!site_visible(site, sat, 10.0));
+    }
+
+    #[test]
+    fn los_blocked_through_earth() {
+        let a = Vec3::new(EARTH_RADIUS_KM + 2000.0, 0.0, 0.0);
+        let b = Vec3::new(-(EARTH_RADIUS_KM + 2000.0), 0.0, 0.0);
+        assert!(!sat_sat_los(a, b));
+    }
+
+    #[test]
+    fn los_clear_for_neighbors() {
+        let c = WalkerConstellation::paper();
+        let a = c.position(0, 0.0);
+        let b = c.position(1, 0.0); // 45 deg apart at 8371 km: chord clears Earth
+        assert!(sat_sat_los(a, b));
+    }
+
+    #[test]
+    fn los_symmetric() {
+        let c = WalkerConstellation::paper();
+        for t in [0.0, 3000.0] {
+            for (i, j) in [(0usize, 3usize), (2, 9), (5, 20)] {
+                let a = c.position(i, t);
+                let b = c.position(j, t);
+                assert_eq!(sat_sat_los(a, b), sat_sat_los(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn paper_geometry_produces_sporadic_contacts() {
+        // A Rolla HAP must see each satellite only a fraction of the
+        // time — the irregular visit pattern motivating the paper.
+        let c = WalkerConstellation::paper();
+        let hap = GeodeticSite::rolla_hap();
+        let horizon = 86_400.0;
+        let wins = contact_windows(
+            |t| site_visible(hap.position_eci(t), c.position(0, t), 10.0),
+            horizon,
+            30.0,
+        );
+        assert!(!wins.is_empty(), "satellite never visible in a day");
+        let total: f64 = wins.iter().map(|w| w.duration_s()).sum();
+        let frac = total / horizon;
+        assert!(
+            (0.005..0.5).contains(&frac),
+            "visibility fraction {frac} should be sporadic"
+        );
+    }
+
+    #[test]
+    fn windows_ordered_and_disjoint() {
+        let c = WalkerConstellation::paper();
+        let hap = GeodeticSite::rolla_hap();
+        let wins = contact_windows(
+            |t| site_visible(hap.position_eci(t), c.position(3, t), 10.0),
+            86_400.0,
+            30.0,
+        );
+        for w in &wins {
+            assert!(w.end_s > w.start_s);
+        }
+        for pair in wins.windows(2) {
+            assert!(pair[0].end_s < pair[1].start_s);
+        }
+    }
+
+    #[test]
+    fn window_edges_are_tight() {
+        // Just inside a window the predicate is true; just outside, false.
+        let c = WalkerConstellation::paper();
+        let hap = GeodeticSite::rolla_hap();
+        let vis = |t: f64| site_visible(hap.position_eci(t), c.position(0, t), 10.0);
+        let wins = contact_windows(vis, 86_400.0, 30.0);
+        let w = wins[0];
+        if w.start_s > 2.0 {
+            assert!(vis(w.start_s + 1.0));
+            assert!(!vis(w.start_s - 2.0));
+        }
+    }
+
+    #[test]
+    fn higher_min_elevation_shrinks_windows() {
+        let c = WalkerConstellation::paper();
+        let hap = GeodeticSite::rolla_hap();
+        let total = |min_elev: f64| -> f64 {
+            contact_windows(
+                |t| site_visible(hap.position_eci(t), c.position(0, t), min_elev),
+                86_400.0,
+                30.0,
+            )
+            .iter()
+            .map(|w| w.duration_s())
+            .sum()
+        };
+        assert!(total(5.0) > total(25.0));
+    }
+
+    #[test]
+    fn hap_sees_no_less_than_gs() {
+        // The paper's rationale for HAPs: slightly better visibility.
+        // The advantage is the horizon dip of the elevated platform
+        // (theta_min is measured from the apparent horizon).
+        let c = WalkerConstellation::paper();
+        let gs = GeodeticSite::rolla_gs();
+        let hap = GeodeticSite::rolla_hap();
+        let count_visible = |site: &GeodeticSite, t: f64| -> usize {
+            let eff = site.effective_min_elevation_deg(10.0);
+            (0..c.len())
+                .filter(|&i| site_visible(site.position_eci(t), c.position(i, t), eff))
+                .count()
+        };
+        let mut hap_total = 0usize;
+        let mut gs_total = 0usize;
+        for i in 0..288 {
+            let t = i as f64 * 300.0;
+            hap_total += count_visible(&hap, t);
+            gs_total += count_visible(&gs, t);
+        }
+        assert!(hap_total > gs_total, "HAP {hap_total} vs GS {gs_total}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Walker-delta constellation builder (paper Fig. 1, Sec. V-A).
+//!
+//! A Walker-delta constellation `i:T/P/F` spreads `P` orbital planes
+//! evenly over 360 degrees of RAAN, with `T/P` satellites equally
+//! spaced in each plane and an inter-plane phasing factor `F`.
+
+use super::elements::OrbitalElements;
+use crate::util::Vec3;
+
+/// A satellite's identity + orbital elements. IDs follow the paper's
+/// `(orbit#, sat#)` convention (Fig. 3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Satellite {
+    /// Global index in [0, T).
+    pub id: usize,
+    /// Orbital plane index in [0, P).
+    pub orbit: usize,
+    /// In-plane index in [0, T/P).
+    pub slot: usize,
+    pub elements: OrbitalElements,
+}
+
+/// A full Walker-delta constellation.
+#[derive(Clone, Debug)]
+pub struct WalkerConstellation {
+    pub satellites: Vec<Satellite>,
+    pub n_orbits: usize,
+    pub sats_per_orbit: usize,
+}
+
+impl WalkerConstellation {
+    /// Build `P = n_orbits` planes x `n = sats_per_orbit` satellites.
+    ///
+    /// `phasing` is the Walker F factor (relative phase shift between
+    /// adjacent planes, in units of 360/T degrees). The paper uses the
+    /// standard delta pattern; F = 1 avoids synchronized planes.
+    pub fn new(
+        n_orbits: usize,
+        sats_per_orbit: usize,
+        altitude_km: f64,
+        inclination_deg: f64,
+        phasing: usize,
+    ) -> Self {
+        assert!(n_orbits > 0 && sats_per_orbit > 0);
+        let total = n_orbits * sats_per_orbit;
+        let tau = 2.0 * std::f64::consts::PI;
+        let mut satellites = Vec::with_capacity(total);
+        for o in 0..n_orbits {
+            let raan = tau * o as f64 / n_orbits as f64;
+            for s in 0..sats_per_orbit {
+                let phase = tau * s as f64 / sats_per_orbit as f64
+                    + tau * phasing as f64 * o as f64 / total as f64;
+                satellites.push(Satellite {
+                    id: o * sats_per_orbit + s,
+                    orbit: o,
+                    slot: s,
+                    elements: OrbitalElements {
+                        altitude_km,
+                        inclination_rad: inclination_deg.to_radians(),
+                        raan_rad: raan,
+                        phase_rad: phase,
+                    },
+                });
+            }
+        }
+        WalkerConstellation { satellites, n_orbits, sats_per_orbit }
+    }
+
+    /// The paper's evaluation constellation: 40 satellites over 5 orbits
+    /// at 2000 km, inclination 80 degrees (Sec. V-A).
+    pub fn paper() -> Self {
+        WalkerConstellation::new(5, 8, 2000.0, 80.0, 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.satellites.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.satellites.is_empty()
+    }
+
+    /// Position of satellite `id` at time `t` (ECI, km).
+    pub fn position(&self, id: usize, t: f64) -> Vec3 {
+        super::propagation::satellite_position_eci(&self.satellites[id].elements, t)
+    }
+
+    /// Intra-orbit ring neighbours of a satellite: the two adjacent
+    /// slots in the same plane (paper Sec. IV-A: ISLs only within an
+    /// orbit, because inter-orbit relative velocity makes links
+    /// unstable / Doppler-dominated).
+    pub fn ring_neighbors(&self, id: usize) -> (usize, usize) {
+        let sat = &self.satellites[id];
+        let n = self.sats_per_orbit;
+        let base = sat.orbit * n;
+        let prev = base + (sat.slot + n - 1) % n;
+        let next = base + (sat.slot + 1) % n;
+        (prev, next)
+    }
+
+    /// All satellite IDs in one orbital plane.
+    pub fn orbit_members(&self, orbit: usize) -> Vec<usize> {
+        (0..self.sats_per_orbit).map(|s| orbit * self.sats_per_orbit + s).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constellation_counts() {
+        let c = WalkerConstellation::paper();
+        assert_eq!(c.len(), 40);
+        assert_eq!(c.n_orbits, 5);
+        assert_eq!(c.sats_per_orbit, 8);
+    }
+
+    #[test]
+    fn ids_are_dense_and_ordered() {
+        let c = WalkerConstellation::new(3, 4, 800.0, 60.0, 1);
+        for (i, s) in c.satellites.iter().enumerate() {
+            assert_eq!(s.id, i);
+            assert_eq!(s.orbit, i / 4);
+            assert_eq!(s.slot, i % 4);
+        }
+    }
+
+    #[test]
+    fn raan_evenly_spread() {
+        let c = WalkerConstellation::new(5, 8, 2000.0, 80.0, 1);
+        let expect = 2.0 * std::f64::consts::PI / 5.0;
+        for o in 1..5 {
+            let d = c.satellites[o * 8].elements.raan_rad - c.satellites[(o - 1) * 8].elements.raan_rad;
+            assert!((d - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn in_plane_spacing_uniform() {
+        let c = WalkerConstellation::paper();
+        let tau = 2.0 * std::f64::consts::PI;
+        for s in 1..8 {
+            let d = c.satellites[s].elements.phase_rad - c.satellites[s - 1].elements.phase_rad;
+            assert!((d - tau / 8.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn equal_spacing_preserved_over_time() {
+        // Satellites in the same plane keep constant angular separation.
+        let c = WalkerConstellation::paper();
+        let t = 5000.0;
+        let p0 = c.position(0, t);
+        let p1 = c.position(1, t);
+        let expect = 2.0 * std::f64::consts::PI / 8.0;
+        assert!((p0.angle_to(p1) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_neighbors_wrap() {
+        let c = WalkerConstellation::paper();
+        assert_eq!(c.ring_neighbors(0), (7, 1));
+        assert_eq!(c.ring_neighbors(7), (6, 0));
+        assert_eq!(c.ring_neighbors(8), (15, 9)); // first sat of orbit 1
+        assert_eq!(c.ring_neighbors(39), (38, 32));
+    }
+
+    #[test]
+    fn ring_neighbor_relation_is_symmetric() {
+        let c = WalkerConstellation::paper();
+        for id in 0..c.len() {
+            let (p, n) = c.ring_neighbors(id);
+            let (_, pn) = c.ring_neighbors(p);
+            let (np, _) = c.ring_neighbors(n);
+            assert_eq!(pn, id);
+            assert_eq!(np, id);
+        }
+    }
+
+    #[test]
+    fn orbit_members_partition_constellation() {
+        let c = WalkerConstellation::paper();
+        let mut all: Vec<usize> = (0..5).flat_map(|o| c.orbit_members(o)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..40).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,209 @@
+//! PJRT load-compile-execute wrapper around the `xla` crate.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Outputs are 1-tuples (jax lowered with `return_tuple=True`), so we
+//! decompose and hand back plain `Vec<f32>` buffers.
+
+use super::manifest::{ArtifactEntry, DType, Manifest, TensorSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Typed host-side input for one artifact argument.
+#[derive(Clone, Debug)]
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl Input<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Input::F32(v) => v.len(),
+            Input::I32(v) => v.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Input::F32(_) => DType::F32,
+            Input::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall-clock execute() time accumulator (perf accounting).
+    pub exec_seconds: std::cell::Cell<f64>,
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    /// Execute with shape/dtype-checked inputs; returns one `Vec<f32>`
+    /// per output (scalars come back as length-1 vectors).
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let specs = &self.entry.inputs;
+        if inputs.len() != specs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.entry.name,
+                specs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (inp, spec)) in inputs.iter().zip(specs).enumerate() {
+            if inp.len() != spec.elements() {
+                bail!(
+                    "{} input {i}: expected {} elements, got {}",
+                    self.entry.name,
+                    spec.elements(),
+                    inp.len()
+                );
+            }
+            if inp.dtype() != spec.dtype {
+                bail!("{} input {i}: dtype mismatch", self.entry.name);
+            }
+            literals.push(make_literal(inp, spec)?);
+        }
+        let t0 = std::time::Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let outer = result
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?
+            .to_literal_sync()?;
+        self.exec_seconds.set(self.exec_seconds.get() + t0.elapsed().as_secs_f64());
+        self.exec_count.set(self.exec_count.get() + 1);
+        // jax lowers with return_tuple=True: outputs arrive as a tuple.
+        let parts = outer.to_tuple()?;
+        if parts.len() != self.entry.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.entry.name,
+                self.entry.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            out.push(part.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Mean seconds per execute() so far (perf accounting).
+    pub fn mean_exec_seconds(&self) -> f64 {
+        let n = self.exec_count.get();
+        if n == 0 {
+            0.0
+        } else {
+            self.exec_seconds.get() / n as f64
+        }
+    }
+}
+
+fn make_literal(inp: &Input, spec: &TensorSpec) -> Result<xla::Literal> {
+    let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+    let lit = match inp {
+        Input::F32(v) => {
+            if spec.dims.is_empty() {
+                return Ok(xla::Literal::scalar(v[0]));
+            }
+            xla::Literal::vec1(v)
+        }
+        Input::I32(v) => {
+            if spec.dims.is_empty() {
+                return Ok(xla::Literal::scalar(v[0]));
+            }
+            xla::Literal::vec1(v)
+        }
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+/// The runtime: a PJRT CPU client plus a cache of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create against an artifact directory (must contain manifest.txt).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, dir, cache: Default::default() })
+    }
+
+    /// Default artifact directory: `$ASYNCFLEO_ARTIFACTS` or `artifacts/`
+    /// relative to the crate root.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ASYNCFLEO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn compile(&self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.artifact(name).map_err(anyhow::Error::msg)?.clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("loading {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let executable = std::rc::Rc::new(Executable {
+            entry,
+            exe,
+            exec_seconds: std::cell::Cell::new(0.0),
+            exec_count: std::cell::Cell::new(0),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of distinct artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Executable/Runtime behaviour against real artifacts is covered by
+    // rust/tests/runtime_e2e.rs (needs `make artifacts`). Here we test
+    // the pure pieces.
+    use super::*;
+
+    #[test]
+    fn input_len_dtype() {
+        let f = [1.0f32, 2.0];
+        let i = [3i32];
+        assert_eq!(Input::F32(&f).len(), 2);
+        assert_eq!(Input::I32(&i).len(), 1);
+        assert_eq!(Input::F32(&f).dtype(), DType::F32);
+        assert_eq!(Input::I32(&i).dtype(), DType::I32);
+    }
+
+    #[test]
+    fn default_dir_points_at_crate() {
+        let d = Runtime::default_dir();
+        assert!(d.ends_with("artifacts") || std::env::var_os("ASYNCFLEO_ARTIFACTS").is_some());
+    }
+}

@@ -1,0 +1,259 @@
+//! Parser for `artifacts/manifest.txt` — the machine-readable registry
+//! written by `python/compile/aot.py`.
+//!
+//! Format (one record per line):
+//! ```text
+//! config local_steps=10 batch=32 eval_batch=256 n_sats=40
+//! model mlp_digits dim=101770 feat=784 classes=10
+//! artifact train_mlp_digits file=... in=f32[101770];f32[320,784];... out=f32[101770];f32[]
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Element type of a tensor (we only traffic in f32 and i32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Parse `f32[320,784]`, `i32[]`, `f32[]`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let open = s.find('[').ok_or_else(|| format!("bad tensor spec: {s}"))?;
+        let close = s.strip_suffix(']').ok_or_else(|| format!("bad tensor spec: {s}"))?;
+        let dtype = match &s[..open] {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => return Err(format!("unsupported dtype {other}")),
+        };
+        let body = &close[open + 1..];
+        let dims = if body.is_empty() {
+            vec![]
+        } else {
+            body.split(',')
+                .map(|d| d.trim().parse::<usize>().map_err(|e| format!("bad dim {d}: {e}")))
+                .collect::<Result<Vec<_>, _>>()?
+        };
+        Ok(TensorSpec { dtype, dims })
+    }
+}
+
+/// One AOT artifact record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Per model-variant info.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub dim: usize,
+    pub feat: usize,
+    pub classes: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub models: BTreeMap<String, ModelEntry>,
+    /// Training geometry: J local steps folded into one train dispatch.
+    pub local_steps: usize,
+    /// Mini-batch size b.
+    pub batch: usize,
+    /// Eval chunk size.
+    pub eval_batch: usize,
+    /// Aggregation slab rows = n_sats (+1 for the previous global model).
+    pub n_sats: usize,
+}
+
+fn kv(parts: &[&str]) -> BTreeMap<String, String> {
+    parts
+        .iter()
+        .filter_map(|p| p.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let mut m = Manifest::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            let rest: Vec<&str> = parts.collect();
+            let err = |msg: String| format!("manifest line {}: {msg}", lineno + 1);
+            match tag {
+                "config" => {
+                    let map = kv(&rest);
+                    let get = |k: &str| -> Result<usize, String> {
+                        map.get(k)
+                            .ok_or_else(|| err(format!("missing {k}")))?
+                            .parse()
+                            .map_err(|e| err(format!("bad {k}: {e}")))
+                    };
+                    m.local_steps = get("local_steps")?;
+                    m.batch = get("batch")?;
+                    m.eval_batch = get("eval_batch")?;
+                    m.n_sats = get("n_sats")?;
+                }
+                "model" => {
+                    let name = rest.first().ok_or_else(|| err("missing model name".into()))?;
+                    let map = kv(&rest[1..]);
+                    let get = |k: &str| -> Result<usize, String> {
+                        map.get(k)
+                            .ok_or_else(|| err(format!("missing {k}")))?
+                            .parse()
+                            .map_err(|e| err(format!("bad {k}: {e}")))
+                    };
+                    m.models.insert(
+                        name.to_string(),
+                        ModelEntry {
+                            name: name.to_string(),
+                            dim: get("dim")?,
+                            feat: get("feat")?,
+                            classes: get("classes")?,
+                        },
+                    );
+                }
+                "artifact" => {
+                    let name = rest.first().ok_or_else(|| err("missing artifact name".into()))?;
+                    let map = kv(&rest[1..]);
+                    let file =
+                        map.get("file").ok_or_else(|| err("missing file".into()))?.clone();
+                    let parse_specs = |k: &str| -> Result<Vec<TensorSpec>, String> {
+                        map.get(k)
+                            .ok_or_else(|| err(format!("missing {k}")))?
+                            .split(';')
+                            .map(TensorSpec::parse)
+                            .collect()
+                    };
+                    m.artifacts.insert(
+                        name.to_string(),
+                        ArtifactEntry {
+                            name: name.to_string(),
+                            file,
+                            inputs: parse_specs("in")?,
+                            outputs: parse_specs("out")?,
+                        },
+                    );
+                }
+                other => return Err(err(format!("unknown record tag {other}"))),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &std::path::Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry, String> {
+        self.artifacts.get(name).ok_or_else(|| format!("artifact {name} not in manifest"))
+    }
+
+    pub fn model(&self, tag: &str) -> Result<&ModelEntry, String> {
+        self.models.get(tag).ok_or_else(|| format!("model {tag} not in manifest"))
+    }
+
+    /// Samples consumed by one train dispatch (J * b).
+    pub fn dispatch_samples(&self) -> usize {
+        self.local_steps * self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+config local_steps=10 batch=32 eval_batch=256 n_sats=40
+model mlp_digits dim=101770 feat=784 classes=10
+artifact train_mlp_digits file=train_mlp_digits.hlo.txt in=f32[101770];f32[320,784];f32[320,10];f32[] out=f32[101770];f32[]
+artifact init_mlp_digits file=init_mlp_digits.hlo.txt in=i32[] out=f32[101770]
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.local_steps, 10);
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.dispatch_samples(), 320);
+        assert_eq!(m.models["mlp_digits"].dim, 101_770);
+        let a = m.artifact("train_mlp_digits").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[1].dims, vec![320, 784]);
+        assert_eq!(a.outputs[1].dims, Vec::<usize>::new());
+        let i = m.artifact("init_mlp_digits").unwrap();
+        assert_eq!(i.inputs[0].dtype, DType::I32);
+    }
+
+    #[test]
+    fn tensor_spec_parse() {
+        assert_eq!(
+            TensorSpec::parse("f32[320,784]").unwrap(),
+            TensorSpec { dtype: DType::F32, dims: vec![320, 784] }
+        );
+        assert_eq!(TensorSpec::parse("f32[]").unwrap().dims, Vec::<usize>::new());
+        assert_eq!(TensorSpec::parse("i32[]").unwrap().dtype, DType::I32);
+        assert!(TensorSpec::parse("f64[2]").is_err());
+        assert!(TensorSpec::parse("f32").is_err());
+    }
+
+    #[test]
+    fn elements_product() {
+        assert_eq!(TensorSpec::parse("f32[320,784]").unwrap().elements(), 250_880);
+        assert_eq!(TensorSpec::parse("f32[]").unwrap().elements(), 1);
+    }
+
+    #[test]
+    fn missing_artifact_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_tags() {
+        assert!(Manifest::parse("bogus x=1\n").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // integration: if `make artifacts` has run, the real manifest
+        // must parse and contain all 4 model variants x 5 artifacts.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if let Ok(m) = Manifest::load(&dir) {
+            assert_eq!(m.models.len(), 4);
+            assert_eq!(m.artifacts.len(), 20);
+            for tag in ["mlp_digits", "mlp_cifar", "cnn_digits", "cnn_cifar"] {
+                for op in ["init", "train", "eval", "agg", "dist"] {
+                    assert!(m.artifacts.contains_key(&format!("{op}_{tag}")));
+                }
+            }
+        }
+    }
+}

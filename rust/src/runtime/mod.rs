@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the bridge between L3 (this crate) and the L2/L1 compute:
+//! the rust binary is self-contained once `make artifacts` has run —
+//! Python never executes on the request path.
+//!
+//! Interchange format is HLO *text*: jax ≥ 0.5 emits HloModuleProto
+//! with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{Executable, Runtime};
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};

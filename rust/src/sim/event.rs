@@ -1,0 +1,56 @@
+//! Typed simulation events.
+
+/// What happened. Payload indices refer to satellites / HAPs / orbits
+/// by their dense IDs; model payloads live in the coordinator's stores
+/// (events carry handles, not buffers — zero-copy hot path).
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// A satellite finished its local training dispatch.
+    TrainingDone { sat: usize },
+    /// A model buffer arrived at a satellite over an ISL hop.
+    /// `global` tells whether it is the global model (being broadcast
+    /// outward) or a local model (being relayed toward a HAP).
+    SatModelArrival { sat: usize, from_sat: usize, epoch: u64, global: bool, origin_sat: usize },
+    /// A local model (from `origin_sat`) arrived at a HAP (uplink or relay).
+    HapLocalArrival { hap: usize, origin_sat: usize, epoch: u64 },
+    /// The global model of `epoch` arrived at HAP `hap` over the IHL ring.
+    HapGlobalArrival { hap: usize, epoch: u64 },
+    /// A batch of local models finished the IHL trip to the sink HAP.
+    SinkBatchArrival { from_hap: usize, count: usize },
+    /// Time to run the aggregation decision at the sink (Sec. IV-C).
+    AggregationTick,
+    /// Periodic bookkeeping (visibility refresh / scheduling sweep).
+    Sweep,
+}
+
+/// A scheduled event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub time_s: f64,
+    pub kind: EventKind,
+}
+
+impl Event {
+    pub fn new(time_s: f64, kind: EventKind) -> Self {
+        assert!(time_s.is_finite(), "event time must be finite");
+        Event { time_s, kind }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_construction() {
+        let e = Event::new(1.5, EventKind::Sweep);
+        assert_eq!(e.time_s, 1.5);
+        assert_eq!(e.kind, EventKind::Sweep);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan_time() {
+        Event::new(f64::NAN, EventKind::Sweep);
+    }
+}

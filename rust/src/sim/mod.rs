@@ -1,0 +1,13 @@
+//! Discrete-event simulation engine (the coordinator's event loop).
+//!
+//! Built from scratch (no `tokio` offline): a monotonic clock plus a
+//! binary-heap event queue with deterministic FIFO tie-breaking. The
+//! coordinator schedules typed [`event::Event`]s (contact edges, model
+//! arrivals, training completions, aggregations) and consumes them in
+//! time order.
+
+pub mod event;
+pub mod queue;
+
+pub use event::{Event, EventKind};
+pub use queue::EventQueue;

@@ -1,0 +1,172 @@
+//! Min-heap event queue with deterministic FIFO tie-breaking.
+
+use super::event::Event;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry: ordered by time, then insertion sequence (so two events
+/// at the same instant pop in scheduling order — determinism matters
+/// because experiment tables must regenerate bit-identically).
+struct Entry {
+    time_s: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, o: &Self) -> bool {
+        self.time_s == o.time_s && self.seq == o.seq
+    }
+}
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert for min-heap behaviour.
+        o.time_s
+            .partial_cmp(&self.time_s)
+            .expect("event times are finite")
+            .then_with(|| o.seq.cmp(&self.seq))
+    }
+}
+
+/// The simulation event queue.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+    now_s: f64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now_s: 0.0 }
+    }
+
+    /// Current simulated time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now_s
+    }
+
+    /// Schedule an event. Panics if it is in the simulated past.
+    pub fn push(&mut self, e: Event) {
+        assert!(
+            e.time_s >= self.now_s,
+            "cannot schedule into the past: {} < {}",
+            e.time_s,
+            self.now_s
+        );
+        self.heap.push(Entry { time_s: e.time_s, seq: self.seq, event: e });
+        self.seq += 1;
+    }
+
+    /// Schedule `kind` at `now + delay`.
+    pub fn push_in(&mut self, delay_s: f64, kind: super::event::EventKind) {
+        let t = self.now_s + delay_s.max(0.0);
+        self.push(Event::new(t, kind));
+    }
+
+    /// Pop the earliest event, advancing the clock.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|entry| {
+            debug_assert!(entry.time_s >= self.now_s);
+            self.now_s = entry.time_s;
+            entry.event
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Time of the next event without popping.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::event::EventKind;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(Event::new(3.0, EventKind::Sweep));
+        q.push(Event::new(1.0, EventKind::AggregationTick));
+        q.push(Event::new(2.0, EventKind::TrainingDone { sat: 1 }));
+        assert_eq!(q.pop().unwrap().time_s, 1.0);
+        assert_eq!(q.pop().unwrap().time_s, 2.0);
+        assert_eq!(q.pop().unwrap().time_s, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        for sat in 0..10 {
+            q.push(Event::new(5.0, EventKind::TrainingDone { sat }));
+        }
+        for sat in 0..10 {
+            match q.pop().unwrap().kind {
+                EventKind::TrainingDone { sat: s } => assert_eq!(s, sat),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(Event::new(2.0, EventKind::Sweep));
+        q.push(Event::new(7.0, EventKind::Sweep));
+        assert_eq!(q.now(), 0.0);
+        q.pop();
+        assert_eq!(q.now(), 2.0);
+        q.pop();
+        assert_eq!(q.now(), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.push(Event::new(5.0, EventKind::Sweep));
+        q.pop();
+        q.push(Event::new(1.0, EventKind::Sweep));
+    }
+
+    #[test]
+    fn push_in_is_relative_and_clamped() {
+        let mut q = EventQueue::new();
+        q.push(Event::new(10.0, EventKind::Sweep));
+        q.pop();
+        q.push_in(-3.0, EventKind::Sweep); // clamped to now
+        assert_eq!(q.peek_time(), Some(10.0));
+        q.push_in(5.0, EventKind::AggregationTick);
+        q.pop();
+        assert_eq!(q.peek_time(), Some(15.0));
+    }
+
+    #[test]
+    fn len_tracks() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(Event::new(1.0, EventKind::Sweep));
+        q.push(Event::new(2.0, EventKind::Sweep));
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -1,0 +1,123 @@
+//! Property-testing substrate (no `proptest` offline).
+//!
+//! A seeded forall-runner over closures of `Rng`: each case draws
+//! random inputs and asserts a property; on failure the failing seed is
+//! printed so the case replays deterministically.
+//!
+//! ```ignore
+//! forall(100, |rng| {
+//!     let n = rng.range_usize(1, 50);
+//!     // ... property ...
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Number of cases the default `forall` runs.
+pub const DEFAULT_CASES: usize = 100;
+
+/// Run `cases` property checks with derived seeds. The property panics
+/// to signal failure; we wrap to report the seed.
+pub fn forall_seeded(base_seed: u64, cases: usize, prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            eprintln!("property failed on case {case} (replay seed: {seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// `forall` with the default seed/case count.
+pub fn forall(prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    forall_seeded(0xA5_F1EE7, DEFAULT_CASES, prop);
+}
+
+/// Draw a random f32 vector of length `n` ~ N(0, std).
+pub fn gen_vec_f32(rng: &mut Rng, n: usize, std: f64) -> Vec<f32> {
+    (0..n).map(|_| rng.normal(0.0, std) as f32).collect()
+}
+
+/// Assert two floats are within `tol` (absolute + relative).
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "assert_close failed: {a} vs {b} (tol {tol})"
+    );
+}
+
+/// Assert two f32 slices are element-wise within `tol`.
+#[track_caller]
+pub fn assert_allclose(a: &[f32], b: &[f32], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f64.max((*x as f64).abs()).max((*y as f64).abs());
+        assert!(
+            (*x as f64 - *y as f64).abs() <= tol * scale,
+            "allclose failed at index {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        forall_seeded(1, 25, |_rng| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), 25);
+    }
+
+    #[test]
+    fn forall_is_deterministic() {
+        use std::sync::Mutex;
+        let seen1 = Mutex::new(Vec::new());
+        forall_seeded(9, 10, |rng| {
+            seen1.lock().unwrap().push(rng.next_u64());
+        });
+        let seen2 = Mutex::new(Vec::new());
+        forall_seeded(9, 10, |rng| {
+            seen2.lock().unwrap().push(rng.next_u64());
+        });
+        assert_eq!(*seen1.lock().unwrap(), *seen2.lock().unwrap());
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall_seeded(2, 10, |rng| {
+            assert!(rng.f64() < 0.5, "will fail ~half the time");
+        });
+    }
+
+    #[test]
+    fn assert_close_relative() {
+        assert_close(1e9, 1e9 + 10.0, 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_fails_when_far() {
+        assert_close(1.0, 2.0, 1e-3);
+    }
+
+    #[test]
+    fn gen_vec_shape() {
+        let mut rng = Rng::new(3);
+        let v = gen_vec_f32(&mut rng, 17, 1.0);
+        assert_eq!(v.len(), 17);
+    }
+}

@@ -1,0 +1,17 @@
+//! The ring-of-stars communication topology (paper Sec. IV-A, Fig. 3).
+//!
+//! Two layers:
+//!
+//! * **HAP layer** — the HAPs form a ring; one is designated *source*
+//!   and one *sink* (typically the farthest around the ring); global
+//!   models flow source→sink along both arcs, local-model sets flow the
+//!   same way toward the sink, and the roles swap each global epoch
+//!   (Sec. IV-B3).
+//! * **SAT layer** — each HAP runs a star over its currently visible
+//!   satellites, and satellites in the same orbit form intra-orbit
+//!   ISL rings ([`crate::orbit::WalkerConstellation::ring_neighbors`]).
+//!   Inter-orbit ISLs are deliberately absent (Doppler, Sec. IV-A).
+
+pub mod ring;
+
+pub use ring::HapRing;

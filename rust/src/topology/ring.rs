@@ -1,0 +1,210 @@
+//! The HAP "backbone" ring: roles, arcs, and relay routing.
+
+/// The ring of HAPs with current source/sink designation.
+///
+/// Indices are positions on the ring (HAPs are placed on the ring in
+/// construction order; with the paper's 2-HAP setup the ring degenerates
+/// to a single bidirectional link, and with 1 HAP to a no-op).
+#[derive(Clone, Debug)]
+pub struct HapRing {
+    n: usize,
+    source: usize,
+    sink: usize,
+}
+
+impl HapRing {
+    /// Build a ring of `n` HAPs. The initial source is index 0 and the
+    /// sink is the farthest node around the ring (paper Sec. IV-B1).
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "ring needs at least one HAP");
+        let source = 0;
+        let sink = if n == 1 { 0 } else { n / 2 };
+        HapRing { n, source, sink }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn source(&self) -> usize {
+        self.source
+    }
+
+    pub fn sink(&self) -> usize {
+        self.sink
+    }
+
+    /// Ring neighbours (prev, next) of HAP `i`.
+    pub fn neighbors(&self, i: usize) -> (usize, usize) {
+        assert!(i < self.n);
+        ((i + self.n - 1) % self.n, (i + 1) % self.n)
+    }
+
+    /// Swap source and sink roles (done after each aggregation so the
+    /// fresh global model flows back along the reverse path, IV-B3).
+    pub fn swap_roles(&mut self) {
+        std::mem::swap(&mut self.source, &mut self.sink);
+    }
+
+    /// Hop distance from `i` to `j` going clockwise (`next` direction).
+    fn cw_dist(&self, i: usize, j: usize) -> usize {
+        (j + self.n - i) % self.n
+    }
+
+    /// Next hop from `i` toward `target` along the shorter arc
+    /// (ties broken clockwise). Returns `None` when already there.
+    pub fn next_hop_toward(&self, i: usize, target: usize) -> Option<usize> {
+        assert!(i < self.n && target < self.n);
+        if i == target {
+            return None;
+        }
+        let cw = self.cw_dist(i, target);
+        let ccw = self.n - cw;
+        let (prev, next) = self.neighbors(i);
+        Some(if cw <= ccw { next } else { prev })
+    }
+
+    /// The broadcast relay plan from `from`: each entry is
+    /// `(hap, forwards_to)` in BFS order along both arcs; the sink
+    /// forwards to nobody (Sec. IV-B1: "stop relaying at the sink").
+    /// Every HAP appears exactly once.
+    pub fn relay_plan(&self, from: usize) -> Vec<(usize, Vec<usize>)> {
+        assert!(from < self.n);
+        let mut plan = Vec::with_capacity(self.n);
+        if self.n == 1 {
+            plan.push((from, vec![]));
+            return plan;
+        }
+        // Each node j != from receives from exactly one parent: the
+        // neighbour one hop closer to `from` along j's shorter arc
+        // (clockwise on ties). Invert the parent relation into
+        // forwarding lists, ordered by arc distance (= relay order).
+        let mut order: Vec<usize> = (0..self.n).collect();
+        order.sort_by_key(|&j| {
+            let cw = self.cw_dist(from, j);
+            cw.min(self.n - cw)
+        });
+        let mut fwd: Vec<Vec<usize>> = vec![Vec::new(); self.n];
+        for &j in &order {
+            if j == from {
+                continue;
+            }
+            let cw = self.cw_dist(from, j); // hops if travelling clockwise
+            let ccw = self.n - cw;
+            let parent = if cw <= ccw {
+                (j + self.n - 1) % self.n // came from the cw direction
+            } else {
+                (j + 1) % self.n // came from the ccw direction
+            };
+            fwd[parent].push(j);
+        }
+        for &h in &order {
+            plan.push((h, fwd[h].clone()));
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn single_hap_degenerate() {
+        let r = HapRing::new(1);
+        assert_eq!(r.source(), 0);
+        assert_eq!(r.sink(), 0);
+        assert_eq!(r.next_hop_toward(0, 0), None);
+        assert_eq!(r.relay_plan(0), vec![(0, vec![])]);
+    }
+
+    #[test]
+    fn two_haps_link() {
+        let r = HapRing::new(2);
+        assert_eq!(r.sink(), 1);
+        assert_eq!(r.next_hop_toward(0, 1), Some(1));
+        assert_eq!(r.next_hop_toward(1, 0), Some(0));
+    }
+
+    #[test]
+    fn sink_is_farthest() {
+        for n in 1..10 {
+            let r = HapRing::new(n);
+            let d = |i: usize, j: usize| {
+                let cw = (j + n - i) % n;
+                cw.min(n - cw)
+            };
+            let dist_sink = d(r.source(), r.sink());
+            for j in 0..n {
+                assert!(d(r.source(), j) <= dist_sink);
+            }
+        }
+    }
+
+    #[test]
+    fn swap_roles_swaps() {
+        let mut r = HapRing::new(4);
+        let (s0, k0) = (r.source(), r.sink());
+        r.swap_roles();
+        assert_eq!(r.source(), k0);
+        assert_eq!(r.sink(), s0);
+    }
+
+    #[test]
+    fn next_hop_reaches_target() {
+        for n in 2..9 {
+            let r = HapRing::new(n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut cur = i;
+                    let mut hops = 0;
+                    while cur != j {
+                        cur = r.next_hop_toward(cur, j).unwrap();
+                        hops += 1;
+                        assert!(hops <= n, "routing loop {i}->{j}");
+                    }
+                    assert!(hops <= n / 2 + 1, "not shortest arc: {i}->{j} took {hops}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn relay_plan_covers_all_once() {
+        for n in 1..9 {
+            let r = HapRing::new(n);
+            for from in 0..n {
+                let plan = r.relay_plan(from);
+                let nodes: HashSet<usize> = plan.iter().map(|(h, _)| *h).collect();
+                assert_eq!(nodes.len(), n, "n={n} from={from}");
+                // Each non-origin node receives the model exactly once.
+                let mut recv_count = vec![0usize; n];
+                for (_, fwd) in &plan {
+                    for &t in fwd {
+                        recv_count[t] += 1;
+                    }
+                }
+                for j in 0..n {
+                    if j == from {
+                        assert_eq!(recv_count[j], 0, "origin must not receive");
+                    } else {
+                        assert_eq!(recv_count[j], 1, "n={n} from={from} node={j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn relay_plan_first_entry_is_origin() {
+        let r = HapRing::new(5);
+        let plan = r.relay_plan(2);
+        assert_eq!(plan[0].0, 2);
+        assert_eq!(plan[0].1.len(), 2, "origin transmits to both neighbors");
+    }
+}

@@ -1,0 +1,98 @@
+//! Local training / evaluation / PS-compute backends.
+//!
+//! The FL strategies and the coordinator are generic over [`Backend`]:
+//!
+//! * [`PjrtBackend`] — the real thing: every train / eval / aggregate /
+//!   distance call executes an AOT-compiled JAX+Pallas artifact through
+//!   the PJRT runtime. Used by the experiment drivers and the
+//!   end-to-end example.
+//! * [`SurrogateBackend`] — a fast analytic stand-in with the same
+//!   qualitative FL dynamics (per-class knowledge state, non-IID bias,
+//!   staleness decay). Used by coordinator/strategy unit tests and the
+//!   pure-L3 micro-benches, where PJRT would dominate runtime without
+//!   adding signal.
+
+pub mod pjrt;
+pub mod sampler;
+pub mod surrogate;
+
+pub use pjrt::PjrtBackend;
+pub use surrogate::SurrogateBackend;
+
+use crate::model::ModelParams;
+
+/// Evaluation result on the held-out test set.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalResult {
+    /// Accuracy in [0, 1].
+    pub accuracy: f64,
+    /// Mean loss.
+    pub loss: f64,
+}
+
+/// What the FL layer needs from the compute substrate.
+pub trait Backend {
+    /// Flat parameter dimension D.
+    fn dim(&self) -> usize;
+
+    /// Number of satellites (data shards) this backend serves.
+    fn n_sats(&self) -> usize;
+
+    /// Shard size m_n of satellite `sat` (enters Eqs. 12–13).
+    fn shard_size(&self, sat: usize) -> usize;
+
+    /// Deterministic global-model initialization.
+    fn init_global(&mut self, seed: i32) -> ModelParams;
+
+    /// One on-board visit: `dispatches` train-artifact executions (each
+    /// folds J local SGD steps). Returns updated params + mean loss.
+    fn train_local(
+        &mut self,
+        sat: usize,
+        params: &ModelParams,
+        dispatches: usize,
+    ) -> (ModelParams, f64);
+
+    /// Evaluate params on the held-out test set.
+    fn evaluate(&mut self, params: &ModelParams) -> EvalResult;
+
+    /// Staleness-discounted aggregation (paper Eq. 14):
+    /// `coeff_prev * prev + Σ coeffs[i] * models[i]`.
+    fn aggregate(
+        &mut self,
+        prev: &ModelParams,
+        models: &[&ModelParams],
+        coeffs: &[f32],
+        coeff_prev: f32,
+    ) -> ModelParams;
+
+    /// Weight divergences ‖mᵢ − reference‖₂ (grouping metric, IV-C1).
+    fn distances(&mut self, models: &[&ModelParams], reference: &ModelParams) -> Vec<f64>;
+}
+
+/// FedAvg data-size weights m_n/m over a set of shard sizes.
+pub fn fedavg_weights(sizes: &[usize]) -> Vec<f32> {
+    let total: usize = sizes.iter().sum();
+    if total == 0 {
+        return vec![0.0; sizes.len()];
+    }
+    sizes.iter().map(|&s| s as f32 / total as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fedavg_weights_normalize() {
+        let w = fedavg_weights(&[100, 300]);
+        assert!((w[0] - 0.25).abs() < 1e-6);
+        assert!((w[1] - 0.75).abs() < 1e-6);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedavg_weights_empty_total() {
+        assert_eq!(fedavg_weights(&[0, 0]), vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,238 @@
+//! The real compute backend: every operation executes an AOT artifact
+//! on the PJRT CPU client (L2 JAX graphs calling L1 Pallas kernels).
+
+use super::sampler::{eval_chunk, BatchSampler};
+use super::{Backend, EvalResult};
+use crate::data::{partition, Dataset, Partition, Shard};
+use crate::model::ModelParams;
+use crate::runtime::executor::Input;
+use crate::runtime::{Executable, Runtime};
+use crate::util::Rng;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// PJRT-backed FL compute for one model variant (e.g. "cnn_digits").
+pub struct PjrtBackend {
+    runtime: Rc<Runtime>,
+    init_exe: Rc<Executable>,
+    train_exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+    agg_exe: Rc<Executable>,
+    dist_exe: Rc<Executable>,
+    dim: usize,
+    lr: f32,
+    train_data: Dataset,
+    test_data: Dataset,
+    shards: Vec<Shard>,
+    samplers: Vec<BatchSampler>,
+    // Reused buffers (no allocation on the training hot path).
+    xs_buf: Vec<f32>,
+    ys_buf: Vec<f32>,
+    slab_buf: Vec<f32>,
+}
+
+impl PjrtBackend {
+    /// Assemble from a runtime + datasets + a partitioning scheme.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        runtime: Rc<Runtime>,
+        model_tag: &str,
+        train_data: Dataset,
+        test_data: Dataset,
+        scheme: Partition,
+        n_orbits: usize,
+        sats_per_orbit: usize,
+        lr: f32,
+        seed: u64,
+    ) -> Result<Self> {
+        let dim = runtime.manifest.model(model_tag).map_err(anyhow::Error::msg)?.dim;
+        let shards = partition(&train_data, scheme, n_orbits, sats_per_orbit, seed);
+        let mut rng = Rng::new(seed ^ 0xBA7C4);
+        let samplers = shards
+            .iter()
+            .map(|s| BatchSampler::new(s, rng.fork(s.indices.first().copied().unwrap_or(0) as u64)))
+            .collect();
+        Ok(PjrtBackend {
+            init_exe: runtime.compile(&format!("init_{model_tag}"))?,
+            train_exe: runtime.compile(&format!("train_{model_tag}"))?,
+            eval_exe: runtime.compile(&format!("eval_{model_tag}"))?,
+            agg_exe: runtime.compile(&format!("agg_{model_tag}"))?,
+            dist_exe: runtime.compile(&format!("dist_{model_tag}"))?,
+            runtime,
+            dim,
+            lr,
+            train_data,
+            test_data,
+            shards,
+            samplers,
+            xs_buf: Vec::new(),
+            ys_buf: Vec::new(),
+            slab_buf: Vec::new(),
+        })
+    }
+
+    /// Build a backend straight from an experiment config.
+    pub fn from_config(
+        runtime: Rc<Runtime>,
+        cfg: &crate::config::ExperimentConfig,
+    ) -> Result<Self> {
+        let (train, test) = crate::data::synth::generate_split(
+            cfg.fl.dataset,
+            cfg.seed,
+            cfg.data.train_samples,
+            cfg.data.test_samples,
+        );
+        Self::new(
+            runtime,
+            &cfg.model_tag(),
+            train,
+            test,
+            cfg.fl.partition,
+            cfg.constellation.n_orbits,
+            cfg.constellation.sats_per_orbit,
+            cfg.fl.lr,
+            cfg.seed,
+        )
+    }
+
+    /// Total PJRT execute() time across all artifacts (perf accounting).
+    pub fn total_exec_seconds(&self) -> f64 {
+        [&self.init_exe, &self.train_exe, &self.eval_exe, &self.agg_exe, &self.dist_exe]
+            .iter()
+            .map(|e| e.exec_seconds.get())
+            .sum()
+    }
+
+    fn manifest(&self) -> &crate::runtime::Manifest {
+        &self.runtime.manifest
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_sats(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_size(&self, sat: usize) -> usize {
+        self.shards[sat].len()
+    }
+
+    fn init_global(&mut self, seed: i32) -> ModelParams {
+        let out = self
+            .init_exe
+            .run(&[Input::I32(&[seed])])
+            .expect("init artifact");
+        ModelParams { data: out.into_iter().next().unwrap() }
+    }
+
+    fn train_local(
+        &mut self,
+        sat: usize,
+        params: &ModelParams,
+        dispatches: usize,
+    ) -> (ModelParams, f64) {
+        assert!(dispatches > 0);
+        let n = self.manifest().dispatch_samples();
+        let mut cur = params.clone();
+        let mut loss_sum = 0.0f64;
+        for _ in 0..dispatches {
+            // buffers are moved out to appease the borrow checker, then
+            // restored — no reallocation across dispatches.
+            let mut xs = std::mem::take(&mut self.xs_buf);
+            let mut ys = std::mem::take(&mut self.ys_buf);
+            self.samplers[sat].fill(&self.train_data, n, &mut xs, &mut ys);
+            let out = self
+                .train_exe
+                .run(&[
+                    Input::F32(&cur.data),
+                    Input::F32(&xs),
+                    Input::F32(&ys),
+                    Input::F32(&[self.lr]),
+                ])
+                .expect("train artifact");
+            self.xs_buf = xs;
+            self.ys_buf = ys;
+            let mut it = out.into_iter();
+            cur = ModelParams { data: it.next().unwrap() };
+            loss_sum += it.next().unwrap()[0] as f64;
+        }
+        (cur, loss_sum / dispatches as f64)
+    }
+
+    fn evaluate(&mut self, params: &ModelParams) -> EvalResult {
+        let chunk = self.manifest().eval_batch;
+        let mut correct = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut start = 0usize;
+        let total = self.test_data.len();
+        let mut xs = std::mem::take(&mut self.xs_buf);
+        let mut ys = std::mem::take(&mut self.ys_buf);
+        while start < total {
+            eval_chunk(&self.test_data, start, chunk, &mut xs, &mut ys);
+            let out = self
+                .eval_exe
+                .run(&[Input::F32(&params.data), Input::F32(&xs), Input::F32(&ys)])
+                .expect("eval artifact");
+            correct += out[0][0] as f64;
+            loss_sum += out[1][0] as f64;
+            start += chunk;
+        }
+        self.xs_buf = xs;
+        self.ys_buf = ys;
+        EvalResult { accuracy: correct / total as f64, loss: loss_sum / total as f64 }
+    }
+
+    fn aggregate(
+        &mut self,
+        prev: &ModelParams,
+        models: &[&ModelParams],
+        coeffs: &[f32],
+        coeff_prev: f32,
+    ) -> ModelParams {
+        assert_eq!(models.len(), coeffs.len());
+        let slab_rows = self.manifest().n_sats + 1;
+        assert!(
+            models.len() <= slab_rows - 1,
+            "{} models exceed the aggregation slab",
+            models.len()
+        );
+        let d = self.dim;
+        self.slab_buf.clear();
+        self.slab_buf.resize(slab_rows * d, 0.0);
+        self.slab_buf[..d].copy_from_slice(&prev.data);
+        let mut cvec = vec![0.0f32; slab_rows];
+        cvec[0] = coeff_prev;
+        for (i, (m, &c)) in models.iter().zip(coeffs).enumerate() {
+            self.slab_buf[(i + 1) * d..(i + 2) * d].copy_from_slice(&m.data);
+            cvec[i + 1] = c;
+        }
+        let out = self
+            .agg_exe
+            .run(&[Input::F32(&self.slab_buf), Input::F32(&cvec)])
+            .expect("agg artifact");
+        ModelParams { data: out.into_iter().next().unwrap() }
+    }
+
+    fn distances(&mut self, models: &[&ModelParams], reference: &ModelParams) -> Vec<f64> {
+        let rows = self.manifest().n_sats;
+        assert!(models.len() <= rows);
+        let d = self.dim;
+        self.slab_buf.clear();
+        self.slab_buf.resize(rows * d, 0.0);
+        for (i, m) in models.iter().enumerate() {
+            self.slab_buf[i * d..(i + 1) * d].copy_from_slice(&m.data);
+        }
+        let out = self
+            .dist_exe
+            .run(&[Input::F32(&self.slab_buf), Input::F32(&reference.data)])
+            .expect("dist artifact");
+        out[0][..models.len()].iter().map(|&v| v as f64).collect()
+    }
+}
+
+// PJRT-dependent behaviour is integration-tested in
+// rust/tests/runtime_e2e.rs (requires `make artifacts`).

@@ -1,0 +1,226 @@
+//! Analytic FL surrogate backend for fast coordinator/strategy tests.
+//!
+//! The model state is a 10-dim "per-class knowledge" vector. Local
+//! training raises knowledge of the classes present in the satellite's
+//! shard (with diminishing returns) and slightly decays the others —
+//! reproducing the qualitative FL phenomena the coordinator logic must
+//! handle: non-IID bias (a model trained on 4 classes can't classify
+//! the other 6), the value of aggregating across groups, and the harm
+//! of stale models. Accuracy is the class-frequency-weighted knowledge
+//! with a 1/K guessing floor.
+//!
+//! Parameter vectors are `CLASSES`-dim [`ModelParams`], so every
+//! aggregation/distance path exercises the same code as the real
+//! backend.
+
+use super::{Backend, EvalResult};
+use crate::model::ModelParams;
+
+pub const CLASSES: usize = 10;
+
+/// Learning-rate of the knowledge update per dispatch.
+const LEARN_RATE: f64 = 0.35;
+/// Forgetting of classes absent from the local shard.
+const FORGET: f64 = 0.02;
+
+/// Fast surrogate backend.
+pub struct SurrogateBackend {
+    /// Per-satellite class histogram (normalized).
+    class_mix: Vec<[f64; CLASSES]>,
+    shard_sizes: Vec<usize>,
+    /// Test-set class frequencies (uniform for our synth sets).
+    test_mix: [f64; CLASSES],
+    /// Max reachable per-class accuracy (irreducible noise).
+    ceiling: f64,
+}
+
+impl SurrogateBackend {
+    /// Build from explicit per-satellite class histograms.
+    pub fn new(class_mix: Vec<[f64; CLASSES]>, shard_sizes: Vec<usize>) -> Self {
+        assert_eq!(class_mix.len(), shard_sizes.len());
+        SurrogateBackend {
+            class_mix,
+            shard_sizes,
+            test_mix: [1.0 / CLASSES as f64; CLASSES],
+            ceiling: 0.92,
+        }
+    }
+
+    /// Build the paper's split: `n_orbits * sats_per_orbit` satellites;
+    /// IID (all classes) or the paper non-IID split.
+    pub fn paper_split(n_orbits: usize, sats_per_orbit: usize, iid: bool, base_size: usize) -> Self {
+        let n = n_orbits * sats_per_orbit;
+        let mut mixes = Vec::with_capacity(n);
+        let mut sizes = Vec::with_capacity(n);
+        for sat in 0..n {
+            let orbit = sat / sats_per_orbit;
+            let mut mix = [0.0f64; CLASSES];
+            if iid {
+                mix = [1.0 / CLASSES as f64; CLASSES];
+            } else if orbit < 2.min(n_orbits) {
+                for m in mix.iter_mut().take(4) {
+                    *m = 0.25;
+                }
+            } else {
+                for m in mix.iter_mut().skip(4) {
+                    *m = 1.0 / 6.0;
+                }
+            }
+            mixes.push(mix);
+            // mild deterministic size variation
+            sizes.push(base_size + (sat * 7) % (base_size / 2 + 1));
+        }
+        SurrogateBackend::new(mixes, sizes)
+    }
+
+    fn knowledge(params: &ModelParams) -> &[f32] {
+        &params.data
+    }
+}
+
+impl Backend for SurrogateBackend {
+    fn dim(&self) -> usize {
+        CLASSES
+    }
+
+    fn n_sats(&self) -> usize {
+        self.class_mix.len()
+    }
+
+    fn shard_size(&self, sat: usize) -> usize {
+        self.shard_sizes[sat]
+    }
+
+    fn init_global(&mut self, _seed: i32) -> ModelParams {
+        ModelParams::zeros(CLASSES)
+    }
+
+    fn train_local(
+        &mut self,
+        sat: usize,
+        params: &ModelParams,
+        dispatches: usize,
+    ) -> (ModelParams, f64) {
+        let mix = &self.class_mix[sat];
+        let mut k: Vec<f64> = params.data.iter().map(|&v| v as f64).collect();
+        for _ in 0..dispatches {
+            for c in 0..CLASSES {
+                if mix[c] > 0.0 {
+                    // diminishing-returns learning toward 1.0, faster
+                    // for more-frequent classes
+                    let rate = LEARN_RATE * (mix[c] * CLASSES as f64).min(2.0);
+                    k[c] += rate * (1.0 - k[c]);
+                } else {
+                    k[c] *= 1.0 - FORGET;
+                }
+            }
+        }
+        let new = ModelParams { data: k.iter().map(|&v| v as f32).collect() };
+        // surrogate loss: cross-entropy-ish on local mix
+        let local_acc: f64 = (0..CLASSES).map(|c| mix[c] * k[c]).sum();
+        let loss = -(local_acc.clamp(1e-3, 1.0)).ln();
+        (new, loss)
+    }
+
+    fn evaluate(&mut self, params: &ModelParams) -> EvalResult {
+        let k = Self::knowledge(params);
+        let floor = 1.0 / CLASSES as f64;
+        let acc: f64 = (0..CLASSES)
+            .map(|c| {
+                let kn = (k[c] as f64).clamp(0.0, 1.0);
+                self.test_mix[c] * (floor + (self.ceiling - floor) * kn)
+            })
+            .sum();
+        EvalResult { accuracy: acc, loss: -acc.max(1e-3).ln() }
+    }
+
+    fn aggregate(
+        &mut self,
+        prev: &ModelParams,
+        models: &[&ModelParams],
+        coeffs: &[f32],
+        coeff_prev: f32,
+    ) -> ModelParams {
+        let mut refs: Vec<&ModelParams> = vec![prev];
+        refs.extend_from_slice(models);
+        let mut weights = vec![coeff_prev];
+        weights.extend_from_slice(coeffs);
+        ModelParams::weighted_sum(&refs, &weights)
+    }
+
+    fn distances(&mut self, models: &[&ModelParams], reference: &ModelParams) -> Vec<f64> {
+        models.iter().map(|m| m.l2_distance(reference)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_ignorant() {
+        let mut b = SurrogateBackend::paper_split(5, 8, true, 100);
+        let g = b.init_global(0);
+        let e = b.evaluate(&g);
+        assert!((e.accuracy - 0.1).abs() < 1e-9, "guessing floor");
+    }
+
+    #[test]
+    fn training_improves_local_knowledge() {
+        let mut b = SurrogateBackend::paper_split(5, 8, true, 100);
+        let g = b.init_global(0);
+        let (m, _) = b.train_local(0, &g, 3);
+        let e0 = b.evaluate(&g);
+        let e1 = b.evaluate(&m);
+        assert!(e1.accuracy > e0.accuracy + 0.1);
+    }
+
+    #[test]
+    fn non_iid_single_sat_caps_accuracy() {
+        let mut b = SurrogateBackend::paper_split(5, 8, false, 100);
+        let g = b.init_global(0);
+        // satellite 0 holds only 4 classes: even infinite training
+        // can't exceed 4/10 coverage (+ guessing floor on the rest)
+        let (m, _) = b.train_local(0, &g, 50);
+        let e = b.evaluate(&m);
+        assert!(e.accuracy < 0.55, "acc {} should be capped", e.accuracy);
+        assert!(e.accuracy > 0.3);
+    }
+
+    #[test]
+    fn aggregating_across_groups_beats_single_group() {
+        let mut b = SurrogateBackend::paper_split(5, 8, false, 100);
+        let g = b.init_global(0);
+        let (low, _) = b.train_local(0, &g, 10); // classes 0..4
+        let (high, _) = b.train_local(39, &g, 10); // classes 4..10
+        let merged = b.aggregate(&g, &[&low, &high], &[0.5, 0.5], 0.0);
+        let e_low = b.evaluate(&low);
+        let e_merged = b.evaluate(&merged);
+        assert!(
+            e_merged.accuracy > e_low.accuracy + 0.05,
+            "merged {} vs single-group {}",
+            e_merged.accuracy,
+            e_low.accuracy
+        );
+    }
+
+    #[test]
+    fn distances_separate_the_two_orbit_groups() {
+        let mut b = SurrogateBackend::paper_split(5, 8, false, 100);
+        let g = b.init_global(0);
+        let (a, _) = b.train_local(0, &g, 5); // low-class orbit
+        let (a2, _) = b.train_local(8, &g, 5); // also low-class orbit
+        let (c, _) = b.train_local(39, &g, 5); // high-class orbit
+        let d = b.distances(&[&a, &a2, &c], &g);
+        // same-group distances similar, cross-group clearly different
+        assert!((d[0] - d[1]).abs() < 0.2 * d[0]);
+        assert!((d[0] - d[2]).abs() > 0.1 * d[0]);
+    }
+
+    #[test]
+    fn shard_sizes_vary() {
+        let b = SurrogateBackend::paper_split(5, 8, true, 100);
+        let sizes: Vec<usize> = (0..40).map(|s| b.shard_size(s)).collect();
+        assert!(sizes.iter().any(|&s| s != sizes[0]));
+    }
+}

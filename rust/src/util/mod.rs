@@ -1,0 +1,70 @@
+//! Small self-contained substrates: PRNG, statistics, 3-D vector math.
+//!
+//! crates.io is unreachable in this environment, so the usual `rand` /
+//! `statrs` / `nalgebra` dependencies are replaced by these minimal,
+//! well-tested implementations (see DESIGN.md §1 "No-network note").
+
+pub mod rng;
+pub mod stats;
+pub mod vec3;
+
+pub use rng::Rng;
+pub use vec3::Vec3;
+
+/// Speed of light in km/s (used by the link-delay model, Eq. 8).
+pub const SPEED_OF_LIGHT_KM_S: f64 = 299_792.458;
+
+/// Clamp a float into `[lo, hi]`.
+pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+/// Linear interpolation.
+pub fn lerp(a: f64, b: f64, t: f64) -> f64 {
+    a + (b - a) * t
+}
+
+/// Format simulated seconds as `h:mm` (the unit of the paper's
+/// "convergence time" column in Table II).
+pub fn fmt_hm(seconds: f64) -> String {
+    let total_min = (seconds / 60.0).round() as i64;
+    format!("{}:{:02}", total_min / 60, total_min % 60)
+}
+
+/// Format simulated seconds as `h:mm:ss`.
+pub fn fmt_hms(seconds: f64) -> String {
+    let s = seconds.round() as i64;
+    format!("{}:{:02}:{:02}", s / 3600, (s % 3600) / 60, s % 60)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_basics() {
+        assert_eq!(clamp(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        assert_eq!(lerp(2.0, 4.0, 0.0), 2.0);
+        assert_eq!(lerp(2.0, 4.0, 1.0), 4.0);
+        assert_eq!(lerp(2.0, 4.0, 0.5), 3.0);
+    }
+
+    #[test]
+    fn fmt_hm_matches_paper_style() {
+        assert_eq!(fmt_hm(3.5 * 3600.0), "3:30");
+        assert_eq!(fmt_hm(72.0 * 3600.0), "72:00");
+        assert_eq!(fmt_hm(200.0 * 60.0), "3:20");
+    }
+
+    #[test]
+    fn fmt_hms_rounds() {
+        assert_eq!(fmt_hms(3661.0), "1:01:01");
+        assert_eq!(fmt_hms(59.6), "0:01:00");
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal 3-D vector math for orbital mechanics (ECI/ECEF frames).
+
+use std::ops::{Add, Mul, Neg, Sub};
+
+/// Cartesian 3-vector (km, in whichever frame the caller tracks).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Vec3 {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+impl Vec3 {
+    pub const ZERO: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 0.0 };
+
+    pub fn new(x: f64, y: f64, z: f64) -> Self {
+        Vec3 { x, y, z }
+    }
+
+    pub fn dot(self, o: Vec3) -> f64 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    pub fn cross(self, o: Vec3) -> Vec3 {
+        Vec3::new(
+            self.y * o.z - self.z * o.y,
+            self.z * o.x - self.x * o.z,
+            self.x * o.y - self.y * o.x,
+        )
+    }
+
+    pub fn norm2(self) -> f64 {
+        self.dot(self)
+    }
+
+    pub fn norm(self) -> f64 {
+        self.norm2().sqrt()
+    }
+
+    pub fn normalized(self) -> Vec3 {
+        let n = self.norm();
+        assert!(n > 0.0, "normalizing zero vector");
+        self * (1.0 / n)
+    }
+
+    pub fn distance(self, o: Vec3) -> f64 {
+        (self - o).norm()
+    }
+
+    /// Angle between two vectors in radians, in [0, pi].
+    pub fn angle_to(self, o: Vec3) -> f64 {
+        let c = self.dot(o) / (self.norm() * o.norm());
+        crate::util::clamp(c, -1.0, 1.0).acos()
+    }
+
+    /// Rotate about the Z axis by `theta` radians (RAAN / Earth spin).
+    pub fn rot_z(self, theta: f64) -> Vec3 {
+        let (s, c) = theta.sin_cos();
+        Vec3::new(c * self.x - s * self.y, s * self.x + c * self.y, self.z)
+    }
+
+    /// Rotate about the X axis by `theta` radians (inclination).
+    pub fn rot_x(self, theta: f64) -> Vec3 {
+        let (s, c) = theta.sin_cos();
+        Vec3::new(self.x, c * self.y - s * self.z, s * self.y + c * self.z)
+    }
+}
+
+impl Add for Vec3 {
+    type Output = Vec3;
+    fn add(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+}
+
+impl Sub for Vec3 {
+    type Output = Vec3;
+    fn sub(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+}
+
+impl Mul<f64> for Vec3 {
+    type Output = Vec3;
+    fn mul(self, k: f64) -> Vec3 {
+        Vec3::new(self.x * k, self.y * k, self.z * k)
+    }
+}
+
+impl Neg for Vec3 {
+    type Output = Vec3;
+    fn neg(self) -> Vec3 {
+        self * -1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EPS: f64 = 1e-12;
+
+    #[test]
+    fn dot_and_cross() {
+        let x = Vec3::new(1.0, 0.0, 0.0);
+        let y = Vec3::new(0.0, 1.0, 0.0);
+        assert_eq!(x.dot(y), 0.0);
+        assert_eq!(x.cross(y), Vec3::new(0.0, 0.0, 1.0));
+    }
+
+    #[test]
+    fn norm_and_distance() {
+        let v = Vec3::new(3.0, 4.0, 0.0);
+        assert!((v.norm() - 5.0).abs() < EPS);
+        assert!((v.distance(Vec3::ZERO) - 5.0).abs() < EPS);
+    }
+
+    #[test]
+    fn angle_orthogonal_and_parallel() {
+        let x = Vec3::new(1.0, 0.0, 0.0);
+        let y = Vec3::new(0.0, 2.0, 0.0);
+        assert!((x.angle_to(y) - std::f64::consts::FRAC_PI_2).abs() < EPS);
+        assert!(x.angle_to(x * 5.0).abs() < EPS);
+        assert!((x.angle_to(-x) - std::f64::consts::PI).abs() < EPS);
+    }
+
+    #[test]
+    fn rot_z_quarter_turn() {
+        let v = Vec3::new(1.0, 0.0, 0.0).rot_z(std::f64::consts::FRAC_PI_2);
+        assert!(v.distance(Vec3::new(0.0, 1.0, 0.0)) < EPS);
+    }
+
+    #[test]
+    fn rot_x_quarter_turn() {
+        let v = Vec3::new(0.0, 1.0, 0.0).rot_x(std::f64::consts::FRAC_PI_2);
+        assert!(v.distance(Vec3::new(0.0, 0.0, 1.0)) < EPS);
+    }
+
+    #[test]
+    fn rotations_preserve_norm() {
+        let v = Vec3::new(1.2, -3.4, 5.6);
+        assert!((v.rot_z(0.7).norm() - v.norm()).abs() < EPS);
+        assert!((v.rot_x(1.3).norm() - v.norm()).abs() < EPS);
+    }
+}

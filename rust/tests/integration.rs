@@ -1,0 +1,219 @@
+//! Cross-module integration tests on the surrogate backend: full
+//! strategy runs over the real geometry/topology/DES substrate (fast,
+//! no PJRT), checking the paper's qualitative results end to end.
+
+use asyncfleo::config::{ExperimentConfig, PsPlacement, SchemeKind};
+use asyncfleo::coordinator::{RunResult, SimEnv};
+use asyncfleo::fl::asyncfleo::AsyncFleo;
+use asyncfleo::fl::{make_strategy, Strategy};
+use asyncfleo::train::SurrogateBackend;
+
+fn run_scheme(
+    scheme: SchemeKind,
+    placement: PsPlacement,
+    iid: bool,
+    horizon_h: f64,
+) -> RunResult {
+    let mut cfg = ExperimentConfig::paper_defaults();
+    cfg.fl.scheme = scheme;
+    cfg.placement = placement;
+    cfg.fl.horizon_s = horizon_h * 3600.0;
+    cfg.fl.max_epochs = 40;
+    let mut backend = SurrogateBackend::paper_split(5, 8, iid, 100);
+    let mut env = SimEnv::new(&cfg, &mut backend);
+    make_strategy(scheme).run(&mut env)
+}
+
+// ---------------------------------------------------------------------
+// Table II shape: orderings the paper reports must hold on the
+// simulated testbed too.
+// ---------------------------------------------------------------------
+
+#[test]
+fn asyncfleo_converges_much_faster_than_fedhap() {
+    // The paper's headline: same accuracy band, ~6x faster than the
+    // synchronous FedHAP. On the surrogate we verify the speed ordering
+    // with a stopping-rule-independent metric (time to fixed accuracy);
+    // the accuracy-band comparison is the PJRT table2 experiment's job.
+    let ours = run_scheme(SchemeKind::AsyncFleo, PsPlacement::HapRolla, false, 72.0);
+    let fedhap = run_scheme(SchemeKind::FedHap, PsPlacement::HapRolla, false, 72.0);
+    let t_ours = ours.time_to_accuracy(0.70).expect("asyncfleo reaches 70%");
+    let t_hap = fedhap.time_to_accuracy(0.70).expect("fedhap reaches 70%");
+    assert!(
+        t_ours < t_hap,
+        "AsyncFLEO to 70% in {} h should beat FedHAP {} h",
+        t_ours / 3600.0,
+        t_hap / 3600.0
+    );
+}
+
+#[test]
+fn fedisl_arbitrary_gs_slower_than_asyncfleo_gs() {
+    let fedisl = run_scheme(SchemeKind::FedIsl, PsPlacement::GsRolla, false, 72.0);
+    let ours = run_scheme(SchemeKind::AsyncFleo, PsPlacement::GsRolla, false, 72.0);
+    let t_ours = ours.time_to_accuracy(0.65).expect("asyncfleo reaches 65%");
+    let t_isl = fedisl.time_to_accuracy(0.65).unwrap_or(f64::INFINITY);
+    assert!(
+        t_ours < t_isl,
+        "asyncfleo to 65% in {} h vs fedisl {} h",
+        t_ours / 3600.0,
+        t_isl / 3600.0
+    );
+}
+
+#[test]
+fn fedisl_ideal_np_is_competitive() {
+    let ideal = run_scheme(SchemeKind::FedIslIdeal, PsPlacement::GsNorthPole, false, 24.0);
+    assert!(ideal.converged.is_some(), "NP FedISL should converge within 24 h");
+    let (t, acc) = ideal.converged.unwrap();
+    assert!(t < 12.0 * 3600.0, "NP convergence {} h", t / 3600.0);
+    assert!(acc > 0.6);
+}
+
+#[test]
+fn asyncfleo_hap_beats_asyncfleo_gs() {
+    let hap = run_scheme(SchemeKind::AsyncFleo, PsPlacement::HapRolla, false, 48.0);
+    let gs = run_scheme(SchemeKind::AsyncFleo, PsPlacement::GsRolla, false, 48.0);
+    // HAP's better visibility -> no slower convergence (paper: 5h vs 6h)
+    assert!(
+        hap.convergence_hours() <= gs.convergence_hours() + 1.0,
+        "hap {} vs gs {}",
+        hap.convergence_hours(),
+        gs.convergence_hours()
+    );
+}
+
+#[test]
+fn fedspace_converges_no_faster_than_asyncfleo() {
+    // On the knowledge surrogate FedSpace's *accuracy* weakness (full-
+    // weight stale/biased averages) is invisible — that gap shows in
+    // the real-training table2 experiment. What the surrogate does
+    // capture is cadence: FedSpace's scheduled 2 h aggregation cannot
+    // converge earlier than AsyncFLEO's quorum-triggered epochs.
+    let fedspace = run_scheme(SchemeKind::FedSpace, PsPlacement::GsRolla, false, 48.0);
+    let ours = run_scheme(SchemeKind::AsyncFleo, PsPlacement::GsRolla, false, 48.0);
+    let t_ours = ours.time_to_accuracy(0.6).expect("asyncfleo reaches 60%");
+    let t_fs = fedspace.time_to_accuracy(0.6).unwrap_or(f64::INFINITY);
+    assert!(
+        t_ours <= t_fs + 1800.0,
+        "asyncfleo to 60% in {} h vs fedspace {} h",
+        t_ours / 3600.0,
+        t_fs / 3600.0
+    );
+}
+
+#[test]
+fn fedsat_updates_regular_at_np_irregular_elsewhere() {
+    // The NP "ideal setup" gives *regular* visits: every satellite
+    // updates; with an arbitrary GS the update counts skew (some
+    // satellites barely participate). Compare per-run update totals
+    // and the first-update latency.
+    let np = run_scheme(SchemeKind::FedSat, PsPlacement::GsNorthPole, false, 24.0);
+    let arbitrary = run_scheme(SchemeKind::FedSat, PsPlacement::GsRolla, false, 24.0);
+    assert!(np.epochs >= arbitrary.epochs, "np {} vs gs {}", np.epochs, arbitrary.epochs);
+    assert!(np.final_accuracy >= arbitrary.final_accuracy - 0.03);
+    // NP's first recorded evaluation happens early (regular visits)
+    let first_np = np.curve.points.get(1).map(|p| p.time_s).unwrap_or(f64::INFINITY);
+    assert!(first_np < 6.0 * 3600.0, "first NP eval at {} h", first_np / 3600.0);
+}
+
+// ---------------------------------------------------------------------
+// Fig. 7/8 shape on the surrogate
+// ---------------------------------------------------------------------
+
+#[test]
+fn iid_beats_noniid_modestly() {
+    let iid = run_scheme(SchemeKind::AsyncFleo, PsPlacement::HapRolla, true, 48.0);
+    let non = run_scheme(SchemeKind::AsyncFleo, PsPlacement::HapRolla, false, 48.0);
+    assert!(iid.final_accuracy >= non.final_accuracy - 0.02);
+    assert!(
+        non.final_accuracy > iid.final_accuracy - 0.25,
+        "non-IID must still learn (iid {} vs non {})",
+        iid.final_accuracy,
+        non.final_accuracy
+    );
+}
+
+#[test]
+fn two_haps_speed_up_convergence() {
+    let one = run_scheme(SchemeKind::AsyncFleo, PsPlacement::HapRolla, false, 48.0);
+    let two = run_scheme(SchemeKind::AsyncFleo, PsPlacement::TwoHaps, false, 48.0);
+    let t1 = one.time_to_accuracy(0.70).expect("one-HAP reaches 70%");
+    let t2 = two.time_to_accuracy(0.70).expect("two-HAP reaches 70%");
+    assert!(
+        t2 <= t1 + 1800.0,
+        "two-HAP to 70% in {} h vs one-HAP {} h",
+        t2 / 3600.0,
+        t1 / 3600.0
+    );
+}
+
+// ---------------------------------------------------------------------
+// Ablations (DESIGN.md A1–A3)
+// ---------------------------------------------------------------------
+
+fn run_asyncfleo_variant(strat: AsyncFleo, horizon_h: f64) -> RunResult {
+    let mut cfg = ExperimentConfig::paper_defaults();
+    cfg.placement = PsPlacement::HapRolla;
+    cfg.fl.horizon_s = horizon_h * 3600.0;
+    cfg.fl.max_epochs = 40;
+    let mut backend = SurrogateBackend::paper_split(5, 8, false, 100);
+    let mut env = SimEnv::new(&cfg, &mut backend);
+    let mut strat = strat;
+    strat.run(&mut env)
+}
+
+#[test]
+fn ablation_staleness_discount_does_not_hurt() {
+    let on = run_asyncfleo_variant(AsyncFleo::default(), 48.0);
+    let off = run_asyncfleo_variant(
+        AsyncFleo { disable_staleness_discount: true, ..Default::default() },
+        48.0,
+    );
+    // discounting protects against stale bias: never worse by much
+    assert!(
+        on.final_accuracy >= off.final_accuracy - 0.05,
+        "discount on {} vs off {}",
+        on.final_accuracy,
+        off.final_accuracy
+    );
+}
+
+#[test]
+fn ablation_quorum_affects_epoch_cadence() {
+    let small = run_asyncfleo_variant(
+        AsyncFleo { quorum_frac: 0.1, ..Default::default() },
+        24.0,
+    );
+    let large = run_asyncfleo_variant(
+        AsyncFleo { quorum_frac: 0.8, timeout_s: 7200.0, ..Default::default() },
+        24.0,
+    );
+    // cadence: the k-th global epoch happens no later with the smaller
+    // quorum (early stopping may end either run sooner, so compare the
+    // common prefix of the curves, not the totals)
+    let k = (small.curve.points.len().min(large.curve.points.len())).saturating_sub(1);
+    assert!(k >= 1, "both runs must produce at least one epoch");
+    assert!(
+        small.curve.points[k].time_s <= large.curve.points[k].time_s + 1.0,
+        "epoch {k}: small-quorum at {} h vs large-quorum at {} h",
+        small.curve.points[k].time_s / 3600.0,
+        large.curve.points[k].time_s / 3600.0
+    );
+}
+
+// ---------------------------------------------------------------------
+// Determinism: the whole pipeline regenerates bit-identical results
+// ---------------------------------------------------------------------
+
+#[test]
+fn runs_are_deterministic() {
+    let a = run_scheme(SchemeKind::AsyncFleo, PsPlacement::HapRolla, false, 24.0);
+    let b = run_scheme(SchemeKind::AsyncFleo, PsPlacement::HapRolla, false, 24.0);
+    assert_eq!(a.epochs, b.epochs);
+    assert_eq!(a.curve.points.len(), b.curve.points.len());
+    for (x, y) in a.curve.points.iter().zip(&b.curve.points) {
+        assert_eq!(x.time_s, y.time_s);
+        assert_eq!(x.accuracy, y.accuracy);
+    }
+}

@@ -1,0 +1,282 @@
+//! Property-based tests over the coordinator invariants (grouping,
+//! routing, batching, staleness, event ordering) using the in-crate
+//! testkit (`forall` with seeded, replayable cases).
+
+use asyncfleo::fl::aggregation::{select_and_weigh, Candidate};
+use asyncfleo::fl::grouping::GroupingState;
+use asyncfleo::model::{ModelMetadata, ModelParams};
+use asyncfleo::orbit::{contact_windows, OrbitalElements, WalkerConstellation};
+use asyncfleo::sim::{Event, EventKind, EventQueue};
+use asyncfleo::testkit::{forall, forall_seeded};
+use asyncfleo::topology::HapRing;
+use asyncfleo::util::Rng;
+
+// ---------------------------------------------------------------------
+// Aggregation (Eqs. 13–14)
+// ---------------------------------------------------------------------
+
+fn random_candidates(rng: &mut Rng, beta: u64) -> Vec<Candidate> {
+    let n = rng.range_usize(0, 30);
+    (0..n)
+        .map(|i| Candidate {
+            meta: ModelMetadata {
+                sat_id: i,
+                orbit: rng.below(5),
+                data_size: rng.range_usize(1, 1000),
+                loc_rad: rng.range_f64(0.0, 6.28),
+                ts_s: rng.range_f64(0.0, 1e5),
+                epoch: rng.below(beta as usize + 1) as u64,
+            },
+            group: rng.below(4),
+        })
+        .collect()
+}
+
+#[test]
+fn aggregation_always_convex() {
+    forall(|rng| {
+        let beta = rng.range_usize(1, 12) as u64;
+        let cs = random_candidates(rng, beta);
+        let total: usize = cs.iter().map(|c| c.meta.data_size).sum();
+        let sel = select_and_weigh(&cs, beta, total + 1000);
+        let total: f64 =
+            sel.coeff_prev as f64 + sel.chosen.iter().map(|&(_, w)| w as f64).sum::<f64>();
+        assert!((total - 1.0).abs() < 1e-4, "not convex: {total}");
+        assert!((0.0..=1.0 + 1e-6).contains(&(sel.gamma as f64)));
+        for &(i, w) in &sel.chosen {
+            assert!(i < cs.len());
+            assert!((0.0..=1.0).contains(&w));
+        }
+    });
+}
+
+#[test]
+fn aggregation_never_selects_stale_when_group_has_fresh() {
+    forall(|rng| {
+        let beta = rng.range_usize(1, 10) as u64;
+        let cs = random_candidates(rng, beta);
+        let total: usize = cs.iter().map(|c| c.meta.data_size).sum();
+        let sel = select_and_weigh(&cs, beta, total + 1000);
+        for &(i, _) in &sel.chosen {
+            let g = cs[i].group;
+            let group_has_fresh =
+                cs.iter().any(|c| c.group == g && c.meta.is_fresh(beta));
+            if group_has_fresh {
+                assert!(
+                    cs[i].meta.is_fresh(beta),
+                    "stale model selected from group with fresh members"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn aggregation_weighted_sum_preserves_bounds() {
+    // a convex combination of models stays inside the coordinate-wise
+    // envelope of its inputs
+    forall_seeded(0xBEEF, 50, |rng| {
+        let dim = rng.range_usize(1, 64);
+        let k = rng.range_usize(1, 6);
+        let models: Vec<ModelParams> = (0..k)
+            .map(|_| ModelParams {
+                data: (0..dim).map(|_| rng.normal(0.0, 1.0) as f32).collect(),
+            })
+            .collect();
+        let mut ws: Vec<f32> = (0..k).map(|_| rng.f32()).collect();
+        let total: f32 = ws.iter().sum();
+        if total <= 0.0 {
+            return;
+        }
+        ws.iter_mut().for_each(|w| *w /= total);
+        let refs: Vec<&ModelParams> = models.iter().collect();
+        let out = ModelParams::weighted_sum(&refs, &ws);
+        for d in 0..dim {
+            let lo = models.iter().map(|m| m.data[d]).fold(f32::INFINITY, f32::min);
+            let hi = models.iter().map(|m| m.data[d]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(out.data[d] >= lo - 1e-4 && out.data[d] <= hi + 1e-4);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Grouping
+// ---------------------------------------------------------------------
+
+#[test]
+fn grouping_is_a_partition() {
+    forall(|rng| {
+        let n_orbits = rng.range_usize(1, 10);
+        let dim = rng.range_usize(4, 64);
+        let mut g = GroupingState::new(n_orbits);
+        for orbit in 0..n_orbits {
+            let std = rng.range_f64(0.1, 10.0);
+            let p = ModelParams { data: asyncfleo::testkit::gen_vec_f32(rng, dim, std) };
+            let d0 = p.l2_norm();
+            g.assign(orbit, &p, d0);
+        }
+        assert!(g.all_grouped());
+        // group ids dense in [0, n_groups)
+        for o in 0..n_orbits {
+            assert!(g.group_of(o).unwrap() < g.n_groups());
+        }
+        // every group non-empty
+        for gid in 0..g.n_groups() {
+            assert!((0..n_orbits).any(|o| g.group_of(o) == Some(gid)));
+        }
+    });
+}
+
+#[test]
+fn grouping_identical_partials_single_group() {
+    forall(|rng| {
+        let n = rng.range_usize(2, 8);
+        let dim = rng.range_usize(4, 32);
+        let p = ModelParams { data: asyncfleo::testkit::gen_vec_f32(rng, dim, 1.0) };
+        let d0 = p.l2_norm().max(1e-6);
+        let mut g = GroupingState::new(n);
+        for o in 0..n {
+            g.assign(o, &p, d0);
+        }
+        assert_eq!(g.n_groups(), 1, "identical partials must form one group");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Topology / routing
+// ---------------------------------------------------------------------
+
+#[test]
+fn ring_routing_terminates_via_shortest_arc() {
+    forall(|rng| {
+        let n = rng.range_usize(1, 12);
+        let ring = HapRing::new(n);
+        let i = rng.below(n);
+        let j = rng.below(n);
+        let mut cur = i;
+        let mut hops = 0;
+        while cur != j {
+            cur = ring.next_hop_toward(cur, j).unwrap();
+            hops += 1;
+            assert!(hops <= n, "loop");
+        }
+        let cw = (j + n - i) % n;
+        assert_eq!(hops, cw.min(n - cw), "not the shortest arc");
+    });
+}
+
+#[test]
+fn relay_plan_reaches_everyone_exactly_once() {
+    forall(|rng| {
+        let n = rng.range_usize(1, 12);
+        let from = rng.below(n);
+        let ring = HapRing::new(n);
+        let plan = ring.relay_plan(from);
+        let mut recv = vec![0usize; n];
+        for (_, fwds) in &plan {
+            for &f in fwds {
+                recv[f] += 1;
+            }
+        }
+        for (j, &r) in recv.iter().enumerate() {
+            assert_eq!(r, usize::from(j != from), "node {j}");
+        }
+    });
+}
+
+#[test]
+fn walker_ring_neighbors_consistent() {
+    forall(|rng| {
+        let orbits = rng.range_usize(1, 8);
+        let spo = rng.range_usize(1, 10);
+        let c = WalkerConstellation::new(orbits, spo, 1200.0, 70.0, 1);
+        let id = rng.below(c.len());
+        let (p, n) = c.ring_neighbors(id);
+        assert_eq!(c.satellites[p].orbit, c.satellites[id].orbit);
+        assert_eq!(c.satellites[n].orbit, c.satellites[id].orbit);
+        if spo > 2 {
+            assert_ne!(p, n);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Orbits / contact windows
+// ---------------------------------------------------------------------
+
+#[test]
+fn orbit_radius_invariant_under_random_elements() {
+    forall(|rng| {
+        let e = OrbitalElements {
+            altitude_km: rng.range_f64(300.0, 2500.0),
+            inclination_rad: rng.range_f64(0.0, std::f64::consts::PI),
+            raan_rad: rng.range_f64(0.0, 6.28),
+            phase_rad: rng.range_f64(0.0, 6.28),
+        };
+        let t = rng.range_f64(0.0, 1e6);
+        let r = asyncfleo::orbit::satellite_position_eci(&e, t).norm();
+        assert!((r - e.semi_major_axis_km()).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn contact_windows_are_sorted_disjoint_within_horizon() {
+    forall_seeded(0xC0FFEE, 30, |rng| {
+        // random periodic visibility pattern
+        let period = rng.range_f64(100.0, 5000.0);
+        let duty = rng.range_f64(0.05, 0.9);
+        let horizon = rng.range_f64(1000.0, 50_000.0);
+        let wins = contact_windows(
+            |t| (t / period).fract() < duty,
+            horizon,
+            period / 7.3,
+        );
+        for w in &wins {
+            assert!(w.start_s >= 0.0 && w.end_s <= horizon + 1e-9);
+            assert!(w.end_s >= w.start_s);
+        }
+        for p in wins.windows(2) {
+            assert!(p[0].end_s <= p[1].start_s);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Event queue
+// ---------------------------------------------------------------------
+
+#[test]
+fn event_queue_total_order_random_times() {
+    forall(|rng| {
+        let mut q = EventQueue::new();
+        let n = rng.range_usize(1, 200);
+        for _ in 0..n {
+            q.push(Event::new(rng.range_f64(0.0, 1e6), EventKind::Sweep));
+        }
+        let mut last = -1.0;
+        let mut count = 0;
+        while let Some(e) = q.pop() {
+            assert!(e.time_s >= last);
+            last = e.time_s;
+            count += 1;
+        }
+        assert_eq!(count, n);
+    });
+}
+
+#[test]
+fn metadata_staleness_ratio_always_in_unit_interval() {
+    forall(|rng| {
+        let md = ModelMetadata {
+            sat_id: 0,
+            orbit: 0,
+            data_size: 1,
+            loc_rad: 0.0,
+            ts_s: 0.0,
+            epoch: rng.below(50) as u64,
+        };
+        let beta = rng.below(50) as u64;
+        let r = md.staleness_ratio(beta);
+        assert!((0.0..=1.0).contains(&r), "ratio {r}");
+    });
+}

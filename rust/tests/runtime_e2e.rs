@@ -1,0 +1,224 @@
+//! End-to-end integration of the PJRT runtime against the real AOT
+//! artifacts (requires `make artifacts`).
+//!
+//! This is the load-bearing proof that the three layers compose: HLO
+//! text produced by JAX (L2) embedding Pallas kernels (L1) loads,
+//! compiles and executes correctly from Rust (L3).
+
+use asyncfleo::model::ModelParams;
+use asyncfleo::runtime::executor::Input;
+use asyncfleo::runtime::Runtime;
+use asyncfleo::testkit::assert_allclose;
+use asyncfleo::train::{Backend, PjrtBackend};
+use asyncfleo::util::Rng;
+use std::rc::Rc;
+
+fn runtime() -> Rc<Runtime> {
+    Rc::new(Runtime::new(Runtime::default_dir()).expect("run `make artifacts` first"))
+}
+
+#[test]
+fn manifest_loaded_with_all_variants() {
+    let rt = runtime();
+    assert_eq!(rt.manifest.models.len(), 4);
+    assert_eq!(rt.manifest.artifacts.len(), 20);
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn init_artifact_deterministic_and_nontrivial() {
+    let rt = runtime();
+    let exe = rt.compile("init_mlp_digits").unwrap();
+    let a = exe.run(&[Input::I32(&[7])]).unwrap();
+    let b = exe.run(&[Input::I32(&[7])]).unwrap();
+    let c = exe.run(&[Input::I32(&[8])]).unwrap();
+    assert_eq!(a[0].len(), 101_770);
+    assert_allclose(&a[0], &b[0], 0.0);
+    assert!(a[0].iter().zip(&c[0]).any(|(x, y)| x != y));
+    // He-init: weights have plausible scale
+    let w1_std = {
+        let n = 784 * 128;
+        let mean: f32 = a[0][..n].iter().sum::<f32>() / n as f32;
+        (a[0][..n].iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32).sqrt()
+    };
+    let expect = (2.0f32 / 784.0).sqrt();
+    assert!((w1_std / expect - 1.0).abs() < 0.1, "std {w1_std} vs {expect}");
+}
+
+#[test]
+fn train_artifact_reduces_loss_over_dispatches() {
+    let rt = runtime();
+    let init = rt.compile("init_mlp_digits").unwrap();
+    let train = rt.compile("train_mlp_digits").unwrap();
+    let mut params = init.run(&[Input::I32(&[0])]).unwrap().remove(0);
+
+    // separable random data
+    let mut rng = Rng::new(5);
+    let mut protos = vec![0.0f32; 10 * 784];
+    for v in protos.iter_mut() {
+        *v = rng.normal(0.0, 1.0) as f32;
+    }
+    let n = 320;
+    let mut xs = vec![0.0f32; n * 784];
+    let mut ys = vec![0.0f32; n * 10];
+    for i in 0..n {
+        let c = i % 10;
+        for j in 0..784 {
+            xs[i * 784 + j] = protos[c * 784 + j] + rng.normal(0.0, 0.4) as f32;
+        }
+        ys[i * 10 + c] = 1.0;
+    }
+
+    let mut losses = Vec::new();
+    for _ in 0..4 {
+        let out = train
+            .run(&[
+                Input::F32(&params),
+                Input::F32(&xs),
+                Input::F32(&ys),
+                Input::F32(&[0.05]),
+            ])
+            .unwrap();
+        params = out[0].clone();
+        losses.push(out[1][0]);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] / 2.0),
+        "losses should halve: {losses:?}"
+    );
+}
+
+#[test]
+fn agg_artifact_matches_pure_rust() {
+    let rt = runtime();
+    let agg = rt.compile("agg_mlp_digits").unwrap();
+    let dim = 101_770usize;
+    let n_slab = 41usize;
+    let mut rng = Rng::new(9);
+    let slab: Vec<f32> = (0..n_slab * dim).map(|_| rng.normal(0.0, 0.1) as f32).collect();
+    let mut coeffs = vec![0.0f32; n_slab];
+    coeffs[0] = 0.4;
+    coeffs[1] = 0.35;
+    coeffs[2] = 0.25;
+    let out = agg.run(&[Input::F32(&slab), Input::F32(&coeffs)]).unwrap().remove(0);
+
+    // pure-rust oracle
+    let rows: Vec<ModelParams> = (0..3)
+        .map(|r| ModelParams { data: slab[r * dim..(r + 1) * dim].to_vec() })
+        .collect();
+    let refs: Vec<&ModelParams> = rows.iter().collect();
+    let want = ModelParams::weighted_sum(&refs, &coeffs[..3]);
+    assert_allclose(&out, &want.data, 1e-4);
+}
+
+#[test]
+fn dist_artifact_matches_pure_rust() {
+    let rt = runtime();
+    let dist = rt.compile("dist_mlp_digits").unwrap();
+    let dim = 101_770usize;
+    let rows = 40usize;
+    let mut rng = Rng::new(11);
+    let slab: Vec<f32> = (0..rows * dim).map(|_| rng.normal(0.0, 0.05) as f32).collect();
+    let reference: Vec<f32> = (0..dim).map(|_| rng.normal(0.0, 0.05) as f32).collect();
+    let out = dist.run(&[Input::F32(&slab), Input::F32(&reference)]).unwrap().remove(0);
+    let refp = ModelParams { data: reference };
+    for r in 0..5 {
+        let row = ModelParams { data: slab[r * dim..(r + 1) * dim].to_vec() };
+        let want = row.l2_distance(&refp) as f32;
+        assert!(
+            (out[r] - want).abs() / want < 1e-3,
+            "row {r}: kernel {} vs rust {want}",
+            out[r]
+        );
+    }
+}
+
+#[test]
+fn eval_artifact_counts_padding_correctly() {
+    let rt = runtime();
+    let init = rt.compile("init_mlp_digits").unwrap();
+    let eval = rt.compile("eval_mlp_digits").unwrap();
+    let params = init.run(&[Input::I32(&[0])]).unwrap().remove(0);
+    let xs = vec![0.0f32; 256 * 784];
+    let ys = vec![0.0f32; 256 * 10]; // all padding
+    let out = eval.run(&[Input::F32(&params), Input::F32(&xs), Input::F32(&ys)]).unwrap();
+    assert_eq!(out[0][0], 0.0, "all-padding chunk has zero correct");
+    assert_eq!(out[1][0], 0.0, "all-padding chunk has zero loss");
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let rt = runtime();
+    let train = rt.compile("train_mlp_digits").unwrap();
+    let bad = vec![0.0f32; 10];
+    assert!(train.run(&[Input::F32(&bad)]).is_err(), "arity");
+    let p = vec![0.0f32; 101_770];
+    let xs = vec![0.0f32; 320 * 784];
+    let ys = vec![0.0f32; 320 * 10];
+    assert!(
+        train
+            .run(&[Input::F32(&p), Input::F32(&xs), Input::F32(&ys), Input::F32(&[0.1, 0.2])])
+            .is_err(),
+        "scalar given 2 elements"
+    );
+    assert!(
+        train
+            .run(&[Input::F32(&bad), Input::F32(&xs), Input::F32(&ys), Input::F32(&[0.1])])
+            .is_err(),
+        "wrong params length"
+    );
+}
+
+#[test]
+fn pjrt_backend_full_fl_epoch() {
+    // One miniature FL "epoch" through the backend: init -> local
+    // training on two shards -> distances -> aggregate -> evaluate.
+    let rt = runtime();
+    let (train_data, test_data) = asyncfleo::data::synth::generate_split(
+        asyncfleo::data::DatasetKind::Digits,
+        3,
+        800,
+        200,
+    );
+    let mut backend = PjrtBackend::new(
+        rt,
+        "mlp_digits",
+        train_data,
+        test_data,
+        asyncfleo::data::Partition::NonIidPaper,
+        5,
+        8,
+        0.05,
+        3,
+    )
+    .unwrap();
+
+    let global = backend.init_global(0);
+    let e0 = backend.evaluate(&global);
+    assert!((0.0..=0.3).contains(&e0.accuracy), "untrained acc {}", e0.accuracy);
+
+    let (m_low, loss_low) = backend.train_local(0, &global, 5); // classes 0..4
+    let (m_high, _) = backend.train_local(39, &global, 5); // classes 4..10
+    assert!(loss_low.is_finite());
+
+    let d = backend.distances(&[&m_low, &m_high], &global);
+    assert!(d[0] > 0.0 && d[1] > 0.0);
+
+    let merged = backend.aggregate(&global, &[&m_low, &m_high], &[0.5, 0.5], 0.0);
+    let e_merged = backend.evaluate(&merged);
+    let e_low = backend.evaluate(&m_low);
+    assert!(
+        e_merged.accuracy > e0.accuracy,
+        "aggregated model should beat init: {} vs {}",
+        e_merged.accuracy,
+        e0.accuracy
+    );
+    // the single-orbit model is biased toward its 4 classes; the merge
+    // covers all 10 (allow early-training noise)
+    assert!(
+        e_merged.accuracy >= e_low.accuracy - 0.10,
+        "merged {} vs low {}",
+        e_merged.accuracy,
+        e_low.accuracy
+    );
+}
