@@ -1,0 +1,85 @@
+//! Resilience demo: AsyncFLEO vs a synchronous baseline under faults.
+//!
+//! Runs the same two-HAP constellation through increasingly hostile
+//! fault scenarios (packet loss, eclipse outages, satellite churn, HAP
+//! failure) on the fast surrogate backend, and prints a degradation
+//! table: how much accuracy and convergence speed each scheme loses as
+//! the network stops being perfect. The asynchronous design's point is
+//! visible directly — synchronous rounds stall behind dead satellites,
+//! AsyncFLEO keeps aggregating whatever arrives.
+//!
+//! ```bash
+//! cargo run --release --example resilience_demo
+//! ```
+
+use asyncfleo::config::{ExperimentConfig, ModelKind, PsPlacement, SchemeKind};
+use asyncfleo::coordinator::SimEnv;
+use asyncfleo::data::{DatasetKind, Partition};
+use asyncfleo::faults::{FaultConfig, FaultScenario};
+use asyncfleo::fl::make_strategy;
+use asyncfleo::train::SurrogateBackend;
+use asyncfleo::util::fmt_hm;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg0 = ExperimentConfig::paper_defaults();
+    cfg0.fl.model = ModelKind::Mlp;
+    cfg0.fl.dataset = DatasetKind::Digits;
+    cfg0.fl.partition = Partition::NonIidPaper;
+    cfg0.placement = PsPlacement::TwoHaps;
+    cfg0.fl.horizon_s = 48.0 * 3600.0;
+    cfg0.fl.max_epochs = 30;
+
+    let schemes = [SchemeKind::AsyncFleo, SchemeKind::FedHap];
+    let scenarios = [
+        (FaultScenario::Nominal, 0.0),
+        (FaultScenario::Lossy, 1.0),
+        (FaultScenario::Eclipse, 1.0),
+        (FaultScenario::Churn, 1.0),
+        (FaultScenario::HapFailure, 1.0),
+    ];
+
+    println!(
+        "{:<12} {:<10} {:>8} {:>11} {:>7} {:>9} {:>9} {:>8}",
+        "scenario", "scheme", "acc(%)", "conv(h:mm)", "epochs", "transfers", "retrans", "dropped"
+    );
+    for (scenario, intensity) in scenarios {
+        for scheme in schemes {
+            let mut cfg = cfg0.clone();
+            cfg.fl.scheme = scheme;
+            cfg.faults = FaultConfig::preset(scenario, intensity);
+
+            let mut backend = SurrogateBackend::paper_split(
+                cfg.constellation.n_orbits,
+                cfg.constellation.sats_per_orbit,
+                false,
+                100,
+            );
+            let mut env = SimEnv::new(&cfg, &mut backend);
+            let r = make_strategy(scheme).run(&mut env);
+
+            let (conv_t, acc) = match r.converged {
+                Some((t, a)) => (t, a),
+                None => (
+                    r.curve.points.last().map(|p| p.time_s).unwrap_or(0.0),
+                    r.final_accuracy,
+                ),
+            };
+            println!(
+                "{:<12} {:<10} {:>8.2} {:>11} {:>7} {:>9} {:>9} {:>8}",
+                scenario.name(),
+                scheme.name(),
+                acc * 100.0,
+                fmt_hm(conv_t),
+                r.epochs,
+                r.transfers,
+                r.fault_stats.retransmits,
+                r.fault_stats.dropped_results
+            );
+        }
+    }
+    println!(
+        "\nSame seed → same impairment timeline for every scheme; rerun to see\n\
+         bit-identical numbers. Sweep intensities with `asyncfleo resilience`."
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Micro-benchmarks of the fault-injection subsystem: plan
+//! construction, the per-transfer oracle (disabled vs active — the
+//! disabled path must be ~free, it sits on every link-delay call), ring
+//! re-healing, and event materialization.
+//!
+//! Run: `cargo bench --offline --bench bench_resilience`
+
+use asyncfleo::bench::{bench, black_box, print_header, BenchConfig};
+use asyncfleo::faults::{FaultConfig, FaultPlan, FaultScenario, LinkClass};
+use asyncfleo::sim::EventQueue;
+use asyncfleo::topology::HapRing;
+
+const HORIZON_S: f64 = 72.0 * 3600.0;
+
+fn plan_for(scenario: FaultScenario, intensity: f64) -> FaultPlan {
+    let cfg = FaultConfig::preset(scenario, intensity);
+    FaultPlan::new(&cfg, 42, 40, 2, 8, HORIZON_S)
+}
+
+fn main() {
+    let cfg = BenchConfig::default();
+    print_header("fault-injection subsystem");
+
+    println!(
+        "{}",
+        bench("plan build: nominal (no-op)", &cfg, || {
+            plan_for(FaultScenario::Nominal, 1.0)
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        bench("plan build: churn @1.0 (40 sats, 72 h)", &cfg, || {
+            plan_for(FaultScenario::Churn, 1.0)
+        })
+        .report()
+    );
+
+    // The oracle overhead per link call, disabled vs each scenario.
+    for (name, scenario) in [
+        ("transfer x1k: disabled", FaultScenario::Nominal),
+        ("transfer x1k: lossy", FaultScenario::Lossy),
+        ("transfer x1k: eclipse", FaultScenario::Eclipse),
+        ("transfer x1k: churn", FaultScenario::Churn),
+    ] {
+        let mut plan = plan_for(scenario, 1.0);
+        println!(
+            "{}",
+            bench(name, &cfg, || {
+                let mut acc = 0.0;
+                for i in 0..1000u64 {
+                    let t = (i * 61) as f64 % HORIZON_S;
+                    acc += plan
+                        .transfer(
+                            LinkClass::SatSite { sat: (i % 40) as usize, site: 0 },
+                            t,
+                            0.2,
+                        )
+                        .delay_s;
+                }
+                black_box(acc)
+            })
+            .report()
+        );
+    }
+
+    println!(
+        "{}",
+        bench("hap ring: fail/heal/recover cycle (n=8)", &cfg, || {
+            let mut ring = HapRing::new(8);
+            for i in 0..8 {
+                ring.set_alive(i % 8, false);
+                black_box(ring.relay_plan(ring.source()));
+                ring.set_alive(i % 8, true);
+            }
+            ring.sink()
+        })
+        .report()
+    );
+
+    let plan = plan_for(FaultScenario::Churn, 1.0);
+    println!(
+        "{}",
+        bench("schedule_events: churn @1.0", &cfg, || {
+            let mut q = EventQueue::new();
+            plan.schedule_events(&mut q);
+            q.len()
+        })
+        .report()
+    );
+}

@@ -74,4 +74,26 @@ mod tests {
         assert_eq!(model_bits(0), 1024.0);
         assert_eq!(model_bits(10), 10.0 * 32.0 + 1024.0);
     }
+
+    #[test]
+    fn composition_matches_hand_computation() {
+        // Eq. 7 pinned against hand numbers for Table I's fixed rate:
+        // t_t = bits/R, t_p = d/c, and *two* endpoint processing delays.
+        let p = LinkParams::default(); // R = 16 Mb/s, t_x = t_y = 50 ms
+        let d = delay_breakdown(&p, 8e6, 1499.0);
+        assert!((d.transmission_s - 0.5).abs() < 1e-12, "8 Mb / 16 Mb/s");
+        assert!((d.propagation_s - 1499.0 / SPEED_OF_LIGHT_KM_S).abs() < 1e-15);
+        assert!((d.processing_s - 0.1).abs() < 1e-12, "2 x 50 ms, not 1 x");
+        let want = 0.5 + 1499.0 / SPEED_OF_LIGHT_KM_S + 0.1;
+        assert!((total_delay_s(&p, 8e6, 1499.0) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_payload_still_pays_propagation_and_processing() {
+        let p = LinkParams::default();
+        let d = delay_breakdown(&p, 0.0, 1000.0);
+        assert_eq!(d.transmission_s, 0.0);
+        assert!(d.propagation_s > 0.0);
+        assert_eq!(d.processing_s, 2.0 * p.processing_delay_s);
+    }
 }

@@ -112,6 +112,41 @@ mod tests {
     }
 
     #[test]
+    fn rate_feasible_boundary_is_sharp_and_midrange() {
+        // The documented Table-I inconsistency, pinned quantitatively:
+        // the provisioned 16 Mb/s is within Shannon capacity at short
+        // slant range and beyond it at the 2000 km design range.
+        // Bisect the crossover distance and check it sits at realistic
+        // LEO ranges — the inconsistency bites mid-pass, not at some
+        // extreme geometry.
+        let p = LinkParams::default();
+        let (mut lo, mut hi) = (100.0, 2000.0);
+        assert!(p.rate_feasible(lo), "short range must be feasible");
+        assert!(!p.rate_feasible(hi), "design range must be infeasible");
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if p.rate_feasible(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        assert!(hi - lo < 1e-6, "monotone => bisection converges");
+        let d_star = 0.5 * (lo + hi);
+        // at the boundary, capacity equals the provisioned rate
+        let r = p.shannon_rate_bps(d_star);
+        assert!(
+            (r - p.data_rate_bps).abs() / p.data_rate_bps < 1e-6,
+            "capacity {r} vs provisioned {} at {d_star} km",
+            p.data_rate_bps
+        );
+        assert!(
+            (150.0..1000.0).contains(&d_star),
+            "crossover at {d_star} km should be mid-range (≈590 km)"
+        );
+    }
+
+    #[test]
     fn shannon_rate_monotone_in_bandwidth_at_fixed_snr() {
         // Doubling B with noise scaled by B: capacity still increases.
         let p1 = LinkParams::default();

@@ -9,6 +9,7 @@ pub mod parser;
 
 use crate::comm::LinkParams;
 use crate::data::{DatasetKind, Partition};
+use crate::faults::{FaultConfig, FaultScenario};
 use parser::{Doc, ParseError, Value};
 
 /// FL scheme under test (AsyncFLEO + the paper's baselines, Sec. V-A).
@@ -181,6 +182,8 @@ pub struct ExperimentConfig {
     pub link: LinkParams,
     pub fl: FlConfig,
     pub data: DataConfig,
+    /// Fault-injection knobs (nominal = the perfect network).
+    pub faults: FaultConfig,
     pub seed: u64,
     /// Minimum elevation angle θ_min, degrees (Table: 10°).
     pub min_elevation_deg: f64,
@@ -214,6 +217,7 @@ impl ExperimentConfig {
                 train_time_s: 1200.0,
             },
             data: DataConfig { train_samples: 8000, test_samples: 2000 },
+            faults: FaultConfig::nominal(),
             seed: 42,
             min_elevation_deg: 10.0,
         }
@@ -266,6 +270,7 @@ impl ExperimentConfig {
         if !(0.0..90.0).contains(&self.min_elevation_deg) {
             errs.push(format!("min elevation {} out of [0, 90)", self.min_elevation_deg));
         }
+        errs.extend(self.faults.validate());
         errs
     }
 
@@ -286,7 +291,16 @@ impl ExperimentConfig {
     }
 
     fn apply_doc(&mut self, doc: &Doc) -> Result<(), String> {
+        // The fault scenario is a whole-preset assignment the
+        // individual faults.* knobs then refine — apply it first so
+        // overrides win regardless of the map's key order.
+        if let Some(val) = doc.get("faults.scenario") {
+            self.apply_key("faults.scenario", val)?;
+        }
         for (key, val) in doc {
+            if key == "faults.scenario" {
+                continue;
+            }
             self.apply_key(key, val)?;
         }
         Ok(())
@@ -351,6 +365,27 @@ impl ExperimentConfig {
             "fl.train_time_s" => self.fl.train_time_s = need_f64()?,
             "data.train_samples" => self.data.train_samples = need_usize()?,
             "data.test_samples" => self.data.test_samples = need_usize()?,
+            // Fault injection: a named preset at full intensity
+            // (applied before the per-knob keys, see `apply_doc`), then
+            // optional per-knob overrides.
+            "faults.scenario" => {
+                self.faults = FaultScenario::parse(need_str()?)
+                    .map(|s| FaultConfig::preset(s, 1.0))
+                    .ok_or(format!("{key}: unknown fault scenario"))?;
+            }
+            "faults.loss_prob" => self.faults.loss_prob = need_f64()?,
+            "faults.max_retransmits" => self.faults.max_retransmits = need_usize()? as u32,
+            "faults.retransmit_backoff_s" => self.faults.retransmit_backoff_s = need_f64()?,
+            "faults.outage_period_s" => self.faults.outage_period_s = need_f64()?,
+            "faults.outage_duration_s" => self.faults.outage_duration_s = need_f64()?,
+            "faults.isl_outage" => {
+                self.faults.isl_outage =
+                    val.as_bool().ok_or(format!("{key}: expected bool"))?
+            }
+            "faults.sat_mtbf_s" => self.faults.sat_mtbf_s = need_f64()?,
+            "faults.sat_mttr_s" => self.faults.sat_mttr_s = need_f64()?,
+            "faults.hap_mtbf_s" => self.faults.hap_mtbf_s = need_f64()?,
+            "faults.hap_mttr_s" => self.faults.hap_mttr_s = need_f64()?,
             "seed" => self.seed = need_usize()? as u64,
             other => return Err(format!("unknown config key: {other}")),
         }
@@ -361,7 +396,7 @@ impl ExperimentConfig {
     /// [`Self::from_toml`]; embedded in result CSVs).
     pub fn to_toml(&self) -> String {
         format!(
-            "seed = {}\n\n[constellation]\norbits = {}\nsats_per_orbit = {}\naltitude_km = {}\ninclination_deg = {}\nphasing = {}\n\n[ps]\nplacement = \"{}\"\nmin_elevation_deg = {}\n\n[link]\ntx_power_dbm = {}\nantenna_gain_dbi = {}\ncarrier_ghz = {}\nnoise_temp_k = {}\ndata_rate_mbps = {}\nbandwidth_mhz = {}\n\n[fl]\nscheme = \"{}\"\nmodel = \"{}\"\ndataset = \"{}\"\npartition = \"{}\"\nlr = {}\nlocal_dispatches = {}\nmax_epochs = {}\nhorizon_hours = {}\ntrain_time_s = {}\n\n[data]\ntrain_samples = {}\ntest_samples = {}\n",
+            "seed = {}\n\n[constellation]\norbits = {}\nsats_per_orbit = {}\naltitude_km = {}\ninclination_deg = {}\nphasing = {}\n\n[ps]\nplacement = \"{}\"\nmin_elevation_deg = {}\n\n[link]\ntx_power_dbm = {}\nantenna_gain_dbi = {}\ncarrier_ghz = {}\nnoise_temp_k = {}\ndata_rate_mbps = {}\nbandwidth_mhz = {}\n\n[fl]\nscheme = \"{}\"\nmodel = \"{}\"\ndataset = \"{}\"\npartition = \"{}\"\nlr = {}\nlocal_dispatches = {}\nmax_epochs = {}\nhorizon_hours = {}\ntrain_time_s = {}\n\n[data]\ntrain_samples = {}\ntest_samples = {}\n\n[faults]\nloss_prob = {}\nmax_retransmits = {}\nretransmit_backoff_s = {}\noutage_period_s = {}\noutage_duration_s = {}\nisl_outage = {}\nsat_mtbf_s = {}\nsat_mttr_s = {}\nhap_mtbf_s = {}\nhap_mttr_s = {}\n",
             self.seed,
             self.constellation.n_orbits,
             self.constellation.sats_per_orbit,
@@ -390,6 +425,16 @@ impl ExperimentConfig {
             self.fl.train_time_s,
             self.data.train_samples,
             self.data.test_samples,
+            self.faults.loss_prob,
+            self.faults.max_retransmits,
+            self.faults.retransmit_backoff_s,
+            self.faults.outage_period_s,
+            self.faults.outage_duration_s,
+            self.faults.isl_outage,
+            self.faults.sat_mtbf_s,
+            self.faults.sat_mttr_s,
+            self.faults.hap_mtbf_s,
+            self.faults.hap_mttr_s,
         )
     }
 }
@@ -482,5 +527,43 @@ mod tests {
     #[test]
     fn test_small_is_valid() {
         assert!(ExperimentConfig::test_small().validate().is_empty());
+    }
+
+    #[test]
+    fn fault_scenario_key_applies_preset() {
+        let c = ExperimentConfig::from_toml("[faults]\nscenario = \"lossy\"\n").unwrap();
+        assert_eq!(c.faults, FaultConfig::preset(FaultScenario::Lossy, 1.0));
+        assert!(ExperimentConfig::from_toml("[faults]\nscenario = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn fault_knobs_override_scenario_regardless_of_key_order() {
+        // "loss_prob" sorts before "scenario" in the flattened doc; the
+        // override must still win over the preset value (0.3).
+        let c = ExperimentConfig::from_toml(
+            "[faults]\nloss_prob = 0.05\nscenario = \"lossy\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.faults.loss_prob, 0.05);
+        assert_eq!(c.faults.max_retransmits, 4, "rest of the preset kept");
+    }
+
+    #[test]
+    fn faulty_config_roundtrips_through_toml() {
+        let mut c0 = ExperimentConfig::paper_defaults();
+        c0.faults = FaultConfig::preset(FaultScenario::Eclipse, 0.7);
+        let c1 = ExperimentConfig::from_toml(&c0.to_toml()).unwrap();
+        assert_eq!(c0, c1);
+        let mut c0 = ExperimentConfig::paper_defaults();
+        c0.faults = FaultConfig::preset(FaultScenario::Churn, 0.3);
+        let c1 = ExperimentConfig::from_toml(&c0.to_toml()).unwrap();
+        assert_eq!(c0, c1);
+    }
+
+    #[test]
+    fn fault_validation_surfaces_in_config_validate() {
+        let mut c = ExperimentConfig::paper_defaults();
+        c.faults.loss_prob = 2.0;
+        assert!(!c.validate().is_empty());
     }
 }

@@ -4,6 +4,7 @@ use super::contact::ContactPlan;
 use crate::comm::delay::{model_bits, total_delay_s};
 use crate::comm::LinkParams;
 use crate::config::ExperimentConfig;
+use crate::faults::{FaultPlan, FaultStats, LinkClass};
 use crate::metrics::{Curve, CurvePoint};
 use crate::orbit::{GeodeticSite, WalkerConstellation};
 use crate::train::Backend;
@@ -22,6 +23,9 @@ pub struct SimEnv<'a> {
     /// Count of model transfers (uplink+downlink+relay hops), for the
     /// communication-cost accounting in EXPERIMENTS.md.
     pub transfers: u64,
+    /// The fault-injection timeline every link transfer runs through.
+    /// Disabled (a guaranteed no-op) unless `cfg.faults` is active.
+    pub faults: FaultPlan,
 }
 
 impl<'a> SimEnv<'a> {
@@ -46,6 +50,14 @@ impl<'a> SimEnv<'a> {
             cfg.min_elevation_deg,
             cfg.fl.horizon_s,
         );
+        let faults = FaultPlan::new(
+            &cfg.faults,
+            cfg.seed,
+            constellation.len(),
+            sites.len(),
+            cfg.constellation.sats_per_orbit,
+            cfg.fl.horizon_s,
+        );
         SimEnv {
             cfg: cfg.clone(),
             constellation,
@@ -56,6 +68,7 @@ impl<'a> SimEnv<'a> {
             rng: Rng::new(cfg.seed ^ 0xE5E57),
             curve: Curve::default(),
             transfers: 0,
+            faults,
         }
     }
 
@@ -64,32 +77,52 @@ impl<'a> SimEnv<'a> {
         model_bits(self.backend.dim())
     }
 
-    /// SAT↔site transfer delay at time `t` (Eq. 7).
+    /// SAT↔site transfer delay at time `t` (Eq. 7), fault-adjusted.
     pub fn site_link_delay(&mut self, site: usize, sat: usize, t: f64) -> f64 {
         self.transfers += 1;
         let d = self.sites[site]
             .position_eci(t)
             .distance(self.constellation.position(sat, t));
-        total_delay_s(&self.link, self.payload_bits(), d)
+        let base = total_delay_s(&self.link, self.payload_bits(), d);
+        self.apply_faults(LinkClass::SatSite { sat, site }, t, base)
     }
 
-    /// Intra-orbit ISL hop delay between ring neighbours at time `t`.
+    /// Intra-orbit ISL hop delay between ring neighbours at time `t`,
+    /// fault-adjusted.
     pub fn isl_hop_delay(&mut self, sat_a: usize, sat_b: usize, t: f64) -> f64 {
         self.transfers += 1;
         let d = self
             .constellation
             .position(sat_a, t)
             .distance(self.constellation.position(sat_b, t));
-        total_delay_s(&self.link, self.payload_bits(), d)
+        let base = total_delay_s(&self.link, self.payload_bits(), d);
+        self.apply_faults(LinkClass::Isl { sat_a, sat_b }, t, base)
     }
 
-    /// HAP↔HAP (IHL) hop delay at time `t`.
+    /// HAP↔HAP (IHL) hop delay at time `t`, fault-adjusted.
     pub fn ihl_hop_delay(&mut self, site_a: usize, site_b: usize, t: f64) -> f64 {
         self.transfers += 1;
         let d = self.sites[site_a]
             .position_eci(t)
             .distance(self.sites[site_b].position_eci(t));
-        total_delay_s(&self.link, self.payload_bits(), d)
+        let base = total_delay_s(&self.link, self.payload_bits(), d);
+        self.apply_faults(LinkClass::Ihl { site_a, site_b }, t, base)
+    }
+
+    /// Route one transfer through the fault oracle. With faults
+    /// disabled this returns `base` untouched and draws nothing, so
+    /// clean runs stay bit-identical to the pre-faults code path.
+    fn apply_faults(&mut self, class: LinkClass, t: f64, base: f64) -> f64 {
+        if !self.faults.enabled() {
+            return base;
+        }
+        let out = self.faults.transfer(class, t, base);
+        // every retransmission re-sends the payload: communication
+        // cost — counted once per channel event, not per probe of it
+        if out.newly_observed {
+            self.transfers += out.retransmits as u64;
+        }
+        out.delay_s
     }
 
     /// Record an evaluation point on the run curve.
@@ -114,6 +147,8 @@ pub struct RunResult {
     pub final_accuracy: f64,
     pub epochs: u64,
     pub transfers: u64,
+    /// Fault-injection accounting (all zero on clean runs).
+    pub fault_stats: FaultStats,
 }
 
 impl RunResult {
@@ -125,6 +160,7 @@ impl RunResult {
             curve: env.curve.clone(),
             epochs,
             transfers: env.transfers,
+            fault_stats: env.faults.stats(),
         }
     }
 
@@ -176,6 +212,44 @@ mod tests {
         let cfg = ExperimentConfig::test_small();
         let mut b = SurrogateBackend::paper_split(5, 8, true, 100); // 40 != 6
         SimEnv::new(&cfg, &mut b);
+    }
+
+    #[test]
+    fn nominal_config_disables_faults() {
+        let cfg = ExperimentConfig::test_small();
+        let mut b = SurrogateBackend::paper_split(
+            cfg.constellation.n_orbits,
+            cfg.constellation.sats_per_orbit,
+            true,
+            100,
+        );
+        let env = small_env(&mut b);
+        assert!(!env.faults.enabled(), "nominal faults must stay out of the hot path");
+        assert_eq!(env.faults.stats(), crate::faults::FaultStats::default());
+    }
+
+    #[test]
+    fn faulty_env_delays_never_below_clean() {
+        use crate::faults::{FaultConfig, FaultScenario};
+        let mut cfg = ExperimentConfig::test_small();
+        cfg.fl.horizon_s = 3600.0 * 12.0;
+        let mut cfg_faulty = cfg.clone();
+        cfg_faulty.faults = FaultConfig::preset(FaultScenario::Lossy, 1.0);
+        let mut b1 = SurrogateBackend::paper_split(2, 3, true, 100);
+        let mut clean = SimEnv::new(&cfg, &mut b1);
+        let mut b2 = SurrogateBackend::paper_split(2, 3, true, 100);
+        let mut faulty = SimEnv::new(&cfg_faulty, &mut b2);
+        for i in 0..50 {
+            let t = 100.0 * i as f64;
+            let dc = clean.site_link_delay(0, 0, t);
+            let df = faulty.site_link_delay(0, 0, t);
+            assert!(df >= dc - 1e-12, "fault delay {df} below clean {dc}");
+        }
+        assert!(faulty.faults.stats().retransmits > 0, "30% loss over 50 sends");
+        assert!(
+            faulty.transfers > clean.transfers,
+            "retransmissions must show up in the communication cost"
+        );
     }
 
     #[test]

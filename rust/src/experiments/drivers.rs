@@ -34,16 +34,17 @@ impl Default for ExpOptions {
     }
 }
 
-/// All experiment names, in DESIGN.md §4 order.
+/// All experiment names, in DESIGN.md §4 order (+ the resilience sweep).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "table2", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b", "fig8c",
-    "ablate-grouping", "ablate-staleness", "ablate-relay",
+    "ablate-grouping", "ablate-staleness", "ablate-relay", "resilience",
 ];
 
 /// Entry point: run one experiment (or "all" / "fig6" alias).
 pub fn run_experiment(name: &str, opts: &ExpOptions) -> Result<()> {
     match name {
         "table2" | "fig6" => table2(opts),
+        "resilience" => super::resilience::run(opts),
         "fig7a" => fig_grid(opts, "fig7a", DatasetKind::Digits, Partition::Iid, false),
         "fig7b" => fig_grid(opts, "fig7b", DatasetKind::Digits, Partition::NonIidPaper, false),
         "fig7c" => fig_grid(opts, "fig7c", DatasetKind::Digits, Partition::Iid, true),
@@ -64,7 +65,7 @@ pub fn run_experiment(name: &str, opts: &ExpOptions) -> Result<()> {
 }
 
 /// Base config for an experiment run.
-fn base_config(opts: &ExpOptions) -> ExperimentConfig {
+pub(crate) fn base_config(opts: &ExpOptions) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::paper_defaults();
     cfg.seed = opts.seed;
     // sized so the full suite completes on a CPU testbed; the FL
@@ -207,7 +208,7 @@ fn table2(opts: &ExpOptions) -> Result<()> {
 
 /// Convergence summary: (time, accuracy) — plateau if detected, else
 /// (last-time, final accuracy).
-fn summary_of(r: &RunResult) -> (f64, f64) {
+pub(crate) fn summary_of(r: &RunResult) -> (f64, f64) {
     match r.converged {
         Some((t, acc)) => (t, acc),
         None => (

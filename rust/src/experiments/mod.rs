@@ -1,6 +1,9 @@
 //! Experiment drivers regenerating every paper table & figure
-//! (DESIGN.md §4 maps each driver to its paper artifact).
+//! (DESIGN.md §4 maps each driver to its paper artifact), plus the
+//! [`resilience`] sweep comparing graceful degradation across schemes
+//! under the `crate::faults` scenarios.
 
 pub mod drivers;
+pub mod resilience;
 
 pub use drivers::{run_experiment, ExpOptions, ALL_EXPERIMENTS, TABLE2_ROWS};

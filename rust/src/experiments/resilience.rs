@@ -1,0 +1,162 @@
+//! E9: the resilience sweep — graceful degradation under fault
+//! scenarios (`crate::faults`).
+//!
+//! For every named [`FaultScenario`] and intensity level, run AsyncFLEO
+//! and two representative baselines (the synchronous FedHAP and the
+//! asynchronous FedSat) over the same seeded impairment timeline and
+//! tabulate accuracy, convergence time and the fault accounting. The
+//! paper's qualitative claim this driver probes: asynchronous
+//! collection with staleness handling degrades gracefully where
+//! synchronous rounds stall behind the slowest (or dead) satellite.
+//!
+//! Comparability note: every scheme sees the same link-level
+//! impairments (deferrals, loss, dead-endpoint blocking) through the
+//! shared delay oracle, and FedSat additionally skips the passes of
+//! dark satellites. The *event-level* reactions — mid-training result
+//! loss, ring re-healing, post-outage re-offers — exist only in
+//! AsyncFLEO's event loop, so the `dropped_results` column is
+//! AsyncFLEO instrumentation, not a cross-scheme metric.
+
+use super::drivers::{base_config, run_one, summary_of, ExpOptions};
+use crate::config::{ModelKind, PsPlacement, SchemeKind};
+use crate::data::{DatasetKind, Partition};
+use crate::faults::{FaultConfig, FaultScenario};
+use crate::metrics::csv::{f, i, s, CsvWriter};
+use crate::util::fmt_hm;
+use anyhow::Result;
+
+/// Schemes compared in the sweep: ours plus one synchronous and one
+/// asynchronous baseline, each at its natural placement.
+pub const RESILIENCE_SCHEMES: &[(&str, SchemeKind, PsPlacement)] = &[
+    ("AsyncFLEO", SchemeKind::AsyncFleo, PsPlacement::TwoHaps),
+    ("FedHAP", SchemeKind::FedHap, PsPlacement::TwoHaps),
+    ("FedSat", SchemeKind::FedSat, PsPlacement::GsNorthPole),
+];
+
+/// Fault intensity levels swept per scenario (plus the nominal run).
+pub const INTENSITIES: &[f64] = &[0.5, 1.0];
+
+/// The (scenario, intensity) grid: one nominal cell, then every
+/// non-nominal scenario at every intensity.
+pub fn sweep_cells() -> Vec<(FaultScenario, f64)> {
+    let mut cells = vec![(FaultScenario::Nominal, 0.0)];
+    for &scenario in FaultScenario::ALL {
+        if scenario == FaultScenario::Nominal {
+            continue;
+        }
+        for &x in INTENSITIES {
+            cells.push((scenario, x));
+        }
+    }
+    cells
+}
+
+/// Run the sweep, writing `results/resilience.csv`.
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let mut cfg0 = base_config(opts);
+    // the coordinator dynamics are the object of study: MLP keeps the
+    // compute cheap without changing visit/staleness behaviour
+    cfg0.fl.model = ModelKind::Mlp;
+    cfg0.fl.dataset = DatasetKind::Digits;
+    cfg0.fl.partition = Partition::NonIidPaper;
+    cfg0.fl.horizon_s = 48.0 * 3600.0;
+    cfg0.fl.max_epochs = 30;
+
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("resilience.csv"),
+        &[
+            "resilience: graceful degradation under fault scenarios (SynthDigits non-IID, mlp)",
+            &cfg0.to_toml(),
+        ],
+        &[
+            "scenario",
+            "intensity",
+            "label",
+            "scheme",
+            "placement",
+            "accuracy_pct",
+            "convergence_h",
+            "convergence_hm",
+            "epochs",
+            "transfers",
+            "retransmits",
+            "deferrals",
+            "deferred_h",
+            "dropped_results",
+        ],
+    )?;
+
+    println!("\n=== resilience (SynthDigits non-IID, mlp) ===");
+    println!(
+        "{:<12} {:>4} {:<10} {:>8} {:>10} {:>7} {:>9} {:>8}",
+        "scenario", "x", "scheme", "acc(%)", "conv(h:mm)", "epochs", "retrans", "dropped"
+    );
+    for (scenario, intensity) in sweep_cells() {
+        for &(label, scheme, placement) in RESILIENCE_SCHEMES {
+            let mut cfg = cfg0.clone();
+            cfg.fl.scheme = scheme;
+            cfg.placement = placement;
+            cfg.faults = FaultConfig::preset(scenario, intensity);
+            let r = run_one(&cfg, opts)?;
+            let (conv_t, acc) = summary_of(&r);
+            let fs = r.fault_stats;
+            w.row(&[
+                s(scenario.name()),
+                f(intensity),
+                s(label),
+                s(scheme.name()),
+                s(placement.name()),
+                f(acc * 100.0),
+                f(conv_t / 3600.0),
+                s(&fmt_hm(conv_t)),
+                i(r.epochs),
+                i(r.transfers),
+                i(fs.retransmits),
+                i(fs.deferrals),
+                f(fs.deferred_s / 3600.0),
+                i(fs.dropped_results),
+            ])?;
+            println!(
+                "{:<12} {:>4.2} {:<10} {:>8.2} {:>10} {:>7} {:>9} {:>8}",
+                scenario.name(),
+                intensity,
+                label,
+                acc * 100.0,
+                fmt_hm(conv_t),
+                r.epochs,
+                fs.retransmits,
+                fs.dropped_results
+            );
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_every_scenario() {
+        let cells = sweep_cells();
+        assert_eq!(cells[0], (FaultScenario::Nominal, 0.0));
+        assert_eq!(cells.len(), 1 + (FaultScenario::ALL.len() - 1) * INTENSITIES.len());
+        for &scenario in FaultScenario::ALL {
+            assert!(cells.iter().any(|&(sc, _)| sc == scenario), "{scenario:?} missing");
+        }
+    }
+
+    #[test]
+    fn scheme_table_has_ours_plus_two_baselines() {
+        assert_eq!(RESILIENCE_SCHEMES.len(), 3);
+        assert!(RESILIENCE_SCHEMES
+            .iter()
+            .any(|&(_, s, _)| s == SchemeKind::AsyncFleo));
+        let baselines = RESILIENCE_SCHEMES
+            .iter()
+            .filter(|&&(_, s, _)| s != SchemeKind::AsyncFleo)
+            .count();
+        assert_eq!(baselines, 2);
+    }
+}

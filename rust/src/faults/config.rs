@@ -1,0 +1,254 @@
+//! Fault-scenario configuration: named presets + the raw knobs.
+//!
+//! A [`FaultConfig`] is a plain bag of numbers (so it round-trips
+//! through the TOML subset and compares with `PartialEq`); the named
+//! [`FaultScenario`] presets are constructors scaled by an `intensity`
+//! in `[0, 1]`. Intensity 0 of *any* scenario is exactly
+//! [`FaultConfig::nominal`] — the provably fault-free configuration.
+
+/// Named resilience scenarios (the `experiments::resilience` sweep).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultScenario {
+    /// No impairments: the original perfect-network code path.
+    Nominal,
+    /// Per-link packet loss with retransmission (extra delay+transfers).
+    Lossy,
+    /// Periodic eclipse / solar-conjunction outage windows that black
+    /// out SAT↔HAP contacts (and ISL contacts, per orbit).
+    Eclipse,
+    /// Satellite dropouts and rejoins: training results can be lost and
+    /// deliveries deferred past a dead node's downtime.
+    Churn,
+    /// HAP failures with ring re-healing in `topology::HapRing`.
+    HapFailure,
+}
+
+impl FaultScenario {
+    /// All scenarios, in sweep order.
+    pub const ALL: &'static [FaultScenario] = &[
+        FaultScenario::Nominal,
+        FaultScenario::Lossy,
+        FaultScenario::Eclipse,
+        FaultScenario::Churn,
+        FaultScenario::HapFailure,
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "nominal" => FaultScenario::Nominal,
+            "lossy" => FaultScenario::Lossy,
+            "eclipse" => FaultScenario::Eclipse,
+            "churn" => FaultScenario::Churn,
+            "hap-failure" | "hap_failure" => FaultScenario::HapFailure,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultScenario::Nominal => "nominal",
+            FaultScenario::Lossy => "lossy",
+            FaultScenario::Eclipse => "eclipse",
+            FaultScenario::Churn => "churn",
+            FaultScenario::HapFailure => "hap-failure",
+        }
+    }
+}
+
+/// The raw fault-injection knobs. A zero value disables the
+/// corresponding impairment; [`FaultConfig::is_nop`] true means the
+/// whole subsystem stays out of the hot path entirely.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Per-attempt packet-loss probability on every link transfer.
+    pub loss_prob: f64,
+    /// Cap on retransmission attempts per transfer.
+    pub max_retransmits: u32,
+    /// Fixed extra wait before each retransmission, seconds (ARQ
+    /// turnaround), on top of re-sending the payload.
+    pub retransmit_backoff_s: f64,
+    /// Eclipse/outage cycle period, seconds (0 = no outages).
+    pub outage_period_s: f64,
+    /// Outage window length within each period, seconds.
+    pub outage_duration_s: f64,
+    /// Outages also black out intra-orbit ISL hops (per-orbit windows).
+    pub isl_outage: bool,
+    /// Mean time between satellite failures, seconds (0 = no churn).
+    pub sat_mtbf_s: f64,
+    /// Mean satellite downtime per failure, seconds.
+    pub sat_mttr_s: f64,
+    /// Mean time between HAP failures, seconds (0 = no HAP faults).
+    pub hap_mtbf_s: f64,
+    /// Mean HAP downtime per failure, seconds.
+    pub hap_mttr_s: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self::nominal()
+    }
+}
+
+impl FaultConfig {
+    /// The perfect network: every impairment off.
+    pub fn nominal() -> Self {
+        FaultConfig {
+            loss_prob: 0.0,
+            max_retransmits: 0,
+            retransmit_backoff_s: 0.0,
+            outage_period_s: 0.0,
+            outage_duration_s: 0.0,
+            isl_outage: false,
+            sat_mtbf_s: 0.0,
+            sat_mttr_s: 0.0,
+            hap_mtbf_s: 0.0,
+            hap_mttr_s: 0.0,
+        }
+    }
+
+    /// A named scenario scaled by `intensity` in `[0, 1]`. Intensity 0
+    /// always yields [`Self::nominal`].
+    pub fn preset(scenario: FaultScenario, intensity: f64) -> Self {
+        let x = intensity.clamp(0.0, 1.0);
+        let mut cfg = Self::nominal();
+        if x == 0.0 {
+            return cfg;
+        }
+        match scenario {
+            FaultScenario::Nominal => {}
+            FaultScenario::Lossy => {
+                // up to 30% per-attempt loss at full intensity
+                cfg.loss_prob = 0.3 * x;
+                cfg.max_retransmits = 4;
+                cfg.retransmit_backoff_s = 0.5;
+            }
+            FaultScenario::Eclipse => {
+                // one outage window per ~2 h cycle, up to 30 min long
+                cfg.outage_period_s = 7200.0;
+                cfg.outage_duration_s = 1800.0 * x;
+                cfg.isl_outage = true;
+            }
+            FaultScenario::Churn => {
+                // at full intensity a satellite fails every ~6 h on
+                // average and stays dark ~2 h
+                cfg.sat_mtbf_s = 21600.0 / x;
+                cfg.sat_mttr_s = 7200.0;
+            }
+            FaultScenario::HapFailure => {
+                // at full intensity one HAP failure every ~8 h, down
+                // ~2 h; mild link loss rides along (degraded backhaul)
+                cfg.hap_mtbf_s = 28800.0 / x;
+                cfg.hap_mttr_s = 7200.0;
+                cfg.loss_prob = 0.05 * x;
+                cfg.max_retransmits = 2;
+                cfg.retransmit_backoff_s = 0.5;
+            }
+        }
+        cfg
+    }
+
+    /// True when every impairment is disabled — the fault plan then
+    /// never touches the delay path or the RNG.
+    pub fn is_nop(&self) -> bool {
+        self.loss_prob <= 0.0
+            && (self.outage_period_s <= 0.0 || self.outage_duration_s <= 0.0)
+            && self.sat_mtbf_s <= 0.0
+            && self.hap_mtbf_s <= 0.0
+    }
+
+    /// Validate invariants; returns a list of problems (empty = OK).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        if !(0.0..1.0).contains(&self.loss_prob) {
+            errs.push(format!("faults.loss_prob {} out of [0, 1)", self.loss_prob));
+        }
+        if self.loss_prob > 0.0 && self.max_retransmits == 0 {
+            errs.push("faults.loss_prob needs max_retransmits > 0".into());
+        }
+        if self.outage_period_s > 0.0 && self.outage_duration_s >= self.outage_period_s {
+            errs.push(format!(
+                "faults.outage_duration_s {} must be shorter than the period {}",
+                self.outage_duration_s, self.outage_period_s
+            ));
+        }
+        if self.sat_mtbf_s > 0.0 && self.sat_mttr_s <= 0.0 {
+            errs.push("faults.sat_mtbf_s needs sat_mttr_s > 0".into());
+        }
+        if self.hap_mtbf_s > 0.0 && self.hap_mttr_s <= 0.0 {
+            errs.push("faults.hap_mtbf_s needs hap_mttr_s > 0".into());
+        }
+        for (name, v) in [
+            ("retransmit_backoff_s", self.retransmit_backoff_s),
+            ("outage_period_s", self.outage_period_s),
+            ("outage_duration_s", self.outage_duration_s),
+            ("sat_mtbf_s", self.sat_mtbf_s),
+            ("sat_mttr_s", self.sat_mttr_s),
+            ("hap_mtbf_s", self.hap_mtbf_s),
+            ("hap_mttr_s", self.hap_mttr_s),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                errs.push(format!("faults.{name} {v} must be finite and >= 0"));
+            }
+        }
+        errs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_is_nop_and_valid() {
+        let c = FaultConfig::nominal();
+        assert!(c.is_nop());
+        assert!(c.validate().is_empty());
+    }
+
+    #[test]
+    fn zero_intensity_of_any_scenario_is_nominal() {
+        for &s in FaultScenario::ALL {
+            assert_eq!(FaultConfig::preset(s, 0.0), FaultConfig::nominal(), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn presets_are_active_and_valid() {
+        for &s in FaultScenario::ALL {
+            let c = FaultConfig::preset(s, 1.0);
+            assert!(c.validate().is_empty(), "{s:?}: {:?}", c.validate());
+            if s != FaultScenario::Nominal {
+                assert!(!c.is_nop(), "{s:?} at full intensity must be active");
+            }
+        }
+    }
+
+    #[test]
+    fn intensity_scales_monotonically() {
+        let half = FaultConfig::preset(FaultScenario::Lossy, 0.5);
+        let full = FaultConfig::preset(FaultScenario::Lossy, 1.0);
+        assert!(half.loss_prob < full.loss_prob);
+        let ch = FaultConfig::preset(FaultScenario::Churn, 0.5);
+        let cf = FaultConfig::preset(FaultScenario::Churn, 1.0);
+        assert!(ch.sat_mtbf_s > cf.sat_mtbf_s, "higher intensity = more frequent failures");
+    }
+
+    #[test]
+    fn scenario_parse_roundtrip() {
+        for &s in FaultScenario::ALL {
+            assert_eq!(FaultScenario::parse(s.name()), Some(s));
+        }
+        assert_eq!(FaultScenario::parse("bogus"), None);
+    }
+
+    #[test]
+    fn validation_catches_bad_knobs() {
+        let mut c = FaultConfig::preset(FaultScenario::Lossy, 1.0);
+        c.loss_prob = 1.5;
+        c.max_retransmits = 0;
+        assert_eq!(c.validate().len(), 2, "{:?}", c.validate());
+        let mut c = FaultConfig::preset(FaultScenario::Eclipse, 1.0);
+        c.outage_duration_s = c.outage_period_s + 1.0;
+        assert_eq!(c.validate().len(), 1);
+    }
+}

@@ -1,0 +1,36 @@
+//! Deterministic fault injection: link impairments, outages, and node
+//! churn for resilience scenarios.
+//!
+//! The paper's whole argument is robustness to stragglers, so the
+//! reproduction must be able to *create* stragglers. This subsystem
+//! injects four failure modes into the simulated network:
+//!
+//! * **packet loss with retransmission** — per-transfer Bernoulli
+//!   draws add ARQ retries (extra delay + extra `transfers`);
+//! * **scheduled link outages** — periodic eclipse/solar-conjunction
+//!   windows black out SAT↔HAP contacts and (optionally) ISL hops;
+//! * **satellite churn** — dropouts and rejoins, so a training result
+//!   can be lost in flight or simply never arrive;
+//! * **HAP failures** — a PS node goes dark and the
+//!   [`crate::topology::HapRing`] re-heals around it.
+//!
+//! Everything is derived from the experiment seed through
+//! [`crate::util::Rng`] (never wall-clock), so the same seed reproduces
+//! bit-identical impairment timelines, and a [`FaultConfig`] with all
+//! intensities at zero is provably invisible: the plan never touches
+//! the delay path or the RNG ([`FaultPlan::enabled`] is false).
+//!
+//! Integration: [`crate::coordinator::SimEnv`] carries a [`FaultPlan`]
+//! and routes every `site_link_delay` / `isl_hop_delay` /
+//! `ihl_hop_delay` call through [`FaultPlan::transfer`], so AsyncFLEO
+//! and all five baselines transparently experience the same
+//! impairments. `experiments::resilience` sweeps the named
+//! [`FaultScenario`] presets across schemes and intensities.
+
+pub mod config;
+pub mod plan;
+pub mod schedule;
+
+pub use config::{FaultConfig, FaultScenario};
+pub use plan::{FaultPlan, FaultStats, LinkClass, LinkOutcome};
+pub use schedule::{ChurnSchedule, OutageWindows};

@@ -1,0 +1,573 @@
+//! The fault plan: the seeded impairment timeline every strategy runs
+//! against, plus the per-transfer injection oracle.
+//!
+//! [`FaultPlan`] is carried by `coordinator::SimEnv`; the env's
+//! `site_link_delay` / `isl_hop_delay` / `ihl_hop_delay` route every
+//! transfer through [`FaultPlan::transfer`], so AsyncFLEO and all five
+//! baselines transparently experience the same impairments. When the
+//! config is a no-op the plan never draws from the RNG and returns the
+//! base delay unchanged — the disabled subsystem is provably invisible.
+
+use super::config::FaultConfig;
+use super::schedule::{exp_draw, ChurnSchedule, OutageWindows};
+use crate::sim::{Event, EventKind, EventQueue};
+use crate::util::Rng;
+
+/// Which physical link a transfer crosses (endpoints by dense id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// SAT↔site (HAP or GS) star link.
+    SatSite { sat: usize, site: usize },
+    /// Intra-orbit inter-satellite link.
+    Isl { sat_a: usize, sat_b: usize },
+    /// HAP↔HAP (IHL) backbone link.
+    Ihl { site_a: usize, site_b: usize },
+}
+
+/// What the oracle did to one transfer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkOutcome {
+    /// Effective delay replacing the clean link delay (includes any
+    /// deferral past outages/downtime and retransmission time).
+    pub delay_s: f64,
+    /// Retransmission attempts this transfer suffered.
+    pub retransmits: u32,
+    /// First observation of this (link, coherence-window) channel
+    /// event. Path oracles probe the same hop many times (ring
+    /// relaxation, route selection); only the first observation counts
+    /// toward [`FaultStats`] and the transfer accounting.
+    pub newly_observed: bool,
+}
+
+/// Cumulative injection accounting for one run (reported in
+/// `RunResult` and the resilience CSV).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// Total retransmission attempts across all transfers.
+    pub retransmits: u64,
+    /// Transfers deferred by an outage window or a dead endpoint.
+    pub deferrals: u64,
+    /// Total deferral time across those transfers, seconds.
+    pub deferred_s: f64,
+    /// Training results that never reached a PS (dead satellite or
+    /// past-horizon delivery).
+    pub dropped_results: u64,
+}
+
+/// Never defer a transfer more than this far past the horizon (keeps
+/// every scheduled time finite; strategies drop past-horizon arrivals).
+const DEFER_CAP_SLACK_S: f64 = 7200.0;
+
+/// Loss channel coherence: within one window the channel state of a
+/// link is fixed, so the delay oracles (which probe the same hop
+/// repeatedly while routing) observe a consistent answer instead of
+/// re-rolling the dice per query.
+const LOSS_COHERENCE_S: f64 = 1.0;
+
+/// The deterministic fault-schedule engine.
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    enabled: bool,
+    horizon_s: f64,
+    /// Seed for the per-(link, window) channel-state hash — loss draws
+    /// are a pure function of it, never of call order.
+    channel_seed: u64,
+    /// Channel events already observed (stats idempotency).
+    seen: std::collections::HashSet<u64>,
+    /// Eclipse windows per PS site (SAT↔site links).
+    site_outages: Vec<OutageWindows>,
+    /// Conjunction windows per orbit (ISL hops), when `isl_outage`.
+    orbit_outages: Vec<OutageWindows>,
+    sat_churn: Vec<ChurnSchedule>,
+    hap_churn: Vec<ChurnSchedule>,
+    sats_per_orbit: usize,
+    stats: FaultStats,
+}
+
+/// SplitMix64 finalizer — the hash behind the channel-state keys.
+fn mix64(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    /// The no-fault plan (what every run before this subsystem used).
+    pub fn disabled() -> Self {
+        FaultPlan {
+            cfg: FaultConfig::nominal(),
+            enabled: false,
+            horizon_s: 0.0,
+            channel_seed: 0,
+            seen: std::collections::HashSet::new(),
+            site_outages: Vec::new(),
+            orbit_outages: Vec::new(),
+            sat_churn: Vec::new(),
+            hap_churn: Vec::new(),
+            sats_per_orbit: 1,
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Build the impairment timeline for one run. All randomness comes
+    /// from `seed`: the same seed gives bit-identical schedules and
+    /// per-transfer draws for any strategy with deterministic call
+    /// order (which all of ours are).
+    pub fn new(
+        cfg: &FaultConfig,
+        seed: u64,
+        n_sats: usize,
+        n_sites: usize,
+        sats_per_orbit: usize,
+        horizon_s: f64,
+    ) -> Self {
+        if cfg.is_nop() {
+            let mut plan = Self::disabled();
+            plan.cfg = *cfg;
+            return plan;
+        }
+        let mut rng = Rng::new(seed ^ 0xFA_0175);
+        let mut phase_rng = rng.fork(1);
+        let mut churn_rng = rng.fork(2);
+        let mut hap_rng = rng.fork(3);
+        let channel_seed = rng.next_u64();
+
+        let (site_outages, orbit_outages) =
+            if cfg.outage_period_s > 0.0 && cfg.outage_duration_s > 0.0 {
+                let phase = |r: &mut Rng| r.range_f64(0.0, cfg.outage_period_s);
+                let sites = (0..n_sites)
+                    .map(|_| OutageWindows {
+                        period_s: cfg.outage_period_s,
+                        duration_s: cfg.outage_duration_s,
+                        phase_s: phase(&mut phase_rng),
+                    })
+                    .collect();
+                let n_orbits = n_sats / sats_per_orbit.max(1);
+                let orbits = if cfg.isl_outage {
+                    (0..n_orbits)
+                        .map(|_| OutageWindows {
+                            period_s: cfg.outage_period_s,
+                            duration_s: cfg.outage_duration_s,
+                            phase_s: phase(&mut phase_rng),
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                (sites, orbits)
+            } else {
+                (Vec::new(), Vec::new())
+            };
+
+        let sat_churn = (0..n_sats)
+            .map(|_| {
+                ChurnSchedule::generate(&mut churn_rng, cfg.sat_mtbf_s, cfg.sat_mttr_s, horizon_s)
+            })
+            .collect();
+
+        FaultPlan {
+            cfg: *cfg,
+            enabled: true,
+            horizon_s,
+            channel_seed,
+            seen: std::collections::HashSet::new(),
+            site_outages,
+            orbit_outages,
+            sat_churn,
+            hap_churn: generate_hap_schedules(
+                &mut hap_rng,
+                n_sites,
+                cfg.hap_mtbf_s,
+                cfg.hap_mttr_s,
+                horizon_s,
+            ),
+            sats_per_orbit: sats_per_orbit.max(1),
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// Is any impairment active? When false the env skips the oracle
+    /// entirely, so disabled runs are bit-identical to the pre-faults
+    /// code path.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> FaultStats {
+        self.stats
+    }
+
+    /// Is satellite `sat` alive at `t`? (Always true when disabled.)
+    pub fn sat_alive(&self, sat: usize, t: f64) -> bool {
+        self.sat_churn.get(sat).map_or(true, |s| !s.is_down(t))
+    }
+
+    /// Is PS site `hap` alive at `t`?
+    pub fn hap_alive(&self, hap: usize, t: f64) -> bool {
+        self.hap_churn.get(hap).map_or(true, |s| !s.is_down(t))
+    }
+
+    /// Downtime intervals of one satellite (for reporting/tests).
+    pub fn sat_downtime(&self, sat: usize) -> &[(f64, f64)] {
+        match self.sat_churn.get(sat) {
+            Some(s) => &s.down,
+            None => &[],
+        }
+    }
+
+    /// Record a training result that never reached a PS.
+    pub fn note_dropped(&mut self) {
+        self.stats.dropped_results += 1;
+    }
+
+    /// The injection oracle: what actually happens to a transfer over
+    /// `class` starting at `t` whose clean delay is `base_delay_s`.
+    ///
+    /// Order of impairments: (1) the transfer is deferred until both
+    /// endpoints are alive and the link is outside its outage window
+    /// (store-and-forward abstraction), then (2) loss draws add
+    /// retransmissions, each costing one backoff plus a re-send.
+    ///
+    /// Loss is *channel state*, not a per-call dice roll: the draw is a
+    /// pure function of (link, send-time coherence window, seed). The
+    /// path oracles in `fl::propagation` probe the same hop many times
+    /// while routing; with per-call draws the relaxation would keep the
+    /// luckiest roll (biasing relayed delays toward fault-free) and
+    /// every probe would inflate the stats. Deterministic channel state
+    /// makes repeated queries consistent, and [`FaultStats`] counts
+    /// each channel event once ([`LinkOutcome::newly_observed`]).
+    pub fn transfer(&mut self, class: LinkClass, t: f64, base_delay_s: f64) -> LinkOutcome {
+        if !self.enabled {
+            return LinkOutcome { delay_s: base_delay_s, retransmits: 0, newly_observed: false };
+        }
+        // -- deferral: availability + outage, to a fixpoint --
+        let mut start = t;
+        for _ in 0..4 {
+            let before = start;
+            start = self.avail_time(&class, start);
+            start = self.outage_clear(&class, start);
+            if start == before {
+                break;
+            }
+        }
+        let cap = self.horizon_s + DEFER_CAP_SLACK_S;
+        if start > cap {
+            start = cap;
+        }
+        // -- loss + retransmission from the channel state at send time --
+        let key = self.channel_key(&class, start);
+        let mut retransmits = 0u32;
+        if self.cfg.loss_prob > 0.0 {
+            let mut chan = Rng::new(key);
+            while retransmits < self.cfg.max_retransmits && chan.f64() < self.cfg.loss_prob {
+                retransmits += 1;
+            }
+        }
+        let delay = (start - t)
+            + base_delay_s
+            + retransmits as f64 * (self.cfg.retransmit_backoff_s + base_delay_s);
+        let newly_observed = self.seen.insert(key);
+        if newly_observed {
+            if start > t {
+                self.stats.deferrals += 1;
+                self.stats.deferred_s += start - t;
+            }
+            self.stats.retransmits += retransmits as u64;
+        }
+        LinkOutcome { delay_s: delay, retransmits, newly_observed }
+    }
+
+    /// Channel-state key of a link at a send instant. Bidirectional
+    /// links (ISL, IHL) are normalized so both directions share state.
+    fn channel_key(&self, class: &LinkClass, send_t: f64) -> u64 {
+        let (tag, a, b) = match *class {
+            LinkClass::SatSite { sat, site } => (1u64, sat as u64, site as u64),
+            LinkClass::Isl { sat_a, sat_b } => {
+                (2, sat_a.min(sat_b) as u64, sat_a.max(sat_b) as u64)
+            }
+            LinkClass::Ihl { site_a, site_b } => {
+                (3, site_a.min(site_b) as u64, site_a.max(site_b) as u64)
+            }
+        };
+        let window = (send_t.max(0.0) / LOSS_COHERENCE_S).floor() as u64;
+        let mut h = self.channel_seed;
+        for v in [tag, a, b, window] {
+            h = mix64(h ^ v.wrapping_mul(0x9E3779B97F4A7C15));
+        }
+        h
+    }
+
+    /// Earliest time `>= t` at which both endpoints are alive.
+    fn avail_time(&self, class: &LinkClass, t: f64) -> f64 {
+        let up = |sched: &[ChurnSchedule], i: usize, t: f64| -> f64 {
+            sched.get(i).map_or(t, |s| s.up_time_after(t))
+        };
+        match *class {
+            LinkClass::SatSite { sat, site } => {
+                up(&self.sat_churn, sat, t).max(up(&self.hap_churn, site, t))
+            }
+            LinkClass::Isl { sat_a, sat_b } => {
+                up(&self.sat_churn, sat_a, t).max(up(&self.sat_churn, sat_b, t))
+            }
+            LinkClass::Ihl { site_a, site_b } => {
+                up(&self.hap_churn, site_a, t).max(up(&self.hap_churn, site_b, t))
+            }
+        }
+    }
+
+    /// Earliest time `>= t` outside the link's outage window.
+    fn outage_clear(&self, class: &LinkClass, t: f64) -> f64 {
+        match *class {
+            LinkClass::SatSite { site, .. } => {
+                self.site_outages.get(site).map_or(t, |o| o.clear_time(t))
+            }
+            LinkClass::Isl { sat_a, .. } => {
+                let orbit = sat_a / self.sats_per_orbit;
+                self.orbit_outages.get(orbit).map_or(t, |o| o.clear_time(t))
+            }
+            LinkClass::Ihl { .. } => t,
+        }
+    }
+
+    /// Push the plan's discrete transitions (churn up/down, outage
+    /// boundaries) as typed events. No-op when disabled, so clean runs
+    /// see an untouched queue.
+    pub fn schedule_events(&self, queue: &mut EventQueue) {
+        if !self.enabled {
+            return;
+        }
+        let horizon = self.horizon_s;
+        for (sat, sched) in self.sat_churn.iter().enumerate() {
+            for &(s, e) in &sched.down {
+                if s <= horizon {
+                    queue.push(Event::new(s, EventKind::SatChurn { sat, up: false }));
+                }
+                if e <= horizon {
+                    queue.push(Event::new(e, EventKind::SatChurn { sat, up: true }));
+                }
+            }
+        }
+        for (hap, sched) in self.hap_churn.iter().enumerate() {
+            for &(s, e) in &sched.down {
+                if s <= horizon {
+                    queue.push(Event::new(s, EventKind::HapChurn { hap, up: false }));
+                }
+                if e <= horizon {
+                    queue.push(Event::new(e, EventKind::HapChurn { hap, up: true }));
+                }
+            }
+        }
+        for (site, outage) in self.site_outages.iter().enumerate() {
+            for (s, e) in outage.windows_until(horizon) {
+                queue.push(Event::new(s, EventKind::OutageStart { site }));
+                queue.push(Event::new(e, EventKind::OutageEnd { site }));
+            }
+        }
+    }
+}
+
+/// HAP failures drawn on one global timeline so at most one PS is ever
+/// down at a time — the ring always keeps at least one alive node to
+/// re-heal around. A single-site deployment gets no HAP failures (the
+/// lone PS cannot be removed).
+fn generate_hap_schedules(
+    rng: &mut Rng,
+    n_sites: usize,
+    mtbf_s: f64,
+    mttr_s: f64,
+    horizon_s: f64,
+) -> Vec<ChurnSchedule> {
+    let mut scheds = vec![ChurnSchedule::default(); n_sites];
+    if n_sites < 2 || mtbf_s <= 0.0 || mttr_s <= 0.0 {
+        return scheds;
+    }
+    let mut t = exp_draw(rng, mtbf_s);
+    while t < horizon_s {
+        let hap = rng.below(n_sites);
+        let dur = mttr_s * (0.5 + rng.f64());
+        scheds[hap].down.push((t, t + dur));
+        t += dur + exp_draw(rng, mtbf_s);
+    }
+    scheds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::config::FaultScenario;
+
+    fn plan(scenario: FaultScenario, intensity: f64, seed: u64) -> FaultPlan {
+        let cfg = FaultConfig::preset(scenario, intensity);
+        FaultPlan::new(&cfg, seed, 40, 2, 8, 72.0 * 3600.0)
+    }
+
+    #[test]
+    fn nop_plan_is_transparent() {
+        let mut p = plan(FaultScenario::Nominal, 1.0, 42);
+        assert!(!p.enabled());
+        let out = p.transfer(LinkClass::SatSite { sat: 3, site: 0 }, 100.0, 0.25);
+        assert_eq!(
+            out,
+            LinkOutcome { delay_s: 0.25, retransmits: 0, newly_observed: false }
+        );
+        assert_eq!(p.stats(), FaultStats::default());
+        assert!(p.sat_alive(3, 1e6));
+        let mut q = EventQueue::new();
+        p.schedule_events(&mut q);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn zero_intensity_equals_nominal_plan() {
+        let mut a = plan(FaultScenario::Eclipse, 0.0, 42);
+        assert!(!a.enabled());
+        let out = a.transfer(LinkClass::Ihl { site_a: 0, site_b: 1 }, 7.0, 0.5);
+        assert_eq!(out.delay_s, 0.5);
+    }
+
+    #[test]
+    fn lossy_adds_retransmissions_deterministically() {
+        let run = |seed: u64| {
+            let mut p = plan(FaultScenario::Lossy, 1.0, seed);
+            let mut total = 0.0;
+            for i in 0..200 {
+                let out =
+                    p.transfer(LinkClass::SatSite { sat: i % 40, site: 0 }, i as f64, 0.2);
+                assert!(out.delay_s >= 0.2);
+                assert!(out.retransmits <= p.cfg.max_retransmits);
+                total += out.delay_s;
+            }
+            (total, p.stats())
+        };
+        let (t1, s1) = run(7);
+        let (t2, s2) = run(7);
+        assert_eq!(t1, t2, "same seed, same draws");
+        assert_eq!(s1, s2);
+        assert!(s1.retransmits > 0, "30% loss over 200 transfers must retransmit");
+        let (t3, _) = run(8);
+        assert_ne!(t1, t3, "different seed, different draws");
+    }
+
+    #[test]
+    fn channel_state_is_idempotent_per_window() {
+        let mut p = plan(FaultScenario::Lossy, 1.0, 13);
+        let class = LinkClass::Isl { sat_a: 2, sat_b: 3 };
+        let a = p.transfer(class, 100.25, 0.2);
+        let s1 = p.stats();
+        let b = p.transfer(class, 100.75, 0.2); // same 1 s coherence window
+        assert_eq!(a.delay_s, b.delay_s, "probe and commit must see one channel truth");
+        assert_eq!(a.retransmits, b.retransmits);
+        assert!(a.newly_observed && !b.newly_observed);
+        assert_eq!(p.stats(), s1, "repeated probes must not inflate stats");
+        // the reverse direction shares the same channel
+        let c = p.transfer(LinkClass::Isl { sat_a: 3, sat_b: 2 }, 100.5, 0.2);
+        assert_eq!(c.retransmits, a.retransmits);
+        assert!(!c.newly_observed);
+        // a different window re-draws
+        let d = p.transfer(class, 4242.0, 0.2);
+        assert!(d.newly_observed);
+    }
+
+    #[test]
+    fn eclipse_defers_transfers_out_of_windows() {
+        let mut p = plan(FaultScenario::Eclipse, 1.0, 11);
+        let o = p.site_outages[0];
+        assert!(o.active());
+        // a transfer started mid-window is deferred to the window end
+        let t_in = o.phase_s + 0.5 * o.duration_s;
+        let out = p.transfer(LinkClass::SatSite { sat: 0, site: 0 }, t_in, 0.2);
+        let expect = (o.duration_s - 0.5 * o.duration_s) + 0.2;
+        assert!((out.delay_s - expect).abs() < 1e-9, "{} vs {}", out.delay_s, expect);
+        assert_eq!(p.stats().deferrals, 1);
+        // a transfer outside the window is untouched
+        let t_clear = o.clear_time(t_in) + 1.0;
+        let out = p.transfer(LinkClass::SatSite { sat: 0, site: 0 }, t_clear, 0.2);
+        assert_eq!(out.delay_s, 0.2);
+    }
+
+    #[test]
+    fn churn_blocks_links_of_dead_sats() {
+        let p = plan(FaultScenario::Churn, 1.0, 5);
+        let sat = (0..40)
+            .find(|&s| !p.sat_downtime(s).is_empty())
+            .expect("full-intensity churn over 72 h must hit someone");
+        let (down, up) = p.sat_downtime(sat)[0];
+        let mid = 0.5 * (down + up);
+        assert!(!p.sat_alive(sat, mid));
+        assert!(p.sat_alive(sat, down - 1.0));
+        let mut p = p;
+        let out = p.transfer(LinkClass::SatSite { sat, site: 0 }, mid, 0.2);
+        assert!((out.delay_s - ((up - mid) + 0.2)).abs() < 1e-9);
+        // the partner side of an ISL hop is equally blocking
+        let partner = if sat % 8 == 0 { sat + 1 } else { sat - 1 };
+        let out = p.transfer(LinkClass::Isl { sat_a: partner, sat_b: sat }, mid, 0.1);
+        assert!(out.delay_s >= (up - mid) + 0.1 - 1e-9);
+    }
+
+    #[test]
+    fn hap_failures_never_overlap() {
+        let p = plan(FaultScenario::HapFailure, 1.0, 3);
+        let a = &p.hap_churn[0].down;
+        let b = &p.hap_churn[1].down;
+        assert!(
+            !a.is_empty() || !b.is_empty(),
+            "72 h at 8 h MTBF must fail a HAP"
+        );
+        for &(s0, e0) in a {
+            for &(s1, e1) in b {
+                assert!(e0 <= s1 || e1 <= s0, "overlap: ({s0},{e0}) vs ({s1},{e1})");
+            }
+        }
+    }
+
+    #[test]
+    fn single_site_gets_no_hap_failures() {
+        let cfg = FaultConfig::preset(FaultScenario::HapFailure, 1.0);
+        let p = FaultPlan::new(&cfg, 9, 40, 1, 8, 72.0 * 3600.0);
+        assert!(p.hap_churn[0].down.is_empty());
+    }
+
+    #[test]
+    fn schedule_events_matches_timeline() {
+        let p = plan(FaultScenario::Churn, 1.0, 5);
+        let mut q = EventQueue::new();
+        p.schedule_events(&mut q);
+        let expected: usize = (0..40)
+            .map(|s| {
+                p.sat_downtime(s)
+                    .iter()
+                    .map(|&(a, b)| {
+                        (a <= p.horizon_s) as usize + (b <= p.horizon_s) as usize
+                    })
+                    .sum::<usize>()
+            })
+            .sum();
+        assert_eq!(q.len(), expected);
+        // events pop in time order and alternate down/up per sat
+        let mut last = 0.0;
+        while let Some(ev) = q.pop() {
+            assert!(ev.time_s >= last);
+            last = ev.time_s;
+            assert!(matches!(ev.kind, EventKind::SatChurn { .. }));
+        }
+    }
+
+    #[test]
+    fn deferral_is_capped_finite() {
+        // a sat that dies at the very end of the horizon defers past it
+        // but never to infinity
+        let cfg = FaultConfig::preset(FaultScenario::Churn, 1.0);
+        let mut p = FaultPlan::new(&cfg, 21, 40, 2, 8, 3600.0);
+        for sat in 0..40 {
+            for t in [0.0, 1800.0, 3599.0] {
+                let out = p.transfer(LinkClass::SatSite { sat, site: 0 }, t, 0.2);
+                assert!(out.delay_s.is_finite());
+                assert!(t + out.delay_s <= 3600.0 + DEFER_CAP_SLACK_S + 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Deterministic fault schedules: churn intervals and outage windows.
+//!
+//! Everything here is precomputed (or closed-form) from the seeded
+//! [`Rng`] at plan-construction time, so the same seed always yields
+//! the same impairment timeline regardless of how the strategy under
+//! test interleaves its link calls.
+
+use crate::util::Rng;
+
+/// Exponential draw with the given mean (inverse-CDF on a `[0,1)`
+/// uniform; `1 - u` keeps the argument of `ln` strictly positive).
+pub(crate) fn exp_draw(rng: &mut Rng, mean_s: f64) -> f64 {
+    -mean_s * (1.0 - rng.f64()).ln()
+}
+
+/// Alternating up/down timeline for one node over the horizon.
+#[derive(Clone, Debug, Default)]
+pub struct ChurnSchedule {
+    /// Sorted, disjoint `[start, end)` downtime intervals.
+    pub down: Vec<(f64, f64)>,
+}
+
+impl ChurnSchedule {
+    /// Draw a failure/repair process: exponential(mtbf) uptimes,
+    /// uniform `[0.5, 1.5] * mttr` downtimes, truncated at `horizon_s`.
+    pub fn generate(rng: &mut Rng, mtbf_s: f64, mttr_s: f64, horizon_s: f64) -> Self {
+        let mut down = Vec::new();
+        if mtbf_s <= 0.0 || mttr_s <= 0.0 {
+            return ChurnSchedule { down };
+        }
+        let mut t = exp_draw(rng, mtbf_s);
+        while t < horizon_s {
+            let dur = mttr_s * (0.5 + rng.f64());
+            down.push((t, t + dur));
+            t += dur + exp_draw(rng, mtbf_s);
+        }
+        ChurnSchedule { down }
+    }
+
+    /// Is the node down at time `t`?
+    pub fn is_down(&self, t: f64) -> bool {
+        self.down.iter().any(|&(s, e)| t >= s && t < e)
+    }
+
+    /// Earliest time `>= t` at which the node is up (i.e. `t` itself
+    /// when up, else the end of the covering downtime interval).
+    pub fn up_time_after(&self, t: f64) -> f64 {
+        for &(s, e) in &self.down {
+            if t >= s && t < e {
+                return e;
+            }
+        }
+        t
+    }
+
+    /// Total downtime within `[0, horizon_s]`.
+    pub fn total_down_s(&self, horizon_s: f64) -> f64 {
+        self.down.iter().map(|&(s, e)| e.min(horizon_s) - s.min(horizon_s)).sum()
+    }
+}
+
+/// Closed-form periodic outage windows (eclipse / conjunction model):
+/// the entity is dark during `[k*period + phase, k*period + phase +
+/// duration)` for every integer `k`.
+#[derive(Clone, Copy, Debug)]
+pub struct OutageWindows {
+    pub period_s: f64,
+    pub duration_s: f64,
+    /// Per-entity phase offset in `[0, period)`, drawn at plan build.
+    pub phase_s: f64,
+}
+
+impl OutageWindows {
+    /// A window set that is never dark.
+    pub fn none() -> Self {
+        OutageWindows { period_s: 0.0, duration_s: 0.0, phase_s: 0.0 }
+    }
+
+    pub fn active(&self) -> bool {
+        self.period_s > 0.0 && self.duration_s > 0.0
+    }
+
+    /// Position of `t` within the cycle, in `[0, period)`.
+    fn cycle_pos(&self, t: f64) -> f64 {
+        (t - self.phase_s).rem_euclid(self.period_s)
+    }
+
+    /// Is the entity dark at `t`?
+    pub fn is_out(&self, t: f64) -> bool {
+        self.active() && self.cycle_pos(t) < self.duration_s
+    }
+
+    /// Earliest time `>= t` outside any outage window.
+    pub fn clear_time(&self, t: f64) -> f64 {
+        if !self.is_out(t) {
+            t
+        } else {
+            t + (self.duration_s - self.cycle_pos(t))
+        }
+    }
+
+    /// All `(start, end)` windows intersecting `[0, horizon_s]`, for
+    /// event scheduling.
+    pub fn windows_until(&self, horizon_s: f64) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        if !self.active() {
+            return out;
+        }
+        // first cycle whose window could intersect t >= 0
+        let mut start = self.phase_s.rem_euclid(self.period_s) - self.period_s;
+        while start <= horizon_s {
+            let end = start + self.duration_s;
+            if end > 0.0 {
+                out.push((start.max(0.0), end.min(horizon_s)));
+            }
+            start += self.period_s;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn churn_deterministic_from_seed() {
+        let a = ChurnSchedule::generate(&mut Rng::new(7), 3600.0, 600.0, 86_400.0);
+        let b = ChurnSchedule::generate(&mut Rng::new(7), 3600.0, 600.0, 86_400.0);
+        assert_eq!(a.down, b.down);
+        assert!(!a.down.is_empty(), "a day at 1 h MTBF must produce failures");
+    }
+
+    #[test]
+    fn churn_intervals_sorted_disjoint() {
+        let c = ChurnSchedule::generate(&mut Rng::new(3), 1800.0, 900.0, 86_400.0);
+        for w in c.down.windows(2) {
+            assert!(w[0].1 <= w[1].0, "overlap: {:?}", w);
+        }
+        for &(s, e) in &c.down {
+            assert!(e > s);
+        }
+    }
+
+    #[test]
+    fn churn_up_down_queries() {
+        let c = ChurnSchedule { down: vec![(10.0, 20.0), (50.0, 60.0)] };
+        assert!(!c.is_down(5.0));
+        assert!(c.is_down(10.0));
+        assert!(c.is_down(19.9));
+        assert!(!c.is_down(20.0));
+        assert_eq!(c.up_time_after(15.0), 20.0);
+        assert_eq!(c.up_time_after(30.0), 30.0);
+        assert_eq!(c.up_time_after(59.0), 60.0);
+        assert!((c.total_down_s(100.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn churn_disabled_when_zero() {
+        let c = ChurnSchedule::generate(&mut Rng::new(1), 0.0, 600.0, 86_400.0);
+        assert!(c.down.is_empty());
+        assert!(!c.is_down(100.0));
+    }
+
+    #[test]
+    fn outage_periodicity() {
+        let o = OutageWindows { period_s: 100.0, duration_s: 10.0, phase_s: 5.0 };
+        assert!(o.is_out(5.0));
+        assert!(o.is_out(14.9));
+        assert!(!o.is_out(15.0));
+        assert!(o.is_out(105.0));
+        assert_eq!(o.clear_time(7.0), 15.0);
+        assert_eq!(o.clear_time(50.0), 50.0);
+        assert_eq!(o.clear_time(107.0), 115.0);
+    }
+
+    #[test]
+    fn outage_none_is_clear() {
+        let o = OutageWindows::none();
+        assert!(!o.is_out(0.0));
+        assert_eq!(o.clear_time(42.0), 42.0);
+        assert!(o.windows_until(1000.0).is_empty());
+    }
+
+    #[test]
+    fn outage_windows_until_covers_horizon() {
+        let o = OutageWindows { period_s: 100.0, duration_s: 10.0, phase_s: 95.0 };
+        let ws = o.windows_until(350.0);
+        // phase 95: windows [-5,5], [95,105], [195,205], [295,305]
+        assert_eq!(ws, vec![(0.0, 5.0), (95.0, 105.0), (195.0, 205.0), (295.0, 305.0)]);
+        for w in ws.windows(2) {
+            assert!(w[0].1 <= w[1].0);
+        }
+    }
+}

@@ -83,6 +83,10 @@ struct SatState {
     training_epoch: Option<u64>,
     /// Received a newer global while training.
     pending_epoch: Option<u64>,
+    /// Exact completion instant of the in-flight training run. A
+    /// `TrainingDone` event whose time doesn't match is stale — its
+    /// run was cancelled by churn and possibly restarted since.
+    train_done_at: Option<f64>,
 }
 
 /// A model buffered at (or in flight to) the sink.
@@ -137,6 +141,11 @@ impl Strategy for AsyncFleo {
         // Initial broadcast of w^0 from the source HAP at t = 0.
         self.broadcast(env, &ring, &mut queue, 0, 0.0);
 
+        // Fault-plan transitions (churn, outage boundaries) become
+        // typed events; with faults disabled nothing is pushed and the
+        // run is bit-identical to the clean code path.
+        env.faults.schedule_events(&mut queue);
+
         let mut converged = false;
         while let Some(ev) = queue.pop() {
             let t = ev.time_s;
@@ -145,19 +154,46 @@ impl Strategy for AsyncFleo {
             }
             match ev.kind {
                 EventKind::SatModelArrival { sat, epoch, global: true, .. } => {
+                    // a model delivered into a dead receiver is lost;
+                    // the satellite catches up on rejoin or at the next
+                    // broadcast / post-outage re-offer
+                    if !env.faults.sat_alive(sat, t) {
+                        continue;
+                    }
+                    let done = t + train_time(sat, env);
                     let s = &mut sats[sat];
                     if s.latest_epoch.map_or(true, |e| epoch > e) {
                         s.latest_epoch = Some(epoch);
                         if s.training_epoch.is_none() {
                             s.training_epoch = Some(epoch);
-                            queue.push_in(train_time(sat, env), EventKind::TrainingDone { sat });
+                            s.train_done_at = Some(done);
+                            queue.push(crate::sim::Event::new(
+                                done,
+                                EventKind::TrainingDone { sat },
+                            ));
                         } else {
                             s.pending_epoch = Some(epoch);
                         }
                     }
                 }
                 EventKind::TrainingDone { sat } => {
-                    let epoch = sats[sat].training_epoch.expect("training state");
+                    // churn may have wiped the state (result lost), or
+                    // this event may belong to a cancelled run that was
+                    // since restarted — only the completion instant of
+                    // the *current* run is live
+                    let Some(epoch) = sats[sat].training_epoch else {
+                        continue;
+                    };
+                    if sats[sat].train_done_at != Some(t) {
+                        continue;
+                    }
+                    if !env.faults.sat_alive(sat, t) {
+                        sats[sat].training_epoch = None;
+                        sats[sat].pending_epoch = None;
+                        sats[sat].train_done_at = None;
+                        env.faults.note_dropped();
+                        continue;
+                    }
                     let (model, _loss) =
                         env.backend.train_local(sat, &globals[epoch as usize], dispatches);
                     let meta = self.metadata(env, sat, t, epoch);
@@ -179,14 +215,21 @@ impl Strategy for AsyncFleo {
                                 t_sink,
                                 EventKind::HapLocalArrival { hap: ring.sink(), origin_sat: sat, epoch },
                             ));
+                        } else if env.faults.enabled() {
+                            env.faults.note_dropped(); // deferred past horizon
                         }
+                    } else if env.faults.enabled() {
+                        env.faults.note_dropped(); // no reachable PS anymore
                     }
                     // start next training round if a newer global arrived
+                    let done = t + train_time(sat, env);
                     let s = &mut sats[sat];
                     s.training_epoch = None;
+                    s.train_done_at = None;
                     if let Some(p) = s.pending_epoch.take() {
                         s.training_epoch = Some(p);
-                        queue.push_in(train_time(sat, env), EventKind::TrainingDone { sat });
+                        s.train_done_at = Some(done);
+                        queue.push(crate::sim::Event::new(done, EventKind::TrainingDone { sat }));
                     }
                 }
                 EventKind::HapLocalArrival { origin_sat, epoch, .. } => {
@@ -253,6 +296,59 @@ impl Strategy for AsyncFleo {
                             &mut beta, &mut buffer, &mut detector, t,
                         );
                         tick_deadline = f64::INFINITY;
+                    }
+                }
+                EventKind::SatChurn { sat, up } => {
+                    if !up {
+                        // dropout: an in-flight training run is lost
+                        if sats[sat].training_epoch.take().is_some() {
+                            env.faults.note_dropped();
+                        }
+                        sats[sat].pending_epoch = None;
+                        sats[sat].train_done_at = None;
+                    } else if sats[sat].training_epoch.is_none() {
+                        // rejoin: restart training on the newest global
+                        // the satellite still holds (reboot-and-resume)
+                        if sats[sat].latest_epoch.is_some() {
+                            let done = t + train_time(sat, env);
+                            let s = &mut sats[sat];
+                            s.training_epoch = s.latest_epoch;
+                            s.train_done_at = Some(done);
+                            queue.push(crate::sim::Event::new(
+                                done,
+                                EventKind::TrainingDone { sat },
+                            ));
+                        }
+                    }
+                }
+                EventKind::HapChurn { hap, up } => {
+                    // the backbone re-heals around the change; in-flight
+                    // sink batches are assumed re-routed by the ring
+                    ring.set_alive(hap, up);
+                }
+                EventKind::OutageStart { .. } => {
+                    // nothing to do: the delay oracle gates every link
+                    // transfer crossing the window
+                }
+                EventKind::OutageEnd { site } => {
+                    // post-eclipse catch-up: the PS re-offers the newest
+                    // global to whoever is visible now; satellites that
+                    // already have this epoch ignore the duplicate
+                    for sat in env.plan.visible_sats(site, t) {
+                        let d = env.site_link_delay(site, sat, t);
+                        let tr = t + d;
+                        if tr <= horizon {
+                            queue.push(crate::sim::Event::new(
+                                tr,
+                                EventKind::SatModelArrival {
+                                    sat,
+                                    from_sat: sat,
+                                    epoch: beta,
+                                    global: true,
+                                    origin_sat: sat,
+                                },
+                            ));
+                        }
                     }
                 }
                 _ => {}

@@ -66,6 +66,11 @@ impl Strategy for FedSat {
             if t > horizon || converged {
                 break;
             }
+            // fault injection: a dark satellite's pass simply doesn't
+            // happen (always alive when faults are disabled)
+            if !env.faults.sat_alive(sat, t) {
+                continue;
+            }
             last_t = t;
             match ready_at[sat] {
                 None => {

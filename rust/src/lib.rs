@@ -23,8 +23,14 @@
 //! * [`fl`] — the FL strategies: AsyncFLEO (grouping, staleness
 //!   discounting, model propagation — Algorithms 1 & 2) and the five
 //!   baselines (FedAvg, FedISL, FedSat, FedSpace, FedHAP);
+//! * [`faults`] — deterministic fault injection: packet loss with
+//!   retransmission, eclipse outage windows, satellite churn and HAP
+//!   failures, applied transparently to every strategy through the
+//!   env's link-delay calls;
 //! * [`coordinator`] — the orchestrator that drives everything;
-//! * [`experiments`] — drivers regenerating every paper table & figure;
+//! * [`experiments`] — drivers regenerating every paper table & figure,
+//!   plus the `resilience` sweep comparing graceful degradation across
+//!   schemes under the fault scenarios;
 //! * [`config`], [`cli`], [`metrics`], [`bench`], [`testkit`],
 //!   [`util`] — supporting substrates built from scratch (crates.io is
 //!   unreachable; see DESIGN.md §1).
@@ -40,6 +46,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod faults;
 pub mod fl;
 pub mod metrics;
 pub mod model;

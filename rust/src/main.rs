@@ -3,6 +3,7 @@
 //! ```text
 //! asyncfleo exp <name>|all [--out DIR] [--fast] [--surrogate] [--seed N]
 //! asyncfleo run [--config FILE] [--scheme S] [--placement P] ...
+//! asyncfleo resilience [--out DIR] [--fast] [--surrogate] [--seed N]
 //! asyncfleo info
 //! ```
 
@@ -24,7 +25,14 @@ USAGE:
                 [--model mlp|cnn] [--dataset digits|cifar]
                 [--partition iid|non-iid] [--horizon-hours H]
                 [--max-epochs N] [--seed N] [--surrogate]
+                [--fault-scenario nominal|lossy|eclipse|churn|hap-failure]
+                [--fault-intensity X]
       Run a single FL experiment and print its curve.
+
+  asyncfleo resilience [--out DIR] [--fast] [--surrogate] [--seed N]
+      Sweep the fault scenarios (lossy, eclipse, churn, hap-failure)
+      across AsyncFLEO + baselines and tabulate graceful degradation
+      (alias for `exp resilience`).
 
   asyncfleo info
       Show artifact manifest + paper constellation info.
@@ -46,6 +54,7 @@ fn main() {
     let result = match args.subcommand.as_deref().unwrap() {
         "exp" => cmd_exp(&args),
         "run" => cmd_run(&args),
+        "resilience" => cmd_resilience(&args),
         "info" => print_info(&asyncfleo::runtime::Runtime::default_dir()),
         other => {
             eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
@@ -71,6 +80,16 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         seed: args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)?.unwrap_or(42),
     };
     run_experiment(name, &opts)
+}
+
+fn cmd_resilience(args: &Args) -> anyhow::Result<()> {
+    let opts = ExpOptions {
+        out_dir: args.opt_or("out", "results").into(),
+        fast: args.flag("fast"),
+        surrogate: args.flag("surrogate"),
+        seed: args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)?.unwrap_or(42),
+    };
+    run_experiment("resilience", &opts)
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
@@ -112,6 +131,17 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     if let Some(n) = args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
         cfg.seed = n;
     }
+    if let Some(sc) = args.opt("fault-scenario") {
+        let scenario = asyncfleo::faults::FaultScenario::parse(sc)
+            .ok_or_else(|| anyhow::anyhow!("unknown fault scenario {sc}"))?;
+        let intensity = args
+            .opt_parse::<f64>("fault-intensity")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(1.0);
+        cfg.faults = asyncfleo::faults::FaultConfig::preset(scenario, intensity);
+    } else if args.opt("fault-intensity").is_some() {
+        anyhow::bail!("--fault-intensity requires --fault-scenario");
+    }
     let errs = cfg.validate();
     if !errs.is_empty() {
         anyhow::bail!("invalid config: {}", errs.join("; "));
@@ -152,6 +182,16 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             "\ndid not converge within horizon (final accuracy {:.2}%)",
             r.final_accuracy * 100.0
         ),
+    }
+    let fs = r.fault_stats;
+    if fs != asyncfleo::faults::FaultStats::default() {
+        println!(
+            "faults: {} retransmissions, {} deferrals ({:.2} h deferred), {} results lost",
+            fs.retransmits,
+            fs.deferrals,
+            fs.deferred_s / 3600.0,
+            fs.dropped_results
+        );
     }
     Ok(())
 }

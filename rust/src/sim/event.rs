@@ -21,6 +21,20 @@ pub enum EventKind {
     AggregationTick,
     /// Periodic bookkeeping (visibility refresh / scheduling sweep).
     Sweep,
+    /// Fault injection: a lost transfer is re-sent (`attempt` counts up
+    /// from 1 for one logical transfer).
+    Retransmit { sat: usize, attempt: u32 },
+    /// Fault injection: a scheduled outage window opens at PS `site`.
+    OutageStart { site: usize },
+    /// Fault injection: the outage window at PS `site` closes (HAPs
+    /// re-offer the current global model to whoever is visible).
+    OutageEnd { site: usize },
+    /// Fault injection: satellite `sat` drops out (`up = false`, its
+    /// in-progress training result is lost) or rejoins (`up = true`).
+    SatChurn { sat: usize, up: bool },
+    /// Fault injection: HAP `hap` fails or recovers; the HAP ring
+    /// re-heals around the change.
+    HapChurn { hap: usize, up: bool },
 }
 
 /// A scheduled event.
@@ -52,5 +66,17 @@ mod tests {
     #[should_panic]
     fn rejects_nan_time() {
         Event::new(f64::NAN, EventKind::Sweep);
+    }
+
+    #[test]
+    fn fault_events_construct() {
+        let e = Event::new(2.0, EventKind::SatChurn { sat: 3, up: false });
+        assert_eq!(e.kind, EventKind::SatChurn { sat: 3, up: false });
+        let e = Event::new(3.0, EventKind::Retransmit { sat: 1, attempt: 2 });
+        assert_ne!(e.kind, EventKind::Retransmit { sat: 1, attempt: 1 });
+        assert_eq!(
+            Event::new(1.0, EventKind::OutageEnd { site: 0 }).kind,
+            EventKind::OutageEnd { site: 0 }
+        );
     }
 }

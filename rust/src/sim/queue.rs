@@ -54,8 +54,17 @@ impl EventQueue {
         self.now_s
     }
 
-    /// Schedule an event. Panics if it is in the simulated past.
+    /// Schedule an event. Panics if its time is non-finite or in the
+    /// simulated past. Rejecting NaN/∞ up front matters: a NaN would
+    /// otherwise only explode later inside the heap's `Ord` (the
+    /// `expect("event times are finite")`), far from the buggy caller.
     pub fn push(&mut self, e: Event) {
+        assert!(
+            e.time_s.is_finite(),
+            "event time must be finite, got {} ({:?})",
+            e.time_s,
+            e.kind
+        );
         assert!(
             e.time_s >= self.now_s,
             "cannot schedule into the past: {} < {}",
@@ -157,6 +166,15 @@ mod tests {
         q.push_in(5.0, EventKind::AggregationTick);
         q.pop();
         assert_eq!(q.peek_time(), Some(15.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nonfinite_time() {
+        // Event::new rejects NaN, so smuggle an infinity through a
+        // struct literal — push must still catch it up front.
+        let mut q = EventQueue::new();
+        q.push(Event { time_s: f64::INFINITY, kind: EventKind::Sweep });
     }
 
     #[test]

@@ -1,25 +1,35 @@
-//! The HAP "backbone" ring: roles, arcs, and relay routing.
+//! The HAP "backbone" ring: roles, arcs, relay routing, and re-healing
+//! around failed nodes (fault injection, `crate::faults`).
 
-/// The ring of HAPs with current source/sink designation.
+/// The ring of HAPs with current source/sink designation and a
+/// liveness mask.
 ///
 /// Indices are positions on the ring (HAPs are placed on the ring in
 /// construction order; with the paper's 2-HAP setup the ring degenerates
 /// to a single bidirectional link, and with 1 HAP to a no-op).
+///
+/// Failed HAPs ([`Self::set_alive`]) are routed *around*: arcs, relay
+/// plans and role assignment all operate on the compacted ring of alive
+/// nodes, preserving construction order — the "re-healed" ring. With
+/// every node alive the behaviour is bit-identical to the pre-faults
+/// ring.
 #[derive(Clone, Debug)]
 pub struct HapRing {
     n: usize,
     source: usize,
     sink: usize,
+    alive: Vec<bool>,
 }
 
 impl HapRing {
-    /// Build a ring of `n` HAPs. The initial source is index 0 and the
-    /// sink is the farthest node around the ring (paper Sec. IV-B1).
+    /// Build a ring of `n` HAPs, all alive. The initial source is index
+    /// 0 and the sink is the farthest node around the ring (paper
+    /// Sec. IV-B1).
     pub fn new(n: usize) -> Self {
         assert!(n > 0, "ring needs at least one HAP");
         let source = 0;
         let sink = if n == 1 { 0 } else { n / 2 };
-        HapRing { n, source, sink }
+        HapRing { n, source, sink, alive: vec![true; n] }
     }
 
     pub fn len(&self) -> usize {
@@ -38,10 +48,85 @@ impl HapRing {
         self.sink
     }
 
-    /// Ring neighbours (prev, next) of HAP `i`.
+    pub fn is_alive(&self, i: usize) -> bool {
+        self.alive[i]
+    }
+
+    /// Number of currently-alive HAPs (always ≥ 1).
+    pub fn alive_len(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Mark HAP `i` failed (`up = false`) or recovered (`up = true`)
+    /// and re-heal: roles held by a dead node move to alive ones. The
+    /// last alive HAP cannot be failed (the request is ignored) — a
+    /// parameter-server constellation with zero PSs is not a scenario,
+    /// it is the end of the experiment.
+    pub fn set_alive(&mut self, i: usize, up: bool) {
+        assert!(i < self.n);
+        if self.alive[i] == up {
+            return;
+        }
+        if !up && self.alive_len() == 1 {
+            return;
+        }
+        self.alive[i] = up;
+        self.reheal();
+    }
+
+    /// Re-assign source/sink after a liveness change: a dead source
+    /// moves clockwise to the next alive node, and the sink moves to
+    /// the alive node farthest from the source along the healed ring.
+    fn reheal(&mut self) {
+        if !self.alive[self.source] {
+            self.source = (1..self.n)
+                .map(|k| (self.source + k) % self.n)
+                .find(|&j| self.alive[j])
+                .expect("at least one HAP alive");
+        }
+        if self.alive_len() == 1 {
+            self.sink = self.source;
+        } else if !self.alive[self.sink] || self.sink == self.source {
+            self.sink = self.farthest_alive_from(self.source);
+        }
+    }
+
+    /// Alive nodes plus `extras`, in ring (construction) order — the
+    /// compacted ring all routing operates on.
+    fn members_with(&self, extras: &[usize]) -> Vec<usize> {
+        (0..self.n).filter(|&j| self.alive[j] || extras.contains(&j)).collect()
+    }
+
+    /// The alive node with the greatest min-arc distance from `from`
+    /// on the healed ring (first in ring order on ties).
+    fn farthest_alive_from(&self, from: usize) -> usize {
+        let m = self.members_with(&[from]);
+        let len = m.len();
+        let pf = m.iter().position(|&x| x == from).expect("from in members");
+        let mut best = from;
+        let mut best_d = 0usize;
+        for (p, &j) in m.iter().enumerate() {
+            if j == from || !self.alive[j] {
+                continue;
+            }
+            let cw = (p + len - pf) % len;
+            let d = cw.min(len - cw);
+            if d > best_d {
+                best_d = d;
+                best = j;
+            }
+        }
+        best
+    }
+
+    /// Ring neighbours (prev, next) of HAP `i` on the healed ring
+    /// (dead nodes are skipped).
     pub fn neighbors(&self, i: usize) -> (usize, usize) {
         assert!(i < self.n);
-        ((i + self.n - 1) % self.n, (i + 1) % self.n)
+        let m = self.members_with(&[i]);
+        let len = m.len();
+        let p = m.iter().position(|&x| x == i).expect("i in members");
+        (m[(p + len - 1) % len], m[(p + 1) % len])
     }
 
     /// Swap source and sink roles (done after each aggregation so the
@@ -50,62 +135,65 @@ impl HapRing {
         std::mem::swap(&mut self.source, &mut self.sink);
     }
 
-    /// Hop distance from `i` to `j` going clockwise (`next` direction).
-    fn cw_dist(&self, i: usize, j: usize) -> usize {
-        (j + self.n - i) % self.n
-    }
-
-    /// Next hop from `i` toward `target` along the shorter arc
+    /// Next hop from `i` toward `target` along the shorter healed arc
     /// (ties broken clockwise). Returns `None` when already there.
+    /// Dead endpoints keep their ring position (a recovering or
+    /// draining node can still be routed to/from).
     pub fn next_hop_toward(&self, i: usize, target: usize) -> Option<usize> {
         assert!(i < self.n && target < self.n);
         if i == target {
             return None;
         }
-        let cw = self.cw_dist(i, target);
-        let ccw = self.n - cw;
-        let (prev, next) = self.neighbors(i);
-        Some(if cw <= ccw { next } else { prev })
+        let m = self.members_with(&[i, target]);
+        let len = m.len();
+        let pi = m.iter().position(|&x| x == i).expect("i in members");
+        let pt = m.iter().position(|&x| x == target).expect("target in members");
+        let cw = (pt + len - pi) % len;
+        let ccw = len - cw;
+        Some(if cw <= ccw { m[(pi + 1) % len] } else { m[(pi + len - 1) % len] })
     }
 
     /// The broadcast relay plan from `from`: each entry is
-    /// `(hap, forwards_to)` in BFS order along both arcs; the sink
-    /// forwards to nobody (Sec. IV-B1: "stop relaying at the sink").
-    /// Every HAP appears exactly once.
+    /// `(hap, forwards_to)` in BFS order along both healed arcs; the
+    /// sink forwards to nobody (Sec. IV-B1: "stop relaying at the
+    /// sink"). Every *alive* HAP appears exactly once; dead HAPs are
+    /// routed around and receive nothing.
     pub fn relay_plan(&self, from: usize) -> Vec<(usize, Vec<usize>)> {
         assert!(from < self.n);
-        let mut plan = Vec::with_capacity(self.n);
-        if self.n == 1 {
-            plan.push((from, vec![]));
-            return plan;
+        let m = self.members_with(&[from]);
+        let len = m.len();
+        if len == 1 {
+            return vec![(from, vec![])];
         }
-        // Each node j != from receives from exactly one parent: the
-        // neighbour one hop closer to `from` along j's shorter arc
+        let pf = m.iter().position(|&x| x == from).expect("from in members");
+        let cw_from = |p: usize| (p + len - pf) % len;
+        // Each node p != pf receives from exactly one parent: the
+        // neighbour one hop closer to `from` along p's shorter arc
         // (clockwise on ties). Invert the parent relation into
         // forwarding lists, ordered by arc distance (= relay order).
-        let mut order: Vec<usize> = (0..self.n).collect();
-        order.sort_by_key(|&j| {
-            let cw = self.cw_dist(from, j);
-            cw.min(self.n - cw)
+        let mut order: Vec<usize> = (0..len).collect();
+        order.sort_by_key(|&p| {
+            let cw = cw_from(p);
+            cw.min(len - cw)
         });
-        let mut fwd: Vec<Vec<usize>> = vec![Vec::new(); self.n];
-        for &j in &order {
-            if j == from {
+        let mut fwd: Vec<Vec<usize>> = vec![Vec::new(); len];
+        for &p in &order {
+            if p == pf {
                 continue;
             }
-            let cw = self.cw_dist(from, j); // hops if travelling clockwise
-            let ccw = self.n - cw;
+            let cw = cw_from(p);
+            let ccw = len - cw;
             let parent = if cw <= ccw {
-                (j + self.n - 1) % self.n // came from the cw direction
+                (p + len - 1) % len // came from the cw direction
             } else {
-                (j + 1) % self.n // came from the ccw direction
+                (p + 1) % len // came from the ccw direction
             };
-            fwd[parent].push(j);
+            fwd[parent].push(p);
         }
-        for &h in &order {
-            plan.push((h, fwd[h].clone()));
-        }
-        plan
+        order
+            .iter()
+            .map(|&p| (m[p], fwd[p].iter().map(|&q| m[q]).collect()))
+            .collect()
     }
 }
 
@@ -206,5 +294,93 @@ mod tests {
         let plan = r.relay_plan(2);
         assert_eq!(plan[0].0, 2);
         assert_eq!(plan[0].1.len(), 2, "origin transmits to both neighbors");
+    }
+
+    // --- re-healing (fault injection) ---
+
+    #[test]
+    fn failing_the_sink_moves_it_to_an_alive_node() {
+        let mut r = HapRing::new(4); // source 0, sink 2
+        r.set_alive(2, false);
+        assert!(r.is_alive(r.sink()), "sink must re-heal onto an alive node");
+        assert_ne!(r.sink(), 2);
+        assert_eq!(r.source(), 0, "source untouched");
+        assert_eq!(r.alive_len(), 3);
+    }
+
+    #[test]
+    fn failing_the_source_moves_it_clockwise() {
+        let mut r = HapRing::new(4);
+        r.set_alive(0, false);
+        assert_eq!(r.source(), 1, "next alive clockwise");
+        assert!(r.is_alive(r.sink()));
+        assert_ne!(r.source(), r.sink());
+    }
+
+    #[test]
+    fn healed_ring_routes_around_dead_node() {
+        let mut r = HapRing::new(4);
+        r.set_alive(1, false);
+        // 0 -> 2 now hops directly (1 is skipped)
+        assert_eq!(r.next_hop_toward(0, 2), Some(2));
+        let (prev, next) = r.neighbors(0);
+        assert_eq!(next, 2);
+        assert_eq!(prev, 3);
+    }
+
+    #[test]
+    fn relay_plan_skips_dead_nodes() {
+        let mut r = HapRing::new(5);
+        r.set_alive(3, false);
+        let plan = r.relay_plan(0);
+        let nodes: Vec<usize> = plan.iter().map(|(h, _)| *h).collect();
+        assert!(!nodes.contains(&3), "dead HAP must not relay");
+        assert_eq!(nodes.len(), 4);
+        let mut recv = vec![0usize; 5];
+        for (_, fwd) in &plan {
+            for &t in fwd {
+                recv[t] += 1;
+            }
+        }
+        assert_eq!(recv, vec![0, 1, 1, 0, 1]);
+    }
+
+    #[test]
+    fn last_alive_hap_cannot_fail() {
+        let mut r = HapRing::new(2);
+        r.set_alive(0, false);
+        assert_eq!(r.alive_len(), 1);
+        r.set_alive(1, false); // ignored
+        assert!(r.is_alive(1));
+        assert_eq!(r.source(), 1);
+        assert_eq!(r.sink(), 1);
+    }
+
+    #[test]
+    fn recovery_rejoins_the_ring() {
+        let mut r = HapRing::new(4);
+        r.set_alive(2, false);
+        r.set_alive(2, true);
+        assert_eq!(r.alive_len(), 4);
+        let plan = r.relay_plan(r.source());
+        assert_eq!(plan.len(), 4, "recovered HAP relays again");
+        // roles still on alive, distinct nodes
+        assert!(r.is_alive(r.source()) && r.is_alive(r.sink()));
+        assert_ne!(r.source(), r.sink());
+    }
+
+    #[test]
+    fn roles_stay_valid_under_churn_sequences() {
+        let mut r = HapRing::new(6);
+        for &(i, up) in
+            &[(3usize, false), (0, false), (3, true), (1, false), (5, false), (0, true)]
+        {
+            r.set_alive(i, up);
+            assert!(r.is_alive(r.source()), "source alive after ({i},{up})");
+            assert!(r.is_alive(r.sink()), "sink alive after ({i},{up})");
+            if r.alive_len() > 1 {
+                assert_ne!(r.source(), r.sink());
+            }
+        }
     }
 }

@@ -1,0 +1,164 @@
+//! Integration tests of the fault-injection subsystem across
+//! strategies (surrogate backend, real geometry/topology/DES):
+//!
+//! * non-invasiveness — zero-intensity faults leave every strategy's
+//!   RunResult bit-identical to the nominal code path;
+//! * determinism — the same seed reproduces bit-identical RunResults
+//!   under every fault scenario (draws come only from the seeded
+//!   `util::Rng`, never wall-clock);
+//! * end-to-end — every fault scenario runs to completion for
+//!   AsyncFLEO and two baselines, with the fault accounting populated.
+
+use asyncfleo::config::{ExperimentConfig, PsPlacement, SchemeKind};
+use asyncfleo::coordinator::{RunResult, SimEnv};
+use asyncfleo::faults::{FaultConfig, FaultScenario};
+use asyncfleo::fl::make_strategy;
+use asyncfleo::train::SurrogateBackend;
+
+/// The scheme/placement triples the resilience experiment sweeps.
+const SCHEMES: &[(SchemeKind, PsPlacement)] = &[
+    (SchemeKind::AsyncFleo, PsPlacement::TwoHaps),
+    (SchemeKind::FedHap, PsPlacement::TwoHaps),
+    (SchemeKind::FedSat, PsPlacement::GsNorthPole),
+];
+
+fn run_with_faults(
+    scheme: SchemeKind,
+    placement: PsPlacement,
+    faults: FaultConfig,
+    horizon_h: f64,
+) -> RunResult {
+    let mut cfg = ExperimentConfig::paper_defaults();
+    cfg.fl.scheme = scheme;
+    cfg.placement = placement;
+    cfg.fl.horizon_s = horizon_h * 3600.0;
+    cfg.fl.max_epochs = 25;
+    cfg.faults = faults;
+    let mut backend = SurrogateBackend::paper_split(5, 8, false, 100);
+    let mut env = SimEnv::new(&cfg, &mut backend);
+    make_strategy(scheme).run(&mut env)
+}
+
+fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.epochs, b.epochs, "{what}: epochs");
+    assert_eq!(a.transfers, b.transfers, "{what}: transfers");
+    assert_eq!(a.fault_stats, b.fault_stats, "{what}: fault stats");
+    assert_eq!(a.curve.points.len(), b.curve.points.len(), "{what}: curve length");
+    for (x, y) in a.curve.points.iter().zip(&b.curve.points) {
+        assert_eq!(x.time_s, y.time_s, "{what}: point time");
+        assert_eq!(x.accuracy, y.accuracy, "{what}: point accuracy");
+        assert_eq!(x.loss, y.loss, "{what}: point loss");
+    }
+}
+
+#[test]
+fn zero_intensity_is_bit_identical_to_nominal_for_every_scheme() {
+    for &(scheme, placement) in SCHEMES {
+        let clean = run_with_faults(scheme, placement, FaultConfig::nominal(), 24.0);
+        for scenario in [FaultScenario::Lossy, FaultScenario::Eclipse, FaultScenario::Churn] {
+            let zero = run_with_faults(
+                scheme,
+                placement,
+                FaultConfig::preset(scenario, 0.0),
+                24.0,
+            );
+            assert_bit_identical(
+                &clean,
+                &zero,
+                &format!("{scheme:?} under zero-intensity {scenario:?}"),
+            );
+            assert_eq!(zero.fault_stats, Default::default());
+        }
+    }
+}
+
+#[test]
+fn same_seed_reproduces_bit_identical_faulty_runs() {
+    for scenario in [
+        FaultScenario::Lossy,
+        FaultScenario::Eclipse,
+        FaultScenario::Churn,
+        FaultScenario::HapFailure,
+    ] {
+        let faults = FaultConfig::preset(scenario, 1.0);
+        let a = run_with_faults(SchemeKind::AsyncFleo, PsPlacement::TwoHaps, faults, 24.0);
+        let b = run_with_faults(SchemeKind::AsyncFleo, PsPlacement::TwoHaps, faults, 24.0);
+        assert_bit_identical(&a, &b, &format!("asyncfleo under {scenario:?}"));
+    }
+}
+
+#[test]
+fn every_scenario_runs_end_to_end_for_ours_and_two_baselines() {
+    for scenario in [
+        FaultScenario::Lossy,
+        FaultScenario::Eclipse,
+        FaultScenario::Churn,
+        FaultScenario::HapFailure,
+    ] {
+        for &(scheme, placement) in SCHEMES {
+            let r = run_with_faults(scheme, placement, FaultConfig::preset(scenario, 1.0), 24.0);
+            assert!(
+                !r.curve.points.is_empty(),
+                "{scheme:?} under {scenario:?} must record a curve"
+            );
+            assert!(
+                r.final_accuracy.is_finite() && (0.0..=1.0).contains(&r.final_accuracy),
+                "{scheme:?} under {scenario:?}: accuracy {}",
+                r.final_accuracy
+            );
+        }
+    }
+}
+
+#[test]
+fn lossy_links_produce_retransmissions_and_extra_transfers() {
+    let clean =
+        run_with_faults(SchemeKind::AsyncFleo, PsPlacement::TwoHaps, FaultConfig::nominal(), 24.0);
+    let lossy = run_with_faults(
+        SchemeKind::AsyncFleo,
+        PsPlacement::TwoHaps,
+        FaultConfig::preset(FaultScenario::Lossy, 1.0),
+        24.0,
+    );
+    assert!(
+        lossy.fault_stats.retransmits > 0,
+        "30% loss over a day of transfers must retransmit"
+    );
+    assert_eq!(clean.fault_stats.retransmits, 0);
+}
+
+#[test]
+fn eclipse_outages_defer_transfers() {
+    let r = run_with_faults(
+        SchemeKind::AsyncFleo,
+        PsPlacement::TwoHaps,
+        FaultConfig::preset(FaultScenario::Eclipse, 1.0),
+        24.0,
+    );
+    assert!(
+        r.fault_stats.deferrals > 0 && r.fault_stats.deferred_s > 0.0,
+        "30-min windows every 2 h must defer some transfers: {:?}",
+        r.fault_stats
+    );
+}
+
+#[test]
+fn asyncfleo_still_learns_under_full_churn() {
+    // The headline resilience property: with satellites dropping out
+    // for hours at a time, the asynchronous design keeps aggregating
+    // whatever arrives and still improves on the untrained model.
+    let r = run_with_faults(
+        SchemeKind::AsyncFleo,
+        PsPlacement::TwoHaps,
+        FaultConfig::preset(FaultScenario::Churn, 1.0),
+        48.0,
+    );
+    let first = r.curve.points.first().expect("initial eval").accuracy;
+    assert!(r.epochs >= 1, "aggregation must still happen under churn");
+    assert!(
+        r.final_accuracy > first + 0.1,
+        "must learn despite churn: {} -> {}",
+        first,
+        r.final_accuracy
+    );
+}

@@ -1,0 +1,189 @@
+//! Offline drop-in subset of the `anyhow` error-handling crate.
+//!
+//! crates.io is unreachable in this environment (DESIGN.md §1), so the
+//! few pieces of `anyhow` the workspace actually uses are reimplemented
+//! here: [`Error`], [`Result`], the [`Context`] extension trait and the
+//! [`anyhow!`] / [`bail!`] macros. Semantics match the real crate for
+//! those pieces: `{}` prints the outermost message, `{:#}` prints the
+//! whole context chain separated by `": "`.
+
+use std::fmt;
+
+/// A context-carrying error value. The first entry of `chain` is the
+/// outermost (most recently attached) message; the last is the root
+/// cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message (the `anyhow::Error::msg`
+    /// constructor the workspace uses with `map_err`).
+    pub fn msg<M: fmt::Display + Send + Sync + 'static>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: fmt::Display + Send + Sync + 'static>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, like anyhow's alternate display
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow renders Debug as the message plus a cause list
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` conversion from any std error. Mirrors anyhow: `Error` itself
+// deliberately does NOT implement `std::error::Error`, which is what
+// keeps this blanket impl coherent next to `impl From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result`, defaulting the error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait attaching context to `Result` / `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("loading config").unwrap_err();
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: no such file");
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u32>.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().root_cause(), "no such file");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn g() -> Result<()> {
+            bail!("nope: {}", "reason");
+        }
+        assert_eq!(g().unwrap_err().to_string(), "nope: reason");
+    }
+
+    #[test]
+    fn context_stacks_on_anyhow_results() {
+        fn inner() -> Result<()> {
+            bail!("root");
+        }
+        let e = inner().context("mid").context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        assert_eq!(e.chain().count(), 3);
+    }
+}
