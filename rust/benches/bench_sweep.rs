@@ -1,0 +1,68 @@
+//! Sweep-executor benchmark: the fast surrogate Table II grid run
+//! sequentially vs on `--jobs N` worker threads, plus the cost of one
+//! cold geometry build (what every sweep cell used to pay before the
+//! shared `Geometry` cache).
+//!
+//! Emits `BENCH_sweep.json` (cells/sec, geometry-build time, speedup)
+//! so the perf trajectory of the executor is tracked across PRs.
+//!
+//! Run: `cargo bench --offline --bench bench_sweep`
+
+use asyncfleo::bench::black_box;
+use asyncfleo::coordinator::Geometry;
+use asyncfleo::experiments::drivers::{table2_cells, ExpOptions};
+use asyncfleo::experiments::executor::run_cells;
+use std::io::Write;
+use std::time::Instant;
+
+const PAR_JOBS: usize = 4;
+
+fn main() {
+    let opts_seq = ExpOptions { fast: true, surrogate: true, jobs: 1, ..Default::default() };
+    let opts_par = ExpOptions { jobs: PAR_JOBS, ..opts_seq.clone() };
+    let cells = table2_cells(&opts_seq);
+    let n_cells = cells.len();
+
+    // One cold geometry build (cache bypassed): the per-cell cost the
+    // shared cache amortizes to once per unique geometry.
+    let t0 = Instant::now();
+    black_box(Geometry::build(&cells[0].cfg));
+    let geometry_build_s = t0.elapsed().as_secs_f64();
+
+    // Warm the cache so both timed passes measure pure run time.
+    for cell in &cells {
+        Geometry::shared(&cell.cfg);
+    }
+
+    let t0 = Instant::now();
+    let seq = run_cells(&cells, &opts_seq).expect("sequential sweep");
+    let sequential_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let par = run_cells(&cells, &opts_par).expect("parallel sweep");
+    let parallel_s = t0.elapsed().as_secs_f64();
+
+    // sanity: the executor's determinism contract, checked here too so
+    // a bench run can never silently report a speedup on wrong results
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.epochs, b.epochs, "parallel run diverged from sequential");
+        assert_eq!(a.transfers, b.transfers, "parallel run diverged from sequential");
+    }
+
+    let speedup = sequential_s / parallel_s.max(1e-9);
+    println!("\n== sweep executor (table2 fast surrogate, {n_cells} cells) ==");
+    println!("geometry build (cold):    {geometry_build_s:>9.3} s");
+    println!("sequential (--jobs 1):    {sequential_s:>9.3} s  ({:.2} cells/s)", n_cells as f64 / sequential_s);
+    println!("parallel   (--jobs {PAR_JOBS}):    {parallel_s:>9.3} s  ({:.2} cells/s)", n_cells as f64 / parallel_s);
+    println!("speedup:                  {speedup:>9.2} x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"sweep\",\n  \"cells\": {n_cells},\n  \"jobs\": {PAR_JOBS},\n  \"geometry_build_s\": {geometry_build_s:.6},\n  \"sequential_s\": {sequential_s:.6},\n  \"parallel_s\": {parallel_s:.6},\n  \"speedup\": {speedup:.4},\n  \"cells_per_sec_sequential\": {:.4},\n  \"cells_per_sec_parallel\": {:.4}\n}}\n",
+        n_cells as f64 / sequential_s,
+        n_cells as f64 / parallel_s,
+    );
+    let mut f = std::fs::File::create("BENCH_sweep.json").expect("create BENCH_sweep.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_sweep.json");
+    println!("wrote BENCH_sweep.json");
+}

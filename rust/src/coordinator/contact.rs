@@ -49,7 +49,23 @@ impl ContactPlan {
                     .collect()
             })
             .collect();
-        ContactPlan { windows, horizon_s }
+        let plan = ContactPlan { windows, horizon_s };
+        // Window times are finite by construction (finite horizon/step,
+        // bisection only averages); assert it once here so every
+        // downstream total-order min / sort / event push can rely on it
+        // instead of carrying per-call `partial_cmp(..).unwrap()` panic
+        // paths.
+        for site_windows in &plan.windows {
+            for sat_windows in site_windows {
+                for w in sat_windows {
+                    assert!(
+                        w.start_s.is_finite() && w.end_s.is_finite(),
+                        "non-finite contact window {w:?}"
+                    );
+                }
+            }
+        }
+        plan
     }
 
     pub fn n_sites(&self) -> usize {
@@ -80,17 +96,21 @@ impl ContactPlan {
         ws.get(idx).map(|w| w.start_s.max(t))
     }
 
-    /// All satellites visible from `site` at `t`.
-    pub fn visible_sats(&self, site: usize, t: f64) -> Vec<usize> {
-        (0..self.windows[site].len()).filter(|&s| self.visible(site, s, t)).collect()
+    /// All satellites visible from `site` at `t`, in id order.
+    /// Allocation-free: callers iterate (or `collect` when they truly
+    /// need a `Vec`) — this sits inside broadcast/relay hot loops.
+    pub fn visible_sats(&self, site: usize, t: f64) -> impl Iterator<Item = usize> + '_ {
+        (0..self.windows[site].len()).filter(move |&s| self.visible(site, s, t))
     }
 
     /// Earliest time ≥ `t` at which `sat` is visible from *any* site;
-    /// returns `(time, site)`.
+    /// returns `(time, site)`. Window times are asserted finite at
+    /// construction, so the total-order comparison here can never meet
+    /// (or be confused by) a NaN — no panic path.
     pub fn next_visible_any(&self, sat: usize, t: f64) -> Option<(f64, usize)> {
         (0..self.n_sites())
             .filter_map(|site| self.next_visible(site, sat, t).map(|tt| (tt, site)))
-            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .min_by(|a, b| a.0.total_cmp(&b.0))
     }
 
     /// Fraction of the horizon that `sat` is visible from `site`.
@@ -166,7 +186,7 @@ mod tests {
     fn visible_sats_matches_visible() {
         let (_, p) = plan();
         let t = 43_200.0;
-        let vs = p.visible_sats(0, t);
+        let vs: Vec<usize> = p.visible_sats(0, t).collect();
         for sat in 0..40 {
             assert_eq!(vs.contains(&sat), p.visible(0, sat, t));
         }

@@ -1,22 +1,28 @@
 //! The simulation environment handed to every FL strategy.
+//!
+//! Split across the sweep axis (PR 2): everything immutable across runs
+//! lives in a shared [`Geometry`] (`Arc`-cached per unique geometry
+//! config, see [`super::geometry`]); everything a single run mutates —
+//! the RNG, the accuracy curve, the transfer counter, the fault plan
+//! and the compute backend — lives in [`RunState`]. [`SimEnv`] is a
+//! thin facade over the two: strategies keep calling the same delay /
+//! record methods, and sweep executors can run many `RunState`s against
+//! one `Geometry` concurrently.
 
 use super::contact::ContactPlan;
+use super::geometry::Geometry;
 use crate::comm::delay::{model_bits, total_delay_s};
-use crate::comm::LinkParams;
 use crate::config::ExperimentConfig;
 use crate::faults::{FaultPlan, FaultStats, LinkClass};
 use crate::metrics::{Curve, CurvePoint};
 use crate::orbit::{GeodeticSite, WalkerConstellation};
 use crate::train::Backend;
 use crate::util::Rng;
+use std::sync::Arc;
 
-/// Everything a strategy needs: geometry, contacts, delays, compute.
-pub struct SimEnv<'a> {
-    pub cfg: ExperimentConfig,
-    pub constellation: WalkerConstellation,
-    pub sites: Vec<GeodeticSite>,
-    pub plan: ContactPlan,
-    pub link: LinkParams,
+/// Everything one run mutates: seeded randomness, metrics, the fault
+/// injection counters and the compute backend.
+pub struct RunState<'a> {
     pub backend: &'a mut dyn Backend,
     pub rng: Rng,
     pub curve: Curve,
@@ -28,84 +34,106 @@ pub struct SimEnv<'a> {
     pub faults: FaultPlan,
 }
 
+/// Everything a strategy needs: geometry, contacts, delays, compute.
+pub struct SimEnv<'a> {
+    pub cfg: ExperimentConfig,
+    /// Shared immutable geometry (constellation, sites, contact plan,
+    /// link params). Clone the `Arc` to iterate contact-plan data while
+    /// mutating run state.
+    pub geo: Arc<Geometry>,
+    /// Per-run mutable state.
+    pub state: RunState<'a>,
+}
+
 impl<'a> SimEnv<'a> {
-    /// Build the environment: constellation + contact plan from config.
+    /// Build the environment, fetching (or building) the shared
+    /// geometry for `cfg` from the process-wide cache.
     pub fn new(cfg: &ExperimentConfig, backend: &'a mut dyn Backend) -> Self {
-        let constellation = WalkerConstellation::new(
-            cfg.constellation.n_orbits,
-            cfg.constellation.sats_per_orbit,
-            cfg.constellation.altitude_km,
-            cfg.constellation.inclination_deg,
-            cfg.constellation.phasing,
-        );
+        let geo = Geometry::shared(cfg);
+        Self::with_geometry(cfg, geo, backend)
+    }
+
+    /// Build the environment on an explicitly provided geometry (sweep
+    /// executors pass a pre-fetched `Arc` here).
+    pub fn with_geometry(
+        cfg: &ExperimentConfig,
+        geo: Arc<Geometry>,
+        backend: &'a mut dyn Backend,
+    ) -> Self {
         assert_eq!(
-            constellation.len(),
+            geo.constellation.len(),
             backend.n_sats(),
             "backend shard count must match constellation size"
-        );
-        let sites = cfg.placement.sites();
-        let plan = ContactPlan::build(
-            &constellation,
-            &sites,
-            cfg.min_elevation_deg,
-            cfg.fl.horizon_s,
         );
         let faults = FaultPlan::new(
             &cfg.faults,
             cfg.seed,
-            constellation.len(),
-            sites.len(),
+            geo.constellation.len(),
+            geo.sites.len(),
             cfg.constellation.sats_per_orbit,
             cfg.fl.horizon_s,
         );
         SimEnv {
             cfg: cfg.clone(),
-            constellation,
-            sites,
-            plan,
-            link: cfg.link,
-            backend,
-            rng: Rng::new(cfg.seed ^ 0xE5E57),
-            curve: Curve::default(),
-            transfers: 0,
-            faults,
+            geo,
+            state: RunState {
+                backend,
+                rng: Rng::new(cfg.seed ^ 0xE5E57),
+                curve: Curve::default(),
+                transfers: 0,
+                faults,
+            },
         }
+    }
+
+    /// Facade accessors over the shared geometry.
+    pub fn constellation(&self) -> &WalkerConstellation {
+        &self.geo.constellation
+    }
+
+    pub fn sites(&self) -> &[GeodeticSite] {
+        &self.geo.sites
+    }
+
+    pub fn plan(&self) -> &ContactPlan {
+        &self.geo.plan
     }
 
     /// Model payload size in bits for the current model dimension.
     pub fn payload_bits(&self) -> f64 {
-        model_bits(self.backend.dim())
+        model_bits(self.state.backend.dim())
     }
 
     /// SAT↔site transfer delay at time `t` (Eq. 7), fault-adjusted.
     pub fn site_link_delay(&mut self, site: usize, sat: usize, t: f64) -> f64 {
-        self.transfers += 1;
-        let d = self.sites[site]
+        self.state.transfers += 1;
+        let d = self.geo.sites[site]
             .position_eci(t)
-            .distance(self.constellation.position(sat, t));
-        let base = total_delay_s(&self.link, self.payload_bits(), d);
+            .distance(self.geo.constellation.position(sat, t));
+        let base = total_delay_s(&self.geo.link, self.payload_bits(), d);
         self.apply_faults(LinkClass::SatSite { sat, site }, t, base)
     }
 
     /// Intra-orbit ISL hop delay between ring neighbours at time `t`,
     /// fault-adjusted.
     pub fn isl_hop_delay(&mut self, sat_a: usize, sat_b: usize, t: f64) -> f64 {
-        self.transfers += 1;
+        self.state.transfers += 1;
         let d = self
+            .geo
             .constellation
             .position(sat_a, t)
-            .distance(self.constellation.position(sat_b, t));
-        let base = total_delay_s(&self.link, self.payload_bits(), d);
+            .distance(self.geo.constellation.position(sat_b, t));
+        let base = total_delay_s(&self.geo.link, self.payload_bits(), d);
         self.apply_faults(LinkClass::Isl { sat_a, sat_b }, t, base)
     }
 
     /// HAP↔HAP (IHL) hop delay at time `t`, fault-adjusted.
     pub fn ihl_hop_delay(&mut self, site_a: usize, site_b: usize, t: f64) -> f64 {
-        self.transfers += 1;
-        let d = self.sites[site_a]
+        self.state.transfers += 1;
+        let d = self.geo.sites[site_a]
             .position_eci(t)
-            .distance(self.sites[site_b].position_eci(t));
-        let base = total_delay_s(&self.link, self.payload_bits(), d);
+            .distance(self.geo.sites[site_b].position_eci(t));
+        let base = total_delay_s(&self.geo.link, self.payload_bits(), d);
         self.apply_faults(LinkClass::Ihl { site_a, site_b }, t, base)
     }
 
@@ -113,21 +141,21 @@ impl<'a> SimEnv<'a> {
     /// disabled this returns `base` untouched and draws nothing, so
     /// clean runs stay bit-identical to the pre-faults code path.
     fn apply_faults(&mut self, class: LinkClass, t: f64, base: f64) -> f64 {
-        if !self.faults.enabled() {
+        if !self.state.faults.enabled() {
             return base;
         }
-        let out = self.faults.transfer(class, t, base);
+        let out = self.state.faults.transfer(class, t, base);
         // every retransmission re-sends the payload: communication
         // cost — counted once per channel event, not per probe of it
         if out.newly_observed {
-            self.transfers += out.retransmits as u64;
+            self.state.transfers += out.retransmits as u64;
         }
         out.delay_s
     }
 
     /// Record an evaluation point on the run curve.
     pub fn record(&mut self, t: f64, epoch: u64, accuracy: f64, loss: f64) {
-        self.curve.push(CurvePoint { time_s: t, epoch, accuracy, loss });
+        self.state.curve.push(CurvePoint { time_s: t, epoch, accuracy, loss });
     }
 
     /// On-board training wall time per visit (the compute-time model:
@@ -155,12 +183,12 @@ impl RunResult {
     pub fn from_env(scheme: &'static str, env: &SimEnv, epochs: u64) -> Self {
         RunResult {
             scheme,
-            converged: env.curve.convergence(0.005, 3),
-            final_accuracy: env.curve.final_accuracy().unwrap_or(0.0),
-            curve: env.curve.clone(),
+            converged: env.state.curve.convergence(0.005, 3),
+            final_accuracy: env.state.curve.final_accuracy().unwrap_or(0.0),
+            curve: env.state.curve.clone(),
             epochs,
-            transfers: env.transfers,
-            fault_stats: env.faults.stats(),
+            transfers: env.state.transfers,
+            fault_stats: env.state.faults.stats(),
         }
     }
 
@@ -203,7 +231,30 @@ mod tests {
         assert!(d > 0.0 && d < 10.0, "delay {d}");
         let d2 = env.isl_hop_delay(0, 1, 1000.0);
         assert!(d2 > 0.0 && d2 < 10.0);
-        assert_eq!(env.transfers, 2);
+        assert_eq!(env.state.transfers, 2);
+    }
+
+    #[test]
+    fn envs_with_identical_geometry_share_one_instance() {
+        let mut cfg = ExperimentConfig::test_small();
+        cfg.fl.horizon_s = 3600.0 * 12.0;
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 1234; // non-geometry knob: same shared geometry
+        let mut b1 = SurrogateBackend::paper_split(2, 3, true, 100);
+        let mut b2 = SurrogateBackend::paper_split(2, 3, false, 100);
+        let env1 = SimEnv::new(&cfg, &mut b1);
+        let env2 = SimEnv::new(&cfg2, &mut b2);
+        assert!(Arc::ptr_eq(&env1.geo, &env2.geo));
+    }
+
+    #[test]
+    fn facade_accessors_project_geometry() {
+        let cfg = ExperimentConfig::test_small();
+        let mut b = SurrogateBackend::paper_split(2, 3, true, 100);
+        let env = small_env(&mut b);
+        assert_eq!(env.constellation().len(), cfg.n_sats());
+        assert_eq!(env.sites().len(), cfg.placement.sites().len());
+        assert_eq!(env.plan().n_sites(), env.sites().len());
     }
 
     #[test]
@@ -224,8 +275,11 @@ mod tests {
             100,
         );
         let env = small_env(&mut b);
-        assert!(!env.faults.enabled(), "nominal faults must stay out of the hot path");
-        assert_eq!(env.faults.stats(), crate::faults::FaultStats::default());
+        assert!(
+            !env.state.faults.enabled(),
+            "nominal faults must stay out of the hot path"
+        );
+        assert_eq!(env.state.faults.stats(), crate::faults::FaultStats::default());
     }
 
     #[test]
@@ -245,9 +299,12 @@ mod tests {
             let df = faulty.site_link_delay(0, 0, t);
             assert!(df >= dc - 1e-12, "fault delay {df} below clean {dc}");
         }
-        assert!(faulty.faults.stats().retransmits > 0, "30% loss over 50 sends");
         assert!(
-            faulty.transfers > clean.transfers,
+            faulty.state.faults.stats().retransmits > 0,
+            "30% loss over 50 sends"
+        );
+        assert!(
+            faulty.state.transfers > clean.state.transfers,
             "retransmissions must show up in the communication cost"
         );
     }

@@ -1,0 +1,219 @@
+//! Shared, immutable run geometry: everything that is a pure function
+//! of the *geometry-relevant* subset of an [`ExperimentConfig`] —
+//! constellation, PS sites, the pre-computed [`ContactPlan`] and the RF
+//! link parameters.
+//!
+//! Building a [`ContactPlan`] re-propagates the whole constellation and
+//! scans the full horizon (30 s steps + bisection), which dominates
+//! `SimEnv` construction. Every cell of an experiment sweep used to pay
+//! that cost; a Table II run pays it 8×, a resilience sweep dozens of
+//! times — all for identical geometry. [`Geometry::shared`] builds each
+//! unique geometry exactly once per process and hands out `Arc`s, so
+//! sweep cells (including the parallel executor's worker threads) share
+//! one immutable instance. Per-run mutable state lives in
+//! [`super::env::RunState`]; `Geometry` is strictly `Send + Sync`.
+
+use super::contact::ContactPlan;
+use crate::comm::LinkParams;
+use crate::config::{ExperimentConfig, PsPlacement};
+use crate::orbit::{GeodeticSite, WalkerConstellation};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Immutable cross-run geometry (see module docs).
+pub struct Geometry {
+    pub constellation: WalkerConstellation,
+    pub sites: Vec<GeodeticSite>,
+    pub plan: ContactPlan,
+    pub link: LinkParams,
+}
+
+/// The geometry-relevant subset of an [`ExperimentConfig`], with every
+/// `f64` keyed by its bit pattern (configs are either copied or parsed
+/// from the same text, so bit equality is the right identity here —
+/// NaN never appears, `validate` and the constructors reject it).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct GeometryKey {
+    n_orbits: usize,
+    sats_per_orbit: usize,
+    altitude_bits: u64,
+    inclination_bits: u64,
+    phasing: usize,
+    placement: PsPlacement,
+    min_elevation_bits: u64,
+    horizon_bits: u64,
+    link_bits: [u64; 8],
+}
+
+impl GeometryKey {
+    fn of(cfg: &ExperimentConfig) -> Self {
+        let c = &cfg.constellation;
+        let l = &cfg.link;
+        GeometryKey {
+            n_orbits: c.n_orbits,
+            sats_per_orbit: c.sats_per_orbit,
+            altitude_bits: c.altitude_km.to_bits(),
+            inclination_bits: c.inclination_deg.to_bits(),
+            phasing: c.phasing,
+            placement: cfg.placement,
+            min_elevation_bits: cfg.min_elevation_deg.to_bits(),
+            horizon_bits: cfg.fl.horizon_s.to_bits(),
+            link_bits: [
+                l.tx_power_dbm.to_bits(),
+                l.tx_gain_dbi.to_bits(),
+                l.rx_gain_dbi.to_bits(),
+                l.carrier_hz.to_bits(),
+                l.noise_temp_k.to_bits(),
+                l.bandwidth_hz.to_bits(),
+                l.data_rate_bps.to_bits(),
+                l.processing_delay_s.to_bits(),
+            ],
+        }
+    }
+}
+
+/// Cache of per-key build cells. The map lock is only held to fetch or
+/// insert a cell; the expensive build runs inside the cell's own
+/// `OnceLock`, so concurrent requests for *different* keys never
+/// serialize while same-key requests still build exactly once.
+type BuildCell = Arc<OnceLock<Arc<Geometry>>>;
+
+fn cache() -> &'static Mutex<HashMap<GeometryKey, BuildCell>> {
+    static CACHE: OnceLock<Mutex<HashMap<GeometryKey, BuildCell>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Per-key count of [`Geometry::build`] invocations — the evidence for
+/// the cache's exactly-once contract (sweep tests assert it is 1).
+fn build_counts() -> &'static Mutex<HashMap<GeometryKey, u64>> {
+    static COUNTS: OnceLock<Mutex<HashMap<GeometryKey, u64>>> = OnceLock::new();
+    COUNTS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+impl Geometry {
+    /// Build from scratch, bypassing the cache (benches time this; the
+    /// rest of the crate goes through [`Geometry::shared`]).
+    pub fn build(cfg: &ExperimentConfig) -> Geometry {
+        *build_counts()
+            .lock()
+            .unwrap()
+            .entry(GeometryKey::of(cfg))
+            .or_insert(0) += 1;
+        let constellation = WalkerConstellation::new(
+            cfg.constellation.n_orbits,
+            cfg.constellation.sats_per_orbit,
+            cfg.constellation.altitude_km,
+            cfg.constellation.inclination_deg,
+            cfg.constellation.phasing,
+        );
+        let sites = cfg.placement.sites();
+        let plan = ContactPlan::build(
+            &constellation,
+            &sites,
+            cfg.min_elevation_deg,
+            cfg.fl.horizon_s,
+        );
+        Geometry { constellation, sites, plan, link: cfg.link }
+    }
+
+    /// The process-wide shared instance for `cfg`'s geometry subset.
+    ///
+    /// Each unique geometry is constructed exactly once per process no
+    /// matter how many threads ask concurrently (same-key callers block
+    /// on one build; different keys build in parallel); everyone gets
+    /// the same `Arc`.
+    pub fn shared(cfg: &ExperimentConfig) -> Arc<Geometry> {
+        let key = GeometryKey::of(cfg);
+        let cell: BuildCell = {
+            let mut map = cache().lock().unwrap();
+            map.entry(key).or_default().clone()
+        };
+        cell.get_or_init(|| Arc::new(Geometry::build(cfg))).clone()
+    }
+
+    /// How many times [`Geometry::build`] actually ran for `cfg`'s key
+    /// (0 = never; 1 = the cache's exactly-once contract held).
+    pub fn build_count(cfg: &ExperimentConfig) -> u64 {
+        build_counts()
+            .lock()
+            .unwrap()
+            .get(&GeometryKey::of(cfg))
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+// The parallel executor shares `Arc<Geometry>` across worker threads;
+// keep the bound explicit so a non-Sync field is caught here, not in a
+// distant thread-spawn error.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Geometry>();
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A geometry-unique config so parallel-running tests elsewhere in
+    /// the binary can never collide with this test's cache keys.
+    fn unique_cfg(altitude_km: f64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::test_small();
+        cfg.constellation.altitude_km = altitude_km;
+        cfg
+    }
+
+    #[test]
+    fn shared_returns_same_arc_and_builds_once() {
+        let cfg = unique_cfg(1234.25);
+        let a = Geometry::shared(&cfg);
+        let b = Geometry::shared(&cfg);
+        assert!(Arc::ptr_eq(&a, &b), "geometry-identical configs must share");
+        assert_eq!(Geometry::build_count(&cfg), 1, "built exactly once");
+        // non-geometry knobs (seed, scheme, lr, fault intensities) hit
+        // the same cache entry
+        let mut c = cfg.clone();
+        c.seed = 9999;
+        c.fl.lr = 0.5;
+        c.fl.max_epochs = 1;
+        assert!(Arc::ptr_eq(&a, &Geometry::shared(&c)));
+        assert_eq!(Geometry::build_count(&cfg), 1);
+    }
+
+    #[test]
+    fn geometry_knobs_key_fresh_instances() {
+        let base = unique_cfg(1235.75);
+        let a = Geometry::shared(&base);
+
+        let mut alt = base.clone();
+        alt.constellation.altitude_km = 1236.75;
+        assert!(!Arc::ptr_eq(&a, &Geometry::shared(&alt)), "altitude keys");
+
+        let mut elev = base.clone();
+        elev.min_elevation_deg = 12.125;
+        assert!(!Arc::ptr_eq(&a, &Geometry::shared(&elev)), "elevation keys");
+
+        let mut hor = base.clone();
+        hor.fl.horizon_s = base.fl.horizon_s + 1800.0;
+        assert!(!Arc::ptr_eq(&a, &Geometry::shared(&hor)), "horizon keys");
+
+        let mut pl = base.clone();
+        pl.placement = PsPlacement::TwoHaps;
+        assert!(!Arc::ptr_eq(&a, &Geometry::shared(&pl)), "placement keys");
+
+        // the base entry is still shared and still built once
+        assert!(Arc::ptr_eq(&a, &Geometry::shared(&base)));
+        assert_eq!(Geometry::build_count(&base), 1);
+    }
+
+    #[test]
+    fn build_matches_config() {
+        let cfg = unique_cfg(1237.5);
+        let g = Geometry::shared(&cfg);
+        assert_eq!(g.constellation.len(), cfg.n_sats());
+        assert_eq!(g.sites.len(), cfg.placement.sites().len());
+        assert_eq!(g.plan.n_sites(), g.sites.len());
+        assert_eq!(g.plan.horizon_s, cfg.fl.horizon_s);
+        assert_eq!(g.link, cfg.link);
+    }
+}

@@ -1,9 +1,17 @@
 //! The L3 orchestrator: wires constellation geometry, contact plans,
 //! link delays, the event queue and a compute [`crate::train::Backend`]
 //! into a [`SimEnv`] that FL strategies run against.
+//!
+//! Layering (PR 2): [`Geometry`] holds everything immutable across runs
+//! (constellation, sites, contact plan, link params) behind a
+//! process-wide `Arc` cache keyed by the geometry-relevant config
+//! subset; [`env::RunState`] holds what a single run mutates; `SimEnv`
+//! is the facade strategies program against.
 
 pub mod contact;
 pub mod env;
+pub mod geometry;
 
 pub use contact::ContactPlan;
-pub use env::{RunResult, SimEnv};
+pub use env::{RunResult, RunState, SimEnv};
+pub use geometry::Geometry;

@@ -5,6 +5,7 @@
 //! config embedded as header comments, and prints the paper-style
 //! summary rows to stdout.
 
+use super::executor::{run_cells, Cell};
 use crate::config::{ExperimentConfig, ModelKind, PsPlacement, SchemeKind};
 use crate::coordinator::{RunResult, SimEnv};
 use crate::data::{DatasetKind, Partition};
@@ -26,11 +27,21 @@ pub struct ExpOptions {
     /// topology studies; also what the coordinator benches use).
     pub surrogate: bool,
     pub seed: u64,
+    /// Worker threads for sweep grids (`--jobs N`). Surrogate mode
+    /// only; PJRT sweeps stay sequential (`executor::effective_jobs`).
+    /// Output is bit-identical to `jobs = 1` at any value.
+    pub jobs: usize,
 }
 
 impl Default for ExpOptions {
     fn default() -> Self {
-        ExpOptions { out_dir: PathBuf::from("results"), fast: false, surrogate: false, seed: 42 }
+        ExpOptions {
+            out_dir: PathBuf::from("results"),
+            fast: false,
+            surrogate: false,
+            seed: 42,
+            jobs: 1,
+        }
     }
 }
 
@@ -144,7 +155,22 @@ pub const TABLE2_ROWS: &[(&str, SchemeKind, PsPlacement)] = &[
     ("AsyncFLEO-twoHAP", SchemeKind::AsyncFleo, PsPlacement::TwoHaps),
 ];
 
-fn table2(opts: &ExpOptions) -> Result<()> {
+/// The Table II grid as executor cells (also reused by the sweep bench
+/// and the jobs-determinism tests).
+pub fn table2_cells(opts: &ExpOptions) -> Vec<Cell> {
+    let cfg0 = table2_base_config(opts);
+    TABLE2_ROWS
+        .iter()
+        .map(|&(label, scheme, placement)| {
+            let mut cfg = cfg0.clone();
+            cfg.fl.scheme = scheme;
+            cfg.placement = placement;
+            Cell::new(label, cfg)
+        })
+        .collect()
+}
+
+fn table2_base_config(opts: &ExpOptions) -> ExperimentConfig {
     let mut cfg0 = base_config(opts);
     // paper: CNN. On a single-core testbed the full-fidelity CNN table
     // takes ~1 h of wall time; --fast records the MLP variant (same
@@ -153,6 +179,13 @@ fn table2(opts: &ExpOptions) -> Result<()> {
     cfg0.fl.model = if opts.fast { ModelKind::Mlp } else { ModelKind::Cnn };
     cfg0.fl.dataset = DatasetKind::Digits;
     cfg0.fl.partition = Partition::NonIidPaper;
+    cfg0
+}
+
+fn table2(opts: &ExpOptions) -> Result<()> {
+    let cfg0 = table2_base_config(opts);
+    let cells = table2_cells(opts);
+    let results = run_cells(&cells, opts)?;
 
     let mut table = CsvWriter::create(
         opts.out_dir.join("table2.csv"),
@@ -168,16 +201,12 @@ fn table2(opts: &ExpOptions) -> Result<()> {
 
     println!("\n=== Table II (SynthDigits non-IID, {}) ===", cfg0.fl.model.tag());
     println!("{:<20} {:>9} {:>12} {:>7}", "scheme", "acc(%)", "conv(h:mm)", "epochs");
-    for &(label, scheme, placement) in TABLE2_ROWS {
-        let mut cfg = cfg0.clone();
-        cfg.fl.scheme = scheme;
-        cfg.placement = placement;
-        let r = run_one(&cfg, opts)?;
-        let (conv_t, acc) = summary_of(&r);
+    for (cell, r) in cells.iter().zip(&results) {
+        let (conv_t, acc) = summary_of(r);
         table.row(&[
-            s(label),
-            s(scheme.name()),
-            s(placement.name()),
+            s(&cell.label),
+            s(cell.cfg.fl.scheme.name()),
+            s(cell.cfg.placement.name()),
             f(acc * 100.0),
             f(conv_t / 3600.0),
             s(&fmt_hm(conv_t)),
@@ -186,7 +215,7 @@ fn table2(opts: &ExpOptions) -> Result<()> {
         ])?;
         for p in &r.curve.points {
             fig6.row(&[
-                s(label),
+                s(&cell.label),
                 f(p.time_s / 3600.0),
                 i(p.epoch),
                 f(p.accuracy),
@@ -195,7 +224,7 @@ fn table2(opts: &ExpOptions) -> Result<()> {
         }
         println!(
             "{:<20} {:>9.2} {:>12} {:>7}",
-            label,
+            cell.label,
             acc * 100.0,
             fmt_hm(conv_t),
             r.epochs
@@ -240,7 +269,7 @@ fn fig_grid(
 
     // fig7c/fig8c sweep partitions at the fixed two-HAP placement; the
     // a/b panels sweep placement at a fixed partition.
-    let cells: Vec<(ModelKind, PsPlacement, Partition)> = if two_haps {
+    let grid: Vec<(ModelKind, PsPlacement, Partition)> = if two_haps {
         [Partition::Iid, Partition::NonIidPaper]
             .iter()
             .flat_map(|&p| {
@@ -257,14 +286,21 @@ fn fig_grid(
             .collect()
     };
 
-    for (model, placement, part) in cells {
-        let mut cfg = base_config(opts);
-        cfg.fl.scheme = SchemeKind::AsyncFleo;
-        cfg.fl.model = model;
-        cfg.fl.dataset = dataset;
-        cfg.fl.partition = part;
-        cfg.placement = placement;
-        let r = run_one(&cfg, opts)?;
+    let cells: Vec<Cell> = grid
+        .iter()
+        .map(|&(model, placement, part)| {
+            let mut cfg = base_config(opts);
+            cfg.fl.scheme = SchemeKind::AsyncFleo;
+            cfg.fl.model = model;
+            cfg.fl.dataset = dataset;
+            cfg.fl.partition = part;
+            cfg.placement = placement;
+            Cell::new(format!("{}/{}", model.tag(), placement.name()), cfg)
+        })
+        .collect();
+    let results = run_cells(&cells, opts)?;
+
+    for (&(model, placement, part), r) in grid.iter().zip(&results) {
         let part_name = if part == Partition::Iid { "iid" } else { "non-iid" };
         for p in &r.curve.points {
             w.row(&[
@@ -277,7 +313,7 @@ fn fig_grid(
                 f(p.loss),
             ])?;
         }
-        let (conv_t, acc) = summary_of(&r);
+        let (conv_t, acc) = summary_of(r);
         println!(
             "{:<5} {:<10} {:<8} acc {:>6.2}%  conv {}",
             model.tag(),
@@ -319,18 +355,30 @@ fn ablation(opts: &ExpOptions, which: &str) -> Result<()> {
         other => bail!("unknown ablation {other}"),
     };
 
+    let cells: Vec<Cell> = variants
+        .into_iter()
+        .map(|(label, strat)| Cell::custom(label, cfg.clone(), strat))
+        .collect();
+    let results = run_cells(&cells, opts)?;
+
     let mut w = CsvWriter::create(
         opts.out_dir.join(format!("{which}.csv")),
         &[&format!("{which}: AsyncFLEO design ablation (SynthDigits non-IID, MLP)"), &cfg.to_toml()],
         &["variant", "accuracy_pct", "convergence_h", "epochs", "transfers"],
     )?;
     println!("\n=== {which} ===");
-    for (label, strat) in variants {
-        let r = run_one_with(&cfg, opts, Box::new(strat))?;
-        let (conv_t, acc) = summary_of(&r);
-        w.row(&[s(label), f(acc * 100.0), f(conv_t / 3600.0), i(r.epochs), i(r.transfers)])?;
+    for (cell, r) in cells.iter().zip(&results) {
+        let (conv_t, acc) = summary_of(r);
+        w.row(&[
+            s(&cell.label),
+            f(acc * 100.0),
+            f(conv_t / 3600.0),
+            i(r.epochs),
+            i(r.transfers),
+        ])?;
         println!(
-            "{label:<14} acc {:>6.2}%  conv {}  epochs {}",
+            "{:<14} acc {:>6.2}%  conv {}  epochs {}",
+            cell.label,
             acc * 100.0,
             fmt_hm(conv_t),
             r.epochs
@@ -375,6 +423,8 @@ pub fn print_info(artifact_dir: &Path) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Geometry;
+    use std::sync::Arc;
 
     #[test]
     fn unknown_experiment_rejected() {
@@ -391,5 +441,27 @@ mod tests {
             .filter(|(_, s, _)| *s == SchemeKind::AsyncFleo)
             .count();
         assert_eq!(ours, 3);
+    }
+
+    #[test]
+    fn table2_builds_one_geometry_per_unique_placement() {
+        let opts = ExpOptions { fast: true, surrogate: true, ..Default::default() };
+        let cells = table2_cells(&opts);
+        assert_eq!(cells.len(), TABLE2_ROWS.len());
+        let arcs: Vec<Arc<Geometry>> =
+            cells.iter().map(|c| Geometry::shared(&c.cfg)).collect();
+        let mut ptrs: Vec<*const Geometry> = arcs.iter().map(Arc::as_ptr).collect();
+        ptrs.sort();
+        ptrs.dedup();
+        // 8 rows share 4 geometries: gs-rolla, gs-np, hap-rolla, two-haps
+        assert_eq!(ptrs.len(), 4, "one geometry per unique placement");
+        for cell in &cells {
+            assert_eq!(
+                Geometry::build_count(&cell.cfg),
+                1,
+                "{}: geometry must be built exactly once",
+                cell.label
+            );
+        }
     }
 }

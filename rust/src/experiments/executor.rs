@@ -1,0 +1,181 @@
+//! Deterministic parallel sweep executor.
+//!
+//! Experiment drivers describe their grid as a list of [`Cell`]s (one
+//! configured run each) and hand it to [`run_cells`], which dispatches
+//! cells to `--jobs N` worker threads (plain `std::thread::scope` —
+//! the crate is offline/vendored, no rayon) and returns the results
+//! **in the original cell order**, so CSV rows and stdout summaries are
+//! byte-identical to a sequential run.
+//!
+//! Determinism contract:
+//! * each cell builds its own backend and [`SimEnv`] from its own
+//!   config (per-run seeding is untouched), so a cell's `RunResult` is
+//!   a pure function of its config — independent of scheduling;
+//! * the shared [`Geometry`] cache is prewarmed in cell order before
+//!   workers start, so each unique geometry is built exactly once and
+//!   workers only ever read;
+//! * results are collected into order-indexed slots; writers consume
+//!   them sequentially after the scope joins.
+//!
+//! PJRT mode stays sequential regardless of `--jobs`: the runtime
+//! handle is a `thread_local` `Rc` (artifact caches are not `Sync`),
+//! and compute-bound PJRT dispatch is where the wall-clock goes anyway.
+//! The surrogate sweeps — the pure-L3 topology studies this executor
+//! targets — parallelize fully.
+
+use super::drivers::{run_one_with, ExpOptions};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Geometry, RunResult};
+use crate::fl::asyncfleo::AsyncFleo;
+use crate::fl::{make_strategy, Strategy};
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Which strategy a cell runs. `Clone + Send` so cells can cross into
+/// worker threads; the `Box<dyn Strategy>` itself is built inside the
+/// worker.
+#[derive(Clone)]
+pub enum CellStrategy {
+    /// The stock strategy for the cell's `cfg.fl.scheme`.
+    Scheme,
+    /// A customized AsyncFLEO instance (ablation variants).
+    Custom(AsyncFleo),
+}
+
+/// One configured run of a sweep grid.
+pub struct Cell {
+    /// Row label carried through to CSV/stdout in original order.
+    pub label: String,
+    pub cfg: ExperimentConfig,
+    pub strategy: CellStrategy,
+}
+
+impl Cell {
+    /// A cell running its scheme's stock strategy.
+    pub fn new(label: impl Into<String>, cfg: ExperimentConfig) -> Self {
+        Cell { label: label.into(), cfg, strategy: CellStrategy::Scheme }
+    }
+
+    /// A cell running a customized AsyncFLEO instance.
+    pub fn custom(label: impl Into<String>, cfg: ExperimentConfig, strategy: AsyncFleo) -> Self {
+        Cell { label: label.into(), cfg, strategy: CellStrategy::Custom(strategy) }
+    }
+
+    fn build_strategy(&self) -> Box<dyn Strategy> {
+        match &self.strategy {
+            CellStrategy::Scheme => make_strategy(self.cfg.fl.scheme),
+            CellStrategy::Custom(a) => Box::new(a.clone()),
+        }
+    }
+}
+
+/// The worker count actually used for a grid: `--jobs`, clamped to the
+/// grid size, and forced to 1 in PJRT mode (see module docs).
+pub fn effective_jobs(opts: &ExpOptions, n_cells: usize) -> usize {
+    if !opts.surrogate {
+        return 1;
+    }
+    opts.jobs.clamp(1, n_cells.max(1))
+}
+
+/// Run one cell (worker body; also the `--jobs 1` path).
+fn run_cell(cell: &Cell, opts: &ExpOptions) -> Result<RunResult> {
+    run_one_with(&cell.cfg, opts, cell.build_strategy())
+}
+
+/// Run every cell and return results in cell order. See the module
+/// docs for the determinism contract.
+pub fn run_cells(cells: &[Cell], opts: &ExpOptions) -> Result<Vec<RunResult>> {
+    let jobs = effective_jobs(opts, cells.len());
+    if jobs <= 1 {
+        return cells.iter().map(|c| run_cell(c, opts)).collect();
+    }
+
+    // Prewarm the geometry cache in deterministic cell order: each
+    // unique geometry is built exactly once, before any worker races
+    // for it.
+    for cell in cells {
+        Geometry::shared(&cell.cfg);
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<RunResult>>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let result = run_cell(&cells[i], opts);
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .expect("executor worker left a cell unfinished")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PsPlacement, SchemeKind};
+    use crate::metrics::Curve;
+
+    fn small_cells(n: usize) -> Vec<Cell> {
+        (0..n)
+            .map(|i| {
+                let mut cfg = ExperimentConfig::test_small();
+                cfg.fl.scheme = SchemeKind::AsyncFleo;
+                cfg.placement = PsPlacement::HapRolla;
+                cfg.fl.horizon_s = 12.0 * 3600.0;
+                cfg.fl.max_epochs = 4;
+                cfg.seed = 42 + (i as u64 % 2); // two distinct seeds
+                Cell::new(format!("cell{i}"), cfg)
+            })
+            .collect()
+    }
+
+    fn assert_curves_identical(a: &Curve, b: &Curve, what: &str) {
+        assert_eq!(a.points.len(), b.points.len(), "{what}: curve length");
+        for (x, y) in a.points.iter().zip(&b.points) {
+            assert_eq!(x.time_s, y.time_s, "{what}: point time");
+            assert_eq!(x.accuracy, y.accuracy, "{what}: point accuracy");
+            assert_eq!(x.loss, y.loss, "{what}: point loss");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bit_for_bit() {
+        let cells = small_cells(6);
+        let seq = ExpOptions { surrogate: true, jobs: 1, ..Default::default() };
+        let par = ExpOptions { surrogate: true, jobs: 4, ..Default::default() };
+        let a = run_cells(&cells, &seq).unwrap();
+        let b = run_cells(&cells, &par).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.epochs, y.epochs, "cell {i} epochs");
+            assert_eq!(x.transfers, y.transfers, "cell {i} transfers");
+            assert_curves_identical(&x.curve, &y.curve, &format!("cell {i}"));
+        }
+    }
+
+    #[test]
+    fn pjrt_mode_is_forced_sequential() {
+        let opts = ExpOptions { surrogate: false, jobs: 8, ..Default::default() };
+        assert_eq!(effective_jobs(&opts, 10), 1);
+        let opts = ExpOptions { surrogate: true, jobs: 8, ..Default::default() };
+        assert_eq!(effective_jobs(&opts, 3), 3, "clamped to grid size");
+        assert_eq!(effective_jobs(&opts, 10), 8);
+        let opts = ExpOptions { surrogate: true, jobs: 0, ..Default::default() };
+        assert_eq!(effective_jobs(&opts, 10), 1, "jobs 0 means sequential");
+    }
+}

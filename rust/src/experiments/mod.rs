@@ -2,8 +2,15 @@
 //! (DESIGN.md §4 maps each driver to its paper artifact), plus the
 //! [`resilience`] sweep comparing graceful degradation across schemes
 //! under the `crate::faults` scenarios.
+//!
+//! Every driver describes its grid as [`executor::Cell`]s and runs it
+//! through the deterministic parallel [`executor`] (`--jobs N`);
+//! results come back in cell order so output files are byte-identical
+//! at any job count.
 
 pub mod drivers;
+pub mod executor;
 pub mod resilience;
 
 pub use drivers::{run_experiment, ExpOptions, ALL_EXPERIMENTS, TABLE2_ROWS};
+pub use executor::{run_cells, Cell, CellStrategy};

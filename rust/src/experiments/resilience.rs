@@ -17,7 +17,8 @@
 //! AsyncFLEO's event loop, so the `dropped_results` column is
 //! AsyncFLEO instrumentation, not a cross-scheme metric.
 
-use super::drivers::{base_config, run_one, summary_of, ExpOptions};
+use super::drivers::{base_config, summary_of, ExpOptions};
+use super::executor::{run_cells, Cell};
 use crate::config::{ModelKind, PsPlacement, SchemeKind};
 use crate::data::{DatasetKind, Partition};
 use crate::faults::{FaultConfig, FaultScenario};
@@ -86,48 +87,57 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         ],
     )?;
 
-    println!("\n=== resilience (SynthDigits non-IID, mlp) ===");
-    println!(
-        "{:<12} {:>4} {:<10} {:>8} {:>10} {:>7} {:>9} {:>8}",
-        "scenario", "x", "scheme", "acc(%)", "conv(h:mm)", "epochs", "retrans", "dropped"
-    );
+    // grid rows (scenario × intensity × scheme) and their executor
+    // cells, in the deterministic order the CSV has always used
+    let mut rows: Vec<(FaultScenario, f64, &str, SchemeKind, PsPlacement)> = Vec::new();
+    let mut cells: Vec<Cell> = Vec::new();
     for (scenario, intensity) in sweep_cells() {
         for &(label, scheme, placement) in RESILIENCE_SCHEMES {
             let mut cfg = cfg0.clone();
             cfg.fl.scheme = scheme;
             cfg.placement = placement;
             cfg.faults = FaultConfig::preset(scenario, intensity);
-            let r = run_one(&cfg, opts)?;
-            let (conv_t, acc) = summary_of(&r);
-            let fs = r.fault_stats;
-            w.row(&[
-                s(scenario.name()),
-                f(intensity),
-                s(label),
-                s(scheme.name()),
-                s(placement.name()),
-                f(acc * 100.0),
-                f(conv_t / 3600.0),
-                s(&fmt_hm(conv_t)),
-                i(r.epochs),
-                i(r.transfers),
-                i(fs.retransmits),
-                i(fs.deferrals),
-                f(fs.deferred_s / 3600.0),
-                i(fs.dropped_results),
-            ])?;
-            println!(
-                "{:<12} {:>4.2} {:<10} {:>8.2} {:>10} {:>7} {:>9} {:>8}",
-                scenario.name(),
-                intensity,
-                label,
-                acc * 100.0,
-                fmt_hm(conv_t),
-                r.epochs,
-                fs.retransmits,
-                fs.dropped_results
-            );
+            rows.push((scenario, intensity, label, scheme, placement));
+            cells.push(Cell::new(format!("{}@{intensity}/{label}", scenario.name()), cfg));
         }
+    }
+    let results = run_cells(&cells, opts)?;
+
+    println!("\n=== resilience (SynthDigits non-IID, mlp) ===");
+    println!(
+        "{:<12} {:>4} {:<10} {:>8} {:>10} {:>7} {:>9} {:>8}",
+        "scenario", "x", "scheme", "acc(%)", "conv(h:mm)", "epochs", "retrans", "dropped"
+    );
+    for (&(scenario, intensity, label, scheme, placement), r) in rows.iter().zip(&results) {
+        let (conv_t, acc) = summary_of(r);
+        let fs = r.fault_stats;
+        w.row(&[
+            s(scenario.name()),
+            f(intensity),
+            s(label),
+            s(scheme.name()),
+            s(placement.name()),
+            f(acc * 100.0),
+            f(conv_t / 3600.0),
+            s(&fmt_hm(conv_t)),
+            i(r.epochs),
+            i(r.transfers),
+            i(fs.retransmits),
+            i(fs.deferrals),
+            f(fs.deferred_s / 3600.0),
+            i(fs.dropped_results),
+        ])?;
+        println!(
+            "{:<12} {:>4.2} {:<10} {:>8.2} {:>10} {:>7} {:>9} {:>8}",
+            scenario.name(),
+            intensity,
+            label,
+            acc * 100.0,
+            fmt_hm(conv_t),
+            r.epochs,
+            fs.retransmits,
+            fs.dropped_results
+        );
     }
     w.flush()?;
     Ok(())

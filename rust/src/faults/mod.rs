@@ -20,17 +20,20 @@
 //! intensities at zero is provably invisible: the plan never touches
 //! the delay path or the RNG ([`FaultPlan::enabled`] is false).
 //!
-//! Integration: [`crate::coordinator::SimEnv`] carries a [`FaultPlan`]
-//! and routes every `site_link_delay` / `isl_hop_delay` /
+//! Integration: `coordinator::RunState` carries a [`FaultPlan`] and
+//! the env routes every `site_link_delay` / `isl_hop_delay` /
 //! `ihl_hop_delay` call through [`FaultPlan::transfer`], so AsyncFLEO
 //! and all five baselines transparently experience the same
-//! impairments. `experiments::resilience` sweeps the named
-//! [`FaultScenario`] presets across schemes and intensities.
+//! impairments. The engine is split along the sweep axis: the
+//! immutable seeded timeline lives in a shareable [`FaultSchedule`],
+//! the per-run counters in [`FaultPlan`]. `experiments::resilience`
+//! sweeps the named [`FaultScenario`] presets across schemes and
+//! intensities.
 
 pub mod config;
 pub mod plan;
 pub mod schedule;
 
 pub use config::{FaultConfig, FaultScenario};
-pub use plan::{FaultPlan, FaultStats, LinkClass, LinkOutcome};
+pub use plan::{FaultPlan, FaultSchedule, FaultStats, LinkClass, LinkOutcome};
 pub use schedule::{ChurnSchedule, OutageWindows};

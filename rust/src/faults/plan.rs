@@ -1,7 +1,15 @@
 //! The fault plan: the seeded impairment timeline every strategy runs
 //! against, plus the per-transfer injection oracle.
 //!
-//! [`FaultPlan`] is carried by `coordinator::SimEnv`; the env's
+//! Split along the sweep axis (PR 2): [`FaultSchedule`] is the
+//! immutable, `Send + Sync` timeline — outage windows, churn intervals
+//! and the channel-state seed, all precomputed from `(config, seed)` at
+//! build time — while [`FaultPlan`] wraps it in an `Arc` and adds the
+//! per-run mutable counters (`seen` channel events, [`FaultStats`]).
+//! Runs that share a `(config, seed)` pair can therefore share one
+//! schedule without sharing accounting.
+//!
+//! [`FaultPlan`] is carried by `coordinator::RunState`; the env's
 //! `site_link_delay` / `isl_hop_delay` / `ihl_hop_delay` route every
 //! transfer through [`FaultPlan::transfer`], so AsyncFLEO and all five
 //! baselines transparently experience the same impairments. When the
@@ -12,6 +20,7 @@ use super::config::FaultConfig;
 use super::schedule::{exp_draw, ChurnSchedule, OutageWindows};
 use crate::sim::{Event, EventKind, EventQueue};
 use crate::util::Rng;
+use std::sync::Arc;
 
 /// Which physical link a transfer crosses (endpoints by dense id).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,16 +73,15 @@ const DEFER_CAP_SLACK_S: f64 = 7200.0;
 /// re-rolling the dice per query.
 const LOSS_COHERENCE_S: f64 = 1.0;
 
-/// The deterministic fault-schedule engine.
-pub struct FaultPlan {
+/// The immutable half of the fault engine: everything precomputed from
+/// `(config, seed)` — pure data, shareable across runs and threads.
+pub struct FaultSchedule {
     cfg: FaultConfig,
     enabled: bool,
     horizon_s: f64,
     /// Seed for the per-(link, window) channel-state hash — loss draws
     /// are a pure function of it, never of call order.
     channel_seed: u64,
-    /// Channel events already observed (stats idempotency).
-    seen: std::collections::HashSet<u64>,
     /// Eclipse windows per PS site (SAT↔site links).
     site_outages: Vec<OutageWindows>,
     /// Conjunction windows per orbit (ISL hops), when `isl_outage`.
@@ -81,7 +89,6 @@ pub struct FaultPlan {
     sat_churn: Vec<ChurnSchedule>,
     hap_churn: Vec<ChurnSchedule>,
     sats_per_orbit: usize,
-    stats: FaultStats,
 }
 
 /// SplitMix64 finalizer — the hash behind the channel-state keys.
@@ -91,29 +98,27 @@ fn mix64(mut x: u64) -> u64 {
     x ^ (x >> 31)
 }
 
-impl FaultPlan {
-    /// The no-fault plan (what every run before this subsystem used).
+impl FaultSchedule {
+    /// The no-fault schedule (what every run before this subsystem used).
     pub fn disabled() -> Self {
-        FaultPlan {
+        FaultSchedule {
             cfg: FaultConfig::nominal(),
             enabled: false,
             horizon_s: 0.0,
             channel_seed: 0,
-            seen: std::collections::HashSet::new(),
             site_outages: Vec::new(),
             orbit_outages: Vec::new(),
             sat_churn: Vec::new(),
             hap_churn: Vec::new(),
             sats_per_orbit: 1,
-            stats: FaultStats::default(),
         }
     }
 
-    /// Build the impairment timeline for one run. All randomness comes
-    /// from `seed`: the same seed gives bit-identical schedules and
-    /// per-transfer draws for any strategy with deterministic call
-    /// order (which all of ours are).
-    pub fn new(
+    /// Build the impairment timeline. All randomness comes from `seed`:
+    /// the same seed gives bit-identical schedules and per-transfer
+    /// draws for any strategy with deterministic call order (which all
+    /// of ours are).
+    pub fn build(
         cfg: &FaultConfig,
         seed: u64,
         n_sats: usize,
@@ -122,9 +127,9 @@ impl FaultPlan {
         horizon_s: f64,
     ) -> Self {
         if cfg.is_nop() {
-            let mut plan = Self::disabled();
-            plan.cfg = *cfg;
-            return plan;
+            let mut sched = Self::disabled();
+            sched.cfg = *cfg;
+            return sched;
         }
         let mut rng = Rng::new(seed ^ 0xFA_0175);
         let mut phase_rng = rng.fork(1);
@@ -165,12 +170,11 @@ impl FaultPlan {
             })
             .collect();
 
-        FaultPlan {
+        FaultSchedule {
             cfg: *cfg,
             enabled: true,
             horizon_s,
             channel_seed,
-            seen: std::collections::HashSet::new(),
             site_outages,
             orbit_outages,
             sat_churn,
@@ -182,23 +186,15 @@ impl FaultPlan {
                 horizon_s,
             ),
             sats_per_orbit: sats_per_orbit.max(1),
-            stats: FaultStats::default(),
         }
     }
 
-    /// Is any impairment active? When false the env skips the oracle
-    /// entirely, so disabled runs are bit-identical to the pre-faults
-    /// code path.
     pub fn enabled(&self) -> bool {
         self.enabled
     }
 
     pub fn config(&self) -> &FaultConfig {
         &self.cfg
-    }
-
-    pub fn stats(&self) -> FaultStats {
-        self.stats
     }
 
     /// Is satellite `sat` alive at `t`? (Always true when disabled.)
@@ -217,68 +213,6 @@ impl FaultPlan {
             Some(s) => &s.down,
             None => &[],
         }
-    }
-
-    /// Record a training result that never reached a PS.
-    pub fn note_dropped(&mut self) {
-        self.stats.dropped_results += 1;
-    }
-
-    /// The injection oracle: what actually happens to a transfer over
-    /// `class` starting at `t` whose clean delay is `base_delay_s`.
-    ///
-    /// Order of impairments: (1) the transfer is deferred until both
-    /// endpoints are alive and the link is outside its outage window
-    /// (store-and-forward abstraction), then (2) loss draws add
-    /// retransmissions, each costing one backoff plus a re-send.
-    ///
-    /// Loss is *channel state*, not a per-call dice roll: the draw is a
-    /// pure function of (link, send-time coherence window, seed). The
-    /// path oracles in `fl::propagation` probe the same hop many times
-    /// while routing; with per-call draws the relaxation would keep the
-    /// luckiest roll (biasing relayed delays toward fault-free) and
-    /// every probe would inflate the stats. Deterministic channel state
-    /// makes repeated queries consistent, and [`FaultStats`] counts
-    /// each channel event once ([`LinkOutcome::newly_observed`]).
-    pub fn transfer(&mut self, class: LinkClass, t: f64, base_delay_s: f64) -> LinkOutcome {
-        if !self.enabled {
-            return LinkOutcome { delay_s: base_delay_s, retransmits: 0, newly_observed: false };
-        }
-        // -- deferral: availability + outage, to a fixpoint --
-        let mut start = t;
-        for _ in 0..4 {
-            let before = start;
-            start = self.avail_time(&class, start);
-            start = self.outage_clear(&class, start);
-            if start == before {
-                break;
-            }
-        }
-        let cap = self.horizon_s + DEFER_CAP_SLACK_S;
-        if start > cap {
-            start = cap;
-        }
-        // -- loss + retransmission from the channel state at send time --
-        let key = self.channel_key(&class, start);
-        let mut retransmits = 0u32;
-        if self.cfg.loss_prob > 0.0 {
-            let mut chan = Rng::new(key);
-            while retransmits < self.cfg.max_retransmits && chan.f64() < self.cfg.loss_prob {
-                retransmits += 1;
-            }
-        }
-        let delay = (start - t)
-            + base_delay_s
-            + retransmits as f64 * (self.cfg.retransmit_backoff_s + base_delay_s);
-        let newly_observed = self.seen.insert(key);
-        if newly_observed {
-            if start > t {
-                self.stats.deferrals += 1;
-                self.stats.deferred_s += start - t;
-            }
-            self.stats.retransmits += retransmits as u64;
-        }
-        LinkOutcome { delay_s: delay, retransmits, newly_observed }
     }
 
     /// Channel-state key of a link at a send instant. Bidirectional
@@ -333,7 +267,7 @@ impl FaultPlan {
         }
     }
 
-    /// Push the plan's discrete transitions (churn up/down, outage
+    /// Push the schedule's discrete transitions (churn up/down, outage
     /// boundaries) as typed events. No-op when disabled, so clean runs
     /// see an untouched queue.
     pub fn schedule_events(&self, queue: &mut EventQueue) {
@@ -367,6 +301,157 @@ impl FaultPlan {
                 queue.push(Event::new(e, EventKind::OutageEnd { site }));
             }
         }
+    }
+}
+
+/// The deterministic fault engine one run carries: a shared immutable
+/// [`FaultSchedule`] plus this run's observation set and accounting.
+pub struct FaultPlan {
+    schedule: Arc<FaultSchedule>,
+    /// Channel events already observed (stats idempotency).
+    seen: std::collections::HashSet<u64>,
+    stats: FaultStats,
+}
+
+impl FaultPlan {
+    /// The no-fault plan (what every run before this subsystem used).
+    pub fn disabled() -> Self {
+        Self::from_schedule(Arc::new(FaultSchedule::disabled()))
+    }
+
+    /// Build schedule + fresh counters for one run. See
+    /// [`FaultSchedule::build`] for the determinism contract.
+    pub fn new(
+        cfg: &FaultConfig,
+        seed: u64,
+        n_sats: usize,
+        n_sites: usize,
+        sats_per_orbit: usize,
+        horizon_s: f64,
+    ) -> Self {
+        Self::from_schedule(Arc::new(FaultSchedule::build(
+            cfg,
+            seed,
+            n_sats,
+            n_sites,
+            sats_per_orbit,
+            horizon_s,
+        )))
+    }
+
+    /// Fresh per-run counters over an existing (possibly shared)
+    /// schedule.
+    pub fn from_schedule(schedule: Arc<FaultSchedule>) -> Self {
+        FaultPlan {
+            schedule,
+            seen: std::collections::HashSet::new(),
+            stats: FaultStats::default(),
+        }
+    }
+
+    /// The immutable timeline this plan injects from.
+    pub fn schedule(&self) -> &Arc<FaultSchedule> {
+        &self.schedule
+    }
+
+    /// Is any impairment active? When false the env skips the oracle
+    /// entirely, so disabled runs are bit-identical to the pre-faults
+    /// code path.
+    pub fn enabled(&self) -> bool {
+        self.schedule.enabled
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.schedule.cfg
+    }
+
+    pub fn stats(&self) -> FaultStats {
+        self.stats
+    }
+
+    /// Is satellite `sat` alive at `t`? (Always true when disabled.)
+    pub fn sat_alive(&self, sat: usize, t: f64) -> bool {
+        self.schedule.sat_alive(sat, t)
+    }
+
+    /// Is PS site `hap` alive at `t`?
+    pub fn hap_alive(&self, hap: usize, t: f64) -> bool {
+        self.schedule.hap_alive(hap, t)
+    }
+
+    /// Downtime intervals of one satellite (for reporting/tests).
+    pub fn sat_downtime(&self, sat: usize) -> &[(f64, f64)] {
+        self.schedule.sat_downtime(sat)
+    }
+
+    /// Record a training result that never reached a PS.
+    pub fn note_dropped(&mut self) {
+        self.stats.dropped_results += 1;
+    }
+
+    /// The injection oracle: what actually happens to a transfer over
+    /// `class` starting at `t` whose clean delay is `base_delay_s`.
+    ///
+    /// Order of impairments: (1) the transfer is deferred until both
+    /// endpoints are alive and the link is outside its outage window
+    /// (store-and-forward abstraction), then (2) loss draws add
+    /// retransmissions, each costing one backoff plus a re-send.
+    ///
+    /// Loss is *channel state*, not a per-call dice roll: the draw is a
+    /// pure function of (link, send-time coherence window, seed). The
+    /// path oracles in `fl::propagation` probe the same hop many times
+    /// while routing; with per-call draws the relaxation would keep the
+    /// luckiest roll (biasing relayed delays toward fault-free) and
+    /// every probe would inflate the stats. Deterministic channel state
+    /// makes repeated queries consistent, and [`FaultStats`] counts
+    /// each channel event once ([`LinkOutcome::newly_observed`]).
+    pub fn transfer(&mut self, class: LinkClass, t: f64, base_delay_s: f64) -> LinkOutcome {
+        let sched = &self.schedule;
+        if !sched.enabled {
+            return LinkOutcome { delay_s: base_delay_s, retransmits: 0, newly_observed: false };
+        }
+        // -- deferral: availability + outage, to a fixpoint --
+        let mut start = t;
+        for _ in 0..4 {
+            let before = start;
+            start = sched.avail_time(&class, start);
+            start = sched.outage_clear(&class, start);
+            if start == before {
+                break;
+            }
+        }
+        let cap = sched.horizon_s + DEFER_CAP_SLACK_S;
+        if start > cap {
+            start = cap;
+        }
+        // -- loss + retransmission from the channel state at send time --
+        let key = sched.channel_key(&class, start);
+        let mut retransmits = 0u32;
+        if sched.cfg.loss_prob > 0.0 {
+            let mut chan = Rng::new(key);
+            while retransmits < sched.cfg.max_retransmits && chan.f64() < sched.cfg.loss_prob {
+                retransmits += 1;
+            }
+        }
+        let backoff_s = sched.cfg.retransmit_backoff_s;
+        let delay =
+            (start - t) + base_delay_s + retransmits as f64 * (backoff_s + base_delay_s);
+        let newly_observed = self.seen.insert(key);
+        if newly_observed {
+            if start > t {
+                self.stats.deferrals += 1;
+                self.stats.deferred_s += start - t;
+            }
+            self.stats.retransmits += retransmits as u64;
+        }
+        LinkOutcome { delay_s: delay, retransmits, newly_observed }
+    }
+
+    /// Push the plan's discrete transitions (churn up/down, outage
+    /// boundaries) as typed events. No-op when disabled, so clean runs
+    /// see an untouched queue.
+    pub fn schedule_events(&self, queue: &mut EventQueue) {
+        self.schedule.schedule_events(queue);
     }
 }
 
@@ -430,6 +515,25 @@ mod tests {
     }
 
     #[test]
+    fn shared_schedule_keeps_counters_per_run() {
+        // two runs over one Arc'd schedule: identical timelines,
+        // independent accounting — the schedule-vs-counters split.
+        let cfg = FaultConfig::preset(FaultScenario::Lossy, 1.0);
+        let sched = Arc::new(FaultSchedule::build(&cfg, 7, 40, 2, 8, 72.0 * 3600.0));
+        let mut a = FaultPlan::from_schedule(sched.clone());
+        let mut b = FaultPlan::from_schedule(sched.clone());
+        let class = LinkClass::SatSite { sat: 1, site: 0 };
+        let oa = a.transfer(class, 50.0, 0.2);
+        let ob = b.transfer(class, 50.0, 0.2);
+        assert_eq!(oa.delay_s, ob.delay_s, "one channel truth per schedule");
+        assert!(oa.newly_observed && ob.newly_observed, "per-run observation sets");
+        assert_eq!(a.stats(), b.stats());
+        a.note_dropped();
+        assert_ne!(a.stats(), b.stats(), "counters must not leak across runs");
+        assert!(Arc::ptr_eq(a.schedule(), b.schedule()));
+    }
+
+    #[test]
     fn lossy_adds_retransmissions_deterministically() {
         let run = |seed: u64| {
             let mut p = plan(FaultScenario::Lossy, 1.0, seed);
@@ -438,7 +542,7 @@ mod tests {
                 let out =
                     p.transfer(LinkClass::SatSite { sat: i % 40, site: 0 }, i as f64, 0.2);
                 assert!(out.delay_s >= 0.2);
-                assert!(out.retransmits <= p.cfg.max_retransmits);
+                assert!(out.retransmits <= p.config().max_retransmits);
                 total += out.delay_s;
             }
             (total, p.stats())
@@ -475,7 +579,7 @@ mod tests {
     #[test]
     fn eclipse_defers_transfers_out_of_windows() {
         let mut p = plan(FaultScenario::Eclipse, 1.0, 11);
-        let o = p.site_outages[0];
+        let o = p.schedule.site_outages[0];
         assert!(o.active());
         // a transfer started mid-window is deferred to the window end
         let t_in = o.phase_s + 0.5 * o.duration_s;
@@ -511,8 +615,8 @@ mod tests {
     #[test]
     fn hap_failures_never_overlap() {
         let p = plan(FaultScenario::HapFailure, 1.0, 3);
-        let a = &p.hap_churn[0].down;
-        let b = &p.hap_churn[1].down;
+        let a = &p.schedule.hap_churn[0].down;
+        let b = &p.schedule.hap_churn[1].down;
         assert!(
             !a.is_empty() || !b.is_empty(),
             "72 h at 8 h MTBF must fail a HAP"
@@ -528,7 +632,7 @@ mod tests {
     fn single_site_gets_no_hap_failures() {
         let cfg = FaultConfig::preset(FaultScenario::HapFailure, 1.0);
         let p = FaultPlan::new(&cfg, 9, 40, 1, 8, 72.0 * 3600.0);
-        assert!(p.hap_churn[0].down.is_empty());
+        assert!(p.schedule.hap_churn[0].down.is_empty());
     }
 
     #[test]
@@ -536,13 +640,12 @@ mod tests {
         let p = plan(FaultScenario::Churn, 1.0, 5);
         let mut q = EventQueue::new();
         p.schedule_events(&mut q);
+        let horizon = p.schedule.horizon_s;
         let expected: usize = (0..40)
             .map(|s| {
                 p.sat_downtime(s)
                     .iter()
-                    .map(|&(a, b)| {
-                        (a <= p.horizon_s) as usize + (b <= p.horizon_s) as usize
-                    })
+                    .map(|&(a, b)| (a <= horizon) as usize + (b <= horizon) as usize)
                     .sum::<usize>()
             })
             .sum();

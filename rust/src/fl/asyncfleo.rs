@@ -103,8 +103,8 @@ impl Strategy for AsyncFleo {
     }
 
     fn run(&mut self, env: &mut SimEnv) -> RunResult {
-        let n_sats = env.constellation.len();
-        let n_sites = env.sites.len();
+        let n_sats = env.geo.constellation.len();
+        let n_sites = env.geo.sites.len();
         let quorum = ((n_sats as f64 * self.quorum_frac).ceil() as usize).max(1);
         let horizon = env.cfg.fl.horizon_s;
         let dispatches = env.cfg.fl.local_dispatches;
@@ -112,25 +112,28 @@ impl Strategy for AsyncFleo {
         let mut ring = HapRing::new(n_sites);
         let mut queue = EventQueue::new();
         let mut sats: Vec<SatState> = vec![SatState::default(); n_sats];
-        let mut grouping = GroupingState::new(env.constellation.n_orbits);
+        let mut grouping = GroupingState::new(env.geo.constellation.n_orbits);
         let mut detector = ConvergenceDetector::new(self.patience, self.min_delta);
 
         // On-board compute time scales with local data size (the I=100
         // local epochs sweep the whole shard) — this also breaks the
         // lock-step of identical training times, giving the realistic
         // spread of completion instants the async design exploits.
-        let mean_size: f64 =
-            (0..n_sats).map(|s| env.backend.shard_size(s) as f64).sum::<f64>() / n_sats as f64;
+        let mean_size: f64 = (0..n_sats)
+            .map(|s| env.state.backend.shard_size(s) as f64)
+            .sum::<f64>()
+            / n_sats as f64;
         let train_time = |sat: usize, env: &SimEnv| -> f64 {
-            let ratio = env.backend.shard_size(sat) as f64 / mean_size;
+            let ratio = env.state.backend.shard_size(sat) as f64 / mean_size;
             env.cfg.fl.train_time_s * ratio.clamp(0.5, 1.6)
         };
 
         // Global model history: sats train against the epoch they hold.
-        let mut globals: Vec<ModelParams> = vec![env.backend.init_global(env.cfg.seed as i32)];
+        let mut globals: Vec<ModelParams> =
+            vec![env.state.backend.init_global(env.cfg.seed as i32)];
         let mut beta: u64 = 0;
 
-        let e0 = env.backend.evaluate(&globals[0]);
+        let e0 = env.state.backend.evaluate(&globals[0]);
         env.record(0.0, 0, e0.accuracy, e0.loss);
 
         // Sink collection state.
@@ -144,7 +147,7 @@ impl Strategy for AsyncFleo {
         // Fault-plan transitions (churn, outage boundaries) become
         // typed events; with faults disabled nothing is pushed and the
         // run is bit-identical to the clean code path.
-        env.faults.schedule_events(&mut queue);
+        env.state.faults.schedule_events(&mut queue);
 
         let mut converged = false;
         while let Some(ev) = queue.pop() {
@@ -157,7 +160,7 @@ impl Strategy for AsyncFleo {
                     // a model delivered into a dead receiver is lost;
                     // the satellite catches up on rejoin or at the next
                     // broadcast / post-outage re-offer
-                    if !env.faults.sat_alive(sat, t) {
+                    if !env.state.faults.sat_alive(sat, t) {
                         continue;
                     }
                     let done = t + train_time(sat, env);
@@ -187,20 +190,21 @@ impl Strategy for AsyncFleo {
                     if sats[sat].train_done_at != Some(t) {
                         continue;
                     }
-                    if !env.faults.sat_alive(sat, t) {
+                    if !env.state.faults.sat_alive(sat, t) {
                         sats[sat].training_epoch = None;
                         sats[sat].pending_epoch = None;
                         sats[sat].train_done_at = None;
-                        env.faults.note_dropped();
+                        env.state.faults.note_dropped();
                         continue;
                     }
                     let (model, _loss) =
-                        env.backend.train_local(sat, &globals[epoch as usize], dispatches);
+                        env.state.backend.train_local(sat, &globals[epoch as usize], dispatches);
                     let meta = self.metadata(env, sat, t, epoch);
                     // route to a HAP, then along the ring to the sink
                     let route = if self.disable_isl_relay {
                         // ablation A3: wait for own next contact
-                        env.plan.next_visible_any(sat, t).map(|(tv, site)| {
+                        let next = env.geo.plan.next_visible_any(sat, t);
+                        next.map(|(tv, site)| {
                             let d = env.site_link_delay(site, sat, tv);
                             (site, tv + d, 0usize)
                         })
@@ -215,11 +219,11 @@ impl Strategy for AsyncFleo {
                                 t_sink,
                                 EventKind::HapLocalArrival { hap: ring.sink(), origin_sat: sat, epoch },
                             ));
-                        } else if env.faults.enabled() {
-                            env.faults.note_dropped(); // deferred past horizon
+                        } else if env.state.faults.enabled() {
+                            env.state.faults.note_dropped(); // deferred past horizon
                         }
-                    } else if env.faults.enabled() {
-                        env.faults.note_dropped(); // no reachable PS anymore
+                    } else if env.state.faults.enabled() {
+                        env.state.faults.note_dropped(); // no reachable PS anymore
                     }
                     // start next training round if a newer global arrived
                     let done = t + train_time(sat, env);
@@ -266,7 +270,7 @@ impl Strategy for AsyncFleo {
                                 buffer.iter().map(|b| b.meta.orbit).collect();
                             orbits.sort_unstable();
                             orbits.dedup();
-                            orbits.len() >= 2.min(env.constellation.n_orbits)
+                            orbits.len() >= 2.min(env.geo.constellation.n_orbits)
                         } else {
                             // every group must be *represented* among the
                             // candidates — fresh if it has any (selection
@@ -302,7 +306,7 @@ impl Strategy for AsyncFleo {
                     if !up {
                         // dropout: an in-flight training run is lost
                         if sats[sat].training_epoch.take().is_some() {
-                            env.faults.note_dropped();
+                            env.state.faults.note_dropped();
                         }
                         sats[sat].pending_epoch = None;
                         sats[sat].train_done_at = None;
@@ -334,7 +338,8 @@ impl Strategy for AsyncFleo {
                     // post-eclipse catch-up: the PS re-offers the newest
                     // global to whoever is visible now; satellites that
                     // already have this epoch ignore the duplicate
-                    for sat in env.plan.visible_sats(site, t) {
+                    let geo = env.geo.clone();
+                    for sat in geo.plan.visible_sats(site, t) {
                         let d = env.site_link_delay(site, sat, t);
                         let tr = t + d;
                         if tr <= horizon {
@@ -360,12 +365,12 @@ impl Strategy for AsyncFleo {
 
 impl AsyncFleo {
     fn metadata(&self, env: &SimEnv, sat: usize, t: f64, epoch: u64) -> ModelMetadata {
-        let s = &env.constellation.satellites[sat];
+        let s = &env.geo.constellation.satellites[sat];
         let u = s.elements.phase_rad + s.elements.mean_motion_rad_s() * t;
         ModelMetadata {
             sat_id: sat,
             orbit: s.orbit,
-            data_size: env.backend.shard_size(sat),
+            data_size: env.state.backend.shard_size(sat),
             loc_rad: u % (2.0 * std::f64::consts::PI),
             ts_s: t,
             epoch,
@@ -386,10 +391,11 @@ impl AsyncFleo {
         let sat_times = if self.disable_isl_relay {
             // ablation A3: star-only distribution — each satellite
             // receives at its own next site contact
-            let mut recv = vec![f64::INFINITY; env.constellation.len()];
+            let geo = env.geo.clone();
+            let mut recv = vec![f64::INFINITY; geo.constellation.len()];
             for (sat, r) in recv.iter_mut().enumerate() {
                 for (site, &tb) in hap_times.iter().enumerate() {
-                    if let Some(tv) = env.plan.next_visible(site, sat, tb) {
+                    if let Some(tv) = geo.plan.next_visible(site, sat, tb) {
                         let d = env.site_link_delay(site, sat, tv);
                         *r = r.min(tv + d);
                     }
@@ -455,7 +461,7 @@ impl AsyncFleo {
                 .collect();
             let refs: Vec<&ModelParams> = partials.iter().collect();
             // divergence to w^0 on the dist kernel (the scale reference)
-            let dists = env.backend.distances(&refs, &globals[0]);
+            let dists = env.state.backend.distances(&refs, &globals[0]);
             let items: Vec<(usize, &ModelParams, f64)> = new_orbits
                 .iter()
                 .copied()
@@ -479,8 +485,9 @@ impl AsyncFleo {
             })
             .collect();
         // D of Eq. 13: the whole constellation's data
-        let total_data: usize =
-            (0..env.constellation.len()).map(|s| env.backend.shard_size(s)).sum();
+        let total_data: usize = (0..env.geo.constellation.len())
+            .map(|s| env.state.backend.shard_size(s))
+            .sum();
         let mut sel = select_and_weigh(&candidates, *beta, total_data);
         if self.disable_staleness_discount && !sel.chosen.is_empty() {
             // ablation A2: ignore staleness — plain FedAvg over the
@@ -501,7 +508,7 @@ impl AsyncFleo {
                 sel.chosen.iter().map(|&(i, _)| &buffer[i].params).collect();
             let coeffs: Vec<f32> = sel.chosen.iter().map(|&(_, w)| w).collect();
             let prev = globals.last().unwrap();
-            let next = env.backend.aggregate(prev, &models, &coeffs, sel.coeff_prev);
+            let next = env.state.backend.aggregate(prev, &models, &coeffs, sel.coeff_prev);
             globals.push(next);
             *beta += 1;
         }
@@ -519,9 +526,9 @@ impl AsyncFleo {
         *buffer = keep;
 
         // evaluate + record + convergence
-        let e = env.backend.evaluate(globals.last().unwrap());
+        let e = env.state.backend.evaluate(globals.last().unwrap());
         if std::env::var_os("ASYNCFLEO_DEBUG").is_some() {
-            let mut per_orbit = vec![(0usize, 0usize); env.constellation.n_orbits];
+            let mut per_orbit = vec![(0usize, 0usize); env.geo.constellation.n_orbits];
             for &(i, _) in &sel.chosen {
                 per_orbit[candidates[i].meta.orbit].0 += 1;
             }

@@ -28,31 +28,33 @@ impl Strategy for FedSat {
     }
 
     fn run(&mut self, env: &mut SimEnv) -> RunResult {
-        let n_sats = env.constellation.len();
+        let n_sats = env.geo.constellation.len();
         let dispatches = env.cfg.fl.local_dispatches;
         let train_time = env.cfg.fl.train_time_s;
         let horizon = env.cfg.fl.horizon_s;
         let mut detector = ConvergenceDetector::new(8, 0.003);
 
-        let mut global = env.backend.init_global(env.cfg.seed as i32);
-        let e0 = env.backend.evaluate(&global);
+        let mut global = env.state.backend.init_global(env.cfg.seed as i32);
+        let e0 = env.state.backend.evaluate(&global);
         env.record(0.0, 0, e0.accuracy, e0.loss);
 
         let mean_size: f64 = (0..n_sats)
-            .map(|s| env.backend.shard_size(s) as f64)
+            .map(|s| env.state.backend.shard_size(s) as f64)
             .sum::<f64>()
             / n_sats as f64;
 
         // Merge all (contact, sat, site) events over the horizon.
         let mut visits: Vec<(f64, usize, usize)> = Vec::new();
         for sat in 0..n_sats {
-            for site in 0..env.sites.len() {
-                for w in env.plan.windows(site, sat) {
+            for site in 0..env.geo.sites.len() {
+                for w in env.geo.plan.windows(site, sat) {
                     visits.push((w.start_s, sat, site));
                 }
             }
         }
-        visits.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // window times are finite by construction: total_cmp never
+        // meets a NaN and keeps the sort panic-free
+        visits.sort_by(|a, b| a.0.total_cmp(&b.0));
 
         // Per-sat: time its current training completes (ready to upload
         // at the first visit after that) — sats start training on w^0
@@ -66,9 +68,11 @@ impl Strategy for FedSat {
             if t > horizon || converged {
                 break;
             }
-            // fault injection: a dark satellite's pass simply doesn't
-            // happen (always alive when faults are disabled)
-            if !env.faults.sat_alive(sat, t) {
+            // typed churn consumption (ROADMAP PR-1 follow-up): a dark
+            // satellite's pass simply doesn't happen, and neither does
+            // a pass at a failed PS site — both predicates are always
+            // true with faults disabled, so clean runs are unchanged
+            if !env.state.faults.sat_alive(sat, t) || !env.state.faults.hap_alive(site, t) {
                 continue;
             }
             last_t = t;
@@ -80,17 +84,18 @@ impl Strategy for FedSat {
                 }
                 Some(ready) if ready <= t => {
                     // upload trained model; async update; download new global
-                    let (local, _) = env.backend.train_local(sat, &global, dispatches);
+                    let (local, _) = env.state.backend.train_local(sat, &global, dispatches);
                     let d_up = env.site_link_delay(site, sat, t);
-                    let alpha = (BASE_ALPHA * env.backend.shard_size(sat) as f64
+                    let alpha = (BASE_ALPHA * env.state.backend.shard_size(sat) as f64
                         / mean_size)
                         .clamp(0.01, 0.5) as f32;
-                    global = env.backend.aggregate(&global, &[&local], &[alpha], 1.0 - alpha);
+                    global =
+                        env.state.backend.aggregate(&global, &[&local], &[alpha], 1.0 - alpha);
                     updates += 1;
                     let d_down = env.site_link_delay(site, sat, t + d_up);
                     ready_at[sat] = Some(t + d_up + d_down + train_time);
                     if updates as usize % EVAL_EVERY == 0 {
-                        let e = env.backend.evaluate(&global);
+                        let e = env.state.backend.evaluate(&global);
                         env.record(t, updates, e.accuracy, e.loss);
                         converged = detector.update(e.accuracy) && updates >= 30;
                     }
@@ -98,8 +103,8 @@ impl Strategy for FedSat {
                 Some(_) => {} // still training: skip this pass
             }
         }
-        if env.curve.points.len() < 2 {
-            let e = env.backend.evaluate(&global);
+        if env.state.curve.points.len() < 2 {
+            let e = env.state.backend.evaluate(&global);
             env.record(last_t.max(1.0), updates, e.accuracy, e.loss);
         }
         RunResult::from_env("fedsat", env, updates)

@@ -32,26 +32,26 @@ impl Strategy for FedSpace {
     }
 
     fn run(&mut self, env: &mut SimEnv) -> RunResult {
-        let n_sats = env.constellation.len();
+        let n_sats = env.geo.constellation.len();
         let dispatches = env.cfg.fl.local_dispatches;
         let train_time = env.cfg.fl.train_time_s;
         let horizon = env.cfg.fl.horizon_s;
         let mut detector = ConvergenceDetector::new(10, 0.003);
 
-        let mut global = env.backend.init_global(env.cfg.seed as i32);
-        let e0 = env.backend.evaluate(&global);
+        let mut global = env.state.backend.init_global(env.cfg.seed as i32);
+        let e0 = env.state.backend.evaluate(&global);
         env.record(0.0, 0, e0.accuracy, e0.loss);
 
-        // contact list as in FedSat
+        // contact list as in FedSat (finite by construction: total_cmp)
         let mut visits: Vec<(f64, usize, usize)> = Vec::new();
         for sat in 0..n_sats {
-            for site in 0..env.sites.len() {
-                for w in env.plan.windows(site, sat) {
+            for site in 0..env.geo.sites.len() {
+                for w in env.geo.plan.windows(site, sat) {
                     visits.push((w.start_s, sat, site));
                 }
             }
         }
-        visits.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        visits.sort_by(|a, b| a.0.total_cmp(&b.0));
 
         let mut ready_at: Vec<Option<f64>> = vec![None; n_sats];
         // (arrival time, sat, model)
@@ -68,13 +68,22 @@ impl Strategy for FedSpace {
                     break;
                 }
                 visit_iter.next();
+                // typed churn consumption (ROADMAP PR-1 follow-up):
+                // skip the pass of a dead satellite or a failed PS site
+                // instead of only feeling faults through link delays;
+                // both predicates are always true with faults disabled,
+                // so clean runs are bit-identical
+                if !env.state.faults.sat_alive(sat, t) || !env.state.faults.hap_alive(site, t)
+                {
+                    continue;
+                }
                 match ready_at[sat] {
                     None => {
                         let d = env.site_link_delay(site, sat, t);
                         ready_at[sat] = Some(t + d + train_time);
                     }
                     Some(ready) if ready <= t => {
-                        let (local, _) = env.backend.train_local(sat, &global, dispatches);
+                        let (local, _) = env.state.backend.train_local(sat, &global, dispatches);
                         // model + raw-data fraction upload
                         let d_up = env.site_link_delay(site, sat, t) * DATA_OVERHEAD;
                         pending.push((t + d_up, sat, local));
@@ -93,14 +102,14 @@ impl Strategy for FedSpace {
             };
             if !arrived.is_empty() {
                 let sizes: Vec<usize> =
-                    arrived.iter().map(|(_, s, _)| env.backend.shard_size(*s)).collect();
+                    arrived.iter().map(|(_, s, _)| env.state.backend.shard_size(*s)).collect();
                 let weights = crate::train::fedavg_weights(&sizes);
                 let refs: Vec<&ModelParams> = arrived.iter().map(|(_, _, m)| m).collect();
                 // naive: overwrite with the partial average (no staleness
                 // discount, no previous-model anchoring)
-                global = env.backend.aggregate(&global, &refs, &weights, 0.0);
+                global = env.state.backend.aggregate(&global, &refs, &weights, 0.0);
                 rounds += 1;
-                let e = env.backend.evaluate(&global);
+                let e = env.state.backend.evaluate(&global);
                 env.record(tick, rounds, e.accuracy, e.loss);
                 converged = detector.update(e.accuracy) && rounds >= 12;
             }

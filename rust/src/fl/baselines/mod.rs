@@ -40,17 +40,18 @@ pub(crate) const SYNC_MIN_ROUNDS: u64 = 4;
 ///
 /// Returns `None` if any satellite cannot complete within the horizon.
 pub(crate) fn sync_round_end(env: &mut SimEnv, t: f64, use_isl: bool) -> Option<f64> {
-    let n_sats = env.constellation.len();
+    let geo = env.geo.clone();
+    let n_sats = geo.constellation.len();
     let horizon = env.cfg.fl.horizon_s;
     let train = env.cfg.fl.train_time_s;
 
     // --- delivery ---
     let recv: Vec<f64> = if use_isl {
-        let bcasts: Vec<f64> = (0..env.sites.len()).map(|_| t).collect();
+        let bcasts: Vec<f64> = (0..geo.sites.len()).map(|_| t).collect();
         sat_receive_times(env, &bcasts)
     } else {
         (0..n_sats)
-            .map(|sat| match env.plan.next_visible_any(sat, t) {
+            .map(|sat| match geo.plan.next_visible_any(sat, t) {
                 Some((tv, site)) => {
                     let d = env.site_link_delay(site, sat, tv);
                     tv + d
@@ -70,7 +71,7 @@ pub(crate) fn sync_round_end(env: &mut SimEnv, t: f64, use_isl: bool) -> Option<
         let up = if use_isl {
             crate::fl::propagation::uplink_route(env, sat, done).map(|(_, arr, _)| arr)
         } else {
-            env.plan.next_visible_any(sat, done).map(|(tv, site)| {
+            geo.plan.next_visible_any(sat, done).map(|(tv, site)| {
                 let d = env.site_link_delay(site, sat, tv);
                 tv + d
             })
@@ -91,15 +92,15 @@ pub(crate) fn run_synchronous(
     name: &'static str,
     use_isl: bool,
 ) -> crate::coordinator::RunResult {
-    let n_sats = env.constellation.len();
+    let n_sats = env.geo.constellation.len();
     let dispatches = env.cfg.fl.local_dispatches;
     let mut detector = ConvergenceDetector::new(SYNC_PATIENCE, SYNC_MIN_DELTA);
 
-    let mut global = env.backend.init_global(env.cfg.seed as i32);
-    let e0 = env.backend.evaluate(&global);
+    let mut global = env.state.backend.init_global(env.cfg.seed as i32);
+    let e0 = env.state.backend.evaluate(&global);
     env.record(0.0, 0, e0.accuracy, e0.loss);
 
-    let sizes: Vec<usize> = (0..n_sats).map(|s| env.backend.shard_size(s)).collect();
+    let sizes: Vec<usize> = (0..n_sats).map(|s| env.state.backend.shard_size(s)).collect();
     let weights = fedavg_weights(&sizes);
 
     let mut t = 0.0f64;
@@ -111,14 +112,14 @@ pub(crate) fn run_synchronous(
         // all satellites train from the same global model (Eq. 4)
         let mut locals: Vec<ModelParams> = Vec::with_capacity(n_sats);
         for sat in 0..n_sats {
-            let (m, _) = env.backend.train_local(sat, &global, dispatches);
+            let (m, _) = env.state.backend.train_local(sat, &global, dispatches);
             locals.push(m);
         }
         let refs: Vec<&ModelParams> = locals.iter().collect();
-        global = env.backend.aggregate(&global, &refs, &weights, 0.0);
+        global = env.state.backend.aggregate(&global, &refs, &weights, 0.0);
         round += 1;
         t = end;
-        let e = env.backend.evaluate(&global);
+        let e = env.state.backend.evaluate(&global);
         env.record(t, round, e.accuracy, e.loss);
         if detector.update(e.accuracy) && round >= SYNC_MIN_ROUNDS {
             break;

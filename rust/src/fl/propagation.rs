@@ -9,6 +9,10 @@
 //! delays from the geometry at relay time), which is exactly the
 //! event-timing the hop-by-hop process produces, without paying one
 //! queue event per hop. Hop counts still enter the transfer accounting.
+//!
+//! Geometry reads go through a cloned `Arc<Geometry>` so the contact
+//! plan can be iterated allocation-free while the env's delay calls
+//! mutate the per-run state.
 
 use crate::coordinator::SimEnv;
 use crate::topology::HapRing;
@@ -40,7 +44,8 @@ pub fn hap_ring_receive_times(env: &mut SimEnv, ring: &HapRing, source: usize, t
 /// Returns `f64::INFINITY` past-horizon entries when an orbit never
 /// makes contact.
 pub fn sat_receive_times(env: &mut SimEnv, bcasts: &[f64]) -> Vec<f64> {
-    let n_sats = env.constellation.len();
+    let geo = env.geo.clone();
+    let n_sats = geo.constellation.len();
     let mut recv = vec![f64::INFINITY; n_sats];
 
     // 1. direct star downlink to currently-visible satellites
@@ -48,15 +53,15 @@ pub fn sat_receive_times(env: &mut SimEnv, bcasts: &[f64]) -> Vec<f64> {
         if !tb.is_finite() {
             continue;
         }
-        for sat in env.plan.visible_sats(site, tb) {
+        for sat in geo.plan.visible_sats(site, tb) {
             let d = env.site_link_delay(site, sat, tb);
             recv[sat] = recv[sat].min(tb + d);
         }
     }
 
     // 2. per-orbit: seed stranded orbits, then ISL ring relaxation
-    for orbit in 0..env.constellation.n_orbits {
-        let members = env.constellation.orbit_members(orbit);
+    for orbit in 0..geo.constellation.n_orbits {
+        let members = geo.constellation.orbit_members(orbit);
         if members.iter().all(|&m| !recv[m].is_finite()) {
             // nobody visible at broadcast: earliest later contact wins
             let mut best: Option<(f64, usize, usize)> = None; // (time, sat, site)
@@ -65,7 +70,7 @@ pub fn sat_receive_times(env: &mut SimEnv, bcasts: &[f64]) -> Vec<f64> {
                     if !tb.is_finite() {
                         continue;
                     }
-                    if let Some(tv) = env.plan.next_visible(site, m, tb) {
+                    if let Some(tv) = geo.plan.next_visible(site, m, tb) {
                         if best.map_or(true, |b| tv < b.0) {
                             best = Some((tv, m, site));
                         }
@@ -117,14 +122,15 @@ fn relax_ring(env: &mut SimEnv, members: &[usize], recv: &mut [f64]) {
 /// (Sec. IV-B2 last paragraph). Returns `(site, arrival_time, hops)`,
 /// or `None` if no member ever sees a site again within the horizon.
 pub fn uplink_route(env: &mut SimEnv, sat: usize, t_ready: f64) -> Option<(usize, f64, usize)> {
-    let orbit = env.constellation.satellites[sat].orbit;
-    let members = env.constellation.orbit_members(orbit);
+    let geo = env.geo.clone();
+    let orbit = geo.constellation.satellites[sat].orbit;
+    let members = geo.constellation.orbit_members(orbit);
     let n = members.len();
-    let my_slot = env.constellation.satellites[sat].slot;
+    let my_slot = geo.constellation.satellites[sat].slot;
 
     // Estimate the (near-constant) intra-orbit hop delay once.
     let hop_delay = if n > 1 {
-        let (prev, _) = env.constellation.ring_neighbors(sat);
+        let (prev, _) = geo.constellation.ring_neighbors(sat);
         env.isl_hop_delay(sat, prev, t_ready)
     } else {
         0.0
@@ -135,7 +141,7 @@ pub fn uplink_route(env: &mut SimEnv, sat: usize, t_ready: f64) -> Option<(usize
         let fwd = (j_idx + n - my_slot) % n;
         let hops = fwd.min(n - fwd);
         let t_at_j = t_ready + hops as f64 * hop_delay;
-        if let Some((tv, site)) = env.plan.next_visible_any(j, t_at_j) {
+        if let Some((tv, site)) = geo.plan.next_visible_any(j, t_at_j) {
             let d_up = env.site_link_delay(site, j, tv);
             let arrival = tv + d_up;
             if best.map_or(true, |b| arrival < b.1) {
@@ -145,7 +151,7 @@ pub fn uplink_route(env: &mut SimEnv, sat: usize, t_ready: f64) -> Option<(usize
     }
     // account the relay hops as transfers
     if let Some((_, _, hops)) = best {
-        env.transfers += hops as u64;
+        env.state.transfers += hops as u64;
     }
     best
 }
@@ -205,12 +211,12 @@ mod tests {
         // within a few ISL hops (~seconds), not wait for their own pass
         let (cfg, mut b) = env_with(crate::config::PsPlacement::HapRolla);
         let mut env = SimEnv::new(&cfg, &mut b);
-        let t0 = env.plan.windows(0, 0).first().map(|w| w.start_s + 1.0).unwrap_or(0.0);
+        let t0 = env.geo.plan.windows(0, 0).first().map(|w| w.start_s + 1.0).unwrap_or(0.0);
         let recv = sat_receive_times(&mut env, &[t0]);
-        let visible = env.plan.visible_sats(0, t0);
+        let visible: Vec<usize> = env.geo.plan.visible_sats(0, t0).collect();
         for &v in &visible {
-            let orbit = env.constellation.satellites[v].orbit;
-            for &m in &env.constellation.orbit_members(orbit) {
+            let orbit = env.geo.constellation.satellites[v].orbit;
+            for &m in &env.geo.constellation.orbit_members(orbit) {
                 assert!(
                     recv[m] - t0 < 60.0,
                     "sat {m} in seeded orbit {orbit} took {}s",
@@ -237,7 +243,7 @@ mod tests {
         let (cfg, mut b) = env_with(crate::config::PsPlacement::HapRolla);
         let mut env = SimEnv::new(&cfg, &mut b);
         // find a moment a satellite is visible
-        let w = env.plan.windows(0, 5).first().copied().expect("sat 5 window");
+        let w = env.geo.plan.windows(0, 5).first().copied().expect("sat 5 window");
         let t = 0.5 * (w.start_s + w.end_s);
         let (_, arrival, hops) = uplink_route(&mut env, 5, t).unwrap();
         assert_eq!(hops, 0, "already visible: no relay needed");

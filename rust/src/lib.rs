@@ -26,11 +26,24 @@
 //! * [`faults`] — deterministic fault injection: packet loss with
 //!   retransmission, eclipse outage windows, satellite churn and HAP
 //!   failures, applied transparently to every strategy through the
-//!   env's link-delay calls;
-//! * [`coordinator`] — the orchestrator that drives everything;
+//!   env's link-delay calls; split into an immutable shareable
+//!   `FaultSchedule` and per-run `FaultPlan` counters;
+//! * [`coordinator`] — the orchestrator that drives everything. Split
+//!   along the sweep axis: `coordinator::Geometry` holds everything
+//!   immutable across runs (constellation, sites, contact plan, link
+//!   params) behind a process-wide `Arc` cache keyed by the
+//!   geometry-relevant config subset, `coordinator::env::RunState`
+//!   holds what a single run mutates (backend, RNG, curve, transfer
+//!   counter, fault counters), and `SimEnv` is the thin facade the
+//!   strategies program against;
 //! * [`experiments`] — drivers regenerating every paper table & figure,
 //!   plus the `resilience` sweep comparing graceful degradation across
-//!   schemes under the fault scenarios;
+//!   schemes under the fault scenarios. Every driver describes its grid
+//!   as `experiments::executor::Cell`s and runs them through the
+//!   deterministic parallel executor (`--jobs N`, surrogate mode):
+//!   cells fan out to `std::thread::scope` workers sharing the cached
+//!   `Geometry`, results return in cell order, and output CSVs are
+//!   byte-identical to a sequential run;
 //! * [`config`], [`cli`], [`metrics`], [`bench`], [`testkit`],
 //!   [`util`] — supporting substrates built from scratch (crates.io is
 //!   unreachable; see DESIGN.md §1).

@@ -1,9 +1,9 @@
 //! `asyncfleo` — launcher CLI for the AsyncFLEO paper reproduction.
 //!
 //! ```text
-//! asyncfleo exp <name>|all [--out DIR] [--fast] [--surrogate] [--seed N]
+//! asyncfleo exp <name>|all [--out DIR] [--fast] [--surrogate] [--seed N] [--jobs N]
 //! asyncfleo run [--config FILE] [--scheme S] [--placement P] ...
-//! asyncfleo resilience [--out DIR] [--fast] [--surrogate] [--seed N]
+//! asyncfleo resilience [--out DIR] [--fast] [--surrogate] [--seed N] [--jobs N]
 //! asyncfleo info
 //! ```
 
@@ -17,9 +17,11 @@ const USAGE: &str = "\
 asyncfleo — AsyncFLEO paper reproduction (Rust + JAX + Pallas)
 
 USAGE:
-  asyncfleo exp <name>|all [--out DIR] [--fast] [--surrogate] [--seed N]
+  asyncfleo exp <name>|all [--out DIR] [--fast] [--surrogate] [--seed N] [--jobs N]
       Regenerate a paper table/figure (table2 fig6 fig7a-c fig8a-c,
       ablate-{grouping,staleness,relay}) into DIR (default: results/).
+      --jobs N runs surrogate sweep cells on N worker threads; output
+      is bit-identical to --jobs 1 (PJRT sweeps stay sequential).
 
   asyncfleo run [--config FILE] [--scheme S] [--placement P]
                 [--model mlp|cnn] [--dataset digits|cifar]
@@ -29,7 +31,7 @@ USAGE:
                 [--fault-intensity X]
       Run a single FL experiment and print its curve.
 
-  asyncfleo resilience [--out DIR] [--fast] [--surrogate] [--seed N]
+  asyncfleo resilience [--out DIR] [--fast] [--surrogate] [--seed N] [--jobs N]
       Sweep the fault scenarios (lossy, eclipse, churn, hap-failure)
       across AsyncFLEO + baselines and tabulate graceful degradation
       (alias for `exp resilience`).
@@ -67,29 +69,27 @@ fn main() {
     }
 }
 
+fn sweep_options(args: &Args) -> anyhow::Result<ExpOptions> {
+    Ok(ExpOptions {
+        out_dir: args.opt_or("out", "results").into(),
+        fast: args.flag("fast"),
+        surrogate: args.flag("surrogate"),
+        seed: args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)?.unwrap_or(42),
+        jobs: args.opt_parse::<usize>("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1),
+    })
+}
+
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
     let name = args
         .positional
         .first()
         .map(String::as_str)
         .unwrap_or("all");
-    let opts = ExpOptions {
-        out_dir: args.opt_or("out", "results").into(),
-        fast: args.flag("fast"),
-        surrogate: args.flag("surrogate"),
-        seed: args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)?.unwrap_or(42),
-    };
-    run_experiment(name, &opts)
+    run_experiment(name, &sweep_options(args)?)
 }
 
 fn cmd_resilience(args: &Args) -> anyhow::Result<()> {
-    let opts = ExpOptions {
-        out_dir: args.opt_or("out", "results").into(),
-        fast: args.flag("fast"),
-        surrogate: args.flag("surrogate"),
-        seed: args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)?.unwrap_or(42),
-    };
-    run_experiment("resilience", &opts)
+    run_experiment("resilience", &sweep_options(args)?)
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {

@@ -25,3 +25,16 @@ pub use ground::{GeodeticSite, SiteKind};
 pub use propagation::satellite_position_eci;
 pub use visibility::{contact_windows, elevation_deg, sat_sat_los, ContactWindow};
 pub use walker::{Satellite, WalkerConstellation};
+
+// All geometry types are shared across the parallel sweep executor's
+// worker threads (via `Arc<coordinator::Geometry>`); pin the auto
+// traits here so a future non-Sync field (say, an interior-mutability
+// cache) fails at its source instead of in a distant thread spawn.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<WalkerConstellation>();
+    assert_send_sync::<Satellite>();
+    assert_send_sync::<OrbitalElements>();
+    assert_send_sync::<GeodeticSite>();
+    assert_send_sync::<ContactWindow>();
+};

@@ -56,12 +56,20 @@ impl ContactWindow {
 /// Extract contact windows of a time-dependent visibility predicate
 /// over `[0, horizon_s]`, sampling every `step_s` and refining each
 /// edge by bisection to ~1 s accuracy.
+///
+/// Every window edge is guaranteed finite: the bounds are asserted
+/// finite here, and bisection only ever averages them. Downstream
+/// consumers (`ContactPlan::next_visible_any`'s total-order min, the
+/// event queue's finite-time invariant) rely on this.
 pub fn contact_windows(
     mut visible: impl FnMut(f64) -> bool,
     horizon_s: f64,
     step_s: f64,
 ) -> Vec<ContactWindow> {
-    assert!(step_s > 0.0 && horizon_s > 0.0);
+    assert!(
+        step_s > 0.0 && horizon_s > 0.0 && step_s.is_finite() && horizon_s.is_finite(),
+        "contact scan needs finite positive horizon/step, got {horizon_s}/{step_s}"
+    );
     let mut windows = Vec::new();
     let mut prev_t = 0.0;
     let mut prev_v = visible(0.0);

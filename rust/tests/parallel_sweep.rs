@@ -1,0 +1,98 @@
+//! Determinism contract of the parallel sweep executor and the shared
+//! geometry cache:
+//!
+//! * `--jobs 4` produces byte-identical `results/*.csv` to `--jobs 1`
+//!   on the fast surrogate Table II sweep (same seed ⇒ same bytes,
+//!   regardless of worker scheduling);
+//! * bit-identical `RunResult` curves at the executor level;
+//! * the `Geometry` cache returns the same `Arc` for
+//!   geometry-identical configs, a fresh one when altitude / elevation
+//!   / horizon change, and builds each unique geometry exactly once.
+
+use asyncfleo::config::ExperimentConfig;
+use asyncfleo::coordinator::Geometry;
+use asyncfleo::experiments::drivers::{table2_cells, ExpOptions};
+use asyncfleo::experiments::executor::run_cells;
+use asyncfleo::experiments::run_experiment;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn temp_out(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("asyncfleo_parallel_sweep_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn opts(out: PathBuf, jobs: usize) -> ExpOptions {
+    ExpOptions { out_dir: out, fast: true, surrogate: true, seed: 42, jobs }
+}
+
+#[test]
+fn table2_fast_surrogate_csvs_are_byte_identical_across_jobs() {
+    let dir1 = temp_out("jobs1");
+    let dir4 = temp_out("jobs4");
+    run_experiment("table2", &opts(dir1.clone(), 1)).expect("--jobs 1 run");
+    run_experiment("table2", &opts(dir4.clone(), 4)).expect("--jobs 4 run");
+    for file in ["table2.csv", "fig6.csv"] {
+        let a = std::fs::read(dir1.join(file)).unwrap();
+        let b = std::fs::read(dir4.join(file)).unwrap();
+        assert!(!a.is_empty(), "{file} must not be empty");
+        assert_eq!(a, b, "{file}: --jobs 4 bytes must equal --jobs 1 bytes");
+    }
+    let _ = std::fs::remove_dir_all(&dir1);
+    let _ = std::fs::remove_dir_all(&dir4);
+}
+
+#[test]
+fn executor_curves_are_bit_identical_across_jobs() {
+    let o1 = opts(temp_out("curves"), 1);
+    let o4 = ExpOptions { jobs: 4, ..o1.clone() };
+    let cells = table2_cells(&o1);
+    let seq = run_cells(&cells, &o1).expect("sequential");
+    let par = run_cells(&cells, &o4).expect("parallel");
+    assert_eq!(seq.len(), par.len());
+    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(a.epochs, b.epochs, "cell {i}: epochs");
+        assert_eq!(a.transfers, b.transfers, "cell {i}: transfers");
+        assert_eq!(a.fault_stats, b.fault_stats, "cell {i}: fault stats");
+        assert_eq!(a.curve.points.len(), b.curve.points.len(), "cell {i}: curve len");
+        for (x, y) in a.curve.points.iter().zip(&b.curve.points) {
+            assert_eq!(x.time_s, y.time_s, "cell {i}: point time");
+            assert_eq!(x.accuracy, y.accuracy, "cell {i}: point accuracy");
+            assert_eq!(x.loss, y.loss, "cell {i}: point loss");
+        }
+    }
+}
+
+#[test]
+fn geometry_cache_identity_and_keying() {
+    // a geometry unique to this test binary (altitude no other config
+    // uses), so build counts are isolated from the other tests here
+    let mut cfg = ExperimentConfig::test_small();
+    cfg.constellation.altitude_km = 1414.5;
+
+    let a = Geometry::shared(&cfg);
+    let b = Geometry::shared(&cfg);
+    assert!(Arc::ptr_eq(&a, &b), "geometry-identical configs share one Arc");
+    assert_eq!(Geometry::build_count(&cfg), 1, "built exactly once");
+
+    // non-geometry knobs keep sharing
+    let mut same_geo = cfg.clone();
+    same_geo.seed = 9001;
+    same_geo.fl.max_epochs = 1;
+    assert!(Arc::ptr_eq(&a, &Geometry::shared(&same_geo)));
+
+    // altitude / elevation / horizon each key a fresh instance
+    let mut alt = cfg.clone();
+    alt.constellation.altitude_km = 1415.5;
+    assert!(!Arc::ptr_eq(&a, &Geometry::shared(&alt)));
+    let mut elev = cfg.clone();
+    elev.min_elevation_deg = 17.25;
+    assert!(!Arc::ptr_eq(&a, &Geometry::shared(&elev)));
+    let mut hor = cfg.clone();
+    hor.fl.horizon_s = cfg.fl.horizon_s + 600.0;
+    assert!(!Arc::ptr_eq(&a, &Geometry::shared(&hor)));
+
+    assert_eq!(Geometry::build_count(&cfg), 1, "base entry never rebuilt");
+}
