@@ -1,0 +1,93 @@
+//! Scenario-catalog benchmark: geometry build cost per preset world
+//! (the dominating per-scenario cost the shared cache amortizes) and
+//! the scheme×scenario comparison grid throughput on the streaming
+//! executor, sequential vs `--jobs 4`.
+//!
+//! Emits `BENCH_scenarios.json` so the perf trajectory of the scenario
+//! subsystem is tracked across PRs.
+//!
+//! Run: `cargo bench --offline --bench bench_scenarios`
+
+use asyncfleo::bench::black_box;
+use asyncfleo::coordinator::Geometry;
+use asyncfleo::experiments::drivers::ExpOptions;
+use asyncfleo::experiments::executor::run_cells;
+use asyncfleo::experiments::scenarios::compare_cells;
+use asyncfleo::scenario::{Scenario, ScenarioRegistry};
+use std::io::Write;
+use std::time::Instant;
+
+const PAR_JOBS: usize = 4;
+
+fn main() {
+    let registry = ScenarioRegistry::builtin();
+
+    // Cold geometry build per preset, on a bench-sized horizon (the
+    // scan cost scales linearly with horizon; 12 h ranks the worlds
+    // without a multi-minute bench run).
+    println!("== per-preset geometry build (12 h horizon) ==");
+    let mut geometry_lines = Vec::new();
+    for sc in registry.iter() {
+        let mut cfg = sc.cfg.clone();
+        cfg.fl.horizon_s = 12.0 * 3600.0;
+        let t0 = Instant::now();
+        black_box(Geometry::build(&cfg));
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{:<18} {:>5} sats  {:>9.3} s", sc.name, sc.cfg.n_sats(), dt);
+        geometry_lines.push(format!(
+            "    {{\"name\": \"{}\", \"sats\": {}, \"build_s\": {dt:.6}}}",
+            sc.name,
+            sc.cfg.n_sats()
+        ));
+    }
+
+    // Comparison-grid throughput on the two cheapest presets (fast
+    // sizes), sequential vs parallel.
+    let scenarios: Vec<Scenario> = ["sparse-iot", "paper-40"]
+        .iter()
+        .map(|n| registry.get(n).expect("preset").clone())
+        .collect();
+    let opts_seq = ExpOptions { fast: true, surrogate: true, jobs: 1, ..Default::default() };
+    let opts_par = ExpOptions { jobs: PAR_JOBS, ..opts_seq.clone() };
+    let cells = compare_cells(&scenarios, &opts_seq);
+    let n_cells = cells.len();
+    for cell in &cells {
+        Geometry::shared(&cell.cfg); // warm: measure run time, not build
+    }
+
+    let t0 = Instant::now();
+    let seq = run_cells(&cells, &opts_seq).expect("sequential grid");
+    let sequential_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let par = run_cells(&cells, &opts_par).expect("parallel grid");
+    let parallel_s = t0.elapsed().as_secs_f64();
+
+    // determinism sanity: a bench must never report a speedup on wrong
+    // results
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.epochs, b.epochs, "parallel grid diverged from sequential");
+        assert_eq!(a.transfers, b.transfers, "parallel grid diverged from sequential");
+    }
+
+    let speedup = sequential_s / parallel_s.max(1e-9);
+    println!("\n== scenario comparison grid ({n_cells} cells, fast surrogate) ==");
+    println!(
+        "sequential (--jobs 1):    {sequential_s:>9.3} s  ({:.2} cells/s)",
+        n_cells as f64 / sequential_s
+    );
+    println!(
+        "parallel   (--jobs {PAR_JOBS}):    {parallel_s:>9.3} s  ({:.2} cells/s)",
+        n_cells as f64 / parallel_s
+    );
+    println!("speedup:                  {speedup:>9.2} x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"scenarios\",\n  \"presets\": {},\n  \"grid_cells\": {n_cells},\n  \"jobs\": {PAR_JOBS},\n  \"geometry_builds\": [\n{}\n  ],\n  \"sequential_s\": {sequential_s:.6},\n  \"parallel_s\": {parallel_s:.6},\n  \"speedup\": {speedup:.4}\n}}\n",
+        registry.len(),
+        geometry_lines.join(",\n"),
+    );
+    let mut f = std::fs::File::create("BENCH_scenarios.json").expect("create BENCH_scenarios.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_scenarios.json");
+    println!("wrote BENCH_scenarios.json");
+}

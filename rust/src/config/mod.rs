@@ -10,6 +10,7 @@ pub mod parser;
 use crate::comm::LinkParams;
 use crate::data::{DatasetKind, Partition};
 use crate::faults::{FaultConfig, FaultScenario};
+use crate::orbit::{ShellSpec, WalkerPattern};
 use parser::{Doc, ParseError, Value};
 
 /// FL scheme under test (AsyncFLEO + the paper's baselines, Sec. V-A).
@@ -101,6 +102,8 @@ pub enum PsPlacement {
     TwoHaps,
     /// The FedISL/FedSat "ideal setup": GS at the North Pole.
     GsNorthPole,
+    /// Single HAP above Quito (equatorial-shell scenarios).
+    HapQuito,
 }
 
 impl PsPlacement {
@@ -110,6 +113,7 @@ impl PsPlacement {
             "hap" | "hap-rolla" => PsPlacement::HapRolla,
             "two-haps" | "twohap" => PsPlacement::TwoHaps,
             "gs-np" | "north-pole" => PsPlacement::GsNorthPole,
+            "hap-quito" | "quito" => PsPlacement::HapQuito,
             _ => return None,
         })
     }
@@ -120,6 +124,7 @@ impl PsPlacement {
             PsPlacement::HapRolla => "hap-rolla",
             PsPlacement::TwoHaps => "two-haps",
             PsPlacement::GsNorthPole => "gs-np",
+            PsPlacement::HapQuito => "hap-quito",
         }
     }
 
@@ -130,18 +135,83 @@ impl PsPlacement {
             PsPlacement::HapRolla => vec![S::rolla_hap()],
             PsPlacement::TwoHaps => vec![S::rolla_hap(), S::portland_hap()],
             PsPlacement::GsNorthPole => vec![S::north_pole_gs()],
+            PsPlacement::HapQuito => vec![S::quito_hap()],
         }
     }
 }
 
-/// Constellation geometry (paper Sec. V-A defaults).
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// Constellation geometry (paper Sec. V-A defaults). The scalar fields
+/// describe the *primary* shell; `extra_shells` appends further shells
+/// for multi-shell scenarios (each with its own pattern, altitude,
+/// inclination, planes and phasing — globally unique satellite ids
+/// follow shell order, see [`crate::orbit::WalkerConstellation`]).
+#[derive(Clone, Debug, PartialEq)]
 pub struct ConstellationConfig {
     pub n_orbits: usize,
     pub sats_per_orbit: usize,
     pub altitude_km: f64,
     pub inclination_deg: f64,
     pub phasing: usize,
+    /// Walker pattern of the primary shell.
+    pub pattern: WalkerPattern,
+    /// Additional shells beyond the primary (empty = single-shell).
+    pub extra_shells: Vec<ShellSpec>,
+}
+
+impl ConstellationConfig {
+    /// The primary shell described by the scalar fields.
+    pub fn primary_shell(&self) -> ShellSpec {
+        ShellSpec {
+            pattern: self.pattern,
+            n_orbits: self.n_orbits,
+            sats_per_orbit: self.sats_per_orbit,
+            altitude_km: self.altitude_km,
+            inclination_deg: self.inclination_deg,
+            phasing: self.phasing,
+        }
+    }
+
+    /// All shells: the primary followed by `extra_shells`.
+    pub fn shells(&self) -> Vec<ShellSpec> {
+        let mut out = Vec::with_capacity(1 + self.extra_shells.len());
+        out.push(self.primary_shell());
+        out.extend_from_slice(&self.extra_shells);
+        out
+    }
+
+    /// Total satellites across all shells.
+    pub fn n_sats(&self) -> usize {
+        self.shells().iter().map(ShellSpec::n_sats).sum()
+    }
+
+    /// Total orbital planes across all shells.
+    pub fn n_planes(&self) -> usize {
+        self.shells().iter().map(|s| s.n_orbits).sum()
+    }
+
+    /// Global plane index of every satellite id (what the data
+    /// partitioner and fault scheduler shard by).
+    pub fn plane_of(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.n_sats());
+        let mut plane = 0usize;
+        for sh in self.shells() {
+            for _ in 0..sh.n_orbits {
+                out.extend(std::iter::repeat(plane).take(sh.sats_per_orbit));
+                plane += 1;
+            }
+        }
+        out
+    }
+
+    /// Compact form for catalogs, e.g. `5x8@2000km/80°` or
+    /// `12x20@550km/53° + 6x10@1110km/53.8°`.
+    pub fn summary(&self) -> String {
+        self.shells()
+            .iter()
+            .map(ShellSpec::summary)
+            .collect::<Vec<_>>()
+            .join(" + ")
+    }
 }
 
 /// FL hyper-parameters and run control.
@@ -199,6 +269,8 @@ impl ExperimentConfig {
                 altitude_km: 2000.0,
                 inclination_deg: 80.0,
                 phasing: 1,
+                pattern: WalkerPattern::Delta,
+                extra_shells: Vec::new(),
             },
             placement: PsPlacement::HapRolla,
             link: LinkParams::default(),
@@ -237,7 +309,7 @@ impl ExperimentConfig {
     }
 
     pub fn n_sats(&self) -> usize {
-        self.constellation.n_orbits * self.constellation.sats_per_orbit
+        self.constellation.n_sats()
     }
 
     /// Artifact-name fragment, e.g. "cnn_digits".
@@ -248,15 +320,27 @@ impl ExperimentConfig {
     /// Validate invariants; returns a list of problems (empty = OK).
     pub fn validate(&self) -> Vec<String> {
         let mut errs = Vec::new();
-        let c = &self.constellation;
-        if c.n_orbits == 0 || c.sats_per_orbit == 0 {
-            errs.push("constellation must have at least one satellite".into());
+        for (i, sh) in self.constellation.shells().iter().enumerate() {
+            let which =
+                if i == 0 { "constellation".to_string() } else { format!("shell{}", i + 1) };
+            if sh.n_orbits == 0 || sh.sats_per_orbit == 0 {
+                errs.push(format!("{which} must have at least one satellite"));
+            }
+            if !(100.0..=3000.0).contains(&sh.altitude_km) {
+                errs.push(format!("{which}: altitude {} km outside LEO band", sh.altitude_km));
+            }
+            if !(0.0..=180.0).contains(&sh.inclination_deg) {
+                errs.push(format!("{which}: inclination {} out of range", sh.inclination_deg));
+            }
         }
-        if !(100.0..=3000.0).contains(&c.altitude_km) {
-            errs.push(format!("altitude {} km outside LEO band", c.altitude_km));
-        }
-        if !(0.0..=180.0).contains(&c.inclination_deg) {
-            errs.push(format!("inclination {} out of range", c.inclination_deg));
+        // [shell2]..[shell9] is the parseable range (the sorted
+        // flattened doc would order [shell10] before [shell2]); reject
+        // configs whose to_toml dump could not round-trip
+        if self.constellation.extra_shells.len() > 8 {
+            errs.push(format!(
+                "at most 8 extra shells are supported ({} given)",
+                self.constellation.extra_shells.len()
+            ));
         }
         if self.fl.lr <= 0.0 || self.fl.lr > 1.0 {
             errs.push(format!("lr {} out of (0, 1]", self.fl.lr));
@@ -321,6 +405,10 @@ impl ExperimentConfig {
             "constellation.altitude_km" => self.constellation.altitude_km = need_f64()?,
             "constellation.inclination_deg" => self.constellation.inclination_deg = need_f64()?,
             "constellation.phasing" => self.constellation.phasing = need_usize()?,
+            "constellation.pattern" => {
+                self.constellation.pattern = WalkerPattern::parse(need_str()?)
+                    .ok_or(format!("{key}: unknown pattern (delta|star)"))?
+            }
             "ps.placement" => {
                 self.placement = PsPlacement::parse(need_str()?)
                     .ok_or(format!("{key}: unknown placement"))?
@@ -387,17 +475,72 @@ impl ExperimentConfig {
             "faults.hap_mtbf_s" => self.faults.hap_mtbf_s = need_f64()?,
             "faults.hap_mttr_s" => self.faults.hap_mttr_s = need_f64()?,
             "seed" => self.seed = need_usize()? as u64,
-            other => return Err(format!("unknown config key: {other}")),
+            other => {
+                // [shellN] sections (N >= 2) declare extra constellation
+                // shells; shell 1 is the [constellation] section itself.
+                if let Some((idx, field)) = parse_shell_key(other) {
+                    return self.apply_shell_key(idx, field, key, val);
+                }
+                return Err(format!("unknown config key: {other}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one `[shellN]` key. Shells must be declared contiguously
+    /// (`shell3` without `shell2` is an error); the flattened document
+    /// is sorted, so all of `shellN`'s keys arrive before `shellN+1`'s.
+    fn apply_shell_key(
+        &mut self,
+        idx: usize,
+        field: &str,
+        key: &str,
+        val: &Value,
+    ) -> Result<(), String> {
+        let shells = &mut self.constellation.extra_shells;
+        if idx > shells.len() {
+            return Err(format!("{key}: shell{} declared without shell{}", idx + 2, idx + 1));
+        }
+        if idx == shells.len() {
+            // unspecified fields of a new shell default to a minimal
+            // 1x1 delta; to_toml always dumps every field, so presets
+            // round-trip exactly
+            shells.push(ShellSpec::delta(1, 1, 550.0, 53.0, 0));
+        }
+        let sh = &mut shells[idx];
+        let need_f64 = || val.as_f64().ok_or(format!("{key}: expected number"));
+        let need_usize = || {
+            val.as_i64()
+                .filter(|v| *v >= 0)
+                .map(|v| v as usize)
+                .ok_or(format!("{key}: expected non-negative integer"))
+        };
+        match field {
+            "pattern" => {
+                sh.pattern = val
+                    .as_str()
+                    .and_then(WalkerPattern::parse)
+                    .ok_or(format!("{key}: unknown pattern (delta|star)"))?
+            }
+            "orbits" => sh.n_orbits = need_usize()?,
+            "sats_per_orbit" => sh.sats_per_orbit = need_usize()?,
+            "altitude_km" => sh.altitude_km = need_f64()?,
+            "inclination_deg" => sh.inclination_deg = need_f64()?,
+            "phasing" => sh.phasing = need_usize()?,
+            other => return Err(format!("unknown shell key: {other}")),
         }
         Ok(())
     }
 
     /// Serialize back to the TOML subset (round-trips through
-    /// [`Self::from_toml`]; embedded in result CSVs).
+    /// [`Self::from_toml`]; embedded in result CSVs). Extra shells are
+    /// dumped as `[shellN]` sections (N starting at 2) after the main
+    /// sections.
     pub fn to_toml(&self) -> String {
-        format!(
-            "seed = {}\n\n[constellation]\norbits = {}\nsats_per_orbit = {}\naltitude_km = {}\ninclination_deg = {}\nphasing = {}\n\n[ps]\nplacement = \"{}\"\nmin_elevation_deg = {}\n\n[link]\ntx_power_dbm = {}\nantenna_gain_dbi = {}\ncarrier_ghz = {}\nnoise_temp_k = {}\ndata_rate_mbps = {}\nbandwidth_mhz = {}\n\n[fl]\nscheme = \"{}\"\nmodel = \"{}\"\ndataset = \"{}\"\npartition = \"{}\"\nlr = {}\nlocal_dispatches = {}\nmax_epochs = {}\nhorizon_hours = {}\ntrain_time_s = {}\n\n[data]\ntrain_samples = {}\ntest_samples = {}\n\n[faults]\nloss_prob = {}\nmax_retransmits = {}\nretransmit_backoff_s = {}\noutage_period_s = {}\noutage_duration_s = {}\nisl_outage = {}\nsat_mtbf_s = {}\nsat_mttr_s = {}\nhap_mtbf_s = {}\nhap_mttr_s = {}\n",
+        let mut out = format!(
+            "seed = {}\n\n[constellation]\npattern = \"{}\"\norbits = {}\nsats_per_orbit = {}\naltitude_km = {}\ninclination_deg = {}\nphasing = {}\n\n[ps]\nplacement = \"{}\"\nmin_elevation_deg = {}\n\n[link]\ntx_power_dbm = {}\nantenna_gain_dbi = {}\ncarrier_ghz = {}\nnoise_temp_k = {}\ndata_rate_mbps = {}\nbandwidth_mhz = {}\n\n[fl]\nscheme = \"{}\"\nmodel = \"{}\"\ndataset = \"{}\"\npartition = \"{}\"\nlr = {}\nlocal_dispatches = {}\nmax_epochs = {}\nhorizon_hours = {}\ntrain_time_s = {}\n\n[data]\ntrain_samples = {}\ntest_samples = {}\n\n[faults]\nloss_prob = {}\nmax_retransmits = {}\nretransmit_backoff_s = {}\noutage_period_s = {}\noutage_duration_s = {}\nisl_outage = {}\nsat_mtbf_s = {}\nsat_mttr_s = {}\nhap_mtbf_s = {}\nhap_mttr_s = {}\n",
             self.seed,
+            self.constellation.pattern.name(),
             self.constellation.n_orbits,
             self.constellation.sats_per_orbit,
             self.constellation.altitude_km,
@@ -435,8 +578,35 @@ impl ExperimentConfig {
             self.faults.sat_mttr_s,
             self.faults.hap_mtbf_s,
             self.faults.hap_mttr_s,
-        )
+        );
+        for (i, sh) in self.constellation.extra_shells.iter().enumerate() {
+            out.push_str(&format!(
+                "\n[shell{}]\npattern = \"{}\"\norbits = {}\nsats_per_orbit = {}\naltitude_km = {}\ninclination_deg = {}\nphasing = {}\n",
+                i + 2,
+                sh.pattern.name(),
+                sh.n_orbits,
+                sh.sats_per_orbit,
+                sh.altitude_km,
+                sh.inclination_deg,
+                sh.phasing,
+            ));
+        }
+        out
     }
+}
+
+/// `"shell2.orbits"` → `Some((0, "orbits"))`: index into
+/// `extra_shells` plus the field name. Shell numbering starts at 2
+/// (shell 1 is the `[constellation]` section); at most `[shell9]`, so
+/// the sorted flattened document keeps shells in declaration order.
+fn parse_shell_key(key: &str) -> Option<(usize, &str)> {
+    let rest = key.strip_prefix("shell")?;
+    let (num, field) = rest.split_once('.')?;
+    let n: usize = num.parse().ok()?;
+    if !(2..=9).contains(&n) {
+        return None;
+    }
+    Some((n - 2, field))
 }
 
 #[cfg(test)]
@@ -565,5 +735,67 @@ mod tests {
         let mut c = ExperimentConfig::paper_defaults();
         c.faults.loss_prob = 2.0;
         assert!(!c.validate().is_empty());
+    }
+
+    #[test]
+    fn multi_shell_config_roundtrips_through_toml() {
+        let mut c0 = ExperimentConfig::paper_defaults();
+        c0.constellation.extra_shells = vec![
+            ShellSpec::delta(6, 10, 1110.0, 53.8, 1),
+            ShellSpec::star(3, 4, 1200.0, 87.9, 0),
+        ];
+        assert_eq!(c0.n_sats(), 40 + 60 + 12);
+        assert_eq!(c0.constellation.n_planes(), 5 + 6 + 3);
+        let c1 = ExperimentConfig::from_toml(&c0.to_toml()).unwrap();
+        assert_eq!(c0, c1);
+    }
+
+    #[test]
+    fn star_pattern_roundtrips() {
+        let mut c0 = ExperimentConfig::paper_defaults();
+        c0.constellation.pattern = WalkerPattern::Star;
+        let c1 = ExperimentConfig::from_toml(&c0.to_toml()).unwrap();
+        assert_eq!(c1.constellation.pattern, WalkerPattern::Star);
+        assert!(ExperimentConfig::from_toml("[constellation]\npattern = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn shell_sections_parse() {
+        let c = ExperimentConfig::from_toml(
+            "[shell2]\norbits = 6\nsats_per_orbit = 10\naltitude_km = 1110\ninclination_deg = 53.8\nphasing = 1\npattern = \"delta\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.constellation.extra_shells.len(), 1);
+        assert_eq!(c.constellation.extra_shells[0], ShellSpec::delta(6, 10, 1110.0, 53.8, 1));
+        // non-contiguous shells are rejected
+        assert!(ExperimentConfig::from_toml("[shell3]\norbits = 2\n").is_err());
+        // unknown shell fields are rejected
+        assert!(ExperimentConfig::from_toml("[shell2]\nbogus = 2\n").is_err());
+    }
+
+    #[test]
+    fn plane_of_maps_shells_to_global_planes() {
+        let mut c = ExperimentConfig::paper_defaults();
+        c.constellation.n_orbits = 2;
+        c.constellation.sats_per_orbit = 3;
+        c.constellation.extra_shells = vec![ShellSpec::delta(1, 4, 550.0, 53.0, 0)];
+        let plane_of = c.constellation.plane_of();
+        assert_eq!(plane_of, vec![0, 0, 0, 1, 1, 1, 2, 2, 2, 2]);
+        assert_eq!(c.constellation.summary(), "2x3@2000km/80° + 1x4@550km/53°");
+    }
+
+    #[test]
+    fn shell_validation_reports_bad_extra_shell() {
+        let mut c = ExperimentConfig::paper_defaults();
+        c.constellation.extra_shells = vec![ShellSpec::delta(2, 2, 50_000.0, 53.0, 0)];
+        let errs = c.validate();
+        assert!(errs.iter().any(|e| e.contains("shell2")), "{errs:?}");
+    }
+
+    #[test]
+    fn hap_quito_placement_parses() {
+        assert_eq!(PsPlacement::parse("hap-quito"), Some(PsPlacement::HapQuito));
+        assert_eq!(PsPlacement::HapQuito.sites().len(), 1);
+        assert!(PsPlacement::HapQuito.sites()[0].lat_deg.abs() < 1.0, "equatorial");
     }
 }

@@ -13,7 +13,7 @@ use super::contact::ContactPlan;
 use super::geometry::Geometry;
 use crate::comm::delay::{model_bits, total_delay_s};
 use crate::config::ExperimentConfig;
-use crate::faults::{FaultPlan, FaultStats, LinkClass};
+use crate::faults::{FaultPlan, FaultSchedule, FaultStats, LinkClass};
 use crate::metrics::{Curve, CurvePoint};
 use crate::orbit::{GeodeticSite, WalkerConstellation};
 use crate::train::Backend;
@@ -65,14 +65,17 @@ impl<'a> SimEnv<'a> {
             backend.n_sats(),
             "backend shard count must match constellation size"
         );
-        let faults = FaultPlan::new(
+        // The immutable timeline is fetched from the process-wide
+        // schedule cache: schemes of a sweep cell group that share
+        // (scenario, intensity, seed, layout) share one schedule and
+        // only the per-run counters are fresh.
+        let faults = FaultPlan::from_schedule(FaultSchedule::shared(
             &cfg.faults,
             cfg.seed,
-            geo.constellation.len(),
+            &geo.constellation.plane_of(),
             geo.sites.len(),
-            cfg.constellation.sats_per_orbit,
             cfg.fl.horizon_s,
-        );
+        ));
         SimEnv {
             cfg: cfg.clone(),
             geo,
@@ -306,6 +309,35 @@ mod tests {
         assert!(
             faulty.state.transfers > clean.state.transfers,
             "retransmissions must show up in the communication cost"
+        );
+    }
+
+    #[test]
+    fn schemes_share_one_fault_schedule() {
+        use crate::faults::{FaultConfig, FaultScenario};
+        let mut cfg = ExperimentConfig::test_small();
+        cfg.fl.horizon_s = 3600.0 * 12.0;
+        cfg.faults = FaultConfig::preset(FaultScenario::Churn, 0.65);
+        let mut cfg2 = cfg.clone();
+        cfg2.fl.scheme = crate::config::SchemeKind::FedHap; // non-layout knob
+        let mut b1 = SurrogateBackend::paper_split(2, 3, true, 100);
+        let env1 = SimEnv::new(&cfg, &mut b1);
+        let mut b2 = SurrogateBackend::paper_split(2, 3, true, 100);
+        let env2 = SimEnv::new(&cfg2, &mut b2);
+        assert!(
+            Arc::ptr_eq(env1.state.faults.schedule(), env2.state.faults.schedule()),
+            "same (faults, seed, layout, horizon) must share one schedule"
+        );
+        assert_eq!(
+            crate::faults::FaultSchedule::shared_build_count(
+                &cfg.faults,
+                cfg.seed,
+                &env1.geo.constellation.plane_of(),
+                env1.geo.sites.len(),
+                cfg.fl.horizon_s,
+            ),
+            1,
+            "schedule built exactly once for the shared key"
         );
     }
 

@@ -16,7 +16,7 @@
 use super::contact::ContactPlan;
 use crate::comm::LinkParams;
 use crate::config::{ExperimentConfig, PsPlacement};
-use crate::orbit::{GeodeticSite, WalkerConstellation};
+use crate::orbit::{GeodeticSite, WalkerConstellation, WalkerPattern};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -31,30 +31,46 @@ pub struct Geometry {
 /// The geometry-relevant subset of an [`ExperimentConfig`], with every
 /// `f64` keyed by its bit pattern (configs are either copied or parsed
 /// from the same text, so bit equality is the right identity here —
-/// NaN never appears, `validate` and the constructors reject it).
-#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+/// NaN never appears, `validate` and the constructors reject it). The
+/// full shell list keys the entry, so every distinct scenario (single-
+/// or multi-shell) gets its own cached geometry.
+#[derive(Clone, PartialEq, Eq, Hash)]
 struct GeometryKey {
-    n_orbits: usize,
-    sats_per_orbit: usize,
-    altitude_bits: u64,
-    inclination_bits: u64,
-    phasing: usize,
+    shells: Vec<ShellKey>,
     placement: PsPlacement,
     min_elevation_bits: u64,
     horizon_bits: u64,
     link_bits: [u64; 8],
 }
 
+/// One shell's geometry-relevant bits.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct ShellKey {
+    pattern: WalkerPattern,
+    n_orbits: usize,
+    sats_per_orbit: usize,
+    altitude_bits: u64,
+    inclination_bits: u64,
+    phasing: usize,
+}
+
 impl GeometryKey {
     fn of(cfg: &ExperimentConfig) -> Self {
-        let c = &cfg.constellation;
         let l = &cfg.link;
         GeometryKey {
-            n_orbits: c.n_orbits,
-            sats_per_orbit: c.sats_per_orbit,
-            altitude_bits: c.altitude_km.to_bits(),
-            inclination_bits: c.inclination_deg.to_bits(),
-            phasing: c.phasing,
+            shells: cfg
+                .constellation
+                .shells()
+                .iter()
+                .map(|sh| ShellKey {
+                    pattern: sh.pattern,
+                    n_orbits: sh.n_orbits,
+                    sats_per_orbit: sh.sats_per_orbit,
+                    altitude_bits: sh.altitude_km.to_bits(),
+                    inclination_bits: sh.inclination_deg.to_bits(),
+                    phasing: sh.phasing,
+                })
+                .collect(),
             placement: cfg.placement,
             min_elevation_bits: cfg.min_elevation_deg.to_bits(),
             horizon_bits: cfg.fl.horizon_s.to_bits(),
@@ -99,13 +115,7 @@ impl Geometry {
             .unwrap()
             .entry(GeometryKey::of(cfg))
             .or_insert(0) += 1;
-        let constellation = WalkerConstellation::new(
-            cfg.constellation.n_orbits,
-            cfg.constellation.sats_per_orbit,
-            cfg.constellation.altitude_km,
-            cfg.constellation.inclination_deg,
-            cfg.constellation.phasing,
-        );
+        let constellation = WalkerConstellation::from_shells(&cfg.constellation.shells());
         let sites = cfg.placement.sites();
         let plan = ContactPlan::build(
             &constellation,
@@ -203,6 +213,21 @@ mod tests {
 
         // the base entry is still shared and still built once
         assert!(Arc::ptr_eq(&a, &Geometry::shared(&base)));
+        assert_eq!(Geometry::build_count(&base), 1);
+    }
+
+    #[test]
+    fn extra_shells_key_fresh_instances() {
+        let base = unique_cfg(1238.25);
+        let a = Geometry::shared(&base);
+        let mut two = base.clone();
+        two.constellation.extra_shells =
+            vec![crate::orbit::ShellSpec::delta(1, 2, 900.25, 60.0, 0)];
+        let b = Geometry::shared(&two);
+        assert!(!Arc::ptr_eq(&a, &b), "shell list must key the cache");
+        assert_eq!(b.constellation.len(), base.n_sats() + 2);
+        assert_eq!(b.constellation.n_shells(), 2);
+        assert_eq!(Geometry::build_count(&two), 1);
         assert_eq!(Geometry::build_count(&base), 1);
     }
 

@@ -11,5 +11,5 @@
 pub mod partition;
 pub mod synth;
 
-pub use partition::{partition, Partition, Shard};
+pub use partition::{partition, partition_planes, Partition, Shard};
 pub use synth::{Dataset, DatasetKind};

@@ -38,7 +38,9 @@ impl Shard {
     }
 }
 
-/// Split `data` into `n_orbits * sats_per_orbit` shards.
+/// Split `data` into `n_orbits * sats_per_orbit` shards (uniform
+/// single-shell constellations; multi-shell callers use
+/// [`partition_planes`] with an explicit plane mapping).
 pub fn partition(
     data: &Dataset,
     scheme: Partition,
@@ -46,7 +48,22 @@ pub fn partition(
     sats_per_orbit: usize,
     seed: u64,
 ) -> Vec<Shard> {
-    let n_sats = n_orbits * sats_per_orbit;
+    partition_planes(data, scheme, &crate::orbit::uniform_plane_of(n_orbits, sats_per_orbit), seed)
+}
+
+/// Split `data` into one shard per satellite; `plane_of` maps each
+/// satellite id to its global orbital-plane index (see
+/// `WalkerConstellation::plane_of`). The paper's non-IID split assigns
+/// classes 0..4 to the satellites of the first two *global* planes and
+/// classes 4..10 to everyone else, so a multi-shell constellation keeps
+/// the same orbit-band structure.
+pub fn partition_planes(
+    data: &Dataset,
+    scheme: Partition,
+    plane_of: &[usize],
+    seed: u64,
+) -> Vec<Shard> {
+    let n_sats = plane_of.len();
     let mut rng = Rng::new(seed ^ 0x5A4D);
     match scheme {
         Partition::Iid => {
@@ -55,23 +72,31 @@ pub fn partition(
             deal_with_jitter(&idx, n_sats, &mut rng)
         }
         Partition::NonIidPaper => {
-            // Orbits 0..2 -> classes 0..4; orbits 2..n -> classes 4..10.
+            // Planes 0..2 -> classes 0..4; planes 2..n -> classes 4..10.
             let k = data.kind.classes() as u8;
             let split = 4u8.min(k);
             let mut low: Vec<usize> = (0..data.len()).filter(|&i| data.y[i] < split).collect();
             let mut high: Vec<usize> = (0..data.len()).filter(|&i| data.y[i] >= split).collect();
             rng.shuffle(&mut low);
             rng.shuffle(&mut high);
-            let low_orbits = 2.min(n_orbits);
-            let low_sats = low_orbits * sats_per_orbit;
-            let high_sats = n_sats - low_sats;
-            let mut shards = deal_with_jitter(&low, low_sats.max(1), &mut rng);
-            if high_sats > 0 {
-                shards.extend(deal_with_jitter(&high, high_sats, &mut rng));
+            let n_planes = plane_of.iter().max().map_or(0, |m| m + 1);
+            let low_planes = 2.min(n_planes);
+            let low_ids: Vec<usize> =
+                (0..n_sats).filter(|&s| plane_of[s] < low_planes).collect();
+            let high_ids: Vec<usize> =
+                (0..n_sats).filter(|&s| plane_of[s] >= low_planes).collect();
+            let low_shards = deal_with_jitter(&low, low_ids.len().max(1), &mut rng);
+            let high_shards = if high_ids.is_empty() {
+                Vec::new()
+            } else {
+                deal_with_jitter(&high, high_ids.len(), &mut rng)
+            };
+            let mut shards = vec![Shard::default(); n_sats];
+            for (&sat, shard) in low_ids.iter().zip(low_shards) {
+                shards[sat] = shard;
             }
-            shards.truncate(n_sats);
-            while shards.len() < n_sats {
-                shards.push(Shard::default());
+            for (&sat, shard) in high_ids.iter().zip(high_shards) {
+                shards[sat] = shard;
             }
             shards
         }
@@ -181,6 +206,38 @@ mod tests {
         let d = data();
         let a = partition(&d, Partition::NonIidPaper, 5, 8, 3);
         let b = partition(&d, Partition::NonIidPaper, 5, 8, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices, y.indices);
+        }
+    }
+
+    #[test]
+    fn plane_mapping_respects_class_split_across_shells() {
+        let d = data();
+        // two 3-sat planes (first shell) + one 4-sat plane (second)
+        let plane_of = vec![0, 0, 0, 1, 1, 1, 2, 2, 2, 2];
+        let shards = partition_planes(&d, Partition::NonIidPaper, &plane_of, 1);
+        assert_eq!(shards.len(), 10);
+        for s in &shards[..6] {
+            for c in shard_classes(&d, s) {
+                assert!(c < 4, "first two planes hold low classes");
+            }
+        }
+        for s in &shards[6..] {
+            for c in shard_classes(&d, s) {
+                assert!((4..10).contains(&c), "later planes hold high classes");
+            }
+        }
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, d.len(), "every sample dealt exactly once");
+    }
+
+    #[test]
+    fn uniform_delegation_matches_plane_mapping() {
+        let d = data();
+        let a = partition(&d, Partition::NonIidPaper, 5, 8, 3);
+        let plane_of: Vec<usize> = (0..40).map(|s| s / 8).collect();
+        let b = partition_planes(&d, Partition::NonIidPaper, &plane_of, 3);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.indices, y.indices);
         }

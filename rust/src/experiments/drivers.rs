@@ -5,7 +5,7 @@
 //! config embedded as header comments, and prints the paper-style
 //! summary rows to stdout.
 
-use super::executor::{run_cells, Cell};
+use super::executor::{run_cells_streaming, Cell};
 use crate::config::{ExperimentConfig, ModelKind, PsPlacement, SchemeKind};
 use crate::coordinator::{RunResult, SimEnv};
 use crate::data::{DatasetKind, Partition};
@@ -105,9 +105,8 @@ pub fn run_one_with(
     mut strategy: Box<dyn Strategy>,
 ) -> Result<RunResult> {
     if opts.surrogate {
-        let mut backend = SurrogateBackend::paper_split(
-            cfg.constellation.n_orbits,
-            cfg.constellation.sats_per_orbit,
+        let mut backend = SurrogateBackend::for_planes(
+            &cfg.constellation.plane_of(),
             cfg.fl.partition == Partition::Iid,
             cfg.data.train_samples / cfg.n_sats().max(1),
         );
@@ -185,23 +184,27 @@ fn table2_base_config(opts: &ExpOptions) -> ExperimentConfig {
 fn table2(opts: &ExpOptions) -> Result<()> {
     let cfg0 = table2_base_config(opts);
     let cells = table2_cells(opts);
-    let results = run_cells(&cells, opts)?;
 
     let mut table = CsvWriter::create(
         opts.out_dir.join("table2.csv"),
         &[&format!("Table II: comparison with SOTA (SynthDigits non-IID, {})", cfg0.fl.model.tag()), &cfg0.to_toml()],
         &["label", "scheme", "placement", "accuracy_pct", "convergence_h", "convergence_hm",
           "epochs", "transfers"],
-    )?;
+    )?
+    .autoflush(true);
     let mut fig6 = CsvWriter::create(
         opts.out_dir.join("fig6.csv"),
         &["Fig. 6: accuracy vs convergence time (same runs as Table II)"],
         &["label", "time_h", "epoch", "accuracy", "loss"],
-    )?;
+    )?
+    .autoflush(true);
 
     println!("\n=== Table II (SynthDigits non-IID, {}) ===", cfg0.fl.model.tag());
     println!("{:<20} {:>9} {:>12} {:>7}", "scheme", "acc(%)", "conv(h:mm)", "epochs");
-    for (cell, r) in cells.iter().zip(&results) {
+    // rows stream to disk as cells finish (in cell order): a late error
+    // in a long PJRT sweep keeps every completed row
+    run_cells_streaming(&cells, opts, |idx, r| {
+        let cell = &cells[idx];
         let (conv_t, acc) = summary_of(r);
         table.row(&[
             s(&cell.label),
@@ -229,7 +232,8 @@ fn table2(opts: &ExpOptions) -> Result<()> {
             fmt_hm(conv_t),
             r.epochs
         );
-    }
+        Ok(())
+    })?;
     table.flush()?;
     fig6.flush()?;
     Ok(())
@@ -264,7 +268,8 @@ fn fig_grid(
             "{name}: AsyncFLEO on {dataset:?} partition {partition:?} two_haps={two_haps}"
         )],
         &["model", "placement", "partition", "time_h", "epoch", "accuracy", "loss"],
-    )?;
+    )?
+    .autoflush(true);
     println!("\n=== {name} ({dataset:?}) ===");
 
     // fig7c/fig8c sweep partitions at the fixed two-HAP placement; the
@@ -298,9 +303,8 @@ fn fig_grid(
             Cell::new(format!("{}/{}", model.tag(), placement.name()), cfg)
         })
         .collect();
-    let results = run_cells(&cells, opts)?;
-
-    for (&(model, placement, part), r) in grid.iter().zip(&results) {
+    run_cells_streaming(&cells, opts, |idx, r| {
+        let (model, placement, part) = grid[idx];
         let part_name = if part == Partition::Iid { "iid" } else { "non-iid" };
         for p in &r.curve.points {
             w.row(&[
@@ -322,7 +326,8 @@ fn fig_grid(
             acc * 100.0,
             fmt_hm(conv_t)
         );
-    }
+        Ok(())
+    })?;
     w.flush()?;
     Ok(())
 }
@@ -359,15 +364,16 @@ fn ablation(opts: &ExpOptions, which: &str) -> Result<()> {
         .into_iter()
         .map(|(label, strat)| Cell::custom(label, cfg.clone(), strat))
         .collect();
-    let results = run_cells(&cells, opts)?;
 
     let mut w = CsvWriter::create(
         opts.out_dir.join(format!("{which}.csv")),
         &[&format!("{which}: AsyncFLEO design ablation (SynthDigits non-IID, MLP)"), &cfg.to_toml()],
         &["variant", "accuracy_pct", "convergence_h", "epochs", "transfers"],
-    )?;
+    )?
+    .autoflush(true);
     println!("\n=== {which} ===");
-    for (cell, r) in cells.iter().zip(&results) {
+    run_cells_streaming(&cells, opts, |idx, r| {
+        let cell = &cells[idx];
         let (conv_t, acc) = summary_of(r);
         w.row(&[
             s(&cell.label),
@@ -383,7 +389,8 @@ fn ablation(opts: &ExpOptions, which: &str) -> Result<()> {
             fmt_hm(conv_t),
             r.epochs
         );
-    }
+        Ok(())
+    })?;
     w.flush()?;
     Ok(())
 }

@@ -1,11 +1,22 @@
 //! Deterministic parallel sweep executor.
 //!
 //! Experiment drivers describe their grid as a list of [`Cell`]s (one
-//! configured run each) and hand it to [`run_cells`], which dispatches
-//! cells to `--jobs N` worker threads (plain `std::thread::scope` —
-//! the crate is offline/vendored, no rayon) and returns the results
-//! **in the original cell order**, so CSV rows and stdout summaries are
-//! byte-identical to a sequential run.
+//! configured run each) and hand it to [`run_cells_streaming`], which
+//! dispatches cells to `--jobs N` worker threads (plain
+//! `std::thread::scope` — the crate is offline/vendored, no rayon) and
+//! invokes a per-result callback **in the original cell order** as the
+//! ordered prefix completes, so CSV rows and stdout summaries are
+//! byte-identical to a sequential run *and* stream to disk while the
+//! grid is still running. A long sequential PJRT sweep therefore writes
+//! each row as its cell finishes, and an error late in the grid keeps
+//! every already-streamed row instead of discarding completed work.
+//! [`run_cells`] is the collect-everything convenience wrapper.
+//!
+//! Scheduling: workers pick cells **longest-first** by the cell's
+//! [`Cell::cost_hint`] (ties broken by cell index), which keeps the
+//! pool busy at the tail of an uneven grid. Results are still emitted
+//! in cell order — a cell's `RunResult` is a pure function of its
+//! config, so the pick order affects wall-clock only, never bytes.
 //!
 //! Determinism contract:
 //! * each cell builds its own backend and [`SimEnv`] from its own
@@ -14,8 +25,8 @@
 //! * the shared [`Geometry`] cache is prewarmed in cell order before
 //!   workers start, so each unique geometry is built exactly once and
 //!   workers only ever read;
-//! * results are collected into order-indexed slots; writers consume
-//!   them sequentially after the scope joins.
+//! * results land in order-indexed slots; the caller's callback
+//!   consumes them strictly in cell order.
 //!
 //! PJRT mode stays sequential regardless of `--jobs`: the runtime
 //! handle is a `thread_local` `Rc` (artifact caches are not `Sync`),
@@ -29,8 +40,8 @@ use crate::coordinator::{Geometry, RunResult};
 use crate::fl::asyncfleo::AsyncFleo;
 use crate::fl::{make_strategy, Strategy};
 use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 
 /// Which strategy a cell runs. `Clone + Send` so cells can cross into
 /// worker threads; the `Box<dyn Strategy>` itself is built inside the
@@ -49,17 +60,36 @@ pub struct Cell {
     pub label: String,
     pub cfg: ExperimentConfig,
     pub strategy: CellStrategy,
+    /// Estimated relative cost of the run (any unit). The worker pool
+    /// schedules the most expensive cells first; results are still
+    /// collected in cell order, so the hint never changes output bytes.
+    pub cost_hint: f64,
 }
 
 impl Cell {
     /// A cell running its scheme's stock strategy.
     pub fn new(label: impl Into<String>, cfg: ExperimentConfig) -> Self {
-        Cell { label: label.into(), cfg, strategy: CellStrategy::Scheme }
+        let cost_hint = Self::default_cost(&cfg);
+        Cell { label: label.into(), cfg, strategy: CellStrategy::Scheme, cost_hint }
     }
 
     /// A cell running a customized AsyncFLEO instance.
     pub fn custom(label: impl Into<String>, cfg: ExperimentConfig, strategy: AsyncFleo) -> Self {
-        Cell { label: label.into(), cfg, strategy: CellStrategy::Custom(strategy) }
+        let cost_hint = Self::default_cost(&cfg);
+        Cell { label: label.into(), cfg, strategy: CellStrategy::Custom(strategy), cost_hint }
+    }
+
+    /// Override the scheduling cost hint.
+    pub fn with_cost_hint(mut self, cost_hint: f64) -> Self {
+        self.cost_hint = cost_hint;
+        self
+    }
+
+    /// Default estimate: event-loop work scales with constellation size
+    /// × simulated horizon (epoch-capped runs finish earlier, but the
+    /// hint only has to rank cells, not predict seconds).
+    fn default_cost(cfg: &ExperimentConfig) -> f64 {
+        cfg.n_sats() as f64 * cfg.fl.horizon_s
     }
 
     fn build_strategy(&self) -> Box<dyn Strategy> {
@@ -79,17 +109,42 @@ pub fn effective_jobs(opts: &ExpOptions, n_cells: usize) -> usize {
     opts.jobs.clamp(1, n_cells.max(1))
 }
 
+/// The deterministic longest-first pick order: indices sorted by
+/// descending [`Cell::cost_hint`], ties by ascending cell index.
+pub fn schedule_order(cells: &[Cell]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..cells.len()).collect();
+    order.sort_by(|&a, &b| {
+        cells[b]
+            .cost_hint
+            .total_cmp(&cells[a].cost_hint)
+            .then(a.cmp(&b))
+    });
+    order
+}
+
 /// Run one cell (worker body; also the `--jobs 1` path).
 fn run_cell(cell: &Cell, opts: &ExpOptions) -> Result<RunResult> {
     run_one_with(&cell.cfg, opts, cell.build_strategy())
 }
 
-/// Run every cell and return results in cell order. See the module
-/// docs for the determinism contract.
-pub fn run_cells(cells: &[Cell], opts: &ExpOptions) -> Result<Vec<RunResult>> {
+/// Run every cell, invoking `on_result(index, result)` strictly in cell
+/// order as the ordered prefix of the grid completes. On the first cell
+/// error or callback error the sweep stops handing out new cells and
+/// returns that error; everything the callback already consumed (e.g.
+/// streamed CSV rows) is preserved. See the module docs for the
+/// determinism contract.
+pub fn run_cells_streaming(
+    cells: &[Cell],
+    opts: &ExpOptions,
+    mut on_result: impl FnMut(usize, &RunResult) -> Result<()>,
+) -> Result<()> {
     let jobs = effective_jobs(opts, cells.len());
     if jobs <= 1 {
-        return cells.iter().map(|c| run_cell(c, opts)).collect();
+        for (i, cell) in cells.iter().enumerate() {
+            let r = run_cell(cell, opts)?;
+            on_result(i, &r)?;
+        }
+        return Ok(());
     }
 
     // Prewarm the geometry cache in deterministic cell order: each
@@ -99,29 +154,77 @@ pub fn run_cells(cells: &[Cell], opts: &ExpOptions) -> Result<Vec<RunResult>> {
         Geometry::shared(&cell.cfg);
     }
 
+    let order = schedule_order(cells);
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Result<RunResult>>>> =
-        cells.iter().map(|_| Mutex::new(None)).collect();
+    let cancel = AtomicBool::new(false);
+    let slots: Mutex<Vec<Option<Result<RunResult>>>> =
+        Mutex::new((0..cells.len()).map(|_| None).collect());
+    let ready = Condvar::new();
+    let mut outcome: Result<()> = Ok(());
     std::thread::scope(|scope| {
         for _ in 0..jobs {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
+                if cancel.load(Ordering::Relaxed) {
                     break;
                 }
-                let result = run_cell(&cells[i], opts);
-                *slots[i].lock().unwrap() = Some(result);
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= order.len() {
+                    break;
+                }
+                let i = order[k];
+                // a panicking cell must still fill its slot, or the
+                // consumer would wait on the condvar forever (the
+                // default panic hook has already printed the message)
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_cell(&cells[i], opts)
+                }))
+                .unwrap_or_else(|_| {
+                    Err(anyhow::anyhow!("worker panicked on cell {} ({})", i, cells[i].label))
+                });
+                slots.lock().unwrap()[i] = Some(result);
+                ready.notify_all();
             });
         }
+        // However the consumer loop exits — completion, callback error,
+        // or a callback panic unwinding past it — stop handing out new
+        // cells (workers already mid-cell finish theirs and exit).
+        struct CancelOnDrop<'a>(&'a AtomicBool);
+        impl Drop for CancelOnDrop<'_> {
+            fn drop(&mut self) {
+                self.0.store(true, Ordering::Relaxed);
+            }
+        }
+        let _stop_workers = CancelOnDrop(&cancel);
+        // Consume the ordered prefix on this thread, streaming the
+        // callback while later cells are still running.
+        for i in 0..cells.len() {
+            let mut guard = slots.lock().unwrap();
+            let taken = loop {
+                if let Some(r) = guard[i].take() {
+                    break r;
+                }
+                guard = ready.wait(guard).unwrap();
+            };
+            drop(guard);
+            let step = taken.and_then(|r| on_result(i, &r));
+            if let Err(e) = step {
+                outcome = Err(e);
+                break;
+            }
+        }
     });
-    slots
-        .into_iter()
-        .map(|slot| {
-            slot.into_inner()
-                .unwrap()
-                .expect("executor worker left a cell unfinished")
-        })
-        .collect()
+    outcome
+}
+
+/// Run every cell and return results in cell order (the collect-all
+/// wrapper over [`run_cells_streaming`]).
+pub fn run_cells(cells: &[Cell], opts: &ExpOptions) -> Result<Vec<RunResult>> {
+    let mut out = Vec::with_capacity(cells.len());
+    run_cells_streaming(cells, opts, |_, r| {
+        out.push(r.clone());
+        Ok(())
+    })?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -129,6 +232,7 @@ mod tests {
     use super::*;
     use crate::config::{PsPlacement, SchemeKind};
     use crate::metrics::Curve;
+    use anyhow::bail;
 
     fn small_cells(n: usize) -> Vec<Cell> {
         (0..n)
@@ -177,5 +281,54 @@ mod tests {
         assert_eq!(effective_jobs(&opts, 10), 8);
         let opts = ExpOptions { surrogate: true, jobs: 0, ..Default::default() };
         assert_eq!(effective_jobs(&opts, 10), 1, "jobs 0 means sequential");
+    }
+
+    #[test]
+    fn streaming_emits_in_cell_order_at_any_job_count() {
+        let cells = small_cells(5);
+        for jobs in [1usize, 3] {
+            let opts = ExpOptions { surrogate: true, jobs, ..Default::default() };
+            let mut seen = Vec::new();
+            run_cells_streaming(&cells, &opts, |i, r| {
+                assert!(!r.curve.points.is_empty());
+                seen.push(i);
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(seen, vec![0, 1, 2, 3, 4], "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn streaming_error_keeps_prefix_and_stops() {
+        let cells = small_cells(5);
+        let opts = ExpOptions { surrogate: true, jobs: 2, ..Default::default() };
+        let mut seen = Vec::new();
+        let err = run_cells_streaming(&cells, &opts, |i, _| {
+            if i == 2 {
+                bail!("synthetic failure at cell 2");
+            }
+            seen.push(i);
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("cell 2"));
+        assert_eq!(seen, vec![0, 1], "rows before the error are preserved");
+    }
+
+    #[test]
+    fn schedule_order_is_longest_first_and_deterministic() {
+        let mut cells = small_cells(4);
+        cells[0].cost_hint = 1.0;
+        cells[1].cost_hint = 9.0;
+        cells[2].cost_hint = 9.0; // tie with 1 → index order
+        cells[3].cost_hint = 4.0;
+        assert_eq!(schedule_order(&cells), vec![1, 2, 3, 0]);
+        // bigger constellations rank ahead of small ones by default
+        let mut big = ExperimentConfig::test_small();
+        big.constellation.sats_per_orbit = 30;
+        let small = ExperimentConfig::test_small();
+        let pair = vec![Cell::new("small", small), Cell::new("big", big)];
+        assert_eq!(schedule_order(&pair), vec![1, 0]);
     }
 }

@@ -1,16 +1,19 @@
 //! Experiment drivers regenerating every paper table & figure
 //! (DESIGN.md §4 maps each driver to its paper artifact), plus the
 //! [`resilience`] sweep comparing graceful degradation across schemes
-//! under the `crate::faults` scenarios.
+//! under the `crate::faults` scenarios and the [`scenarios`] sweep
+//! comparing schemes across the declarative `crate::scenario` catalog.
 //!
 //! Every driver describes its grid as [`executor::Cell`]s and runs it
-//! through the deterministic parallel [`executor`] (`--jobs N`);
-//! results come back in cell order so output files are byte-identical
-//! at any job count.
+//! through the deterministic streaming [`executor`] (`--jobs N`,
+//! longest-cell-first scheduling): rows are written in cell order as
+//! the ordered prefix completes, so output files are byte-identical at
+//! any job count and a late error keeps every completed row.
 
 pub mod drivers;
 pub mod executor;
 pub mod resilience;
+pub mod scenarios;
 
 pub use drivers::{run_experiment, ExpOptions, ALL_EXPERIMENTS, TABLE2_ROWS};
-pub use executor::{run_cells, Cell, CellStrategy};
+pub use executor::{run_cells, run_cells_streaming, Cell, CellStrategy};

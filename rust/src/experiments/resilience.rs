@@ -18,7 +18,7 @@
 //! AsyncFLEO instrumentation, not a cross-scheme metric.
 
 use super::drivers::{base_config, summary_of, ExpOptions};
-use super::executor::{run_cells, Cell};
+use super::executor::{run_cells_streaming, Cell};
 use crate::config::{ModelKind, PsPlacement, SchemeKind};
 use crate::data::{DatasetKind, Partition};
 use crate::faults::{FaultConfig, FaultScenario};
@@ -85,7 +85,8 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
             "deferred_h",
             "dropped_results",
         ],
-    )?;
+    )?
+    .autoflush(true);
 
     // grid rows (scenario × intensity × scheme) and their executor
     // cells, in the deterministic order the CSV has always used
@@ -101,14 +102,16 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
             cells.push(Cell::new(format!("{}@{intensity}/{label}", scenario.name()), cfg));
         }
     }
-    let results = run_cells(&cells, opts)?;
-
     println!("\n=== resilience (SynthDigits non-IID, mlp) ===");
     println!(
         "{:<12} {:>4} {:<10} {:>8} {:>10} {:>7} {:>9} {:>8}",
         "scenario", "x", "scheme", "acc(%)", "conv(h:mm)", "epochs", "retrans", "dropped"
     );
-    for (&(scenario, intensity, label, scheme, placement), r) in rows.iter().zip(&results) {
+    // The schemes of one (scenario, intensity) group share a seed and a
+    // node layout, so the coordinator's `FaultSchedule` cache hands all
+    // of them one Arc'd timeline; rows stream to disk in cell order.
+    run_cells_streaming(&cells, opts, |idx, r| {
+        let (scenario, intensity, label, scheme, placement) = rows[idx];
         let (conv_t, acc) = summary_of(r);
         let fs = r.fault_stats;
         w.row(&[
@@ -138,7 +141,8 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
             fs.retransmits,
             fs.dropped_results
         );
-    }
+        Ok(())
+    })?;
     w.flush()?;
     Ok(())
 }

@@ -1,0 +1,171 @@
+//! E10: the scenario comparison sweep — scheme × scenario grids over
+//! the declarative [`crate::scenario`] catalog.
+//!
+//! For every selected [`Scenario`] (a complete experiment world:
+//! multi-shell constellation, site layout, data distribution, optional
+//! faults) the driver runs AsyncFLEO plus one synchronous (FedHAP) and
+//! one asynchronous (FedSat) baseline *in that world* — same geometry,
+//! same seeds, same impairments — and tabulates accuracy, convergence
+//! and communication cost into `results/scenarios.csv`. This is the
+//! cross-design generalization probe: the paper's claims are about
+//! contact-pattern statistics, and every scenario has different ones.
+//!
+//! The grid runs through the deterministic streaming executor: rows
+//! land in cell order at any `--jobs N` (byte-identical output), and
+//! each scenario's geometry is built exactly once per process via the
+//! shared `Geometry` cache (keyed by the scenario's shell list + site
+//! layout).
+
+use super::drivers::{summary_of, ExpOptions};
+use super::executor::{run_cells_streaming, Cell};
+use crate::config::{ModelKind, SchemeKind};
+use crate::metrics::csv::{f, i, s, CsvWriter};
+use crate::scenario::Scenario;
+use crate::util::fmt_hm;
+use anyhow::Result;
+
+/// Schemes compared in every scenario: ours plus one synchronous and
+/// one asynchronous baseline. All run at the *scenario's* placement —
+/// the world is the variable under test, not the sink layout.
+pub const SCENARIO_SCHEMES: &[(&str, SchemeKind)] = &[
+    ("AsyncFLEO", SchemeKind::AsyncFleo),
+    ("FedHAP", SchemeKind::FedHap),
+    ("FedSat", SchemeKind::FedSat),
+];
+
+/// Accuracy level for the stopping-rule-independent speed column.
+const TARGET_ACC: f64 = 0.70;
+
+/// The scheme×scenario grid as executor cells, in CSV row order.
+pub fn compare_cells(scenarios: &[Scenario], opts: &ExpOptions) -> Vec<Cell> {
+    let mut cells = Vec::with_capacity(scenarios.len() * SCENARIO_SCHEMES.len());
+    for sc in scenarios {
+        for &(label, scheme) in SCENARIO_SCHEMES {
+            // the scenario's own seed is part of the world definition;
+            // an explicit CLI --seed is applied by the caller before
+            // the grid is built (cmd_scenario), never silently here
+            let mut cfg = sc.cfg.clone();
+            cfg.fl.scheme = scheme;
+            // coordinator dynamics are the object of study: MLP keeps
+            // compute cheap without changing visit/staleness behaviour
+            cfg.fl.model = ModelKind::Mlp;
+            if opts.fast {
+                cfg.fl.horizon_s = cfg.fl.horizon_s.min(24.0 * 3600.0);
+                cfg.fl.max_epochs = cfg.fl.max_epochs.min(20);
+                cfg.data.train_samples =
+                    cfg.data.train_samples.min(2000.max(4 * cfg.n_sats()));
+                cfg.data.test_samples = cfg.data.test_samples.min(500);
+            }
+            cells.push(Cell::new(format!("{}/{label}", sc.name), cfg));
+        }
+    }
+    cells
+}
+
+/// Run the comparison grid, writing `results/scenarios.csv`.
+pub fn run_compare(scenarios: &[Scenario], opts: &ExpOptions) -> Result<()> {
+    let mut header = vec!["scenarios: scheme x scenario comparison grid".to_string()];
+    for sc in scenarios {
+        header.push(format!(
+            "  {} -- {} ({}, {})",
+            sc.name,
+            sc.summary,
+            sc.cfg.constellation.summary(),
+            sc.cfg.placement.name()
+        ));
+    }
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("scenarios.csv"),
+        &header_refs,
+        &[
+            "scenario",
+            "scheme",
+            "placement",
+            "sats",
+            "shells",
+            "accuracy_pct",
+            "convergence_h",
+            "convergence_hm",
+            "t70_h",
+            "epochs",
+            "transfers",
+        ],
+    )?
+    .autoflush(true);
+
+    let cells = compare_cells(scenarios, opts);
+    println!(
+        "\n=== scenarios ({} worlds x {} schemes) ===",
+        scenarios.len(),
+        SCENARIO_SCHEMES.len()
+    );
+    println!(
+        "{:<18} {:<10} {:>5} {:>8} {:>10} {:>8} {:>7}",
+        "scenario", "scheme", "sats", "acc(%)", "conv(h:mm)", "t70(h)", "epochs"
+    );
+    run_cells_streaming(&cells, opts, |idx, r| {
+        let sc = &scenarios[idx / SCENARIO_SCHEMES.len()];
+        let (label, scheme) = SCENARIO_SCHEMES[idx % SCENARIO_SCHEMES.len()];
+        let cfg = &cells[idx].cfg;
+        let (conv_t, acc) = summary_of(r);
+        let t70 = r.time_to_accuracy(TARGET_ACC);
+        w.row(&[
+            s(&sc.name),
+            s(scheme.name()),
+            s(cfg.placement.name()),
+            i(cfg.n_sats() as u64),
+            i(cfg.constellation.shells().len() as u64),
+            f(acc * 100.0),
+            f(conv_t / 3600.0),
+            s(&fmt_hm(conv_t)),
+            t70.map(|t| f(t / 3600.0)).unwrap_or_else(|| "inf".to_string()),
+            i(r.epochs),
+            i(r.transfers),
+        ])?;
+        println!(
+            "{:<18} {:<10} {:>5} {:>8.2} {:>10} {:>8} {:>7}",
+            sc.name,
+            label,
+            cfg.n_sats(),
+            acc * 100.0,
+            fmt_hm(conv_t),
+            t70.map(|t| format!("{:.1}", t / 3600.0)).unwrap_or_else(|| "-".to_string()),
+            r.epochs
+        );
+        Ok(())
+    })?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::ScenarioRegistry;
+
+    #[test]
+    fn grid_covers_every_scenario_and_scheme() {
+        let reg = ScenarioRegistry::builtin();
+        let scenarios: Vec<Scenario> = reg.iter().cloned().collect();
+        let opts = ExpOptions { surrogate: true, fast: true, ..Default::default() };
+        let cells = compare_cells(&scenarios, &opts);
+        assert_eq!(cells.len(), scenarios.len() * SCENARIO_SCHEMES.len());
+        assert!(cells.iter().any(|c| c.label == "starlink-lite/FedHAP"));
+        // schemes within one scenario share its geometry key inputs
+        for group in cells.chunks(SCENARIO_SCHEMES.len()) {
+            for c in &group[1..] {
+                assert_eq!(c.cfg.constellation, group[0].cfg.constellation);
+                assert_eq!(c.cfg.placement, group[0].cfg.placement);
+                assert_eq!(c.cfg.fl.horizon_s, group[0].cfg.fl.horizon_s);
+            }
+        }
+    }
+
+    #[test]
+    fn ours_plus_sync_and_async_baselines() {
+        assert!(SCENARIO_SCHEMES.len() >= 2);
+        assert!(SCENARIO_SCHEMES.iter().any(|&(_, s)| s == SchemeKind::AsyncFleo));
+        assert!(SCENARIO_SCHEMES.iter().any(|&(_, s)| s == SchemeKind::FedHap));
+    }
+}

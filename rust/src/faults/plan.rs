@@ -20,7 +20,8 @@ use super::config::FaultConfig;
 use super::schedule::{exp_draw, ChurnSchedule, OutageWindows};
 use crate::sim::{Event, EventKind, EventQueue};
 use crate::util::Rng;
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Which physical link a transfer crosses (endpoints by dense id).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -88,7 +89,71 @@ pub struct FaultSchedule {
     orbit_outages: Vec<OutageWindows>,
     sat_churn: Vec<ChurnSchedule>,
     hap_churn: Vec<ChurnSchedule>,
-    sats_per_orbit: usize,
+    /// Global orbital-plane index per satellite id (multi-shell
+    /// constellations have non-uniform plane sizes, so the mapping is
+    /// explicit rather than a division by `sats_per_orbit`).
+    plane_of: Vec<usize>,
+}
+
+/// Identity of a shareable [`FaultSchedule`]: every input of
+/// [`FaultSchedule::build`], with `f64`s keyed by bit pattern (configs
+/// are copied or parsed from the same text; NaN is rejected by
+/// `FaultConfig::validate`).
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct ScheduleKey {
+    cfg_bits: [u64; 8],
+    max_retransmits: u32,
+    isl_outage: bool,
+    seed: u64,
+    plane_of: Vec<usize>,
+    n_sites: usize,
+    horizon_bits: u64,
+}
+
+impl ScheduleKey {
+    fn of(
+        cfg: &FaultConfig,
+        seed: u64,
+        plane_of: &[usize],
+        n_sites: usize,
+        horizon_s: f64,
+    ) -> Self {
+        ScheduleKey {
+            cfg_bits: [
+                cfg.loss_prob.to_bits(),
+                cfg.retransmit_backoff_s.to_bits(),
+                cfg.outage_period_s.to_bits(),
+                cfg.outage_duration_s.to_bits(),
+                cfg.sat_mtbf_s.to_bits(),
+                cfg.sat_mttr_s.to_bits(),
+                cfg.hap_mtbf_s.to_bits(),
+                cfg.hap_mttr_s.to_bits(),
+            ],
+            max_retransmits: cfg.max_retransmits,
+            isl_outage: cfg.isl_outage,
+            seed,
+            plane_of: plane_of.to_vec(),
+            n_sites,
+            horizon_bits: horizon_s.to_bits(),
+        }
+    }
+}
+
+/// Cache of per-key build cells (the `coordinator::Geometry` pattern):
+/// the map lock is only held to fetch or insert a cell, the build runs
+/// inside the cell's own `OnceLock`, so concurrent requests for
+/// *different* keys never serialize while same-key requests still
+/// build exactly once.
+type ScheduleCell = Arc<OnceLock<Arc<FaultSchedule>>>;
+
+fn schedule_cache() -> &'static Mutex<HashMap<ScheduleKey, ScheduleCell>> {
+    static CACHE: OnceLock<Mutex<HashMap<ScheduleKey, ScheduleCell>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn schedule_build_counts() -> &'static Mutex<HashMap<ScheduleKey, u64>> {
+    static COUNTS: OnceLock<Mutex<HashMap<ScheduleKey, u64>>> = OnceLock::new();
+    COUNTS.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
 /// SplitMix64 finalizer — the hash behind the channel-state keys.
@@ -110,20 +175,21 @@ impl FaultSchedule {
             orbit_outages: Vec::new(),
             sat_churn: Vec::new(),
             hap_churn: Vec::new(),
-            sats_per_orbit: 1,
+            plane_of: Vec::new(),
         }
     }
 
-    /// Build the impairment timeline. All randomness comes from `seed`:
-    /// the same seed gives bit-identical schedules and per-transfer
-    /// draws for any strategy with deterministic call order (which all
-    /// of ours are).
+    /// Build the impairment timeline. `plane_of` maps each satellite id
+    /// to its global orbital-plane index (one entry per satellite; see
+    /// `WalkerConstellation::plane_of`). All randomness comes from
+    /// `seed`: the same seed gives bit-identical schedules and
+    /// per-transfer draws for any strategy with deterministic call
+    /// order (which all of ours are).
     pub fn build(
         cfg: &FaultConfig,
         seed: u64,
-        n_sats: usize,
+        plane_of: &[usize],
         n_sites: usize,
-        sats_per_orbit: usize,
         horizon_s: f64,
     ) -> Self {
         if cfg.is_nop() {
@@ -131,6 +197,7 @@ impl FaultSchedule {
             sched.cfg = *cfg;
             return sched;
         }
+        let n_sats = plane_of.len();
         let mut rng = Rng::new(seed ^ 0xFA_0175);
         let mut phase_rng = rng.fork(1);
         let mut churn_rng = rng.fork(2);
@@ -147,7 +214,7 @@ impl FaultSchedule {
                         phase_s: phase(&mut phase_rng),
                     })
                     .collect();
-                let n_orbits = n_sats / sats_per_orbit.max(1);
+                let n_orbits = plane_of.iter().max().map_or(0, |m| m + 1);
                 let orbits = if cfg.isl_outage {
                     (0..n_orbits)
                         .map(|_| OutageWindows {
@@ -185,8 +252,56 @@ impl FaultSchedule {
                 cfg.hap_mttr_s,
                 horizon_s,
             ),
-            sats_per_orbit: sats_per_orbit.max(1),
+            plane_of: plane_of.to_vec(),
         }
+    }
+
+    /// The process-wide shared schedule for this exact impairment key
+    /// (config bits, seed, node layout, horizon). A resilience cell
+    /// group runs every scheme against the same `(scenario, intensity,
+    /// seed)` timeline; the schedule is a pure function of the key, so
+    /// the schemes share one `Arc` instead of rebuilding it per run —
+    /// each run still gets its own [`FaultPlan`] counters. No-op
+    /// configs skip the cache (they build a trivial disabled schedule).
+    pub fn shared(
+        cfg: &FaultConfig,
+        seed: u64,
+        plane_of: &[usize],
+        n_sites: usize,
+        horizon_s: f64,
+    ) -> Arc<FaultSchedule> {
+        if cfg.is_nop() {
+            let mut sched = Self::disabled();
+            sched.cfg = *cfg;
+            return Arc::new(sched);
+        }
+        let key = ScheduleKey::of(cfg, seed, plane_of, n_sites, horizon_s);
+        let cell: ScheduleCell = {
+            let mut map = schedule_cache().lock().unwrap();
+            map.entry(key.clone()).or_default().clone()
+        };
+        cell.get_or_init(|| {
+            *schedule_build_counts().lock().unwrap().entry(key).or_insert(0) += 1;
+            Arc::new(Self::build(cfg, seed, plane_of, n_sites, horizon_s))
+        })
+        .clone()
+    }
+
+    /// How many times [`Self::shared`] actually built this key's
+    /// schedule (0 = never requested; 1 = the share contract held).
+    pub fn shared_build_count(
+        cfg: &FaultConfig,
+        seed: u64,
+        plane_of: &[usize],
+        n_sites: usize,
+        horizon_s: f64,
+    ) -> u64 {
+        schedule_build_counts()
+            .lock()
+            .unwrap()
+            .get(&ScheduleKey::of(cfg, seed, plane_of, n_sites, horizon_s))
+            .copied()
+            .unwrap_or(0)
     }
 
     pub fn enabled(&self) -> bool {
@@ -260,7 +375,7 @@ impl FaultSchedule {
                 self.site_outages.get(site).map_or(t, |o| o.clear_time(t))
             }
             LinkClass::Isl { sat_a, .. } => {
-                let orbit = sat_a / self.sats_per_orbit;
+                let orbit = self.plane_of.get(sat_a).copied().unwrap_or(0);
                 self.orbit_outages.get(orbit).map_or(t, |o| o.clear_time(t))
             }
             LinkClass::Ihl { .. } => t,
@@ -319,8 +434,12 @@ impl FaultPlan {
         Self::from_schedule(Arc::new(FaultSchedule::disabled()))
     }
 
-    /// Build schedule + fresh counters for one run. See
-    /// [`FaultSchedule::build`] for the determinism contract.
+    /// Build schedule + fresh counters for one run, for a uniform
+    /// constellation of `n_sats` satellites in planes of
+    /// `sats_per_orbit` (multi-shell callers go through
+    /// [`FaultSchedule::build`]/[`FaultSchedule::shared`] with an
+    /// explicit plane mapping). See [`FaultSchedule::build`] for the
+    /// determinism contract.
     pub fn new(
         cfg: &FaultConfig,
         seed: u64,
@@ -329,12 +448,16 @@ impl FaultPlan {
         sats_per_orbit: usize,
         horizon_s: f64,
     ) -> Self {
+        // like `orbit::uniform_plane_of`, but tolerant of an n_sats
+        // that is not a multiple of the plane size (the tail becomes a
+        // partial plane, matching the historical division rule)
+        let spo = sats_per_orbit.max(1);
+        let plane_of: Vec<usize> = (0..n_sats).map(|s| s / spo).collect();
         Self::from_schedule(Arc::new(FaultSchedule::build(
             cfg,
             seed,
-            n_sats,
+            &plane_of,
             n_sites,
-            sats_per_orbit,
             horizon_s,
         )))
     }
@@ -519,7 +642,8 @@ mod tests {
         // two runs over one Arc'd schedule: identical timelines,
         // independent accounting — the schedule-vs-counters split.
         let cfg = FaultConfig::preset(FaultScenario::Lossy, 1.0);
-        let sched = Arc::new(FaultSchedule::build(&cfg, 7, 40, 2, 8, 72.0 * 3600.0));
+        let plane_of: Vec<usize> = (0..40).map(|s| s / 8).collect();
+        let sched = Arc::new(FaultSchedule::build(&cfg, 7, &plane_of, 2, 72.0 * 3600.0));
         let mut a = FaultPlan::from_schedule(sched.clone());
         let mut b = FaultPlan::from_schedule(sched.clone());
         let class = LinkClass::SatSite { sat: 1, site: 0 };
@@ -531,6 +655,42 @@ mod tests {
         a.note_dropped();
         assert_ne!(a.stats(), b.stats(), "counters must not leak across runs");
         assert!(Arc::ptr_eq(a.schedule(), b.schedule()));
+    }
+
+    #[test]
+    fn shared_returns_one_arc_per_key() {
+        // intensity unique to this test so parallel tests in the binary
+        // can't collide with its cache keys
+        let cfg = FaultConfig::preset(FaultScenario::Eclipse, 0.85);
+        let plane_of: Vec<usize> = (0..12).map(|s| s / 4).collect();
+        let horizon = 36.0 * 3600.0;
+        let a = FaultSchedule::shared(&cfg, 77, &plane_of, 2, horizon);
+        let b = FaultSchedule::shared(&cfg, 77, &plane_of, 2, horizon);
+        assert!(Arc::ptr_eq(&a, &b), "same key must share one schedule");
+        assert_eq!(FaultSchedule::shared_build_count(&cfg, 77, &plane_of, 2, horizon), 1);
+        let c = FaultSchedule::shared(&cfg, 78, &plane_of, 2, horizon);
+        assert!(!Arc::ptr_eq(&a, &c), "seed keys the cache");
+        // no-op configs bypass the cache entirely
+        let nop = FaultConfig::nominal();
+        let d = FaultSchedule::shared(&nop, 77, &plane_of, 2, horizon);
+        assert!(!d.enabled());
+        assert_eq!(FaultSchedule::shared_build_count(&nop, 77, &plane_of, 2, horizon), 0);
+    }
+
+    #[test]
+    fn multi_shell_plane_mapping_drives_isl_outages() {
+        // two planes of different sizes: ISL outage windows must follow
+        // the explicit plane mapping, not a uniform division
+        let cfg = FaultConfig::preset(FaultScenario::Eclipse, 1.0);
+        let plane_of = vec![0, 0, 0, 1, 1, 1, 1, 1];
+        let sched = FaultSchedule::build(&cfg, 19, &plane_of, 1, 72.0 * 3600.0);
+        assert_eq!(sched.orbit_outages.len(), 2, "one window set per plane");
+        let mut p = FaultPlan::from_schedule(Arc::new(sched));
+        // an ISL hop inside the *second* plane uses that plane's window
+        let o = p.schedule.orbit_outages[1];
+        let t_in = o.phase_s + 0.25 * o.duration_s;
+        let out = p.transfer(LinkClass::Isl { sat_a: 4, sat_b: 5 }, t_in, 0.1);
+        assert!(out.delay_s > 0.1, "mid-window hop must be deferred");
     }
 
     #[test]

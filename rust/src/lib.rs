@@ -7,8 +7,10 @@
 //! This crate is **Layer 3**: the coordination contribution of the paper
 //! plus every substrate it depends on —
 //!
-//! * [`orbit`] — Keplerian constellation propagation, Walker-delta
-//!   builder, ground/HAP sites, visibility and contact windows;
+//! * [`orbit`] — Keplerian constellation propagation, multi-shell
+//!   Walker builder (delta and star patterns, per-shell altitude /
+//!   inclination / planes / phasing with globally unique satellite
+//!   ids), ground/HAP sites, visibility and contact windows;
 //! * [`comm`] — the paper's RF link model (Eqs. 5–9): FSPL, SNR,
 //!   Shannon rate, delay composition;
 //! * [`topology`] — the ring-of-stars SAT↔HAP topology (Sec. IV-A);
@@ -36,14 +38,24 @@
 //!   holds what a single run mutates (backend, RNG, curve, transfer
 //!   counter, fault counters), and `SimEnv` is the thin facade the
 //!   strategies program against;
+//! * [`scenario`] — declarative experiment worlds: a named preset or a
+//!   TOML file (with `[shellN]` sections for multi-shell
+//!   constellations) becomes a complete, reproducible
+//!   `ExperimentConfig`; the built-in `ScenarioRegistry` catalogs ≥6
+//!   presets (paper-40, starlink-lite, polar-star, sparse-iot,
+//!   equatorial-dense, haps-degraded — see the module docs for how to
+//!   add one) behind `asyncfleo scenario`;
 //! * [`experiments`] — drivers regenerating every paper table & figure,
 //!   plus the `resilience` sweep comparing graceful degradation across
-//!   schemes under the fault scenarios. Every driver describes its grid
-//!   as `experiments::executor::Cell`s and runs them through the
-//!   deterministic parallel executor (`--jobs N`, surrogate mode):
-//!   cells fan out to `std::thread::scope` workers sharing the cached
-//!   `Geometry`, results return in cell order, and output CSVs are
-//!   byte-identical to a sequential run;
+//!   schemes under the fault scenarios and the `scenarios` sweep
+//!   comparing schemes across the scenario catalog. Every driver
+//!   describes its grid as `experiments::executor::Cell`s and runs
+//!   them through the deterministic streaming executor (`--jobs N`,
+//!   surrogate mode): cells fan out longest-first to
+//!   `std::thread::scope` workers sharing the cached `Geometry`, the
+//!   per-result callback consumes the ordered prefix as it completes
+//!   (CSV rows stream to disk; a late error keeps finished work), and
+//!   output CSVs are byte-identical to a sequential run;
 //! * [`config`], [`cli`], [`metrics`], [`bench`], [`testkit`],
 //!   [`util`] — supporting substrates built from scratch (crates.io is
 //!   unreachable; see DESIGN.md §1).
@@ -65,6 +77,7 @@ pub mod metrics;
 pub mod model;
 pub mod orbit;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod testkit;
 pub mod topology;

@@ -4,6 +4,7 @@
 //! asyncfleo exp <name>|all [--out DIR] [--fast] [--surrogate] [--seed N] [--jobs N]
 //! asyncfleo run [--config FILE] [--scheme S] [--placement P] ...
 //! asyncfleo resilience [--out DIR] [--fast] [--surrogate] [--seed N] [--jobs N]
+//! asyncfleo scenario [--list | --dump NAME | --preset NAME[,NAME..] | --all | --config FILE]
 //! asyncfleo info
 //! ```
 
@@ -11,6 +12,7 @@ use asyncfleo::cli::Args;
 use asyncfleo::config::{ExperimentConfig, ModelKind, PsPlacement, SchemeKind};
 use asyncfleo::experiments::drivers::{print_info, run_one, ExpOptions};
 use asyncfleo::experiments::run_experiment;
+use asyncfleo::scenario::{Scenario, ScenarioRegistry};
 use asyncfleo::util::fmt_hm;
 
 const USAGE: &str = "\
@@ -36,13 +38,35 @@ USAGE:
       across AsyncFLEO + baselines and tabulate graceful degradation
       (alias for `exp resilience`).
 
+  asyncfleo scenario --list
+  asyncfleo scenario --dump NAME
+  asyncfleo scenario [--preset NAME[,NAME...] | --all | --config FILE]
+                     [--out DIR] [--fast] [--jobs N] [--seed N] [--pjrt]
+      Declarative experiment worlds. The built-in catalog ships >= 6
+      presets (paper-40, starlink-lite two-shell, polar-star, sparse-iot,
+      equatorial-dense, haps-degraded); --list shows them, --dump prints
+      a preset as TOML (editable, reloadable via --config FILE, with
+      [shellN] sections for multi-shell constellations). Running a
+      selection sweeps AsyncFLEO vs FedHAP vs FedSat in each world into
+      DIR/scenarios.csv. Surrogate backend by default (contact-pattern
+      studies; --pjrt opts into the compiled artifacts); output is
+      byte-identical at any --jobs N.
+
   asyncfleo info
       Show artifact manifest + paper constellation info.
 ";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(&argv, true, &["fast", "surrogate", "help"]) {
+    // --list/--all/--pjrt are scenario-only: other subcommands must
+    // keep rejecting them instead of silently swallowing a flag
+    let scenario_mode = argv.first().map(|s| s == "scenario").unwrap_or(false);
+    let known_flags: &[&str] = if scenario_mode {
+        &["fast", "surrogate", "help", "list", "all", "pjrt"]
+    } else {
+        &["fast", "surrogate", "help"]
+    };
+    let args = match Args::parse(&argv, true, known_flags) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");
@@ -57,6 +81,7 @@ fn main() {
         "exp" => cmd_exp(&args),
         "run" => cmd_run(&args),
         "resilience" => cmd_resilience(&args),
+        "scenario" => cmd_scenario(&args),
         "info" => print_info(&asyncfleo::runtime::Runtime::default_dir()),
         other => {
             eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
@@ -90,6 +115,56 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_resilience(args: &Args) -> anyhow::Result<()> {
     run_experiment("resilience", &sweep_options(args)?)
+}
+
+fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
+    let registry = ScenarioRegistry::builtin();
+    if args.flag("list") {
+        println!("built-in scenario catalog ({} presets):\n", registry.len());
+        for sc in registry.iter() {
+            println!("  {}", sc.describe());
+        }
+        println!("\nrun one with `asyncfleo scenario --preset NAME`, dump with `--dump NAME`");
+        return Ok(());
+    }
+    if let Some(name) = args.opt("dump") {
+        let sc = registry
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset {name:?}; try --list"))?;
+        print!("{}", sc.to_toml());
+        return Ok(());
+    }
+    let mut scenarios: Vec<Scenario> = if let Some(path) = args.opt("config") {
+        vec![Scenario::from_file(path).map_err(anyhow::Error::msg)?]
+    } else if args.flag("all") {
+        registry.iter().cloned().collect()
+    } else if let Some(names) = args.opt("preset") {
+        names
+            .split(',')
+            .map(|n| {
+                registry
+                    .get(n.trim())
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("unknown preset {:?}; try --list", n.trim()))
+            })
+            .collect::<anyhow::Result<_>>()?
+    } else {
+        anyhow::bail!(
+            "scenario: pass --list, --dump NAME, --preset NAME[,NAME...], --all, or --config FILE"
+        );
+    };
+    // an explicit --seed overrides every selected world's seed; without
+    // it each scenario keeps the seed its definition carries
+    if let Some(seed) = args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
+        for sc in &mut scenarios {
+            sc.cfg.seed = seed;
+        }
+    }
+    // scenario sweeps are contact-pattern studies: surrogate by default
+    // (also what lets --jobs parallelize); --pjrt opts into artifacts
+    let mut opts = sweep_options(args)?;
+    opts.surrogate = !args.flag("pjrt");
+    asyncfleo::experiments::scenarios::run_compare(&scenarios, &opts)
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {

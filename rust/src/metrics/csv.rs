@@ -9,6 +9,7 @@ use std::path::Path;
 pub struct CsvWriter {
     out: BufWriter<File>,
     columns: usize,
+    autoflush: bool,
 }
 
 impl CsvWriter {
@@ -27,12 +28,24 @@ impl CsvWriter {
             }
         }
         writeln!(out, "{}", header.join(","))?;
-        Ok(CsvWriter { out, columns: header.len() })
+        Ok(CsvWriter { out, columns: header.len(), autoflush: false })
+    }
+
+    /// Flush after every row. The streaming sweep drivers enable this
+    /// so completed rows are durable on disk the moment their cell
+    /// finishes — an error later in the grid can't lose them.
+    pub fn autoflush(mut self, on: bool) -> Self {
+        self.autoflush = on;
+        self
     }
 
     pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
         assert_eq!(fields.len(), self.columns, "row arity mismatch");
-        writeln!(self.out, "{}", fields.join(","))
+        writeln!(self.out, "{}", fields.join(","))?;
+        if self.autoflush {
+            self.out.flush()?;
+        }
+        Ok(())
     }
 
     pub fn flush(&mut self) -> std::io::Result<()> {

@@ -47,6 +47,13 @@ impl GeodeticSite {
         GeodeticSite { kind: SiteKind::GroundStation, lat_deg: 90.0, lon_deg: 0.0, alt_km: 0.0 }
     }
 
+    /// HAP above Quito, Ecuador at 20 km — an equatorial sink for the
+    /// low-inclination scenario presets (an equatorial shell never
+    /// rises over mid-latitude sites like Rolla).
+    pub fn quito_hap() -> Self {
+        GeodeticSite { kind: SiteKind::Hap, lat_deg: -0.19, lon_deg: -78.49, alt_km: 20.0 }
+    }
+
     /// Horizon dip in degrees: an observer at altitude h sees the true
     /// horizon `acos(R_E/(R_E+h))` below the local horizontal. This is
     /// precisely the HAP's visibility advantage over a GS the paper

@@ -24,7 +24,7 @@ pub use elements::{OrbitalElements, EARTH_RADIUS_KM, MU_EARTH};
 pub use ground::{GeodeticSite, SiteKind};
 pub use propagation::satellite_position_eci;
 pub use visibility::{contact_windows, elevation_deg, sat_sat_los, ContactWindow};
-pub use walker::{Satellite, WalkerConstellation};
+pub use walker::{uniform_plane_of, Satellite, ShellSpec, WalkerConstellation, WalkerPattern};
 
 // All geometry types are shared across the parallel sweep executor's
 // worker threads (via `Arc<coordinator::Geometry>`); pin the auto
@@ -34,6 +34,7 @@ const _: () = {
     const fn assert_send_sync<T: Send + Sync>() {}
     assert_send_sync::<WalkerConstellation>();
     assert_send_sync::<Satellite>();
+    assert_send_sync::<ShellSpec>();
     assert_send_sync::<OrbitalElements>();
     assert_send_sync::<GeodeticSite>();
     assert_send_sync::<ContactWindow>();

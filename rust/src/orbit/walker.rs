@@ -1,39 +1,168 @@
-//! Walker-delta constellation builder (paper Fig. 1, Sec. V-A).
+//! Walker constellation builder (paper Fig. 1, Sec. V-A), generalized
+//! to multi-shell constellations for the scenario subsystem.
 //!
 //! A Walker-delta constellation `i:T/P/F` spreads `P` orbital planes
 //! evenly over 360 degrees of RAAN, with `T/P` satellites equally
-//! spaced in each plane and an inter-plane phasing factor `F`.
+//! spaced in each plane and an inter-plane phasing factor `F`. A Walker
+//! *star* (polar constellations like OneWeb/Iridium) spreads the planes
+//! over 180 degrees instead, so ascending and descending passes
+//! interleave. A constellation is a list of [`ShellSpec`]s; each shell
+//! contributes its own planes and satellites, with globally unique,
+//! dense satellite ids (shell 0 first, then shell 1, ...). The paper's
+//! single 5×8 shell is the one-element special case.
 
 use super::elements::OrbitalElements;
 use crate::util::Vec3;
 
+/// Which Walker pattern a shell follows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WalkerPattern {
+    /// RAAN spread over 360° (the paper's pattern).
+    Delta,
+    /// RAAN spread over 180° (polar "star" constellations).
+    Star,
+}
+
+impl WalkerPattern {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "delta" => Some(WalkerPattern::Delta),
+            "star" => Some(WalkerPattern::Star),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WalkerPattern::Delta => "delta",
+            WalkerPattern::Star => "star",
+        }
+    }
+
+    /// RAAN span the shell's planes are spread over.
+    fn raan_span_rad(&self) -> f64 {
+        match self {
+            WalkerPattern::Delta => 2.0 * std::f64::consts::PI,
+            WalkerPattern::Star => std::f64::consts::PI,
+        }
+    }
+}
+
+/// One shell of a (possibly multi-shell) constellation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShellSpec {
+    pub pattern: WalkerPattern,
+    pub n_orbits: usize,
+    pub sats_per_orbit: usize,
+    pub altitude_km: f64,
+    pub inclination_deg: f64,
+    /// Walker F factor (relative phase shift between adjacent planes,
+    /// in units of 360/T degrees).
+    pub phasing: usize,
+}
+
+impl ShellSpec {
+    /// A delta shell (the common case).
+    pub fn delta(
+        n_orbits: usize,
+        sats_per_orbit: usize,
+        altitude_km: f64,
+        inclination_deg: f64,
+        phasing: usize,
+    ) -> Self {
+        ShellSpec {
+            pattern: WalkerPattern::Delta,
+            n_orbits,
+            sats_per_orbit,
+            altitude_km,
+            inclination_deg,
+            phasing,
+        }
+    }
+
+    /// A star shell (planes over 180° of RAAN).
+    pub fn star(
+        n_orbits: usize,
+        sats_per_orbit: usize,
+        altitude_km: f64,
+        inclination_deg: f64,
+        phasing: usize,
+    ) -> Self {
+        ShellSpec {
+            pattern: WalkerPattern::Star,
+            ..Self::delta(n_orbits, sats_per_orbit, altitude_km, inclination_deg, phasing)
+        }
+    }
+
+    pub fn n_sats(&self) -> usize {
+        self.n_orbits * self.sats_per_orbit
+    }
+
+    /// Compact human-readable form, e.g. `12x20@550km/53°`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}x{}@{}km/{}°{}",
+            self.n_orbits,
+            self.sats_per_orbit,
+            self.altitude_km,
+            self.inclination_deg,
+            if self.pattern == WalkerPattern::Star { "*" } else { "" }
+        )
+    }
+}
+
+/// The satellite→plane mapping of a uniform single-shell constellation
+/// (`n_orbits` planes of `sats_per_orbit` each) — the legacy
+/// "divide by plane size" rule, kept in one place so the partition,
+/// surrogate and fault layers can't drift apart. Multi-shell callers
+/// use `WalkerConstellation::plane_of` /
+/// `ConstellationConfig::plane_of` instead.
+pub fn uniform_plane_of(n_orbits: usize, sats_per_orbit: usize) -> Vec<usize> {
+    (0..n_orbits * sats_per_orbit).map(|s| s / sats_per_orbit.max(1)).collect()
+}
+
 /// A satellite's identity + orbital elements. IDs follow the paper's
-/// `(orbit#, sat#)` convention (Fig. 3).
+/// `(orbit#, sat#)` convention (Fig. 3), extended with the shell index;
+/// `orbit` is the *global* plane index across all shells.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Satellite {
-    /// Global index in [0, T).
+    /// Global index in [0, total sats).
     pub id: usize,
-    /// Orbital plane index in [0, P).
+    /// Which shell this satellite belongs to.
+    pub shell: usize,
+    /// Global orbital-plane index in [0, total planes).
     pub orbit: usize,
-    /// In-plane index in [0, T/P).
+    /// In-plane index in [0, plane length).
     pub slot: usize,
     pub elements: OrbitalElements,
 }
 
-/// A full Walker-delta constellation.
+/// Contiguous id span of one orbital plane.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct PlaneSpan {
+    start: usize,
+    len: usize,
+}
+
+/// A full (possibly multi-shell) Walker constellation.
 #[derive(Clone, Debug)]
 pub struct WalkerConstellation {
     pub satellites: Vec<Satellite>,
+    /// The shells this constellation was built from.
+    pub shells: Vec<ShellSpec>,
+    /// Global plane table: contiguous id span per plane.
+    planes: Vec<PlaneSpan>,
+    /// Total number of orbital planes across all shells.
     pub n_orbits: usize,
+    /// Satellites per plane of the *first* shell (uniform for
+    /// single-shell constellations; use [`Self::plane_len`] for the
+    /// general per-plane count).
     pub sats_per_orbit: usize,
 }
 
 impl WalkerConstellation {
-    /// Build `P = n_orbits` planes x `n = sats_per_orbit` satellites.
-    ///
-    /// `phasing` is the Walker F factor (relative phase shift between
-    /// adjacent planes, in units of 360/T degrees). The paper uses the
-    /// standard delta pattern; F = 1 avoids synchronized planes.
+    /// Build a single delta shell: `P = n_orbits` planes x
+    /// `n = sats_per_orbit` satellites (the pre-multi-shell API).
     pub fn new(
         n_orbits: usize,
         sats_per_orbit: usize,
@@ -41,29 +170,63 @@ impl WalkerConstellation {
         inclination_deg: f64,
         phasing: usize,
     ) -> Self {
-        assert!(n_orbits > 0 && sats_per_orbit > 0);
-        let total = n_orbits * sats_per_orbit;
+        Self::from_shells(&[ShellSpec::delta(
+            n_orbits,
+            sats_per_orbit,
+            altitude_km,
+            inclination_deg,
+            phasing,
+        )])
+    }
+
+    /// Build a multi-shell constellation. Satellite ids are dense and
+    /// globally unique; shell `k`'s ids follow shell `k-1`'s
+    /// ([`Self::shell_id_range`]), and each shell's planes are appended
+    /// to the global plane table in order.
+    pub fn from_shells(shells: &[ShellSpec]) -> Self {
+        assert!(!shells.is_empty(), "constellation needs at least one shell");
         let tau = 2.0 * std::f64::consts::PI;
+        let total: usize = shells.iter().map(ShellSpec::n_sats).sum();
         let mut satellites = Vec::with_capacity(total);
-        for o in 0..n_orbits {
-            let raan = tau * o as f64 / n_orbits as f64;
-            for s in 0..sats_per_orbit {
-                let phase = tau * s as f64 / sats_per_orbit as f64
-                    + tau * phasing as f64 * o as f64 / total as f64;
-                satellites.push(Satellite {
-                    id: o * sats_per_orbit + s,
-                    orbit: o,
-                    slot: s,
-                    elements: OrbitalElements {
-                        altitude_km,
-                        inclination_rad: inclination_deg.to_radians(),
-                        raan_rad: raan,
-                        phase_rad: phase,
-                    },
-                });
+        let mut planes = Vec::new();
+        for (shell_idx, sh) in shells.iter().enumerate() {
+            assert!(
+                sh.n_orbits > 0 && sh.sats_per_orbit > 0,
+                "shell {shell_idx} must have at least one satellite"
+            );
+            let shell_total = sh.n_sats();
+            let span = sh.pattern.raan_span_rad();
+            for o in 0..sh.n_orbits {
+                let raan = span * o as f64 / sh.n_orbits as f64;
+                let plane = planes.len();
+                planes.push(PlaneSpan { start: satellites.len(), len: sh.sats_per_orbit });
+                for s in 0..sh.sats_per_orbit {
+                    let phase = tau * s as f64 / sh.sats_per_orbit as f64
+                        + tau * sh.phasing as f64 * o as f64 / shell_total as f64;
+                    satellites.push(Satellite {
+                        id: satellites.len(),
+                        shell: shell_idx,
+                        orbit: plane,
+                        slot: s,
+                        elements: OrbitalElements {
+                            altitude_km: sh.altitude_km,
+                            inclination_rad: sh.inclination_deg.to_radians(),
+                            raan_rad: raan,
+                            phase_rad: phase,
+                        },
+                    });
+                }
             }
         }
-        WalkerConstellation { satellites, n_orbits, sats_per_orbit }
+        let n_orbits = planes.len();
+        let sats_per_orbit = shells[0].sats_per_orbit;
+        WalkerConstellation {
+            satellites,
+            shells: shells.to_vec(),
+            planes,
+            n_orbits,
+            sats_per_orbit,
+        }
     }
 
     /// The paper's evaluation constellation: 40 satellites over 5 orbits
@@ -80,6 +243,27 @@ impl WalkerConstellation {
         self.satellites.is_empty()
     }
 
+    pub fn n_shells(&self) -> usize {
+        self.shells.len()
+    }
+
+    /// Satellites in one plane (planes differ across shells).
+    pub fn plane_len(&self, orbit: usize) -> usize {
+        self.planes[orbit].len
+    }
+
+    /// Global plane index of every satellite (the mapping the faults
+    /// and data-partition layers shard by).
+    pub fn plane_of(&self) -> Vec<usize> {
+        self.satellites.iter().map(|s| s.orbit).collect()
+    }
+
+    /// The contiguous global-id range of one shell.
+    pub fn shell_id_range(&self, shell: usize) -> std::ops::Range<usize> {
+        let start: usize = self.shells[..shell].iter().map(ShellSpec::n_sats).sum();
+        start..start + self.shells[shell].n_sats()
+    }
+
     /// Position of satellite `id` at time `t` (ECI, km).
     pub fn position(&self, id: usize, t: f64) -> Vec3 {
         super::propagation::satellite_position_eci(&self.satellites[id].elements, t)
@@ -91,16 +275,16 @@ impl WalkerConstellation {
     /// unstable / Doppler-dominated).
     pub fn ring_neighbors(&self, id: usize) -> (usize, usize) {
         let sat = &self.satellites[id];
-        let n = self.sats_per_orbit;
-        let base = sat.orbit * n;
-        let prev = base + (sat.slot + n - 1) % n;
-        let next = base + (sat.slot + 1) % n;
+        let span = self.planes[sat.orbit];
+        let prev = span.start + (sat.slot + span.len - 1) % span.len;
+        let next = span.start + (sat.slot + 1) % span.len;
         (prev, next)
     }
 
-    /// All satellite IDs in one orbital plane.
+    /// All satellite IDs in one orbital plane (global plane index).
     pub fn orbit_members(&self, orbit: usize) -> Vec<usize> {
-        (0..self.sats_per_orbit).map(|s| orbit * self.sats_per_orbit + s).collect()
+        let span = self.planes[orbit];
+        (span.start..span.start + span.len).collect()
     }
 }
 
@@ -114,6 +298,7 @@ mod tests {
         assert_eq!(c.len(), 40);
         assert_eq!(c.n_orbits, 5);
         assert_eq!(c.sats_per_orbit, 8);
+        assert_eq!(c.n_shells(), 1);
     }
 
     #[test]
@@ -123,6 +308,7 @@ mod tests {
             assert_eq!(s.id, i);
             assert_eq!(s.orbit, i / 4);
             assert_eq!(s.slot, i % 4);
+            assert_eq!(s.shell, 0);
         }
     }
 
@@ -133,6 +319,16 @@ mod tests {
         for o in 1..5 {
             let d = c.satellites[o * 8].elements.raan_rad - c.satellites[(o - 1) * 8].elements.raan_rad;
             assert!((d - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn star_pattern_halves_raan_span() {
+        let c = WalkerConstellation::from_shells(&[ShellSpec::star(4, 3, 1200.0, 87.9, 1)]);
+        let expect = std::f64::consts::PI / 4.0;
+        for o in 1..4 {
+            let d = c.satellites[o * 3].elements.raan_rad - c.satellites[(o - 1) * 3].elements.raan_rad;
+            assert!((d - expect).abs() < 1e-12, "star planes over 180°");
         }
     }
 
@@ -184,5 +380,67 @@ mod tests {
         let mut all: Vec<usize> = (0..5).flat_map(|o| c.orbit_members(o)).collect();
         all.sort_unstable();
         assert_eq!(all, (0..40).collect::<Vec<_>>());
+    }
+
+    fn two_shell() -> WalkerConstellation {
+        WalkerConstellation::from_shells(&[
+            ShellSpec::delta(2, 3, 550.0, 53.0, 1),
+            ShellSpec::delta(3, 4, 1110.0, 53.8, 1),
+        ])
+    }
+
+    #[test]
+    fn multi_shell_ids_disjoint_and_dense() {
+        let c = two_shell();
+        assert_eq!(c.len(), 6 + 12);
+        assert_eq!(c.n_orbits, 5, "2 + 3 planes");
+        assert_eq!(c.shell_id_range(0), 0..6);
+        assert_eq!(c.shell_id_range(1), 6..18);
+        for (i, s) in c.satellites.iter().enumerate() {
+            assert_eq!(s.id, i);
+            assert_eq!(s.shell, usize::from(i >= 6));
+        }
+        // altitudes follow the shell
+        assert_eq!(c.satellites[0].elements.altitude_km, 550.0);
+        assert_eq!(c.satellites[6].elements.altitude_km, 1110.0);
+    }
+
+    #[test]
+    fn multi_shell_planes_have_per_shell_lengths() {
+        let c = two_shell();
+        assert_eq!(c.plane_len(0), 3);
+        assert_eq!(c.plane_len(1), 3);
+        assert_eq!(c.plane_len(2), 4);
+        assert_eq!(c.plane_len(4), 4);
+        assert_eq!(c.orbit_members(2), vec![6, 7, 8, 9]);
+        let plane_of = c.plane_of();
+        assert_eq!(plane_of[0], 0);
+        assert_eq!(plane_of[5], 1);
+        assert_eq!(plane_of[6], 2);
+        assert_eq!(plane_of[17], 4);
+    }
+
+    #[test]
+    fn multi_shell_ring_neighbors_stay_in_shell() {
+        let c = two_shell();
+        for id in 0..c.len() {
+            let (p, n) = c.ring_neighbors(id);
+            assert_eq!(c.satellites[p].shell, c.satellites[id].shell);
+            assert_eq!(c.satellites[n].shell, c.satellites[id].shell);
+            assert_eq!(c.satellites[p].orbit, c.satellites[id].orbit);
+            let (_, pn) = c.ring_neighbors(p);
+            assert_eq!(pn, id, "symmetry across uneven plane lengths");
+        }
+        // wrap inside the second shell's first plane (ids 6..10)
+        assert_eq!(c.ring_neighbors(6), (9, 7));
+        assert_eq!(c.ring_neighbors(9), (8, 6));
+    }
+
+    #[test]
+    fn multi_shell_members_partition_constellation() {
+        let c = two_shell();
+        let mut all: Vec<usize> = (0..c.n_orbits).flat_map(|o| c.orbit_members(o)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..c.len()).collect::<Vec<_>>());
     }
 }

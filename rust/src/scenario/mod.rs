@@ -1,0 +1,311 @@
+//! Declarative experiment scenarios: a named preset or a TOML file
+//! turns into a complete, reproducible experiment world.
+//!
+//! A [`Scenario`] bundles everything that defines a constellation FL
+//! deployment: a (possibly multi-shell) constellation spec
+//! (`[constellation]` + `[shellN]` sections — delta or star pattern,
+//! altitude, inclination, planes, phasing, see
+//! [`crate::orbit::ShellSpec`]), a PS site layout
+//! ([`crate::config::PsPlacement`] named real-world sets), a data
+//! distribution (IID / paper non-IID), and an optional fault scenario
+//! ([`crate::faults::FaultConfig`]). All of that already lives in
+//! [`ExperimentConfig`], so a scenario is a named, documented config —
+//! and it round-trips losslessly through the TOML subset
+//! ([`Scenario::to_toml`] / [`Scenario::from_toml`]).
+//!
+//! The built-in catalog ([`ScenarioRegistry::builtin`]) ships ≥6
+//! presets spanning the design space the related work evaluates on
+//! (paper 5×8, a two-shell Starlink-like mix, a OneWeb-like polar star,
+//! a sparse IoT constellation, an equatorial shell, and a
+//! HAP-degraded world). `asyncfleo scenario` lists the catalog, dumps
+//! presets to TOML, and sweeps scheme×scenario comparison grids through
+//! `experiments::scenarios` into `results/scenarios.csv`.
+//!
+//! **Adding a preset**: write a `fn my_preset() -> Scenario` below that
+//! derives its `ExperimentConfig` from `paper_defaults()`, register it
+//! in [`ScenarioRegistry::builtin`], and the CLI list/dump/run paths,
+//! the registry-completeness test and the TOML round-trip test all pick
+//! it up automatically. Geometry is cached per unique scenario key
+//! (`coordinator::Geometry::shared`), so sweeps across presets build
+//! each world exactly once per process.
+
+use crate::config::{ExperimentConfig, PsPlacement, SchemeKind};
+use crate::data::Partition;
+use crate::faults::{FaultConfig, FaultScenario};
+use crate::orbit::ShellSpec;
+
+/// A named, documented experiment world.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Catalog key, e.g. `starlink-lite`.
+    pub name: String,
+    /// One-line description for `--list`.
+    pub summary: String,
+    /// The complete experiment configuration (constellation shells,
+    /// placement, partition, faults, sizes, seed).
+    pub cfg: ExperimentConfig,
+}
+
+/// Header line prefix of a dumped scenario file.
+const HEADER_PREFIX: &str = "# scenario: ";
+/// Separates name from summary in the header line.
+const HEADER_SEP: &str = " -- ";
+
+impl Scenario {
+    pub fn new(name: impl Into<String>, summary: impl Into<String>, cfg: ExperimentConfig) -> Self {
+        Scenario { name: name.into(), summary: summary.into(), cfg }
+    }
+
+    /// Serialize: a `# scenario:` header followed by the config TOML.
+    /// Round-trips through [`Self::from_toml`].
+    pub fn to_toml(&self) -> String {
+        format!("{HEADER_PREFIX}{}{HEADER_SEP}{}\n{}", self.name, self.summary, self.cfg.to_toml())
+    }
+
+    /// Parse a scenario file. The `# scenario: name -- summary` header
+    /// is optional (a plain config TOML becomes scenario "custom");
+    /// the config must validate.
+    pub fn from_toml(text: &str) -> Result<Scenario, String> {
+        let cfg = ExperimentConfig::from_toml(text).map_err(|e| e.to_string())?;
+        let errs = cfg.validate();
+        if !errs.is_empty() {
+            return Err(format!("invalid scenario config: {}", errs.join("; ")));
+        }
+        let (name, summary) = text
+            .lines()
+            .find_map(|l| l.strip_prefix(HEADER_PREFIX))
+            .map(|h| match h.split_once(HEADER_SEP) {
+                Some((n, s)) => (n.trim().to_string(), s.trim().to_string()),
+                None => (h.trim().to_string(), String::new()),
+            })
+            .unwrap_or_else(|| ("custom".to_string(), String::new()));
+        Ok(Scenario { name, summary, cfg })
+    }
+
+    pub fn from_file(path: &str) -> Result<Scenario, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_toml(&text)
+    }
+
+    /// One catalog line: name, constellation, placement, partition,
+    /// fault state.
+    pub fn describe(&self) -> String {
+        let c = &self.cfg;
+        format!(
+            "{:<18} {:>4} sats  {:<28} {:<10} {:<8} {}  {}",
+            self.name,
+            c.n_sats(),
+            c.constellation.summary(),
+            c.placement.name(),
+            match c.fl.partition {
+                Partition::Iid => "iid",
+                Partition::NonIidPaper => "non-iid",
+            },
+            if c.faults.is_nop() { "clean " } else { "faulty" },
+            self.summary,
+        )
+    }
+}
+
+/// The ordered catalog of built-in scenarios (plus lookup by name).
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioRegistry {
+    items: Vec<Scenario>,
+}
+
+impl ScenarioRegistry {
+    /// The built-in catalog, in presentation order.
+    pub fn builtin() -> Self {
+        ScenarioRegistry {
+            items: vec![
+                paper_40(),
+                starlink_lite(),
+                polar_star(),
+                sparse_iot(),
+                equatorial_dense(),
+                haps_degraded(),
+            ],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Scenario> {
+        self.items.iter()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.items.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Scenario> {
+        self.items.iter().find(|s| s.name == name)
+    }
+}
+
+/// Shared base: paper defaults with the scheme left to the comparison
+/// driver (it sweeps schemes over each scenario).
+fn base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::paper_defaults();
+    cfg.fl.scheme = SchemeKind::AsyncFleo;
+    cfg
+}
+
+/// The paper's own world: 5×8 delta at 2000 km, one HAP over Rolla,
+/// the paper non-IID split.
+fn paper_40() -> Scenario {
+    Scenario::new("paper-40", "the paper's Sec. V-A evaluation world", base())
+}
+
+/// A Starlink-flavored two-shell mix: a dense low shell plus a sparser
+/// high shell, two HAP sinks. Exercises multi-shell geometry end to
+/// end (disjoint id ranges, per-shell planes, mixed contact patterns).
+fn starlink_lite() -> Scenario {
+    let mut cfg = base();
+    cfg.constellation.n_orbits = 12;
+    cfg.constellation.sats_per_orbit = 20;
+    cfg.constellation.altitude_km = 550.0;
+    cfg.constellation.inclination_deg = 53.0;
+    cfg.constellation.phasing = 1;
+    cfg.constellation.extra_shells = vec![ShellSpec::delta(6, 10, 1110.0, 53.8, 1)];
+    cfg.placement = PsPlacement::TwoHaps;
+    Scenario::new(
+        "starlink-lite",
+        "two-shell 12x20@550 + 6x10@1110 Starlink-like mix, two HAPs",
+        cfg,
+    )
+}
+
+/// A OneWeb-like polar star shell: near-polar planes over 180° of
+/// RAAN, the FedISL/FedSat "ideal" polar ground station as the sink.
+fn polar_star() -> Scenario {
+    let mut cfg = base();
+    cfg.constellation.pattern = crate::orbit::WalkerPattern::Star;
+    cfg.constellation.n_orbits = 6;
+    cfg.constellation.sats_per_orbit = 12;
+    cfg.constellation.altitude_km = 1200.0;
+    cfg.constellation.inclination_deg = 87.9;
+    cfg.constellation.phasing = 1;
+    cfg.placement = PsPlacement::GsNorthPole;
+    cfg.fl.partition = Partition::Iid;
+    Scenario::new("polar-star", "OneWeb-like 6x12 polar star, North-Pole GS sink", cfg)
+}
+
+/// A sparse IoT data-collection constellation: 2×4 at 600 km, a single
+/// mid-latitude ground station — long gaps, few simultaneous contacts.
+fn sparse_iot() -> Scenario {
+    let mut cfg = base();
+    cfg.constellation.n_orbits = 2;
+    cfg.constellation.sats_per_orbit = 4;
+    cfg.constellation.altitude_km = 600.0;
+    cfg.constellation.inclination_deg = 70.0;
+    cfg.constellation.phasing = 1;
+    cfg.placement = PsPlacement::GsRolla;
+    Scenario::new("sparse-iot", "sparse 2x4 IoT constellation, single Rolla GS", cfg)
+}
+
+/// A dense single-plane equatorial shell with an equatorial HAP sink
+/// (a mid-latitude site would never see these satellites).
+fn equatorial_dense() -> Scenario {
+    let mut cfg = base();
+    cfg.constellation.n_orbits = 1;
+    cfg.constellation.sats_per_orbit = 16;
+    cfg.constellation.altitude_km = 550.0;
+    cfg.constellation.inclination_deg = 5.0;
+    cfg.constellation.phasing = 0;
+    cfg.placement = PsPlacement::HapQuito;
+    cfg.fl.partition = Partition::Iid;
+    Scenario::new("equatorial-dense", "1x16 equatorial ring, HAP sink over Quito", cfg)
+}
+
+/// The paper world under full-intensity HAP failures: the two-HAP ring
+/// loses nodes and re-heals while training runs.
+fn haps_degraded() -> Scenario {
+    let mut cfg = base();
+    cfg.placement = PsPlacement::TwoHaps;
+    cfg.faults = FaultConfig::preset(FaultScenario::HapFailure, 1.0);
+    Scenario::new("haps-degraded", "paper world + HAP failures at full intensity", cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Geometry;
+
+    #[test]
+    fn catalog_has_at_least_six_presets() {
+        let reg = ScenarioRegistry::builtin();
+        assert!(reg.len() >= 6, "catalog has {}", reg.len());
+        for name in [
+            "paper-40",
+            "starlink-lite",
+            "polar-star",
+            "sparse-iot",
+            "equatorial-dense",
+            "haps-degraded",
+        ] {
+            assert!(reg.get(name).is_some(), "missing preset {name}");
+        }
+        // names are unique
+        let mut names = reg.names();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), reg.len());
+    }
+
+    #[test]
+    fn every_preset_round_trips_through_toml() {
+        for sc in ScenarioRegistry::builtin().iter() {
+            let dumped = sc.to_toml();
+            let parsed = Scenario::from_toml(&dumped)
+                .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+            assert_eq!(&parsed, sc, "{} must round-trip dump→parse→equal", sc.name);
+        }
+    }
+
+    #[test]
+    fn every_preset_builds_a_valid_geometry() {
+        for sc in ScenarioRegistry::builtin().iter() {
+            let errs = sc.cfg.validate();
+            assert!(errs.is_empty(), "{}: {errs:?}", sc.name);
+            // shortened horizon: construction paths (multi-shell
+            // constellation, contact scan, finite-window assertion) are
+            // what this test exercises, not the 3-day plan itself
+            let mut cfg = sc.cfg.clone();
+            cfg.fl.horizon_s = 2.0 * 3600.0;
+            let geo = Geometry::shared(&cfg);
+            assert_eq!(geo.constellation.len(), sc.cfg.n_sats(), "{}", sc.name);
+            assert_eq!(geo.plan.n_sites(), sc.cfg.placement.sites().len(), "{}", sc.name);
+            assert_eq!(Geometry::build_count(&cfg), 1, "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn equatorial_shell_actually_sees_its_sink() {
+        // the preset exists because mid-latitude sites never see an
+        // equatorial shell; the Quito HAP must
+        let mut cfg = ScenarioRegistry::builtin().get("equatorial-dense").unwrap().cfg.clone();
+        cfg.fl.horizon_s = 6.0 * 3600.0;
+        let geo = Geometry::shared(&cfg);
+        let with_contact = (0..geo.constellation.len())
+            .filter(|&s| !geo.plan.windows(0, s).is_empty())
+            .count();
+        assert!(with_contact > 0, "equatorial ring never visible from Quito HAP");
+    }
+
+    #[test]
+    fn header_is_optional_and_custom_configs_parse() {
+        let sc = Scenario::from_toml("[constellation]\norbits = 3\n").unwrap();
+        assert_eq!(sc.name, "custom");
+        assert_eq!(sc.cfg.constellation.n_orbits, 3);
+        // invalid configs are rejected with the validation message
+        let err = Scenario::from_toml("[constellation]\naltitude_km = 50000\n").unwrap_err();
+        assert!(err.contains("LEO band"), "{err}");
+    }
+}

@@ -3,7 +3,7 @@
 
 use super::sampler::{eval_chunk, BatchSampler};
 use super::{Backend, EvalResult};
-use crate::data::{partition, Dataset, Partition, Shard};
+use crate::data::{partition_planes, Dataset, Partition, Shard};
 use crate::model::ModelParams;
 use crate::runtime::executor::Input;
 use crate::runtime::{Executable, Runtime};
@@ -33,6 +33,8 @@ pub struct PjrtBackend {
 
 impl PjrtBackend {
     /// Assemble from a runtime + datasets + a partitioning scheme.
+    /// `plane_of` maps each satellite id to its global orbital-plane
+    /// index (multi-shell aware; see `WalkerConstellation::plane_of`).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         runtime: Rc<Runtime>,
@@ -40,13 +42,12 @@ impl PjrtBackend {
         train_data: Dataset,
         test_data: Dataset,
         scheme: Partition,
-        n_orbits: usize,
-        sats_per_orbit: usize,
+        plane_of: &[usize],
         lr: f32,
         seed: u64,
     ) -> Result<Self> {
         let dim = runtime.manifest.model(model_tag).map_err(anyhow::Error::msg)?.dim;
-        let shards = partition(&train_data, scheme, n_orbits, sats_per_orbit, seed);
+        let shards = partition_planes(&train_data, scheme, plane_of, seed);
         let mut rng = Rng::new(seed ^ 0xBA7C4);
         let samplers = shards
             .iter()
@@ -88,8 +89,7 @@ impl PjrtBackend {
             train,
             test,
             cfg.fl.partition,
-            cfg.constellation.n_orbits,
-            cfg.constellation.sats_per_orbit,
+            &cfg.constellation.plane_of(),
             cfg.fl.lr,
             cfg.seed,
         )

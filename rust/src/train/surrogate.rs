@@ -49,15 +49,23 @@ impl SurrogateBackend {
     /// Build the paper's split: `n_orbits * sats_per_orbit` satellites;
     /// IID (all classes) or the paper non-IID split.
     pub fn paper_split(n_orbits: usize, sats_per_orbit: usize, iid: bool, base_size: usize) -> Self {
-        let n = n_orbits * sats_per_orbit;
+        Self::for_planes(&crate::orbit::uniform_plane_of(n_orbits, sats_per_orbit), iid, base_size)
+    }
+
+    /// Build from an explicit satellite→plane mapping (multi-shell
+    /// constellations; see `WalkerConstellation::plane_of`). The paper
+    /// non-IID structure generalizes by *global* plane index: the first
+    /// two planes hold classes 0..4, the rest classes 4..10.
+    pub fn for_planes(plane_of: &[usize], iid: bool, base_size: usize) -> Self {
+        let n = plane_of.len();
+        let n_planes = plane_of.iter().max().map_or(0, |m| m + 1);
         let mut mixes = Vec::with_capacity(n);
         let mut sizes = Vec::with_capacity(n);
-        for sat in 0..n {
-            let orbit = sat / sats_per_orbit;
+        for (sat, &orbit) in plane_of.iter().enumerate() {
             let mut mix = [0.0f64; CLASSES];
             if iid {
                 mix = [1.0 / CLASSES as f64; CLASSES];
-            } else if orbit < 2.min(n_orbits) {
+            } else if orbit < 2.min(n_planes) {
                 for m in mix.iter_mut().take(4) {
                     *m = 0.25;
                 }

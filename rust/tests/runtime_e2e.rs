@@ -199,14 +199,14 @@ fn pjrt_backend_full_fl_epoch() {
         800,
         200,
     );
+    let plane_of: Vec<usize> = (0..40).map(|s| s / 8).collect();
     let mut backend = PjrtBackend::new(
         rt,
         "mlp_digits",
         train_data,
         test_data,
         asyncfleo::data::Partition::NonIidPaper,
-        5,
-        8,
+        &plane_of,
         0.05,
         3,
     )

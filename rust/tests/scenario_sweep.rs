@@ -1,0 +1,131 @@
+//! Scenario subsystem contract tests:
+//!
+//! * the scheme×scenario comparison grid writes `scenarios.csv`
+//!   byte-identical at `--jobs 1` and `--jobs 4` (streaming executor +
+//!   longest-first scheduling must never change output bytes);
+//! * a two-shell scenario runs end-to-end through the multi-shell
+//!   `Geometry` (disjoint shell id ranges, finite ordered contact
+//!   windows) and the geometry cache builds once per unique scenario;
+//! * built-in presets resolve by name and dumped TOML reloads into the
+//!   same world.
+
+use asyncfleo::config::ExperimentConfig;
+use asyncfleo::coordinator::Geometry;
+use asyncfleo::experiments::drivers::ExpOptions;
+use asyncfleo::experiments::scenarios::{compare_cells, run_compare};
+use asyncfleo::orbit::ShellSpec;
+use asyncfleo::scenario::{Scenario, ScenarioRegistry};
+use std::path::PathBuf;
+
+fn temp_out(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("asyncfleo_scenario_sweep_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Small fast worlds (altitudes unique to this test binary so geometry
+/// build counts can't collide with other tests).
+fn small_scenarios() -> Vec<Scenario> {
+    let mut single = ExperimentConfig::test_small();
+    single.constellation.altitude_km = 913.5;
+    single.fl.horizon_s = 12.0 * 3600.0;
+    single.fl.max_epochs = 4;
+
+    let mut two_shell = ExperimentConfig::test_small();
+    two_shell.constellation.altitude_km = 914.5;
+    two_shell.constellation.extra_shells = vec![ShellSpec::delta(1, 4, 1475.5, 60.0, 0)];
+    two_shell.fl.horizon_s = 12.0 * 3600.0;
+    two_shell.fl.max_epochs = 4;
+
+    vec![
+        Scenario::new("tiny-single", "2x3 single shell", single),
+        Scenario::new("tiny-two-shell", "2x3 + 1x4 two-shell", two_shell),
+    ]
+}
+
+fn opts(out: PathBuf, jobs: usize) -> ExpOptions {
+    ExpOptions { out_dir: out, fast: true, surrogate: true, seed: 42, jobs }
+}
+
+#[test]
+fn scenarios_csv_is_byte_identical_across_jobs() {
+    let scenarios = small_scenarios();
+    let dir1 = temp_out("jobs1");
+    let dir4 = temp_out("jobs4");
+    run_compare(&scenarios, &opts(dir1.clone(), 1)).expect("--jobs 1 run");
+    run_compare(&scenarios, &opts(dir4.clone(), 4)).expect("--jobs 4 run");
+    let a = std::fs::read(dir1.join("scenarios.csv")).unwrap();
+    let b = std::fs::read(dir4.join("scenarios.csv")).unwrap();
+    assert!(!a.is_empty(), "scenarios.csv must not be empty");
+    assert_eq!(a, b, "scenarios.csv: --jobs 4 bytes must equal --jobs 1 bytes");
+    // at least AsyncFLEO and FedHAP rows per scenario
+    let text = String::from_utf8(a).unwrap();
+    for sc in &scenarios {
+        assert!(text.contains(&format!("{},asyncfleo", sc.name)), "{}", sc.name);
+        assert!(text.contains(&format!("{},fedhap", sc.name)), "{}", sc.name);
+    }
+    let _ = std::fs::remove_dir_all(&dir1);
+    let _ = std::fs::remove_dir_all(&dir4);
+}
+
+#[test]
+fn geometry_cache_keys_per_scenario_and_builds_once() {
+    let scenarios = small_scenarios();
+    let o = opts(temp_out("geo"), 4);
+    let cells = compare_cells(&scenarios, &o);
+    run_compare(&scenarios, &o).expect("compare run");
+    // one geometry per scenario, each built exactly once even with the
+    // parallel pool racing for it
+    let mut ptrs: Vec<*const Geometry> = cells
+        .iter()
+        .map(|c| std::sync::Arc::as_ptr(&Geometry::shared(&c.cfg)))
+        .collect();
+    ptrs.sort();
+    ptrs.dedup();
+    assert_eq!(ptrs.len(), scenarios.len(), "one geometry per scenario");
+    for cell in &cells {
+        assert_eq!(Geometry::build_count(&cell.cfg), 1, "{}", cell.label);
+    }
+}
+
+#[test]
+fn two_shell_geometry_end_to_end() {
+    let scenarios = small_scenarios();
+    let o = opts(temp_out("shell"), 1);
+    let cells = compare_cells(&scenarios, &o);
+    let two = cells
+        .iter()
+        .find(|c| c.label.starts_with("tiny-two-shell"))
+        .expect("two-shell cell");
+    let geo = Geometry::shared(&two.cfg);
+    let c = &geo.constellation;
+    // disjoint, dense id ranges per shell
+    assert_eq!(c.n_shells(), 2);
+    assert_eq!(c.shell_id_range(0), 0..6);
+    assert_eq!(c.shell_id_range(1), 6..10);
+    assert_eq!(c.len(), 10);
+    // finite, ordered contact windows for both shells
+    for site in 0..geo.plan.n_sites() {
+        for sat in 0..c.len() {
+            let ws = geo.plan.windows(site, sat);
+            for w in ws {
+                assert!(w.start_s.is_finite() && w.end_s.is_finite());
+                assert!(w.end_s >= w.start_s);
+            }
+            for pair in ws.windows(2) {
+                assert!(pair[0].end_s <= pair[1].start_s, "windows ordered and disjoint");
+            }
+        }
+    }
+}
+
+#[test]
+fn preset_dump_reloads_into_same_world() {
+    let reg = ScenarioRegistry::builtin();
+    assert!(reg.len() >= 6);
+    let starlink = reg.get("starlink-lite").expect("preset exists");
+    assert_eq!(starlink.cfg.constellation.shells().len(), 2, "two-shell preset");
+    let reloaded = Scenario::from_toml(&starlink.to_toml()).expect("dump parses");
+    assert_eq!(&reloaded, starlink);
+}
