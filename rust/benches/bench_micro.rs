@@ -2,6 +2,13 @@
 //! paths (the per-operation costs every experiment is built from).
 //!
 //! Run: `cargo bench --offline --bench bench_micro`
+//!
+//! The geometry section (reference vs fast contact scanner per
+//! scenario preset, 1 vs 4 threads) emits `BENCH_geometry.json` so the
+//! perf trajectory of `ContactPlan::build` is tracked across PRs. Run
+//! just that section (CI does, on the cheap presets) with
+//! `cargo bench --offline --bench bench_micro -- geometry
+//! --presets paper-40,sparse-iot`.
 
 use asyncfleo::bench::{bench, black_box, print_header, BenchConfig};
 use asyncfleo::coordinator::ContactPlan;
@@ -10,11 +17,30 @@ use asyncfleo::model::{ModelMetadata, ModelParams};
 use asyncfleo::orbit::{GeodeticSite, WalkerConstellation};
 use asyncfleo::runtime::executor::Input;
 use asyncfleo::runtime::Runtime;
+use asyncfleo::scenario::ScenarioRegistry;
 use asyncfleo::sim::{Event, EventKind, EventQueue};
 use asyncfleo::util::Rng;
+use std::io::Write;
 use std::rc::Rc;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let presets: Vec<String> = match args.iter().position(|a| a == "--presets") {
+        Some(i) => {
+            let value = args
+                .get(i + 1)
+                .unwrap_or_else(|| panic!("--presets needs a comma-separated preset list"));
+            value.split(',').map(str::to_string).collect()
+        }
+        None => {
+            vec!["paper-40".to_string(), "starlink-lite".to_string(), "sparse-iot".to_string()]
+        }
+    };
+    if args.iter().any(|a| a == "geometry") {
+        geometry_benches(&presets);
+        return;
+    }
+
     let cfg = BenchConfig::default();
     print_header("substrate micro-benchmarks");
 
@@ -115,11 +141,79 @@ fn main() {
         .report()
     );
 
+    geometry_benches(&presets);
+
     // PJRT artifact hot paths (needs `make artifacts`)
     match Runtime::new(Runtime::default_dir()) {
         Ok(rt) => pjrt_benches(Rc::new(rt)),
         Err(e) => println!("(skipping PJRT benches: {e})"),
     }
+}
+
+/// Per-preset `ContactPlan` build timings: the kept-as-specification
+/// reference scan vs the fast scanner at 1 and 4 threads, gated on
+/// window equality so a speedup can never be reported on diverged
+/// output. Emits `BENCH_geometry.json`.
+fn geometry_benches(preset_names: &[String]) {
+    print_header("geometry: ContactPlan build, reference vs fast scanner (24 h horizon)");
+    let reg = ScenarioRegistry::builtin();
+    let horizon_s = 86_400.0;
+    let plan_cfg = BenchConfig { warmup_iters: 1, sample_iters: 3, max_seconds: 240.0 };
+    let mut rows: Vec<String> = Vec::new();
+    for name in preset_names {
+        let sc = reg
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown preset {name}; known: {:?}", reg.names()));
+        let constellation = WalkerConstellation::from_shells(&sc.cfg.constellation.shells());
+        let sites = sc.cfg.placement.sites();
+        let min_elev = sc.cfg.min_elevation_deg;
+
+        // identity gate
+        let reference = ContactPlan::build_reference(&constellation, &sites, min_elev, horizon_s);
+        let fast = ContactPlan::build_with_threads(&constellation, &sites, min_elev, horizon_s, 1);
+        for site in 0..sites.len() {
+            for sat in 0..constellation.len() {
+                assert_eq!(
+                    reference.windows(site, sat),
+                    fast.windows(site, sat),
+                    "{name}: fast scanner diverged from reference (site {site} sat {sat})"
+                );
+            }
+        }
+
+        let r_ref = bench(&format!("{name}: reference scan"), &plan_cfg, || {
+            ContactPlan::build_reference(&constellation, &sites, min_elev, horizon_s)
+        });
+        println!("{}", r_ref.report());
+        let r_fast1 = bench(&format!("{name}: fast scan, 1 thread"), &plan_cfg, || {
+            ContactPlan::build_with_threads(&constellation, &sites, min_elev, horizon_s, 1)
+        });
+        println!("{}", r_fast1.report());
+        let r_fast4 = bench(&format!("{name}: fast scan, 4 threads"), &plan_cfg, || {
+            ContactPlan::build_with_threads(&constellation, &sites, min_elev, horizon_s, 4)
+        });
+        println!("{}", r_fast4.report());
+
+        let speedup1 = r_ref.stats.mean / r_fast1.stats.mean.max(1e-12);
+        let speedup4 = r_ref.stats.mean / r_fast4.stats.mean.max(1e-12);
+        println!("{name}: speedup {speedup1:.2}x (1 thread), {speedup4:.2}x (4 threads)");
+        rows.push(format!(
+            "    {{\"name\": \"{name}\", \"sats\": {}, \"sites\": {}, \"horizon_s\": {horizon_s:.1}, \"reference_ms\": {:.3}, \"fast_1thread_ms\": {:.3}, \"fast_4thread_ms\": {:.3}, \"speedup_1thread\": {speedup1:.3}, \"speedup_4thread\": {speedup4:.3}}}",
+            constellation.len(),
+            sites.len(),
+            r_ref.stats.mean * 1e3,
+            r_fast1.stats.mean * 1e3,
+            r_fast4.stats.mean * 1e3,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"geometry\",\n  \"scan_step_s\": {:.1},\n  \"presets\": [\n{}\n  ]\n}}\n",
+        ContactPlan::SCAN_STEP_S,
+        rows.join(",\n")
+    );
+    let mut f = std::fs::File::create("BENCH_geometry.json").expect("create BENCH_geometry.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_geometry.json");
+    println!("wrote BENCH_geometry.json");
 }
 
 fn pjrt_benches(rt: Rc<Runtime>) {

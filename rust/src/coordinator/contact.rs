@@ -4,10 +4,73 @@
 //! The PS knows each satellite's TLE (paper Sec. V-A) and can predict
 //! visits; pre-computing the windows once keeps the event loop free of
 //! trigonometry (perf: the coordinator must never be the bottleneck).
+//!
+//! # The fast scanner (PR 4)
+//!
+//! [`ContactPlan::build`] used to re-propagate the whole constellation
+//! per (site, sat) pair over the full horizon — ~8 M predicate calls on
+//! a `starlink-lite` world, each paying two rotation matrices and fresh
+//! site trig, on one thread. The production path now stacks four
+//! optimizations, all of them **bit-identity preserving** (the naive
+//! per-pair sweep is kept as [`ContactPlan::build_reference`], and
+//! `tests/contact_equivalence.rs` asserts bitwise-equal windows on
+//! every scenario preset):
+//!
+//! 1. **Plane-basis propagation** — satellite positions evaluate
+//!    through the constellation's cached [`PlaneBasis`] values (one
+//!    sin/cos pair + multiply-adds per call instead of a fresh
+//!    `rot_x`+`rot_z` chain).
+//! 2. **Time-major sharing** — each site's position is computed once
+//!    per grid step into a shared table (instead of once per
+//!    (pair, step)), and each satellite's position once per step across
+//!    all its site pairs; per grid step the scan does O(sites + sats)
+//!    position work, not O(sites × sats).
+//! 3. **Provable interval skipping** — see below: whole grid intervals
+//!    where no visibility flip can occur evaluate *nothing*; the
+//!    remaining steps sample the exact same grid points and bisection
+//!    brackets as the reference.
+//! 4. **Parallel build** — per-satellite scan rows fan out across a
+//!    `std::thread::scope` pool ([`worker_count`] governs the pool size
+//!    here and in the sweep executor), each row writing its result slot
+//!    by index, so the plan is deterministic — and bit-identical —
+//!    regardless of thread count.
+//!
+//! # Why interval skipping is safe (the rate bound)
+//!
+//! For a site at geocentric radius `a` and a circular-orbit satellite
+//! at radius `b > a`, elevation is a function of the central angle `γ`
+//! between their direction vectors with derivative
+//! `de/dγ = −b(b − a·cos γ) / d²` where `d² = a² + b² − 2ab·cos γ` is
+//! the squared slant range. `|de/dγ|` is increasing in `cos γ`
+//! (d/d(cos γ) ∝ a(b² − a²) > 0), so it is maximized overhead (γ = 0)
+//! at `b/(b − a)`. The direction vectors themselves rotate at fixed
+//! angular speeds — the satellite's at its mean motion `n`, the site's
+//! at `ω_E·cos(lat) ≤ ω_E` — and the angle between two unit vectors
+//! changes no faster than the sum of their angular speeds. Hence
+//!
+//! ```text
+//! |de/dt| ≤ (n + ω_E) · b/(b − a)   =: rate(site, sat)
+//! ```
+//!
+//! If a sample at grid time `t_i` shows elevation `e_i`, a visibility
+//! flip (crossing `eff_min`) is impossible before
+//! `t_i + |e_i − eff_min| / rate`. Every grid point strictly inside
+//! that window provably carries the same visibility value, so the
+//! scanner jumps straight to the first grid index at or beyond it
+//! ([`SKIP_SAFETY`] shaves 0.1 % off the window to absorb the
+//! floating-point rounding of the bound arithmetic itself). When a flip
+//! *is* detected at grid index `j`, the previous grid point `j − 1` is
+//! by construction inside some earlier sample's proven-constant window,
+//! so the bisection bracket `[t_{j−1}, t_j]` — and therefore the
+//! refined edge — is exactly the reference scanner's.
 
 use crate::orbit::{
-    contact_windows, elevation_deg, ContactWindow, GeodeticSite, WalkerConstellation,
+    bisect_edge, elevation_deg, scan_grid, ContactWindow, GeodeticSite, PlaneBasis,
+    SitePropagator, WalkerConstellation, EARTH_RADIUS_KM, EARTH_ROTATION_RAD_S,
 };
+use crate::util::Vec3;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Contact windows for all (satellite, site) pairs over `[0, horizon]`.
 pub struct ContactPlan {
@@ -17,10 +80,236 @@ pub struct ContactPlan {
 }
 
 /// Sampling step for window extraction (edges refined by bisection).
+/// Public as [`ContactPlan::SCAN_STEP_S`] so bench artifacts report the
+/// actual scan resolution instead of duplicating the number.
 const SCAN_STEP_S: f64 = 30.0;
 
+/// Safety margin on the provable skip window: strictly conservative
+/// against the (at most a-few-ulp) floating-point rounding of the
+/// bound arithmetic, while giving up a negligible amount of skipping.
+const SKIP_SAFETY: f64 = 0.999;
+
+/// Worker-thread count for `n_units` independent units of work: the
+/// requested count clamped to `[1, n_units]`. One policy shared by the
+/// parallel plan builder (per-satellite rows) and the sweep executor
+/// (`experiments::executor::effective_jobs`, per-cell grid).
+pub fn worker_count(requested: usize, n_units: usize) -> usize {
+    requested.clamp(1, n_units.max(1))
+}
+
+/// Provable bound on |d(elevation)/dt| for one (site, satellite) pair,
+/// rad/s — the module-docs rate bound `(n + ω_E) · b/(b − a)`.
+fn elevation_rate_bound_rad_s(site: &GeodeticSite, basis: &PlaneBasis) -> f64 {
+    let a = EARTH_RADIUS_KM + site.alt_km;
+    let b = basis.radius_km();
+    assert!(b > a, "rate bound needs the satellite above the site ({b} km vs {a} km)");
+    (basis.mean_motion_rad_s() + EARTH_ROTATION_RAD_S) * b / (b - a)
+}
+
+/// First grid index after `i` at which the pair must actually be
+/// sampled: the elevation deficit from the visibility threshold closes
+/// no faster than `rate_rad_s`, so every grid point strictly inside the
+/// deficit/rate window provably keeps the current visibility value.
+fn next_check_index(
+    i: usize,
+    elev_deg: f64,
+    eff_min_deg: f64,
+    rate_rad_s: f64,
+    step_s: f64,
+) -> usize {
+    let deficit_rad = (elev_deg - eff_min_deg).abs().to_radians();
+    let dt = SKIP_SAFETY * deficit_rad / rate_rad_s;
+    i + ((dt / step_s).ceil() as usize).max(1)
+}
+
+/// Per-(site, sat) scan state of the skipping scanner.
+struct PairScan {
+    prev_v: bool,
+    start: Option<f64>,
+    windows: Vec<ContactWindow>,
+    /// Earliest grid index at which a visibility flip is possible.
+    next_check: usize,
+}
+
 impl ContactPlan {
+    /// The grid resolution every plan is scanned at, seconds.
+    pub const SCAN_STEP_S: f64 = SCAN_STEP_S;
+
+    /// Build the plan with the fast scanner on an automatically sized
+    /// worker pool (available parallelism, clamped to the satellite
+    /// count). The result is bit-identical at any thread count, so the
+    /// sweep executor's byte-equality contract is unaffected.
     pub fn build(
+        constellation: &WalkerConstellation,
+        sites: &[GeodeticSite],
+        min_elev_deg: f64,
+        horizon_s: f64,
+    ) -> Self {
+        let requested = std::thread::available_parallelism().map_or(1, |n| n.get());
+        Self::build_with_threads(
+            constellation,
+            sites,
+            min_elev_deg,
+            horizon_s,
+            worker_count(requested, constellation.len()),
+        )
+    }
+
+    /// Build the plan with the fast scanner on exactly `jobs` worker
+    /// threads (1 = scan on the calling thread). Windows are
+    /// bit-identical to [`Self::build_reference`] regardless of `jobs`
+    /// (asserted by `tests/contact_equivalence.rs`).
+    pub fn build_with_threads(
+        constellation: &WalkerConstellation,
+        sites: &[GeodeticSite],
+        min_elev_deg: f64,
+        horizon_s: f64,
+        jobs: usize,
+    ) -> Self {
+        let grid = scan_grid(horizon_s, SCAN_STEP_S);
+        let n_sats = constellation.len();
+        let n_sites = sites.len();
+        let site_props: Vec<SitePropagator> = sites.iter().map(SitePropagator::new).collect();
+        // time-major site table: every site position computed once per
+        // grid step, shared by all satellite rows (and worker threads)
+        let site_grids: Vec<Vec<Vec3>> = site_props
+            .iter()
+            .map(|p| grid.iter().map(|&t| p.position_at(t)).collect())
+            .collect();
+        // HAPs gain horizon dip: theta_min is measured from the
+        // apparent horizon (the paper's "slightly better visibility"
+        // of elevated platforms).
+        let eff_min: Vec<f64> =
+            sites.iter().map(|s| s.effective_min_elevation_deg(min_elev_deg)).collect();
+
+        // One satellite's scan row: all its site pairs swept together
+        // over the grid, so its position is computed at most once per
+        // step — and not at all on steps every pair provably skips.
+        let scan_sat = |sat: usize| -> Vec<Vec<ContactWindow>> {
+            let basis = constellation.propagator(sat);
+            let rates: Vec<f64> =
+                sites.iter().map(|s| elevation_rate_bound_rad_s(s, basis)).collect();
+            let sat0 = basis.position_at(grid[0]);
+            let mut pairs: Vec<PairScan> = (0..n_sites)
+                .map(|s| {
+                    let e = elevation_deg(site_grids[s][0], sat0);
+                    let v = e >= eff_min[s];
+                    PairScan {
+                        prev_v: v,
+                        start: if v { Some(0.0) } else { None },
+                        windows: Vec::new(),
+                        next_check: next_check_index(0, e, eff_min[s], rates[s], SCAN_STEP_S),
+                    }
+                })
+                .collect();
+            let mut i = 1;
+            while i < grid.len() {
+                // jump straight past steps every pair provably skips
+                let due = pairs.iter().map(|p| p.next_check).min().unwrap_or(usize::MAX);
+                if due > i {
+                    if due >= grid.len() {
+                        break;
+                    }
+                    i = due;
+                    continue;
+                }
+                let t = grid[i];
+                let mut sat_pos: Option<Vec3> = None;
+                for s in 0..n_sites {
+                    if pairs[s].next_check > i {
+                        continue;
+                    }
+                    let sp = *sat_pos.get_or_insert_with(|| basis.position_at(t));
+                    let e = elevation_deg(site_grids[s][i], sp);
+                    let v = e >= eff_min[s];
+                    let pair = &mut pairs[s];
+                    if v != pair.prev_v {
+                        // grid[i-1] provably carries prev_v (it is
+                        // inside the window that let us skip to i, or
+                        // it was sampled), so this is the reference
+                        // scanner's bracket — and the same edge
+                        let edge = bisect_edge(
+                            &mut |tt: f64| {
+                                elevation_deg(
+                                    site_props[s].position_at(tt),
+                                    basis.position_at(tt),
+                                ) >= eff_min[s]
+                            },
+                            grid[i - 1],
+                            t,
+                            pair.prev_v,
+                        );
+                        if v {
+                            pair.start = Some(edge);
+                        } else if let Some(ws) = pair.start.take() {
+                            pair.windows.push(ContactWindow { start_s: ws, end_s: edge });
+                        }
+                    }
+                    pair.prev_v = v;
+                    pair.next_check = next_check_index(i, e, eff_min[s], rates[s], SCAN_STEP_S);
+                }
+                i += 1;
+            }
+            pairs
+                .into_iter()
+                .map(|mut pair| {
+                    if let Some(ws) = pair.start.take() {
+                        pair.windows.push(ContactWindow { start_s: ws, end_s: horizon_s });
+                    }
+                    pair.windows
+                })
+                .collect()
+        };
+
+        let per_sat: Vec<Vec<Vec<ContactWindow>>> = if jobs <= 1 {
+            (0..n_sats).map(scan_sat).collect()
+        } else {
+            // fan satellite rows across a scoped pool; every row lands
+            // in its index-addressed slot, so the assembled plan is
+            // independent of scheduling
+            let next = AtomicUsize::new(0);
+            let slots: Mutex<Vec<Option<Vec<Vec<ContactWindow>>>>> =
+                Mutex::new((0..n_sats).map(|_| None).collect());
+            std::thread::scope(|scope| {
+                for _ in 0..jobs {
+                    scope.spawn(|| loop {
+                        let sat = next.fetch_add(1, Ordering::Relaxed);
+                        if sat >= n_sats {
+                            break;
+                        }
+                        let row = scan_sat(sat);
+                        slots.lock().unwrap()[sat] = Some(row);
+                    });
+                }
+            });
+            slots
+                .into_inner()
+                .unwrap()
+                .into_iter()
+                .map(|row| row.expect("scanned satellite row"))
+                .collect()
+        };
+
+        // transpose the per-satellite rows into the windows[site][sat]
+        // layout the query API serves
+        let mut windows: Vec<Vec<Vec<ContactWindow>>> =
+            (0..n_sites).map(|_| Vec::with_capacity(n_sats)).collect();
+        for row in per_sat {
+            debug_assert_eq!(row.len(), n_sites);
+            for (site, w) in row.into_iter().enumerate() {
+                windows[site].push(w);
+            }
+        }
+        Self::finish(windows, horizon_s)
+    }
+
+    /// The naive pre-PR-4 scanner, kept as the executable
+    /// specification: one dense [`crate::orbit::contact_windows`] sweep
+    /// per (site, sat) pair, no sharing, no skipping, single thread.
+    /// `tests/contact_equivalence.rs` asserts the fast scanner matches
+    /// it bit for bit on every scenario preset, and
+    /// `benches/bench_micro.rs` times the two against each other.
+    pub fn build_reference(
         constellation: &WalkerConstellation,
         sites: &[GeodeticSite],
         min_elev_deg: f64,
@@ -29,13 +318,10 @@ impl ContactPlan {
         let windows = sites
             .iter()
             .map(|site| {
-                // HAPs gain horizon dip: theta_min is measured from the
-                // apparent horizon (the paper's "slightly better
-                // visibility" of elevated platforms).
                 let eff_min = site.effective_min_elevation_deg(min_elev_deg);
                 (0..constellation.len())
                     .map(|sat| {
-                        contact_windows(
+                        crate::orbit::contact_windows(
                             |t| {
                                 elevation_deg(
                                     site.position_eci(t),
@@ -49,6 +335,11 @@ impl ContactPlan {
                     .collect()
             })
             .collect();
+        Self::finish(windows, horizon_s)
+    }
+
+    /// Assemble the plan and assert the finite-window invariant.
+    fn finish(windows: Vec<Vec<Vec<ContactWindow>>>, horizon_s: f64) -> Self {
         let plan = ContactPlan { windows, horizon_s };
         // Window times are finite by construction (finite horizon/step,
         // bisection only averages); assert it once here so every
@@ -198,6 +489,44 @@ mod tests {
         for sat in 0..40 {
             let f = p.visibility_fraction(0, sat);
             assert!((0.0..0.6).contains(&f), "sat {sat} fraction {f}");
+        }
+    }
+
+    #[test]
+    fn fast_scan_matches_reference_on_paper_world() {
+        // the full per-preset bitwise sweep lives in
+        // tests/contact_equivalence.rs; this in-module smoke keeps the
+        // contract close to the implementation
+        let c = WalkerConstellation::paper();
+        let sites = [GeodeticSite::rolla_hap(), GeodeticSite::portland_hap()];
+        let fast = ContactPlan::build_with_threads(&c, &sites, 10.0, 43_200.0, 1);
+        let reference = ContactPlan::build_reference(&c, &sites, 10.0, 43_200.0);
+        for site in 0..2 {
+            for sat in 0..c.len() {
+                let (a, b) = (fast.windows(site, sat), reference.windows(site, sat));
+                assert_eq!(a.len(), b.len(), "site {site} sat {sat}");
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.start_s.to_bits(), y.start_s.to_bits(), "site {site} sat {sat}");
+                    assert_eq!(x.end_s.to_bits(), y.end_s.to_bits(), "site {site} sat {sat}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_clamps() {
+        assert_eq!(worker_count(0, 10), 1);
+        assert_eq!(worker_count(4, 10), 4);
+        assert_eq!(worker_count(16, 3), 3);
+        assert_eq!(worker_count(2, 0), 1);
+    }
+
+    #[test]
+    fn skip_never_returns_current_index() {
+        // progress guarantee: the scanner always advances
+        for (e, eff) in [(45.0, 10.0), (10.0, 10.0), (-80.0, 5.0)] {
+            let rate = 3.8e-3;
+            assert!(next_check_index(7, e, eff, rate, SCAN_STEP_S) > 7);
         }
     }
 }

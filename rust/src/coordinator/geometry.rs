@@ -3,15 +3,19 @@
 //! constellation, PS sites, the pre-computed [`ContactPlan`] and the RF
 //! link parameters.
 //!
-//! Building a [`ContactPlan`] re-propagates the whole constellation and
-//! scans the full horizon (30 s steps + bisection), which dominates
-//! `SimEnv` construction. Every cell of an experiment sweep used to pay
-//! that cost; a Table II run pays it 8×, a resilience sweep dozens of
-//! times — all for identical geometry. [`Geometry::shared`] builds each
-//! unique geometry exactly once per process and hands out `Arc`s, so
-//! sweep cells (including the parallel executor's worker threads) share
-//! one immutable instance. Per-run mutable state lives in
-//! [`super::env::RunState`]; `Geometry` is strictly `Send + Sync`.
+//! Building a [`ContactPlan`] propagates the whole constellation over
+//! the full horizon (30 s steps + bisection), which dominates `SimEnv`
+//! construction. Two layers keep that cheap: [`Geometry::shared`]
+//! builds each unique geometry exactly once per process and hands out
+//! `Arc`s, so sweep cells (including the parallel executor's worker
+//! threads) share one immutable instance; and the one build that does
+//! run goes through the fast contact scanner (plane-basis propagation,
+//! time-major position sharing, provable interval skipping, parallel
+//! per-satellite rows — see `contact`'s module docs), which is
+//! bit-identical to the naive reference sweep at any thread count, so
+//! the cache key → plan mapping stays deterministic. Per-run mutable
+//! state lives in [`super::env::RunState`]; `Geometry` is strictly
+//! `Send + Sync`.
 
 use super::contact::ContactPlan;
 use crate::comm::LinkParams;

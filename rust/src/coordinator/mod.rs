@@ -12,6 +12,6 @@ pub mod contact;
 pub mod env;
 pub mod geometry;
 
-pub use contact::ContactPlan;
+pub use contact::{worker_count, ContactPlan};
 pub use env::{RunResult, RunState, SimEnv};
 pub use geometry::Geometry;

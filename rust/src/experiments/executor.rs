@@ -101,12 +101,14 @@ impl Cell {
 }
 
 /// The worker count actually used for a grid: `--jobs`, clamped to the
-/// grid size, and forced to 1 in PJRT mode (see module docs).
+/// grid size (one policy with the parallel contact-plan builder —
+/// [`crate::coordinator::worker_count`]), and forced to 1 in PJRT mode
+/// (see module docs).
 pub fn effective_jobs(opts: &ExpOptions, n_cells: usize) -> usize {
     if !opts.surrogate {
         return 1;
     }
-    opts.jobs.clamp(1, n_cells.max(1))
+    crate::coordinator::worker_count(opts.jobs, n_cells)
 }
 
 /// The deterministic longest-first pick order: indices sorted by

@@ -10,7 +10,11 @@
 //! * [`orbit`] — Keplerian constellation propagation, multi-shell
 //!   Walker builder (delta and star patterns, per-shell altitude /
 //!   inclination / planes / phasing with globally unique satellite
-//!   ids), ground/HAP sites, visibility and contact windows;
+//!   ids), ground/HAP sites, visibility and contact windows. Positions
+//!   evaluate through precomputed per-satellite `PlaneBasis` / per-site
+//!   `SitePropagator` values (time-independent trigonometry hoisted to
+//!   construction, bit-identical to the original rotation-chain
+//!   formulas — pinned by bitwise tests);
 //! * [`comm`] — the paper's RF link model (Eqs. 5–9): FSPL, SNR,
 //!   Shannon rate, delay composition;
 //! * [`topology`] — the ring-of-stars SAT↔HAP topology (Sec. IV-A);
@@ -37,7 +41,13 @@
 //!   geometry-relevant config subset, `coordinator::env::RunState`
 //!   holds what a single run mutates (backend, RNG, curve, transfer
 //!   counter, fault counters), and `SimEnv` is the thin facade the
-//!   strategies program against;
+//!   strategies program against. The `ContactPlan` inside a geometry
+//!   is built by the fast scanner (`coordinator::contact`): time-major
+//!   position sharing, a provable elevation-rate bound that skips whole
+//!   grid intervals, and per-satellite rows fanned across a scoped
+//!   thread pool — bit-identical to the kept-as-reference naive sweep
+//!   at any thread count (`tests/contact_equivalence.rs` asserts it on
+//!   every preset; `BENCH_geometry.json` tracks the speedup);
 //! * [`scenario`] — declarative experiment worlds: a named preset or a
 //!   TOML file (with `[shellN]` sections for multi-shell
 //!   constellations) becomes a complete, reproducible

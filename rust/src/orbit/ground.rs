@@ -74,11 +74,52 @@ impl GeodeticSite {
     /// The Earth rotation angle is `theta = omega * t` (we set GMST(0)=0;
     /// an arbitrary offset only shifts the whole contact pattern, which
     /// the paper's 3-day horizon averages out).
+    ///
+    /// One-shot convenience over [`SitePropagator`], the canonical
+    /// formula; hot loops (the contact scanner) hoist one propagator
+    /// per site instead of re-deriving the latitude trigonometry every
+    /// call.
     pub fn position_eci(&self, t: f64) -> Vec3 {
-        let lat = self.lat_deg.to_radians();
-        let lon = self.lon_deg.to_radians() + EARTH_ROTATION_RAD_S * t;
-        let r = EARTH_RADIUS_KM + self.alt_km;
-        Vec3::new(r * lat.cos() * lon.cos(), r * lat.cos() * lon.sin(), r * lat.sin())
+        SitePropagator::new(self).position_at(t)
+    }
+}
+
+/// A [`GeodeticSite`]'s position formula with the time-independent
+/// parts hoisted: latitude trigonometry and the t = 0 longitude are
+/// computed once, so [`Self::position_at`] is one `cos`/`sin` pair of
+/// the rotated longitude plus two multiplies.
+///
+/// Bit-identity contract: the hoisted factors are exactly the
+/// subexpressions of the original formula (`(r·cos lat)·cos lon` is how
+/// `r * lat.cos() * lon.cos()` associates), so positions are
+/// bit-for-bit unchanged — pinned by the `matches_direct_formula_bitwise`
+/// test below.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SitePropagator {
+    /// r · cos(lat): radius of the site's latitude circle, km.
+    r_cos_lat: f64,
+    /// r · sin(lat): the z coordinate, constant under Earth spin.
+    z_km: f64,
+    /// Longitude at t = 0, radians.
+    lon0_rad: f64,
+}
+
+impl SitePropagator {
+    pub fn new(site: &GeodeticSite) -> Self {
+        let lat = site.lat_deg.to_radians();
+        let r = EARTH_RADIUS_KM + site.alt_km;
+        SitePropagator {
+            r_cos_lat: r * lat.cos(),
+            z_km: r * lat.sin(),
+            lon0_rad: site.lon_deg.to_radians(),
+        }
+    }
+
+    /// Site position in ECI at simulated time `t`, km.
+    #[inline]
+    pub fn position_at(&self, t: f64) -> Vec3 {
+        let lon = self.lon0_rad + EARTH_ROTATION_RAD_S * t;
+        Vec3::new(self.r_cos_lat * lon.cos(), self.r_cos_lat * lon.sin(), self.z_km)
     }
 }
 
@@ -130,6 +171,33 @@ mod tests {
         assert!(
             GeodeticSite::rolla_hap().effective_min_elevation_deg(10.0) < 10.0
         );
+    }
+
+    #[test]
+    fn matches_direct_formula_bitwise() {
+        // the hoisted propagator is the canonical formula; pin it
+        // against the direct expression, bit for bit
+        for site in [
+            GeodeticSite::rolla_gs(),
+            GeodeticSite::rolla_hap(),
+            GeodeticSite::portland_hap(),
+            GeodeticSite::north_pole_gs(),
+            GeodeticSite::quito_hap(),
+        ] {
+            let prop = SitePropagator::new(&site);
+            for i in 0..200 {
+                let t = i as f64 * 431.6875 + 0.125;
+                let lat = site.lat_deg.to_radians();
+                let lon = site.lon_deg.to_radians() + EARTH_ROTATION_RAD_S * t;
+                let r = EARTH_RADIUS_KM + site.alt_km;
+                let direct =
+                    Vec3::new(r * lat.cos() * lon.cos(), r * lat.cos() * lon.sin(), r * lat.sin());
+                let fast = prop.position_at(t);
+                assert_eq!(direct.x.to_bits(), fast.x.to_bits());
+                assert_eq!(direct.y.to_bits(), fast.y.to_bits());
+                assert_eq!(direct.z.to_bits(), fast.z.to_bits());
+            }
+        }
     }
 
     #[test]

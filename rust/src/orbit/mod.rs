@@ -11,6 +11,15 @@
 //! TLE propagation over a simulated Walker-delta constellation differs
 //! only by perturbation noise that does not change the contact-pattern
 //! statistics (DESIGN.md §1).
+//!
+//! Hot-path layout (PR 4): positions evaluate through precomputed
+//! per-satellite [`PlaneBasis`] and per-site [`SitePropagator`] values
+//! — all time-independent trigonometry hoisted to construction,
+//! bit-identical to the original rotation-chain formulas (pinned by
+//! bitwise tests in `propagation`/`ground`). [`scan_grid`] defines the
+//! exact sample grid shared by the reference scanner
+//! ([`contact_windows`]) and the fast plan scanner in
+//! `coordinator::contact`.
 
 pub mod doppler;
 pub mod elements;
@@ -20,10 +29,13 @@ pub mod visibility;
 pub mod walker;
 
 pub use doppler::{doppler_shift_hz, sat_sat_doppler_hz};
-pub use elements::{OrbitalElements, EARTH_RADIUS_KM, MU_EARTH};
-pub use ground::{GeodeticSite, SiteKind};
-pub use propagation::satellite_position_eci;
-pub use visibility::{contact_windows, elevation_deg, sat_sat_los, ContactWindow};
+pub use elements::{OrbitalElements, EARTH_RADIUS_KM, EARTH_ROTATION_RAD_S, MU_EARTH};
+pub use ground::{GeodeticSite, SiteKind, SitePropagator};
+pub use propagation::{satellite_position_eci, satellite_velocity_eci, PlaneBasis};
+pub use visibility::{contact_windows, elevation_deg, sat_sat_los, scan_grid, ContactWindow};
+// the fast scanner (coordinator::contact) refines the same brackets
+// with the same bisection as the reference scanner
+pub(crate) use visibility::bisect_edge;
 pub use walker::{uniform_plane_of, Satellite, ShellSpec, WalkerConstellation, WalkerPattern};
 
 // All geometry types are shared across the parallel sweep executor's
@@ -38,4 +50,6 @@ const _: () = {
     assert_send_sync::<OrbitalElements>();
     assert_send_sync::<GeodeticSite>();
     assert_send_sync::<ContactWindow>();
+    assert_send_sync::<PlaneBasis>();
+    assert_send_sync::<SitePropagator>();
 };

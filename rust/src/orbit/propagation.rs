@@ -1,33 +1,125 @@
 //! Circular two-body propagation: elements + time -> ECI position.
+//!
+//! The canonical position formula is [`PlaneBasis`]: the per-satellite
+//! orbital-plane basis with all time-independent trigonometry hoisted
+//! out. Constructing it pays the two rotation `sin_cos` calls once;
+//! evaluating a position afterwards is one `cos` + one `sin` of the
+//! argument of latitude plus a handful of multiply-adds. The free
+//! functions below delegate to it, and `WalkerConstellation` caches one
+//! basis per satellite at build time — the contact-plan scanner's hot
+//! path (`coordinator::contact`) therefore never recomputes plane
+//! trigonometry.
+//!
+//! Bit-identity contract: `PlaneBasis::position_at` performs, operation
+//! for operation, the same arithmetic as the original
+//! `in_plane.rot_x(inc).rot_z(raan)` rotation chain (the hoisted
+//! factors are kept as the rotations' own `sin_cos` values, never
+//! re-associated into combined products), so positions — and every
+//! contact window derived from them — are bit-for-bit unchanged. The
+//! `matches_rotation_chain_bitwise` test below pins this down against
+//! the literal rotation chain.
 
 use super::elements::OrbitalElements;
 use crate::util::Vec3;
 
+/// Precomputed orthonormal in-plane basis of one satellite's orbit,
+/// kept in factored form: `cos`/`sin` of RAAN and inclination (the
+/// basis vectors are `p = rot_z(raan)·x̂`, `q = rot_z(raan)·rot_x(inc)·ŷ`
+/// — storing their products instead of the factors would re-associate
+/// the arithmetic and break bit-identity with the rotation chain).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlaneBasis {
+    /// Orbit radius (semi-major axis), km.
+    r_km: f64,
+    /// Orbital speed, km/s (circular orbit).
+    v_km_s: f64,
+    /// Mean motion, rad/s.
+    n_rad_s: f64,
+    /// Argument of latitude at t = 0, radians.
+    phase_rad: f64,
+    cos_raan: f64,
+    sin_raan: f64,
+    cos_inc: f64,
+    sin_inc: f64,
+}
+
+impl PlaneBasis {
+    pub fn new(e: &OrbitalElements) -> Self {
+        let (sin_raan, cos_raan) = e.raan_rad.sin_cos();
+        let (sin_inc, cos_inc) = e.inclination_rad.sin_cos();
+        PlaneBasis {
+            r_km: e.semi_major_axis_km(),
+            v_km_s: e.velocity_km_s(),
+            n_rad_s: e.mean_motion_rad_s(),
+            phase_rad: e.phase_rad,
+            cos_raan,
+            sin_raan,
+            cos_inc,
+            sin_inc,
+        }
+    }
+
+    /// Orbit radius (semi-major axis), km.
+    pub fn radius_km(&self) -> f64 {
+        self.r_km
+    }
+
+    /// Mean motion, rad/s — the angular rate of the satellite's
+    /// direction vector (the contact scanner's skip bound uses this).
+    pub fn mean_motion_rad_s(&self) -> f64 {
+        self.n_rad_s
+    }
+
+    /// Rotate an in-plane vector `(x, y, 0)` into ECI. Op-for-op the
+    /// original `rot_x(inc)` + `rot_z(raan)` chain with the per-call
+    /// trigonometry hoisted into the constructor (the dropped
+    /// `± sin·0.0` terms of the z = 0 input affect at most the sign of
+    /// a zero, which no downstream comparison can observe).
+    #[inline]
+    fn to_eci(&self, x: f64, y: f64) -> Vec3 {
+        let y1 = self.cos_inc * y;
+        Vec3::new(
+            self.cos_raan * x - self.sin_raan * y1,
+            self.sin_raan * x + self.cos_raan * y1,
+            self.sin_inc * y,
+        )
+    }
+
+    /// Position in ECI at simulated time `t` seconds, km.
+    ///
+    /// For a circular orbit the argument of latitude advances
+    /// uniformly, `u(t) = phase + n·t`.
+    #[inline]
+    pub fn position_at(&self, t: f64) -> Vec3 {
+        let u = self.phase_rad + self.n_rad_s * t;
+        self.to_eci(self.r_km * u.cos(), self.r_km * u.sin())
+    }
+
+    /// Velocity in ECI at time `t`, km/s (tangential, circular orbit).
+    #[inline]
+    pub fn velocity_at(&self, t: f64) -> Vec3 {
+        let u = self.phase_rad + self.n_rad_s * t;
+        self.to_eci(-self.v_km_s * u.sin(), self.v_km_s * u.cos())
+    }
+}
+
 /// Position of a satellite in the Earth-centered inertial frame at
-/// simulated time `t` seconds.
-///
-/// For a circular orbit the argument of latitude advances uniformly:
-/// `u(t) = phase + n * t`; the in-plane position is then rotated by the
-/// inclination about X and the RAAN about Z.
+/// simulated time `t` seconds (one-shot convenience; hot paths cache a
+/// [`PlaneBasis`] instead).
 pub fn satellite_position_eci(e: &OrbitalElements, t: f64) -> Vec3 {
-    let u = e.phase_rad + e.mean_motion_rad_s() * t;
-    let r = e.semi_major_axis_km();
-    let in_plane = Vec3::new(r * u.cos(), r * u.sin(), 0.0);
-    in_plane.rot_x(e.inclination_rad).rot_z(e.raan_rad)
+    PlaneBasis::new(e).position_at(t)
 }
 
 /// Velocity vector in ECI, km/s (tangential for circular orbits).
 pub fn satellite_velocity_eci(e: &OrbitalElements, t: f64) -> Vec3 {
-    let u = e.phase_rad + e.mean_motion_rad_s() * t;
-    let v = e.velocity_km_s();
-    let in_plane = Vec3::new(-v * u.sin(), v * u.cos(), 0.0);
-    in_plane.rot_x(e.inclination_rad).rot_z(e.raan_rad)
+    PlaneBasis::new(e).velocity_at(t)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::orbit::elements::{EARTH_RADIUS_KM, MU_EARTH};
+    use crate::util::Rng;
 
     fn e() -> OrbitalElements {
         OrbitalElements {
@@ -92,6 +184,45 @@ mod tests {
         for i in 0..200 {
             let p = satellite_position_eci(&e, i as f64 * 61.3);
             assert!(p.z.abs() <= bound);
+        }
+    }
+
+    /// The bit-identity contract of the module docs: the cached basis
+    /// reproduces the literal rotation chain exactly, bit for bit, over
+    /// random elements and times. Every contact window in the system
+    /// rests on this equality.
+    #[test]
+    fn matches_rotation_chain_bitwise() {
+        let mut rng = Rng::new(0x9E0);
+        for _ in 0..500 {
+            let e = OrbitalElements {
+                altitude_km: rng.range_f64(300.0, 2500.0),
+                inclination_rad: rng.range_f64(0.01, 3.1),
+                raan_rad: rng.range_f64(0.0, 6.28),
+                phase_rad: rng.range_f64(0.0, 6.28),
+            };
+            let basis = PlaneBasis::new(&e);
+            for k in 0..8 {
+                let t = k as f64 * 17_351.75 + rng.range_f64(0.0, 1e6);
+                // the pre-basis formula, verbatim
+                let u = e.phase_rad + e.mean_motion_rad_s() * t;
+                let r = e.semi_major_axis_km();
+                let chain = Vec3::new(r * u.cos(), r * u.sin(), 0.0)
+                    .rot_x(e.inclination_rad)
+                    .rot_z(e.raan_rad);
+                let fast = basis.position_at(t);
+                assert_eq!(chain.x.to_bits(), fast.x.to_bits(), "x at t={t}");
+                assert_eq!(chain.y.to_bits(), fast.y.to_bits(), "y at t={t}");
+                assert_eq!(chain.z.to_bits(), fast.z.to_bits(), "z at t={t}");
+                let v = e.velocity_km_s();
+                let vchain = Vec3::new(-v * u.sin(), v * u.cos(), 0.0)
+                    .rot_x(e.inclination_rad)
+                    .rot_z(e.raan_rad);
+                let vfast = basis.velocity_at(t);
+                assert_eq!(vchain.x.to_bits(), vfast.x.to_bits(), "vx at t={t}");
+                assert_eq!(vchain.y.to_bits(), vfast.y.to_bits(), "vy at t={t}");
+                assert_eq!(vchain.z.to_bits(), vfast.z.to_bits(), "vz at t={t}");
+            }
         }
     }
 }

@@ -53,9 +53,48 @@ impl ContactWindow {
     }
 }
 
+/// The scanner's shared sample grid over `[0, horizon_s]`: `t_i = i ·
+/// step_s`, derived from the integer step index — one correctly-rounded
+/// multiply per point, so the grid cannot drift the way an accumulated
+/// `t += step_s` does over 8 640+ steps (for the 30 s plan step every
+/// point is exactly representable, so old and new grids coincide). The
+/// final point is clamped to the horizon.
+///
+/// Both the reference scanner ([`contact_windows`]) and the fast plan
+/// scanner (`coordinator::contact`) sample exactly this grid; keeping
+/// it exact is what makes "the same grid point" well-defined across the
+/// two, which the interval-skipping equivalence argument relies on.
+pub fn scan_grid(horizon_s: f64, step_s: f64) -> Vec<f64> {
+    assert!(
+        step_s > 0.0 && horizon_s > 0.0 && step_s.is_finite() && horizon_s.is_finite(),
+        "contact scan needs finite positive horizon/step, got {horizon_s}/{step_s}"
+    );
+    let mut grid = Vec::with_capacity((horizon_s / step_s) as usize + 2);
+    grid.push(0.0);
+    let mut i: u64 = 1;
+    loop {
+        let t = i as f64 * step_s;
+        if t > horizon_s + step_s * 0.5 {
+            break;
+        }
+        let tc = t.min(horizon_s);
+        grid.push(tc);
+        if (tc - horizon_s).abs() < 1e-9 {
+            break;
+        }
+        i += 1;
+    }
+    grid
+}
+
 /// Extract contact windows of a time-dependent visibility predicate
-/// over `[0, horizon_s]`, sampling every `step_s` and refining each
-/// edge by bisection to ~1 s accuracy.
+/// over `[0, horizon_s]`, sampling the [`scan_grid`] points and
+/// refining each edge by bisection to ~1 s accuracy.
+///
+/// This is the *reference* scanner: a plain dense sweep of one
+/// predicate. `coordinator::contact` has the production fast path
+/// (time-major, interval-skipping, parallel) that is bit-identical to
+/// running this per (site, satellite) pair.
 ///
 /// Every window edge is guaranteed finite: the bounds are asserted
 /// finite here, and bisection only ever averages them. Downstream
@@ -66,18 +105,13 @@ pub fn contact_windows(
     horizon_s: f64,
     step_s: f64,
 ) -> Vec<ContactWindow> {
-    assert!(
-        step_s > 0.0 && horizon_s > 0.0 && step_s.is_finite() && horizon_s.is_finite(),
-        "contact scan needs finite positive horizon/step, got {horizon_s}/{step_s}"
-    );
+    let grid = scan_grid(horizon_s, step_s);
     let mut windows = Vec::new();
-    let mut prev_t = 0.0;
-    let mut prev_v = visible(0.0);
+    let mut prev_t = grid[0];
+    let mut prev_v = visible(grid[0]);
     let mut start = if prev_v { Some(0.0) } else { None };
 
-    let mut t = step_s;
-    while t <= horizon_s + step_s * 0.5 {
-        let tc = t.min(horizon_s);
+    for &tc in &grid[1..] {
         let v = visible(tc);
         if v != prev_v {
             let edge = bisect_edge(&mut visible, prev_t, tc, prev_v);
@@ -89,10 +123,6 @@ pub fn contact_windows(
         }
         prev_t = tc;
         prev_v = v;
-        if (tc - horizon_s).abs() < 1e-9 {
-            break;
-        }
-        t += step_s;
     }
     if let Some(s) = start {
         windows.push(ContactWindow { start_s: s, end_s: horizon_s });
@@ -100,8 +130,15 @@ pub fn contact_windows(
     windows
 }
 
-/// Bisection: predicate flips between lo (value `lo_v`) and hi.
-fn bisect_edge(visible: &mut impl FnMut(f64) -> bool, mut lo: f64, mut hi: f64, lo_v: bool) -> f64 {
+/// Bisection: predicate flips between lo (value `lo_v`) and hi. Shared
+/// with the fast scanner (`coordinator::contact`), which must refine
+/// the same brackets to the same edges.
+pub(crate) fn bisect_edge(
+    visible: &mut impl FnMut(f64) -> bool,
+    mut lo: f64,
+    mut hi: f64,
+    lo_v: bool,
+) -> f64 {
     for _ in 0..32 {
         if hi - lo < 1.0 {
             break;

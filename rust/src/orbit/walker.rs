@@ -12,6 +12,7 @@
 //! single 5×8 shell is the one-element special case.
 
 use super::elements::OrbitalElements;
+use super::propagation::PlaneBasis;
 use crate::util::Vec3;
 
 /// Which Walker pattern a shell follows.
@@ -152,6 +153,13 @@ pub struct WalkerConstellation {
     pub shells: Vec<ShellSpec>,
     /// Global plane table: contiguous id span per plane.
     planes: Vec<PlaneSpan>,
+    /// Cached per-satellite plane bases: the canonical (and fast)
+    /// position formula — all time-independent trigonometry hoisted to
+    /// construction, so [`Self::position`] is one `cos`/`sin` pair plus
+    /// a handful of plain multiplies and adds per call (deliberately
+    /// not `mul_add`: contraction would break bit-identity with the
+    /// original rotation chain).
+    propagators: Vec<PlaneBasis>,
     /// Total number of orbital planes across all shells.
     pub n_orbits: usize,
     /// Satellites per plane of the *first* shell (uniform for
@@ -220,10 +228,12 @@ impl WalkerConstellation {
         }
         let n_orbits = planes.len();
         let sats_per_orbit = shells[0].sats_per_orbit;
+        let propagators = satellites.iter().map(|s| PlaneBasis::new(&s.elements)).collect();
         WalkerConstellation {
             satellites,
             shells: shells.to_vec(),
             planes,
+            propagators,
             n_orbits,
             sats_per_orbit,
         }
@@ -264,9 +274,18 @@ impl WalkerConstellation {
         start..start + self.shells[shell].n_sats()
     }
 
-    /// Position of satellite `id` at time `t` (ECI, km).
+    /// Position of satellite `id` at time `t` (ECI, km), via the
+    /// cached plane basis (bit-identical to
+    /// [`super::propagation::satellite_position_eci`]).
     pub fn position(&self, id: usize, t: f64) -> Vec3 {
-        super::propagation::satellite_position_eci(&self.satellites[id].elements, t)
+        self.propagators[id].position_at(t)
+    }
+
+    /// The cached plane-basis propagator of satellite `id` (what
+    /// [`Self::position`] evaluates; the contact scanner holds these
+    /// directly in its hot loop).
+    pub fn propagator(&self, id: usize) -> &PlaneBasis {
+        &self.propagators[id]
     }
 
     /// Intra-orbit ring neighbours of a satellite: the two adjacent

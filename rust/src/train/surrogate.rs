@@ -110,7 +110,15 @@ impl Backend for SurrogateBackend {
         dispatches: usize,
     ) -> (ModelParams, f64) {
         let mix = &self.class_mix[sat];
-        let mut k: Vec<f64> = params.data.iter().map(|&v| v as f64).collect();
+        // stack buffer: this runs inside every cell's event loop, so
+        // the only allocation per call is the returned ModelParams
+        // loud in release too: a mis-sized model must fail fast, not
+        // train on a zero-filled tail (the old Vec path panicked here)
+        assert_eq!(params.data.len(), CLASSES, "surrogate params dim");
+        let mut k = [0.0f64; CLASSES];
+        for (kc, &v) in k.iter_mut().zip(&params.data) {
+            *kc = v as f64;
+        }
         for _ in 0..dispatches {
             for c in 0..CLASSES {
                 if mix[c] > 0.0 {
