@@ -1,0 +1,190 @@
+//! Run-loop benchmark: the event loop's hot paths — delay calls and
+//! whole per-scheme runs — measured on the cached-kinematics fast path
+//! vs the kept pre-cache reference (`SimEnv::set_reference_path` +
+//! `testkit::ReferenceSurrogate`), per scenario preset. Every speedup
+//! is equality-gated: the reference and fast runs must produce
+//! bit-identical delays / accuracy curves / transfer counts before a
+//! number is reported.
+//!
+//! Emits `BENCH_runloop.json` (delay-calls/sec fast vs reference, run
+//! wall-time per scheme, before/after speedups) so the perf trajectory
+//! of the run loop is tracked across PRs.
+//!
+//! Run: `cargo bench --offline --bench bench_runloop`
+//!      (`-- --presets paper-40,sparse-iot` selects presets; default is
+//!      paper-40 + the 1584-satellite starlink-phase1 stress world)
+
+use asyncfleo::bench::{bench, print_header, BenchConfig};
+use asyncfleo::config::ExperimentConfig;
+use asyncfleo::coordinator::{Geometry, RunResult, SimEnv};
+use asyncfleo::experiments::scenarios::SCENARIO_SCHEMES;
+use asyncfleo::fl::{make_strategy, Strategy};
+use asyncfleo::scenario::ScenarioRegistry;
+use asyncfleo::testkit::{assert_runs_identical, ReferenceSurrogate};
+use asyncfleo::train::SurrogateBackend;
+use std::io::Write;
+use std::time::Instant;
+
+/// Delay probes per timed micro-bench iteration.
+const DELAY_CALLS: usize = 20_000;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let presets: Vec<String> = match args.iter().position(|a| a == "--presets") {
+        Some(i) => {
+            let value = args
+                .get(i + 1)
+                .unwrap_or_else(|| panic!("--presets needs a comma-separated preset list"));
+            value.split(',').map(str::to_string).collect()
+        }
+        None => vec!["paper-40".to_string(), "starlink-phase1".to_string()],
+    };
+
+    let reg = ScenarioRegistry::builtin();
+    let mut rows: Vec<String> = Vec::new();
+    for name in &presets {
+        let sc = reg
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown preset {name}; known: {:?}", reg.names()));
+        let cfg = bench_cfg(sc.cfg.clone());
+        // prewarm the shared geometry so run timings measure the event
+        // loop, not the contact-plan build
+        Geometry::shared(&cfg);
+
+        let (calls_fast, calls_ref) = delay_benches(name, &cfg);
+
+        print_header(&format!("{name}: whole runs, fast vs reference (surrogate)"));
+        let mut scheme_rows: Vec<String> = Vec::new();
+        for &(label, scheme) in SCENARIO_SCHEMES {
+            let mut c = cfg.clone();
+            c.fl.scheme = scheme;
+            let (fast_r, fast_s) = timed_run(&c, false);
+            let (ref_r, ref_s) = timed_run(&c, true);
+            assert_runs_identical(&fast_r, &ref_r, &format!("{name}/{label}"));
+            let speedup = ref_s / fast_s.max(1e-9);
+            println!(
+                "{name}/{label}: fast {fast_s:.3} s, reference {ref_s:.3} s  ({speedup:.2}x, {} epochs, {} transfers)",
+                fast_r.epochs,
+                fast_r.transfers
+            );
+            scheme_rows.push(format!(
+                "        {{\"scheme\": \"{}\", \"fast_s\": {fast_s:.6}, \"reference_s\": {ref_s:.6}, \"speedup\": {speedup:.4}, \"epochs\": {}, \"transfers\": {}}}",
+                scheme.name(),
+                fast_r.epochs,
+                fast_r.transfers,
+            ));
+        }
+
+        rows.push(format!(
+            "    {{\"name\": \"{name}\", \"sats\": {}, \"horizon_s\": {:.1}, \"delay_calls_per_sec_fast\": {calls_fast:.1}, \"delay_calls_per_sec_reference\": {calls_ref:.1}, \"delay_speedup\": {:.4}, \"schemes\": [\n{}\n      ]}}",
+            cfg.n_sats(),
+            cfg.fl.horizon_s,
+            calls_fast / calls_ref.max(1e-9),
+            scheme_rows.join(",\n"),
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"runloop\",\n  \"delay_calls_per_iter\": {DELAY_CALLS},\n  \"presets\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    let mut f = std::fs::File::create("BENCH_runloop.json").expect("create BENCH_runloop.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_runloop.json");
+    println!("\nwrote BENCH_runloop.json");
+}
+
+/// Trim a preset to bench size: runs stay in seconds while each still
+/// drives thousands of delay calls and full aggregation epochs.
+fn bench_cfg(mut cfg: ExperimentConfig) -> ExperimentConfig {
+    if cfg.n_sats() >= 1000 {
+        cfg.fl.horizon_s = cfg.fl.horizon_s.min(12.0 * 3600.0);
+        cfg.fl.max_epochs = cfg.fl.max_epochs.min(6);
+    } else {
+        cfg.fl.horizon_s = cfg.fl.horizon_s.min(24.0 * 3600.0);
+        cfg.fl.max_epochs = cfg.fl.max_epochs.min(12);
+    }
+    cfg
+}
+
+/// The deterministic probe sequence both paths replay: site, ISL and
+/// IHL delays across the horizon. Returns the folded sum (the equality
+/// gate compares the two paths' sums bitwise — any diverging delay
+/// would have to cancel exactly to slip through, and the per-call test
+/// suite already pins call-by-call equality).
+fn delay_probe(env: &mut SimEnv, n_sites: usize, n_sats: usize, horizon: f64) -> f64 {
+    let mut acc = 0.0f64;
+    for k in 0..DELAY_CALLS {
+        let t = (k as f64 * 37.5) % horizon;
+        match k % 3 {
+            0 => acc += env.site_link_delay(k % n_sites, k % n_sats, t),
+            1 => acc += env.isl_hop_delay(k % n_sats, (k + 1) % n_sats, t),
+            _ => acc += env.ihl_hop_delay(k % n_sites, (k + 1) % n_sites, t),
+        }
+    }
+    acc
+}
+
+/// Delay-call throughput, fast vs reference, equality-gated.
+/// Returns (calls/sec fast, calls/sec reference).
+fn delay_benches(name: &str, cfg: &ExperimentConfig) -> (f64, f64) {
+    print_header(&format!("{name}: delay calls, fast vs reference ({DELAY_CALLS} per iter)"));
+    let n_sites = cfg.placement.sites().len();
+    let n_sats = cfg.n_sats();
+    let horizon = cfg.fl.horizon_s;
+
+    let mut b_fast = SurrogateBackend::for_config(cfg);
+    let mut env_fast = SimEnv::new(cfg, &mut b_fast);
+    let mut b_ref = SurrogateBackend::for_config(cfg);
+    let mut env_ref = SimEnv::new(cfg, &mut b_ref);
+    env_ref.set_reference_path(true);
+
+    // identity gate before timing anything
+    let sum_fast = delay_probe(&mut env_fast, n_sites, n_sats, horizon);
+    let sum_ref = delay_probe(&mut env_ref, n_sites, n_sats, horizon);
+    assert_eq!(
+        sum_fast.to_bits(),
+        sum_ref.to_bits(),
+        "{name}: fast delay path diverged from the reference formulas"
+    );
+
+    let bcfg = BenchConfig { warmup_iters: 2, sample_iters: 10, max_seconds: 120.0 };
+    let r_fast = bench(&format!("{name}: fast path"), &bcfg, || {
+        delay_probe(&mut env_fast, n_sites, n_sats, horizon)
+    });
+    println!("{}", r_fast.report());
+    let r_ref = bench(&format!("{name}: reference path"), &bcfg, || {
+        delay_probe(&mut env_ref, n_sites, n_sats, horizon)
+    });
+    println!("{}", r_ref.report());
+
+    let calls_fast = DELAY_CALLS as f64 / r_fast.stats.mean.max(1e-12);
+    let calls_ref = DELAY_CALLS as f64 / r_ref.stats.mean.max(1e-12);
+    println!(
+        "{name}: {:.2} Mcalls/s fast vs {:.2} Mcalls/s reference ({:.2}x)",
+        calls_fast / 1e6,
+        calls_ref / 1e6,
+        calls_fast / calls_ref.max(1e-9)
+    );
+    (calls_fast, calls_ref)
+}
+
+/// One whole strategy run, timed. `reference` routes delays through the
+/// pre-cache formulas and model compute through the allocating
+/// `ReferenceSurrogate` plumbing.
+fn timed_run(cfg: &ExperimentConfig, reference: bool) -> (RunResult, f64) {
+    let mut strategy = make_strategy(cfg.fl.scheme);
+    if reference {
+        let mut b = ReferenceSurrogate(SurrogateBackend::for_config(cfg));
+        let mut env = SimEnv::new(cfg, &mut b);
+        env.set_reference_path(true);
+        let t0 = Instant::now();
+        let r = strategy.run(&mut env);
+        (r, t0.elapsed().as_secs_f64())
+    } else {
+        let mut b = SurrogateBackend::for_config(cfg);
+        let mut env = SimEnv::new(cfg, &mut b);
+        let t0 = Instant::now();
+        let r = strategy.run(&mut env);
+        (r, t0.elapsed().as_secs_f64())
+    }
+}

@@ -8,6 +8,36 @@
 //! thin facade over the two: strategies keep calling the same delay /
 //! record methods, and sweep executors can run many `RunState`s against
 //! one `Geometry` concurrently.
+//!
+//! # The run-loop fast path (PR 5) and its bit-identity contract
+//!
+//! The delay calls ([`SimEnv::site_link_delay`],
+//! [`SimEnv::isl_hop_delay`], [`SimEnv::ihl_hop_delay`]) are the
+//! event loop's hottest operations — every broadcast, ISL relay sweep
+//! and uplink route probes them thousands of times per run. They
+//! evaluate through values hoisted once per run/geometry:
+//!
+//! * site positions come from the [`Geometry`]'s cached per-site
+//!   `orbit::SitePropagator`s (latitude trigonometry paid at geometry
+//!   build) and satellite positions from the constellation's cached
+//!   `orbit::PlaneBasis` values (PR 4) — one `sin`/`cos` pair plus
+//!   multiply-adds per position;
+//! * the payload size never changes within a run, so the transmission
+//!   term `model_bits(dim)/R` and the endpoint-processing term are
+//!   computed once at [`RunState`] construction instead of paying a
+//!   virtual `backend.dim()` call plus a division per transfer.
+//!
+//! Contract: the fast path performs *the same arithmetic in the same
+//! order* as the original formulas — `(transmission + distance/c) +
+//! processing` associates exactly like `DelayBreakdown::total_s`, and
+//! the hoisted trigonometry is bitwise-pinned by tests in
+//! `orbit::ground` / `orbit::propagation` — so delays, accuracy curves
+//! and `results/*.csv` are bit-for-bit unchanged. The pre-cache
+//! formulas are kept runnable behind
+//! [`SimEnv::set_reference_path`] (per-call `SitePropagator`
+//! construction, per-call `backend.dim()`): the executable
+//! specification that `tests/runloop_equivalence.rs` pins every preset
+//! against and `benches/bench_runloop.rs` measures the speedup with.
 
 use super::contact::ContactPlan;
 use super::geometry::Geometry;
@@ -17,7 +47,7 @@ use crate::faults::{FaultPlan, FaultSchedule, FaultStats, LinkClass};
 use crate::metrics::{Curve, CurvePoint};
 use crate::orbit::{GeodeticSite, WalkerConstellation};
 use crate::train::Backend;
-use crate::util::Rng;
+use crate::util::{Rng, SPEED_OF_LIGHT_KM_S};
 use std::sync::Arc;
 
 /// Everything one run mutates: seeded randomness, metrics, the fault
@@ -32,6 +62,18 @@ pub struct RunState<'a> {
     /// The fault-injection timeline every link transfer runs through.
     /// Disabled (a guaranteed no-op) unless `cfg.faults` is active.
     pub faults: FaultPlan,
+    /// Cached `model_bits(backend.dim())` — the payload is constant
+    /// within a run, so the virtual `dim()` call is paid once here,
+    /// not per transfer.
+    payload_bits: f64,
+    /// Cached transmission term `payload_bits / R` (identical operands
+    /// to the per-call division, hence identical bits).
+    transmission_s: f64,
+    /// Cached endpoint-processing term `2 · t_proc`.
+    processing_s: f64,
+    /// Route delay calls through the pre-cache reference formulas
+    /// (see the module docs). Off on every normal run.
+    reference_path: bool,
 }
 
 /// Everything a strategy needs: geometry, contacts, delays, compute.
@@ -76,6 +118,10 @@ impl<'a> SimEnv<'a> {
             geo.sites.len(),
             cfg.fl.horizon_s,
         ));
+        // run-constant delay terms, hoisted out of the per-transfer path
+        let payload_bits = model_bits(backend.dim());
+        let transmission_s = payload_bits / geo.link.data_rate_bps;
+        let processing_s = 2.0 * geo.link.processing_delay_s;
         SimEnv {
             cfg: cfg.clone(),
             geo,
@@ -85,6 +131,10 @@ impl<'a> SimEnv<'a> {
                 curve: Curve::default(),
                 transfers: 0,
                 faults,
+                payload_bits,
+                transmission_s,
+                processing_s,
+                reference_path: false,
             },
         }
     }
@@ -102,18 +152,47 @@ impl<'a> SimEnv<'a> {
         &self.geo.plan
     }
 
-    /// Model payload size in bits for the current model dimension.
+    /// Model payload size in bits for the current model dimension
+    /// (cached at construction — the payload is run-constant).
     pub fn payload_bits(&self) -> f64 {
-        model_bits(self.state.backend.dim())
+        self.state.payload_bits
+    }
+
+    /// Route every delay call through the kept pre-cache formulas
+    /// (per-call site-trig derivation, per-call virtual
+    /// `backend.dim()`): the executable specification the
+    /// run-equivalence suite pins the fast path against, and the
+    /// "before" side of `BENCH_runloop.json`. Never enabled on normal
+    /// runs.
+    pub fn set_reference_path(&mut self, on: bool) {
+        self.state.reference_path = on;
+    }
+
+    /// Base (fault-free) delay of one transfer over `d_km`: the cached
+    /// run-constant terms + the per-call propagation division,
+    /// associating exactly like `DelayBreakdown::total_s` —
+    /// `(transmission + propagation) + processing`.
+    #[inline]
+    fn base_delay_s(&self, d_km: f64) -> f64 {
+        (self.state.transmission_s + d_km / SPEED_OF_LIGHT_KM_S) + self.state.processing_s
     }
 
     /// SAT↔site transfer delay at time `t` (Eq. 7), fault-adjusted.
     pub fn site_link_delay(&mut self, site: usize, sat: usize, t: f64) -> f64 {
         self.state.transfers += 1;
-        let d = self.geo.sites[site]
-            .position_eci(t)
-            .distance(self.geo.constellation.position(sat, t));
-        let base = total_delay_s(&self.geo.link, self.payload_bits(), d);
+        let base = if self.state.reference_path {
+            let d = self.geo.sites[site]
+                .position_eci(t)
+                .distance(self.geo.constellation.position(sat, t));
+            total_delay_s(&self.geo.link, model_bits(self.state.backend.dim()), d)
+        } else {
+            let d = self
+                .geo
+                .site_prop(site)
+                .position_at(t)
+                .distance(self.geo.constellation.position(sat, t));
+            self.base_delay_s(d)
+        };
         self.apply_faults(LinkClass::SatSite { sat, site }, t, base)
     }
 
@@ -126,17 +205,30 @@ impl<'a> SimEnv<'a> {
             .constellation
             .position(sat_a, t)
             .distance(self.geo.constellation.position(sat_b, t));
-        let base = total_delay_s(&self.geo.link, self.payload_bits(), d);
+        let base = if self.state.reference_path {
+            total_delay_s(&self.geo.link, model_bits(self.state.backend.dim()), d)
+        } else {
+            self.base_delay_s(d)
+        };
         self.apply_faults(LinkClass::Isl { sat_a, sat_b }, t, base)
     }
 
     /// HAP↔HAP (IHL) hop delay at time `t`, fault-adjusted.
     pub fn ihl_hop_delay(&mut self, site_a: usize, site_b: usize, t: f64) -> f64 {
         self.state.transfers += 1;
-        let d = self.geo.sites[site_a]
-            .position_eci(t)
-            .distance(self.geo.sites[site_b].position_eci(t));
-        let base = total_delay_s(&self.geo.link, self.payload_bits(), d);
+        let base = if self.state.reference_path {
+            let d = self.geo.sites[site_a]
+                .position_eci(t)
+                .distance(self.geo.sites[site_b].position_eci(t));
+            total_delay_s(&self.geo.link, model_bits(self.state.backend.dim()), d)
+        } else {
+            let d = self
+                .geo
+                .site_prop(site_a)
+                .position_at(t)
+                .distance(self.geo.site_prop(site_b).position_at(t));
+            self.base_delay_s(d)
+        };
         self.apply_faults(LinkClass::Ihl { site_a, site_b }, t, base)
     }
 
@@ -183,12 +275,17 @@ pub struct RunResult {
 }
 
 impl RunResult {
-    pub fn from_env(scheme: &'static str, env: &SimEnv, epochs: u64) -> Self {
+    /// Summarize a finished run, *taking* the curve out of the env
+    /// (the run's largest artifact is moved, not cloned — the env is
+    /// done producing points once its strategy returns).
+    pub fn from_env(scheme: &'static str, env: &mut SimEnv, epochs: u64) -> Self {
+        let converged = env.state.curve.convergence(0.005, 3);
+        let final_accuracy = env.state.curve.final_accuracy().unwrap_or(0.0);
         RunResult {
             scheme,
-            converged: env.state.curve.convergence(0.005, 3),
-            final_accuracy: env.state.curve.final_accuracy().unwrap_or(0.0),
-            curve: env.state.curve.clone(),
+            converged,
+            final_accuracy,
+            curve: std::mem::take(&mut env.state.curve),
             epochs,
             transfers: env.state.transfers,
             fault_stats: env.state.faults.stats(),
@@ -353,8 +450,36 @@ mod tests {
         let mut env = small_env(&mut b);
         env.record(0.0, 0, 0.1, 2.3);
         env.record(100.0, 1, 0.5, 1.0);
-        let r = RunResult::from_env("test", &env, 2);
+        let r = RunResult::from_env("test", &mut env, 2);
         assert_eq!(r.final_accuracy, 0.5);
         assert_eq!(r.epochs, 2);
+        assert_eq!(r.curve.points.len(), 2);
+        // the curve moved out of the env instead of being cloned
+        assert!(env.state.curve.points.is_empty());
+    }
+
+    #[test]
+    fn reference_path_delays_match_fast_path_bitwise() {
+        let mut cfg = ExperimentConfig::test_small();
+        cfg.placement = crate::config::PsPlacement::TwoHaps;
+        cfg.fl.horizon_s = 3600.0 * 12.0;
+        let mut b1 = SurrogateBackend::paper_split(2, 3, true, 100);
+        let mut fast = SimEnv::new(&cfg, &mut b1);
+        let mut b2 = SurrogateBackend::paper_split(2, 3, true, 100);
+        let mut slow = SimEnv::new(&cfg, &mut b2);
+        slow.set_reference_path(true);
+        for i in 0..200 {
+            let t = 83.5 * i as f64;
+            let a = fast.site_link_delay(i % 2, i % 6, t);
+            let b = slow.site_link_delay(i % 2, i % 6, t);
+            assert_eq!(a.to_bits(), b.to_bits(), "site delay at t={t}");
+            let a = fast.isl_hop_delay(i % 6, (i + 1) % 6, t);
+            let b = slow.isl_hop_delay(i % 6, (i + 1) % 6, t);
+            assert_eq!(a.to_bits(), b.to_bits(), "isl delay at t={t}");
+            let a = fast.ihl_hop_delay(0, 1, t);
+            let b = slow.ihl_hop_delay(0, 1, t);
+            assert_eq!(a.to_bits(), b.to_bits(), "ihl delay at t={t}");
+        }
+        assert_eq!(fast.state.transfers, slow.state.transfers);
     }
 }

@@ -20,7 +20,7 @@
 use super::contact::ContactPlan;
 use crate::comm::LinkParams;
 use crate::config::{ExperimentConfig, PsPlacement};
-use crate::orbit::{GeodeticSite, WalkerConstellation, WalkerPattern};
+use crate::orbit::{GeodeticSite, SitePropagator, WalkerConstellation, WalkerPattern};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -30,6 +30,12 @@ pub struct Geometry {
     pub sites: Vec<GeodeticSite>,
     pub plan: ContactPlan,
     pub link: LinkParams,
+    /// Per-site hoisted position formulas (latitude trigonometry paid
+    /// once here): the run loop's delay calls evaluate site positions
+    /// through these, bit-identical to `GeodeticSite::position_eci` —
+    /// the same hoist the contact scanner uses (PR 4), now shared with
+    /// `coordinator::env`.
+    site_props: Vec<SitePropagator>,
 }
 
 /// The geometry-relevant subset of an [`ExperimentConfig`], with every
@@ -127,7 +133,15 @@ impl Geometry {
             cfg.min_elevation_deg,
             cfg.fl.horizon_s,
         );
-        Geometry { constellation, sites, plan, link: cfg.link }
+        let site_props = sites.iter().map(SitePropagator::new).collect();
+        Geometry { constellation, sites, plan, link: cfg.link, site_props }
+    }
+
+    /// The hoisted position formula of site `site` (what the run loop's
+    /// delay calls evaluate; bit-identical to
+    /// `self.sites[site].position_eci(t)`).
+    pub fn site_prop(&self, site: usize) -> &SitePropagator {
+        &self.site_props[site]
     }
 
     /// The process-wide shared instance for `cfg`'s geometry subset.
@@ -244,5 +258,22 @@ mod tests {
         assert_eq!(g.plan.n_sites(), g.sites.len());
         assert_eq!(g.plan.horizon_s, cfg.fl.horizon_s);
         assert_eq!(g.link, cfg.link);
+    }
+
+    #[test]
+    fn cached_site_props_match_position_eci_bitwise() {
+        let mut cfg = unique_cfg(1239.5);
+        cfg.placement = PsPlacement::TwoHaps;
+        let g = Geometry::shared(&cfg);
+        for site in 0..g.sites.len() {
+            for i in 0..50 {
+                let t = i as f64 * 977.375;
+                let a = g.sites[site].position_eci(t);
+                let b = g.site_prop(site).position_at(t);
+                assert_eq!(a.x.to_bits(), b.x.to_bits());
+                assert_eq!(a.y.to_bits(), b.y.to_bits());
+                assert_eq!(a.z.to_bits(), b.z.to_bits());
+            }
+        }
     }
 }

@@ -105,11 +105,7 @@ pub fn run_one_with(
     mut strategy: Box<dyn Strategy>,
 ) -> Result<RunResult> {
     if opts.surrogate {
-        let mut backend = SurrogateBackend::for_planes(
-            &cfg.constellation.plane_of(),
-            cfg.fl.partition == Partition::Iid,
-            cfg.data.train_samples / cfg.n_sats().max(1),
-        );
+        let mut backend = SurrogateBackend::for_config(cfg);
         let mut env = SimEnv::new(cfg, &mut backend);
         Ok(strategy.run(&mut env))
     } else {

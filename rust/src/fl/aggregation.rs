@@ -42,25 +42,57 @@ pub struct Selection {
     pub gamma: f32,
 }
 
+impl Default for Selection {
+    /// The empty selection: nothing chosen, the previous global model
+    /// keeps full weight.
+    fn default() -> Self {
+        Selection { chosen: Vec::new(), coeff_prev: 1.0, gamma: 0.0 }
+    }
+}
+
 /// Apply the group-wise fresh/stale selection rule (Sec. IV-C2).
 /// Returns indices into `candidates` that participate this epoch.
 pub fn select_models(candidates: &[Candidate], current_epoch: u64) -> Vec<usize> {
+    let mut scratch = SelectionScratch::default();
+    select_models_into(candidates, current_epoch, &mut scratch);
+    std::mem::take(&mut scratch.selected)
+}
+
+/// Reusable buffers for the per-epoch selection (one allocation set
+/// per run — the sink calls selection on every aggregation).
+#[derive(Clone, Debug, Default)]
+pub struct SelectionScratch {
+    /// Selected candidate indices, group-major (the selection output).
+    pub selected: Vec<usize>,
+    /// Per-group "has a fresh member" table.
+    fresh: Vec<bool>,
+}
+
+/// In-place [`select_models`]: fills `scratch.selected`. The selection
+/// order (group-major, ascending candidate index within each group) is
+/// identical to the allocating path — downstream coefficient sums fold
+/// in the same order, so every float is unchanged.
+pub fn select_models_into(
+    candidates: &[Candidate],
+    current_epoch: u64,
+    scratch: &mut SelectionScratch,
+) {
     let n_groups = candidates.iter().map(|c| c.group).max().map_or(0, |g| g + 1);
-    let mut selected = Vec::new();
-    for g in 0..n_groups {
-        let members: Vec<usize> =
-            (0..candidates.len()).filter(|&i| candidates[i].group == g).collect();
-        if members.is_empty() {
-            continue;
+    scratch.selected.clear();
+    scratch.fresh.clear();
+    scratch.fresh.resize(n_groups, false);
+    for c in candidates {
+        if c.meta.is_fresh(current_epoch) {
+            scratch.fresh[c.group] = true;
         }
-        let any_fresh = members.iter().any(|&i| candidates[i].meta.is_fresh(current_epoch));
-        for &i in &members {
-            if !any_fresh || candidates[i].meta.is_fresh(current_epoch) {
-                selected.push(i);
+    }
+    for g in 0..n_groups {
+        for (i, c) in candidates.iter().enumerate() {
+            if c.group == g && (!scratch.fresh[g] || c.meta.is_fresh(current_epoch)) {
+                scratch.selected.push(i);
             }
         }
     }
-    selected
 }
 
 /// Compute the aggregation coefficients (Eqs. 13–14) for the selected
@@ -73,23 +105,40 @@ pub fn staleness_coefficients(
     current_epoch: u64,
     total_data: usize,
 ) -> Selection {
+    let mut out = Selection::default();
+    staleness_coefficients_into(candidates, selected, current_epoch, total_data, &mut out);
+    out
+}
+
+/// In-place [`staleness_coefficients`]: reuses `out.chosen`'s
+/// allocation. Identical accumulation order ⇒ identical floats.
+pub fn staleness_coefficients_into(
+    candidates: &[Candidate],
+    selected: &[usize],
+    current_epoch: u64,
+    total_data: usize,
+    out: &mut Selection,
+) {
+    out.chosen.clear();
     if selected.is_empty() {
-        return Selection { chosen: vec![], coeff_prev: 1.0, gamma: 0.0 };
+        out.coeff_prev = 1.0;
+        out.gamma = 0.0;
+        return;
     }
     let selected_sum: f64 =
         selected.iter().map(|&i| candidates[i].meta.data_size as f64).sum();
     let d_total = if total_data > 0 { total_data as f64 } else { selected_sum };
-    let mut chosen = Vec::with_capacity(selected.len());
     let mut gamma = 0.0f64;
     for &i in selected {
         let m = &candidates[i].meta;
         let share = if d_total > 0.0 { m.data_size as f64 / d_total } else { 0.0 };
         let g_n = share * m.staleness_ratio(current_epoch);
         gamma += g_n;
-        chosen.push((i, g_n as f32));
+        out.chosen.push((i, g_n as f32));
     }
     let gamma = gamma.clamp(0.0, 1.0);
-    Selection { chosen, coeff_prev: (1.0 - gamma) as f32, gamma: gamma as f32 }
+    out.coeff_prev = (1.0 - gamma) as f32;
+    out.gamma = gamma as f32;
 }
 
 /// Convenience: full selection + coefficients in one call.
@@ -98,8 +147,23 @@ pub fn select_and_weigh(
     current_epoch: u64,
     total_data: usize,
 ) -> Selection {
-    let selected = select_models(candidates, current_epoch);
-    staleness_coefficients(candidates, &selected, current_epoch, total_data)
+    let mut scratch = SelectionScratch::default();
+    let mut out = Selection::default();
+    select_and_weigh_into(candidates, current_epoch, total_data, &mut scratch, &mut out);
+    out
+}
+
+/// In-place [`select_and_weigh`]: the allocation-free epoch path the
+/// sink loop runs (scratch + `out` reused across aggregations).
+pub fn select_and_weigh_into(
+    candidates: &[Candidate],
+    current_epoch: u64,
+    total_data: usize,
+    scratch: &mut SelectionScratch,
+    out: &mut Selection,
+) {
+    select_models_into(candidates, current_epoch, scratch);
+    staleness_coefficients_into(candidates, &scratch.selected, current_epoch, total_data, out);
 }
 
 #[cfg(test)]
@@ -214,5 +278,37 @@ mod tests {
         let cs = vec![cand(0, 0, 0, 100)];
         let sel = select_and_weigh(&cs, 0, 100);
         assert!((sel.gamma - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn in_place_selection_matches_allocating_bitwise() {
+        crate::testkit::forall(|rng| {
+            let n = rng.range_usize(0, 16);
+            let beta = rng.range_usize(1, 8) as u64;
+            let cs: Vec<Candidate> = (0..n)
+                .map(|i| {
+                    cand(
+                        i,
+                        rng.below(4),
+                        rng.below(beta as usize + 1) as u64,
+                        rng.range_usize(10, 500),
+                    )
+                })
+                .collect();
+            let total = rng.range_usize(0, 4000);
+            let want = select_and_weigh(&cs, beta, total);
+            // dirty, reused scratch/out across cases — the run-loop shape
+            let mut scratch = SelectionScratch::default();
+            scratch.selected.push(999);
+            let mut got = Selection { chosen: vec![(7, 0.5)], coeff_prev: 0.0, gamma: 0.9 };
+            select_and_weigh_into(&cs, beta, total, &mut scratch, &mut got);
+            assert_eq!(want.chosen.len(), got.chosen.len());
+            for (&(i, w), &(j, v)) in want.chosen.iter().zip(&got.chosen) {
+                assert_eq!(i, j);
+                assert_eq!(w.to_bits(), v.to_bits());
+            }
+            assert_eq!(want.coeff_prev.to_bits(), got.coeff_prev.to_bits());
+            assert_eq!(want.gamma.to_bits(), got.gamma.to_bits());
+        });
     }
 }

@@ -20,9 +20,11 @@
 //! handled by the selection rule — the straggler problem the paper
 //! targets.
 
-use super::aggregation::{select_and_weigh, Candidate};
+use super::aggregation::{select_and_weigh_into, Candidate, Selection, SelectionScratch};
 use super::grouping::{orbit_partial_model, GroupingState};
-use super::propagation::{hap_ring_receive_times, ihl_to_sink, sat_receive_times, uplink_route};
+use super::propagation::{
+    hap_ring_receive_times_into, ihl_to_sink, sat_receive_times_into, uplink_route,
+};
 use super::Strategy;
 use crate::coordinator::{RunResult, SimEnv};
 use crate::metrics::ConvergenceDetector;
@@ -97,6 +99,32 @@ struct Buffered {
     arrived_epoch: u64,
 }
 
+/// Reusable per-run buffers for the broadcast + aggregation paths:
+/// allocated once per run and recycled every epoch, so the event
+/// loop's recurring steps are allocation-free (the per-epoch model-ref
+/// list is the one exception — it borrows the sink buffer that is
+/// compacted right after, so its lifetime cannot outlive one epoch).
+#[derive(Default)]
+struct RunScratch {
+    /// HAP ring receive times of the current broadcast.
+    hap_times: Vec<f64>,
+    /// Per-satellite receive times of the current broadcast.
+    sat_times: Vec<f64>,
+    /// Aggregation candidates of the current epoch.
+    candidates: Vec<Candidate>,
+    /// Selection working set + output (reused `chosen` allocation).
+    sel_scratch: SelectionScratch,
+    selection: Selection,
+    /// Aggregation coefficients of the chosen models.
+    coeffs: Vec<f32>,
+    /// Grouping distances of newly-seen orbit partials.
+    dists: Vec<f64>,
+    /// Per-buffer-slot "aggregated this epoch" flags (retention).
+    used: Vec<bool>,
+    /// Distinct-orbit working set of the pre-grouping trigger check.
+    orbit_ids: Vec<usize>,
+}
+
 impl Strategy for AsyncFleo {
     fn name(&self) -> &'static str {
         "asyncfleo"
@@ -127,6 +155,10 @@ impl Strategy for AsyncFleo {
             let ratio = env.state.backend.shard_size(sat) as f64 / mean_size;
             env.cfg.fl.train_time_s * ratio.clamp(0.5, 1.6)
         };
+        // D of Eq. 13: the whole constellation's data — shard sizes are
+        // fixed for the run, so the sum is hoisted out of the epoch loop
+        let total_data: usize =
+            (0..n_sats).map(|s| env.state.backend.shard_size(s)).sum();
 
         // Global model history: sats train against the epoch they hold.
         let mut globals: Vec<ModelParams> =
@@ -140,9 +172,10 @@ impl Strategy for AsyncFleo {
         let mut in_flight: HashMap<(usize, u64), (ModelParams, ModelMetadata)> = HashMap::new();
         let mut buffer: Vec<Buffered> = Vec::new();
         let mut tick_deadline = f64::INFINITY;
+        let mut scratch = RunScratch::default();
 
         // Initial broadcast of w^0 from the source HAP at t = 0.
-        self.broadcast(env, &ring, &mut queue, 0, 0.0);
+        self.broadcast(env, &ring, &mut queue, 0, 0.0, &mut scratch);
 
         // Fault-plan transitions (churn, outage boundaries) become
         // typed events; with faults disabled nothing is pushed and the
@@ -266,8 +299,9 @@ impl Strategy for AsyncFleo {
                         let covered = if self.disable_grouping || !grouping.all_grouped() {
                             // before grouping is known: require models
                             // from at least two distinct orbits
-                            let mut orbits: Vec<usize> =
-                                buffer.iter().map(|b| b.meta.orbit).collect();
+                            let orbits = &mut scratch.orbit_ids;
+                            orbits.clear();
+                            orbits.extend(buffer.iter().map(|b| b.meta.orbit));
                             orbits.sort_unstable();
                             orbits.dedup();
                             orbits.len() >= 2.min(env.geo.constellation.n_orbits)
@@ -287,7 +321,8 @@ impl Strategy for AsyncFleo {
                         if fresh >= quorum && covered {
                             converged = self.aggregate_now(
                                 env, &mut ring, &mut queue, &mut grouping, &mut globals,
-                                &mut beta, &mut buffer, &mut detector, t,
+                                &mut beta, &mut buffer, &mut detector, t, total_data,
+                                &mut scratch,
                             );
                             tick_deadline = f64::INFINITY;
                         }
@@ -297,7 +332,8 @@ impl Strategy for AsyncFleo {
                     if !buffer.is_empty() && t + 1e-9 >= tick_deadline {
                         converged = self.aggregate_now(
                             env, &mut ring, &mut queue, &mut grouping, &mut globals,
-                            &mut beta, &mut buffer, &mut detector, t,
+                            &mut beta, &mut buffer, &mut detector, t, total_data,
+                            &mut scratch,
                         );
                         tick_deadline = f64::INFINITY;
                     }
@@ -378,7 +414,8 @@ impl AsyncFleo {
     }
 
     /// Broadcast `globals[epoch]` from the current source HAP at `t`:
-    /// queue per-satellite receive events (Algorithm 1).
+    /// queue per-satellite receive events (Algorithm 1). Receive-time
+    /// vectors live in `scratch`, reused across broadcasts.
     fn broadcast(
         &self,
         env: &mut SimEnv,
@@ -386,26 +423,28 @@ impl AsyncFleo {
         queue: &mut EventQueue,
         epoch: u64,
         t: f64,
+        scratch: &mut RunScratch,
     ) {
-        let hap_times = hap_ring_receive_times(env, ring, ring.source(), t);
-        let sat_times = if self.disable_isl_relay {
+        hap_ring_receive_times_into(env, ring, ring.source(), t, &mut scratch.hap_times);
+        if self.disable_isl_relay {
             // ablation A3: star-only distribution — each satellite
             // receives at its own next site contact
             let geo = env.geo.clone();
-            let mut recv = vec![f64::INFINITY; geo.constellation.len()];
+            let recv = &mut scratch.sat_times;
+            recv.clear();
+            recv.resize(geo.constellation.len(), f64::INFINITY);
             for (sat, r) in recv.iter_mut().enumerate() {
-                for (site, &tb) in hap_times.iter().enumerate() {
+                for (site, &tb) in scratch.hap_times.iter().enumerate() {
                     if let Some(tv) = geo.plan.next_visible(site, sat, tb) {
                         let d = env.site_link_delay(site, sat, tv);
                         *r = r.min(tv + d);
                     }
                 }
             }
-            recv
         } else {
-            sat_receive_times(env, &hap_times)
-        };
-        for (sat, &tr) in sat_times.iter().enumerate() {
+            sat_receive_times_into(env, &scratch.hap_times, &mut scratch.sat_times);
+        }
+        for (sat, &tr) in scratch.sat_times.iter().enumerate() {
             if tr.is_finite() && tr <= env.cfg.fl.horizon_s && tr >= queue.now() {
                 queue.push(crate::sim::Event::new(
                     tr,
@@ -423,7 +462,10 @@ impl AsyncFleo {
 
     /// The sink's convergence operation (Algorithm 2): group, select,
     /// discount, aggregate, evaluate, swap roles, rebroadcast.
-    /// Returns true when the run has converged.
+    /// Returns true when the run has converged. Recurring buffers come
+    /// from `scratch`; only the first-sighting grouping path (cold: it
+    /// runs until every orbit has been grouped once) and the per-epoch
+    /// model-ref list allocate.
     #[allow(clippy::too_many_arguments)]
     fn aggregate_now(
         &self,
@@ -436,18 +478,22 @@ impl AsyncFleo {
         buffer: &mut Vec<Buffered>,
         detector: &mut ConvergenceDetector,
         t: f64,
+        total_data: usize,
+        scratch: &mut RunScratch,
     ) -> bool {
         // --- grouping of newly-seen orbits (Sec. IV-C1) ---
-        let mut orbit_members: HashMap<usize, Vec<usize>> = HashMap::new();
-        for (i, b) in buffer.iter().enumerate() {
-            orbit_members.entry(b.meta.orbit).or_default().push(i);
-        }
-        let new_orbits: Vec<usize> = orbit_members
-            .keys()
-            .copied()
-            .filter(|&o| grouping.group_of(o).is_none())
-            .collect();
-        if !new_orbits.is_empty() {
+        // cold path: once every buffered orbit is grouped, the guard is
+        // false for the rest of the run and nothing below allocates
+        if buffer.iter().any(|b| grouping.group_of(b.meta.orbit).is_none()) {
+            let mut orbit_members: HashMap<usize, Vec<usize>> = HashMap::new();
+            for (i, b) in buffer.iter().enumerate() {
+                orbit_members.entry(b.meta.orbit).or_default().push(i);
+            }
+            let new_orbits: Vec<usize> = orbit_members
+                .keys()
+                .copied()
+                .filter(|&o| grouping.group_of(o).is_none())
+                .collect();
             let partials: Vec<ModelParams> = new_orbits
                 .iter()
                 .map(|o| {
@@ -461,87 +507,108 @@ impl AsyncFleo {
                 .collect();
             let refs: Vec<&ModelParams> = partials.iter().collect();
             // divergence to w^0 on the dist kernel (the scale reference)
-            let dists = env.state.backend.distances(&refs, &globals[0]);
+            env.state.backend.distances_into(&refs, &globals[0], &mut scratch.dists);
             let items: Vec<(usize, &ModelParams, f64)> = new_orbits
                 .iter()
                 .copied()
                 .zip(refs.iter().copied())
-                .zip(dists)
+                .zip(scratch.dists.iter().copied())
                 .map(|((o, p), d)| (o, p, d))
                 .collect();
             grouping.assign_batch(&items);
         }
 
         // --- selection + staleness discounting (Sec. IV-C2) ---
-        let candidates: Vec<Candidate> = buffer
-            .iter()
-            .map(|b| Candidate {
-                meta: b.meta,
-                group: if self.disable_grouping {
-                    0 // ablation A1: one big group
-                } else {
-                    grouping.group_of(b.meta.orbit).unwrap_or(0)
-                },
-            })
-            .collect();
-        // D of Eq. 13: the whole constellation's data
-        let total_data: usize = (0..env.geo.constellation.len())
-            .map(|s| env.state.backend.shard_size(s))
-            .sum();
-        let mut sel = select_and_weigh(&candidates, *beta, total_data);
-        if self.disable_staleness_discount && !sel.chosen.is_empty() {
+        scratch.candidates.clear();
+        scratch.candidates.extend(buffer.iter().map(|b| Candidate {
+            meta: b.meta,
+            group: if self.disable_grouping {
+                0 // ablation A1: one big group
+            } else {
+                grouping.group_of(b.meta.orbit).unwrap_or(0)
+            },
+        }));
+        select_and_weigh_into(
+            &scratch.candidates,
+            *beta,
+            total_data,
+            &mut scratch.sel_scratch,
+            &mut scratch.selection,
+        );
+        if self.disable_staleness_discount && !scratch.selection.chosen.is_empty() {
             // ablation A2: ignore staleness — plain FedAvg over the
             // selected models
-            let d_total: f64 = sel
+            let d_total: f64 = scratch
+                .selection
                 .chosen
                 .iter()
-                .map(|&(i, _)| candidates[i].meta.data_size as f64)
+                .map(|&(i, _)| scratch.candidates[i].meta.data_size as f64)
                 .sum();
-            for (i, w) in sel.chosen.iter_mut() {
-                *w = (candidates[*i].meta.data_size as f64 / d_total.max(1.0)) as f32;
+            for (i, w) in scratch.selection.chosen.iter_mut() {
+                *w = (scratch.candidates[*i].meta.data_size as f64 / d_total.max(1.0)) as f32;
             }
-            sel.coeff_prev = 0.0;
+            scratch.selection.coeff_prev = 0.0;
         }
 
-        if !sel.chosen.is_empty() {
-            let models: Vec<&ModelParams> =
-                sel.chosen.iter().map(|&(i, _)| &buffer[i].params).collect();
-            let coeffs: Vec<f32> = sel.chosen.iter().map(|&(_, w)| w).collect();
+        if !scratch.selection.chosen.is_empty() {
+            // the ref list borrows the buffer compacted just below, so
+            // it cannot live in the cross-epoch scratch
+            let models: Vec<&ModelParams> = scratch
+                .selection
+                .chosen
+                .iter()
+                .map(|&(i, _)| &buffer[i].params)
+                .collect();
+            scratch.coeffs.clear();
+            scratch.coeffs.extend(scratch.selection.chosen.iter().map(|&(_, w)| w));
             let prev = globals.last().unwrap();
-            let next = env.state.backend.aggregate(prev, &models, &coeffs, sel.coeff_prev);
+            let mut next = ModelParams { data: Vec::with_capacity(prev.dim()) };
+            env.state.backend.aggregate_into(
+                prev,
+                &models,
+                &scratch.coeffs,
+                scratch.selection.coeff_prev,
+                &mut next,
+            );
             globals.push(next);
             *beta += 1;
         }
 
         // retention: drop used models and over-aged stale ones
-        let used: Vec<usize> = sel.chosen.iter().map(|&(i, _)| i).collect();
+        // (in-place compaction in buffer order — same survivors, same
+        // order as the old drain-into-keep pass)
+        scratch.used.clear();
+        scratch.used.resize(buffer.len(), false);
+        for &(i, _) in &scratch.selection.chosen {
+            scratch.used[i] = true;
+        }
         let retention = self.stale_retention_epochs;
         let cur = *beta;
-        let mut keep = Vec::new();
-        for (i, b) in buffer.drain(..).enumerate() {
-            if !used.contains(&i) && cur.saturating_sub(b.arrived_epoch) < retention {
-                keep.push(b);
-            }
-        }
-        *buffer = keep;
+        let used = &scratch.used;
+        let mut idx = 0;
+        buffer.retain(|b| {
+            let keep = !used[idx] && cur.saturating_sub(b.arrived_epoch) < retention;
+            idx += 1;
+            keep
+        });
 
         // evaluate + record + convergence
         let e = env.state.backend.evaluate(globals.last().unwrap());
         if std::env::var_os("ASYNCFLEO_DEBUG").is_some() {
             let mut per_orbit = vec![(0usize, 0usize); env.geo.constellation.n_orbits];
-            for &(i, _) in &sel.chosen {
-                per_orbit[candidates[i].meta.orbit].0 += 1;
+            for &(i, _) in &scratch.selection.chosen {
+                per_orbit[scratch.candidates[i].meta.orbit].0 += 1;
             }
-            for c in &candidates {
+            for c in &scratch.candidates {
                 per_orbit[c.meta.orbit].1 += 1;
             }
             eprintln!(
                 "[agg] beta={} t={:.0} cand={} sel={} gamma={:.3} groups={} per-orbit(sel/cand)={:?} acc={:.4}",
                 *beta,
                 t,
-                candidates.len(),
-                sel.chosen.len(),
-                sel.gamma,
+                scratch.candidates.len(),
+                scratch.selection.chosen.len(),
+                scratch.selection.gamma,
                 grouping.n_groups(),
                 per_orbit,
                 e.accuracy
@@ -552,7 +619,7 @@ impl AsyncFleo {
 
         // role swap + rebroadcast (Sec. IV-B3)
         ring.swap_roles();
-        self.broadcast(env, ring, queue, *beta, t);
+        self.broadcast(env, ring, queue, *beta, t, scratch);
         converged
     }
 }

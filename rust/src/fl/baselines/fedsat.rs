@@ -12,6 +12,7 @@
 use crate::coordinator::{RunResult, SimEnv};
 use crate::fl::Strategy;
 use crate::metrics::ConvergenceDetector;
+use crate::model::ModelParams;
 
 /// Mixing rate of one asynchronous update (scaled by relative shard
 /// size, clipped for stability).
@@ -63,6 +64,10 @@ impl Strategy for FedSat {
         let mut updates: u64 = 0;
         let mut converged = false;
         let mut last_t = 0.0;
+        // reused across visits: the trained local model and the
+        // aggregate double-buffer (in-place backend API, same floats)
+        let mut local = ModelParams { data: Vec::new() };
+        let mut next = ModelParams { data: Vec::with_capacity(global.dim()) };
 
         for (t, sat, site) in visits {
             if t > horizon || converged {
@@ -84,13 +89,15 @@ impl Strategy for FedSat {
                 }
                 Some(ready) if ready <= t => {
                     // upload trained model; async update; download new global
-                    let (local, _) = env.state.backend.train_local(sat, &global, dispatches);
+                    env.state.backend.train_local_into(sat, &global, dispatches, &mut local);
                     let d_up = env.site_link_delay(site, sat, t);
                     let alpha = (BASE_ALPHA * env.state.backend.shard_size(sat) as f64
                         / mean_size)
                         .clamp(0.01, 0.5) as f32;
-                    global =
-                        env.state.backend.aggregate(&global, &[&local], &[alpha], 1.0 - alpha);
+                    env.state
+                        .backend
+                        .aggregate_into(&global, &[&local], &[alpha], 1.0 - alpha, &mut next);
+                    std::mem::swap(&mut global, &mut next);
                     updates += 1;
                     let d_down = env.site_link_delay(site, sat, t + d_up);
                     ready_at[sat] = Some(t + d_up + d_down + train_time);

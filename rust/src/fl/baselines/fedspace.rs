@@ -60,6 +60,19 @@ impl Strategy for FedSpace {
         let mut rounds: u64 = 0;
         let mut converged = false;
 
+        // Reused per-tick buffers: the arrived/later split, the FedAvg
+        // weight vectors, the aggregate double-buffer, and a free pool
+        // of model buffers recycled from aggregated uploads. Only the
+        // per-aggregation ref list still allocates (it borrows the
+        // arrived batch). Same floats: the split preserves
+        // `partition`'s relative order.
+        let mut arrived: Vec<(f64, usize, ModelParams)> = Vec::new();
+        let mut later: Vec<(f64, usize, ModelParams)> = Vec::new();
+        let mut sizes: Vec<usize> = Vec::new();
+        let mut weights: Vec<f32> = Vec::new();
+        let mut next = ModelParams { data: Vec::with_capacity(global.dim()) };
+        let mut pool: Vec<ModelParams> = Vec::new();
+
         let mut tick = AGG_PERIOD_S;
         while tick <= horizon && !converged && rounds < env.cfg.fl.max_epochs * 4 {
             // process all visits before this tick
@@ -83,7 +96,8 @@ impl Strategy for FedSpace {
                         ready_at[sat] = Some(t + d + train_time);
                     }
                     Some(ready) if ready <= t => {
-                        let (local, _) = env.state.backend.train_local(sat, &global, dispatches);
+                        let mut local = pool.pop().unwrap_or(ModelParams { data: Vec::new() });
+                        env.state.backend.train_local_into(sat, &global, dispatches, &mut local);
                         // model + raw-data fraction upload
                         let d_up = env.site_link_delay(site, sat, t) * DATA_OVERHEAD;
                         pending.push((t + d_up, sat, local));
@@ -94,24 +108,31 @@ impl Strategy for FedSpace {
                 }
             }
             // scheduled aggregation: average arrivals at full weight
-            let arrived: Vec<(f64, usize, ModelParams)> = {
-                let (now, later): (Vec<_>, Vec<_>) =
-                    pending.drain(..).partition(|(ta, _, _)| *ta <= tick);
-                pending = later;
-                now
-            };
+            arrived.clear();
+            later.clear();
+            for item in pending.drain(..) {
+                if item.0 <= tick {
+                    arrived.push(item);
+                } else {
+                    later.push(item);
+                }
+            }
+            std::mem::swap(&mut pending, &mut later);
             if !arrived.is_empty() {
-                let sizes: Vec<usize> =
-                    arrived.iter().map(|(_, s, _)| env.state.backend.shard_size(*s)).collect();
-                let weights = crate::train::fedavg_weights(&sizes);
+                sizes.clear();
+                sizes.extend(arrived.iter().map(|(_, s, _)| env.state.backend.shard_size(*s)));
+                crate::train::fedavg_weights_into(&sizes, &mut weights);
                 let refs: Vec<&ModelParams> = arrived.iter().map(|(_, _, m)| m).collect();
                 // naive: overwrite with the partial average (no staleness
                 // discount, no previous-model anchoring)
-                global = env.state.backend.aggregate(&global, &refs, &weights, 0.0);
+                env.state.backend.aggregate_into(&global, &refs, &weights, 0.0, &mut next);
+                std::mem::swap(&mut global, &mut next);
                 rounds += 1;
                 let e = env.state.backend.evaluate(&global);
                 env.record(tick, rounds, e.accuracy, e.loss);
                 converged = detector.update(e.accuracy) && rounds >= 12;
+                // recycle the aggregated model buffers
+                pool.extend(arrived.drain(..).map(|(_, _, m)| m));
             }
             tick += AGG_PERIOD_S;
         }

@@ -86,7 +86,9 @@ pub(crate) fn sync_round_end(env: &mut SimEnv, t: f64, use_isl: bool) -> Option<
 
 /// The synchronous outer loop shared by FedAvg / FedHAP / FedISL:
 /// rounds of (deliver, train-all, FedAvg-aggregate) until convergence,
-/// horizon, or an incompletable round.
+/// horizon, or an incompletable round. Model buffers (`locals`, the
+/// aggregate double-buffer) are allocated once and reused every round
+/// through the in-place backend API — floats unchanged.
 pub(crate) fn run_synchronous(
     env: &mut SimEnv,
     name: &'static str,
@@ -103,6 +105,9 @@ pub(crate) fn run_synchronous(
     let sizes: Vec<usize> = (0..n_sats).map(|s| env.state.backend.shard_size(s)).collect();
     let weights = fedavg_weights(&sizes);
 
+    let mut locals: Vec<ModelParams> =
+        (0..n_sats).map(|_| ModelParams { data: Vec::new() }).collect();
+    let mut next = ModelParams { data: Vec::with_capacity(global.dim()) };
     let mut t = 0.0f64;
     let mut round: u64 = 0;
     while round < env.cfg.fl.max_epochs {
@@ -110,13 +115,12 @@ pub(crate) fn run_synchronous(
             break; // straggler cannot complete within horizon
         };
         // all satellites train from the same global model (Eq. 4)
-        let mut locals: Vec<ModelParams> = Vec::with_capacity(n_sats);
-        for sat in 0..n_sats {
-            let (m, _) = env.state.backend.train_local(sat, &global, dispatches);
-            locals.push(m);
+        for (sat, local) in locals.iter_mut().enumerate() {
+            env.state.backend.train_local_into(sat, &global, dispatches, local);
         }
         let refs: Vec<&ModelParams> = locals.iter().collect();
-        global = env.state.backend.aggregate(&global, &refs, &weights, 0.0);
+        env.state.backend.aggregate_into(&global, &refs, &weights, 0.0, &mut next);
+        std::mem::swap(&mut global, &mut next);
         round += 1;
         t = end;
         let e = env.state.backend.evaluate(&global);

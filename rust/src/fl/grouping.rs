@@ -112,15 +112,29 @@ impl GroupingState {
 /// model S'_o of Eq. 11 (pure-buffer op; the PJRT `agg` kernel computes
 /// the same quantity on the hot path — both are tested for agreement).
 pub fn orbit_partial_model(models: &[&ModelParams], sizes: &[usize]) -> ModelParams {
+    let mut out = ModelParams { data: Vec::new() };
+    orbit_partial_model_into(models, sizes, &mut out);
+    out
+}
+
+/// In-place [`orbit_partial_model`]: no intermediate weight vector —
+/// each weight is computed exactly as before, right at its axpy, so
+/// the floats are bit-identical to the allocating path.
+pub fn orbit_partial_model_into(models: &[&ModelParams], sizes: &[usize], out: &mut ModelParams) {
     assert_eq!(models.len(), sizes.len());
     assert!(!models.is_empty());
     let total: f64 = sizes.iter().map(|&s| s as f64).sum();
-    let weights: Vec<f32> = if total > 0.0 {
-        sizes.iter().map(|&s| (s as f64 / total) as f32).collect()
+    out.reset_zeros(models[0].dim());
+    if total > 0.0 {
+        for (m, &s) in models.iter().zip(sizes) {
+            out.axpy((s as f64 / total) as f32, m);
+        }
     } else {
-        vec![1.0 / models.len() as f32; models.len()]
-    };
-    ModelParams::weighted_sum(models, &weights)
+        let w = 1.0 / models.len() as f32;
+        for m in models {
+            out.axpy(w, m);
+        }
+    }
 }
 
 #[cfg(test)]

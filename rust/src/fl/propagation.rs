@@ -13,6 +13,13 @@
 //! Geometry reads go through a cloned `Arc<Geometry>` so the contact
 //! plan can be iterated allocation-free while the env's delay calls
 //! mutate the per-run state.
+//!
+//! Every oracle has a `_into` variant writing into a caller-owned
+//! buffer: the run loops call these once per broadcast/epoch, so the
+//! receive-time vectors are allocated once per run, not per event.
+//! Plane membership is a contiguous id range
+//! (`WalkerConstellation::orbit_members`), so relay sweeps and uplink
+//! routing never materialize member lists either.
 
 use crate::coordinator::SimEnv;
 use crate::topology::HapRing;
@@ -20,8 +27,21 @@ use crate::topology::HapRing;
 /// Receive time of the global model at every HAP when `source` starts
 /// the ring relay at `t` (Sec. IV-B1; Fig. 4a). Index = site id.
 pub fn hap_ring_receive_times(env: &mut SimEnv, ring: &HapRing, source: usize, t: f64) -> Vec<f64> {
-    let n = ring.len();
-    let mut recv = vec![f64::INFINITY; n];
+    let mut recv = Vec::new();
+    hap_ring_receive_times_into(env, ring, source, t, &mut recv);
+    recv
+}
+
+/// In-place [`hap_ring_receive_times`] (reused `recv` allocation).
+pub fn hap_ring_receive_times_into(
+    env: &mut SimEnv,
+    ring: &HapRing,
+    source: usize,
+    t: f64,
+    recv: &mut Vec<f64>,
+) {
+    recv.clear();
+    recv.resize(ring.len(), f64::INFINITY);
     recv[source] = t;
     // Relay along the plan: each forwarding hop adds one IHL delay.
     for (h, fwds) in ring.relay_plan(source) {
@@ -32,7 +52,6 @@ pub fn hap_ring_receive_times(env: &mut SimEnv, ring: &HapRing, source: usize, t
             recv[fwd] = recv[fwd].min(t_h + d);
         }
     }
-    recv
 }
 
 /// Receive time of the global model at every satellite, given the HAP
@@ -44,9 +63,17 @@ pub fn hap_ring_receive_times(env: &mut SimEnv, ring: &HapRing, source: usize, t
 /// Returns `f64::INFINITY` past-horizon entries when an orbit never
 /// makes contact.
 pub fn sat_receive_times(env: &mut SimEnv, bcasts: &[f64]) -> Vec<f64> {
+    let mut recv = Vec::new();
+    sat_receive_times_into(env, bcasts, &mut recv);
+    recv
+}
+
+/// In-place [`sat_receive_times`] (reused `recv` allocation).
+pub fn sat_receive_times_into(env: &mut SimEnv, bcasts: &[f64], recv: &mut Vec<f64>) {
     let geo = env.geo.clone();
     let n_sats = geo.constellation.len();
-    let mut recv = vec![f64::INFINITY; n_sats];
+    recv.clear();
+    recv.resize(n_sats, f64::INFINITY);
 
     // 1. direct star downlink to currently-visible satellites
     for (site, &tb) in bcasts.iter().enumerate() {
@@ -62,10 +89,10 @@ pub fn sat_receive_times(env: &mut SimEnv, bcasts: &[f64]) -> Vec<f64> {
     // 2. per-orbit: seed stranded orbits, then ISL ring relaxation
     for orbit in 0..geo.constellation.n_orbits {
         let members = geo.constellation.orbit_members(orbit);
-        if members.iter().all(|&m| !recv[m].is_finite()) {
+        if members.clone().all(|m| !recv[m].is_finite()) {
             // nobody visible at broadcast: earliest later contact wins
             let mut best: Option<(f64, usize, usize)> = None; // (time, sat, site)
-            for &m in &members {
+            for m in members.clone() {
                 for (site, &tb) in bcasts.iter().enumerate() {
                     if !tb.is_finite() {
                         continue;
@@ -84,13 +111,14 @@ pub fn sat_receive_times(env: &mut SimEnv, bcasts: &[f64]) -> Vec<f64> {
                 continue; // orbit unreachable within horizon
             }
         }
-        relax_ring(env, &members, &mut recv);
+        relax_ring(env, members, recv);
     }
-    recv
 }
 
-/// Bidirectional ring relaxation of receive times within one orbit.
-fn relax_ring(env: &mut SimEnv, members: &[usize], recv: &mut [f64]) {
+/// Bidirectional ring relaxation of receive times within one orbit
+/// (`members` is the plane's contiguous id range).
+fn relax_ring(env: &mut SimEnv, members: std::ops::Range<usize>, recv: &mut [f64]) {
+    let start = members.start;
     let n = members.len();
     if n <= 1 {
         return;
@@ -99,11 +127,11 @@ fn relax_ring(env: &mut SimEnv, members: &[usize], recv: &mut [f64]) {
     for _ in 0..n {
         let mut changed = false;
         for i in 0..n {
-            let cur = members[i];
+            let cur = start + i;
             if !recv[cur].is_finite() {
                 continue;
             }
-            for nb in [members[(i + 1) % n], members[(i + n - 1) % n]] {
+            for nb in [start + (i + 1) % n, start + (i + n - 1) % n] {
                 let d = env.isl_hop_delay(cur, nb, recv[cur]);
                 if recv[cur] + d < recv[nb] {
                     recv[nb] = recv[cur] + d;
@@ -137,7 +165,7 @@ pub fn uplink_route(env: &mut SimEnv, sat: usize, t_ready: f64) -> Option<(usize
     };
 
     let mut best: Option<(usize, f64, usize)> = None;
-    for (j_idx, &j) in members.iter().enumerate() {
+    for (j_idx, j) in members.enumerate() {
         let fwd = (j_idx + n - my_slot) % n;
         let hops = fwd.min(n - fwd);
         let t_at_j = t_ready + hops as f64 * hop_delay;
@@ -216,7 +244,7 @@ mod tests {
         let visible: Vec<usize> = env.geo.plan.visible_sats(0, t0).collect();
         for &v in &visible {
             let orbit = env.geo.constellation.satellites[v].orbit;
-            for &m in &env.geo.constellation.orbit_members(orbit) {
+            for m in env.geo.constellation.orbit_members(orbit) {
                 assert!(
                     recv[m] - t0 < 60.0,
                     "sat {m} in seeded orbit {orbit} took {}s",

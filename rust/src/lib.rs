@@ -25,7 +25,12 @@
 //! * [`runtime`] — the PJRT bridge: loads the AOT HLO artifacts emitted
 //!   by `python/compile/aot.py` and executes them (L2/L1 compute);
 //! * [`train`] — per-satellite local training / evaluation on top of
-//!   [`runtime`];
+//!   [`runtime`]. The `Backend` trait carries in-place variants
+//!   (`train_local_into` / `aggregate_into` / `distances_into`) the
+//!   strategies call with per-run reusable buffers, so the event-loop's
+//!   model steps are allocation-free on the surrogate (bit-identical to
+//!   the allocating calls; `testkit::ReferenceSurrogate` keeps the old
+//!   plumbing executable as the reference);
 //! * [`fl`] — the FL strategies: AsyncFLEO (grouping, staleness
 //!   discounting, model propagation — Algorithms 1 & 2) and the five
 //!   baselines (FedAvg, FedISL, FedSat, FedSpace, FedHAP);
@@ -47,13 +52,24 @@
 //!   grid intervals, and per-satellite rows fanned across a scoped
 //!   thread pool — bit-identical to the kept-as-reference naive sweep
 //!   at any thread count (`tests/contact_equivalence.rs` asserts it on
-//!   every preset; `BENCH_geometry.json` tracks the speedup);
+//!   every preset; `BENCH_geometry.json` tracks the speedup). The
+//!   *run loop* on top of it has the same two-tier design (PR 5):
+//!   every `SimEnv` delay call evaluates through the geometry's cached
+//!   per-site `SitePropagator`s / per-satellite `PlaneBasis` values
+//!   plus run-constant payload/transmission terms hoisted onto
+//!   `RunState` — pure cached-trig multiply-adds, op-for-op the
+//!   original formulas, with the pre-cache path kept runnable behind
+//!   `SimEnv::set_reference_path` (`tests/runloop_equivalence.rs`
+//!   asserts bit-identical curves and transfer counts on every preset;
+//!   `BENCH_runloop.json` tracks delay-call throughput and per-scheme
+//!   run speedups);
 //! * [`scenario`] — declarative experiment worlds: a named preset or a
 //!   TOML file (with `[shellN]` sections for multi-shell
 //!   constellations) becomes a complete, reproducible
-//!   `ExperimentConfig`; the built-in `ScenarioRegistry` catalogs ≥6
+//!   `ExperimentConfig`; the built-in `ScenarioRegistry` catalogs ≥7
 //!   presets (paper-40, starlink-lite, polar-star, sparse-iot,
-//!   equatorial-dense, haps-degraded — see the module docs for how to
+//!   equatorial-dense, haps-degraded, and the 1584-satellite
+//!   starlink-phase1 stress shell — see the module docs for how to
 //!   add one) behind `asyncfleo scenario`;
 //! * [`experiments`] — drivers regenerating every paper table & figure,
 //!   plus the `resilience` sweep comparing graceful degradation across

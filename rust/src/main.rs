@@ -42,9 +42,10 @@ USAGE:
   asyncfleo scenario --dump NAME
   asyncfleo scenario [--preset NAME[,NAME...] | --all | --config FILE]
                      [--out DIR] [--fast] [--jobs N] [--seed N] [--pjrt]
-      Declarative experiment worlds. The built-in catalog ships >= 6
+      Declarative experiment worlds. The built-in catalog ships >= 7
       presets (paper-40, starlink-lite two-shell, polar-star, sparse-iot,
-      equatorial-dense, haps-degraded); --list shows them, --dump prints
+      equatorial-dense, haps-degraded, starlink-phase1 mega-scale);
+      --list shows them, --dump prints
       a preset as TOML (editable, reloadable via --config FILE, with
       [shellN] sections for multi-shell constellations). Running a
       selection sweeps AsyncFLEO vs FedHAP vs FedSat in each world into

@@ -1,5 +1,12 @@
 //! Flat model parameter buffers and the linear algebra the coordinator
 //! needs on them.
+//!
+//! Every operation has an in-place variant (`*_into`,
+//! [`ModelParams::reset_zeros`]) so the event-loop hot paths can reuse
+//! buffers instead of allocating per call. The in-place variants
+//! perform the same arithmetic in the same order as their allocating
+//! counterparts — results are bit-identical, only the allocation
+//! disappears.
 
 use crate::util::Rng;
 
@@ -23,6 +30,13 @@ impl ModelParams {
 
     pub fn dim(&self) -> usize {
         self.data.len()
+    }
+
+    /// Reset to the all-zero vector of dimension `dim`, reusing the
+    /// existing allocation whenever capacity allows.
+    pub fn reset_zeros(&mut self, dim: usize) {
+        self.data.clear();
+        self.data.resize(dim, 0.0);
     }
 
     /// Euclidean distance ‖self − other‖₂ (pure-Rust fallback of the
@@ -63,14 +77,21 @@ impl ModelParams {
     /// Weighted sum Σ wᵢ·modelsᵢ (pure-Rust fallback of the `agg_*`
     /// artifact — Eq. 14 with coeffs computed by the caller).
     pub fn weighted_sum(models: &[&ModelParams], weights: &[f32]) -> ModelParams {
+        let mut out = ModelParams { data: Vec::new() };
+        Self::weighted_sum_into(models, weights, &mut out);
+        out
+    }
+
+    /// In-place [`Self::weighted_sum`]: writes Σ wᵢ·modelsᵢ into `out`,
+    /// reusing its allocation. Same zero-init + axpy sequence as the
+    /// allocating version, so the floats are bit-identical.
+    pub fn weighted_sum_into(models: &[&ModelParams], weights: &[f32], out: &mut ModelParams) {
         assert_eq!(models.len(), weights.len());
         assert!(!models.is_empty());
-        let dim = models[0].dim();
-        let mut out = ModelParams::zeros(dim);
+        out.reset_zeros(models[0].dim());
         for (m, &w) in models.iter().zip(weights) {
             out.axpy(w, m);
         }
-        out
     }
 }
 
@@ -128,5 +149,33 @@ mod tests {
         let a = ModelParams::zeros(3);
         let b = ModelParams::zeros(4);
         a.l2_distance(&b);
+    }
+
+    #[test]
+    fn weighted_sum_into_matches_allocating_bitwise() {
+        let mut rng = Rng::new(7);
+        let models: Vec<ModelParams> =
+            (0..5).map(|_| ModelParams::random(33, 1.0, &mut rng)).collect();
+        let refs: Vec<&ModelParams> = models.iter().collect();
+        let ws: Vec<f32> = (0..5).map(|i| 0.1 + 0.07 * i as f32).collect();
+        let alloc = ModelParams::weighted_sum(&refs, &ws);
+        // reused buffer starts dirty and over-sized on purpose
+        let mut out = ModelParams::zeros(100);
+        out.data[0] = 42.0;
+        ModelParams::weighted_sum_into(&refs, &ws, &mut out);
+        assert_eq!(out.dim(), 33);
+        for (a, b) in alloc.data.iter().zip(&out.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn reset_zeros_reuses_allocation() {
+        let mut p = ModelParams { data: vec![3.0; 8] };
+        let cap = p.data.capacity();
+        p.reset_zeros(5);
+        assert_eq!(p.dim(), 5);
+        assert!(p.data.capacity() >= cap, "reset must not shrink capacity");
+        assert!(p.data.iter().all(|&v| v == 0.0));
     }
 }

@@ -301,9 +301,12 @@ impl WalkerConstellation {
     }
 
     /// All satellite IDs in one orbital plane (global plane index).
-    pub fn orbit_members(&self, orbit: usize) -> Vec<usize> {
+    /// Plane ids are dense and contiguous, so the members are a plain
+    /// range — allocation-free to produce and iterate (the run loop's
+    /// uplink/relay paths call this per event).
+    pub fn orbit_members(&self, orbit: usize) -> std::ops::Range<usize> {
         let span = self.planes[orbit];
-        (span.start..span.start + span.len).collect()
+        span.start..span.start + span.len
     }
 }
 
@@ -431,7 +434,7 @@ mod tests {
         assert_eq!(c.plane_len(1), 3);
         assert_eq!(c.plane_len(2), 4);
         assert_eq!(c.plane_len(4), 4);
-        assert_eq!(c.orbit_members(2), vec![6, 7, 8, 9]);
+        assert_eq!(c.orbit_members(2), 6..10);
         let plane_of = c.plane_of();
         assert_eq!(plane_of[0], 0);
         assert_eq!(plane_of[5], 1);

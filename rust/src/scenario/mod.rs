@@ -13,11 +13,12 @@
 //! and it round-trips losslessly through the TOML subset
 //! ([`Scenario::to_toml`] / [`Scenario::from_toml`]).
 //!
-//! The built-in catalog ([`ScenarioRegistry::builtin`]) ships ≥6
+//! The built-in catalog ([`ScenarioRegistry::builtin`]) ships ≥7
 //! presets spanning the design space the related work evaluates on
 //! (paper 5×8, a two-shell Starlink-like mix, a OneWeb-like polar star,
-//! a sparse IoT constellation, an equatorial shell, and a
-//! HAP-degraded world). `asyncfleo scenario` lists the catalog, dumps
+//! a sparse IoT constellation, an equatorial shell, a HAP-degraded
+//! world, and the 1584-satellite `starlink-phase1` stress shell the
+//! run-loop bench drives). `asyncfleo scenario` lists the catalog, dumps
 //! presets to TOML, and sweeps scheme×scenario comparison grids through
 //! `experiments::scenarios` into `results/scenarios.csv`.
 //!
@@ -124,6 +125,7 @@ impl ScenarioRegistry {
                 sparse_iot(),
                 equatorial_dense(),
                 haps_degraded(),
+                starlink_phase1(),
             ],
         }
     }
@@ -233,6 +235,27 @@ fn haps_degraded() -> Scenario {
     Scenario::new("haps-degraded", "paper world + HAP failures at full intensity", cfg)
 }
 
+/// Starlink phase-1 first shell at production scale: 72 planes × 22
+/// satellites at 550 km / 53° (1584 satellites, Walker delta with the
+/// F=17 phasing of the FCC filing), two HAP sinks. The
+/// mega-constellation stress world for the run-loop fast path —
+/// `benches/bench_runloop.rs` drives a three-scheme compare on it and
+/// the run-equivalence suite smokes it.
+fn starlink_phase1() -> Scenario {
+    let mut cfg = base();
+    cfg.constellation.n_orbits = 72;
+    cfg.constellation.sats_per_orbit = 22;
+    cfg.constellation.altitude_km = 550.0;
+    cfg.constellation.inclination_deg = 53.0;
+    cfg.constellation.phasing = 17;
+    cfg.placement = PsPlacement::TwoHaps;
+    Scenario::new(
+        "starlink-phase1",
+        "Starlink phase-1 shell, 72x22@550 km (1584 sats), two HAPs",
+        cfg,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,7 +264,7 @@ mod tests {
     #[test]
     fn catalog_has_at_least_six_presets() {
         let reg = ScenarioRegistry::builtin();
-        assert!(reg.len() >= 6, "catalog has {}", reg.len());
+        assert!(reg.len() >= 7, "catalog has {}", reg.len());
         for name in [
             "paper-40",
             "starlink-lite",
@@ -249,6 +272,7 @@ mod tests {
             "sparse-iot",
             "equatorial-dense",
             "haps-degraded",
+            "starlink-phase1",
         ] {
             assert!(reg.get(name).is_some(), "missing preset {name}");
         }
@@ -257,6 +281,19 @@ mod tests {
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), reg.len());
+    }
+
+    #[test]
+    fn starlink_phase1_is_mega_scale() {
+        let sc = ScenarioRegistry::builtin().get("starlink-phase1").unwrap().clone();
+        assert_eq!(sc.cfg.n_sats(), 1584, "72 x 22");
+        assert_eq!(sc.cfg.constellation.n_planes(), 72);
+        assert!(sc.cfg.validate().is_empty(), "{:?}", sc.cfg.validate());
+        // dumps + reloads like every other preset (also covered by the
+        // round-trip test, pinned here so the stress preset never
+        // silently drops out of the catalog)
+        let reloaded = Scenario::from_toml(&sc.to_toml()).unwrap();
+        assert_eq!(reloaded, sc);
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! Property-testing substrate (no `proptest` offline).
+//! Property-testing substrate (no `proptest` offline), plus shared
+//! reference fixtures ([`ReferenceSurrogate`]) for the run-loop
+//! equivalence suite and benches.
 //!
 //! A seeded forall-runner over closures of `Rng`: each case draws
 //! random inputs and asserts a property; on failure the failing seed is
@@ -11,7 +13,89 @@
 //! });
 //! ```
 
+use crate::coordinator::RunResult;
+use crate::model::ModelParams;
+use crate::train::{Backend, EvalResult, SurrogateBackend};
 use crate::util::Rng;
+
+/// Assert two finished runs are **bit-identical**: epochs, transfers,
+/// fault accounting and every curve point. The shared equality gate of
+/// `tests/runloop_equivalence.rs` and `benches/bench_runloop.rs` — a
+/// speedup must never be reported on diverged results.
+#[track_caller]
+pub fn assert_runs_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.epochs, b.epochs, "{what}: epochs");
+    assert_eq!(a.transfers, b.transfers, "{what}: transfers");
+    assert_eq!(a.fault_stats, b.fault_stats, "{what}: fault stats");
+    assert_eq!(a.curve.points.len(), b.curve.points.len(), "{what}: curve length");
+    for (i, (x, y)) in a.curve.points.iter().zip(&b.curve.points).enumerate() {
+        assert_eq!(x.time_s.to_bits(), y.time_s.to_bits(), "{what}: point {i} time");
+        assert_eq!(x.epoch, y.epoch, "{what}: point {i} epoch");
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "{what}: point {i} accuracy");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: point {i} loss");
+    }
+}
+
+/// The pre-fast-path model plumbing, kept executable: wraps a
+/// [`SurrogateBackend`] but implements the allocating [`Backend`]
+/// methods with the original per-call ref/weight vector assembly, and
+/// leaves every `*_into` variant at its allocating trait default.
+/// Running a strategy against this wrapper with
+/// `SimEnv::set_reference_path(true)` reproduces the pre-cache run
+/// loop op-for-op — the "before" side of `tests/runloop_equivalence.rs`
+/// and `benches/bench_runloop.rs`, and the proof that the fast path
+/// left every float untouched.
+pub struct ReferenceSurrogate(pub SurrogateBackend);
+
+impl Backend for ReferenceSurrogate {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+
+    fn n_sats(&self) -> usize {
+        self.0.n_sats()
+    }
+
+    fn shard_size(&self, sat: usize) -> usize {
+        self.0.shard_size(sat)
+    }
+
+    fn init_global(&mut self, seed: i32) -> ModelParams {
+        self.0.init_global(seed)
+    }
+
+    fn train_local(
+        &mut self,
+        sat: usize,
+        params: &ModelParams,
+        dispatches: usize,
+    ) -> (ModelParams, f64) {
+        self.0.train_local(sat, params, dispatches)
+    }
+
+    fn evaluate(&mut self, params: &ModelParams) -> EvalResult {
+        self.0.evaluate(params)
+    }
+
+    fn aggregate(
+        &mut self,
+        prev: &ModelParams,
+        models: &[&ModelParams],
+        coeffs: &[f32],
+        coeff_prev: f32,
+    ) -> ModelParams {
+        // the pre-PR-5 two-vector assembly, verbatim
+        let mut refs: Vec<&ModelParams> = vec![prev];
+        refs.extend_from_slice(models);
+        let mut weights = vec![coeff_prev];
+        weights.extend_from_slice(coeffs);
+        ModelParams::weighted_sum(&refs, &weights)
+    }
+
+    fn distances(&mut self, models: &[&ModelParams], reference: &ModelParams) -> Vec<f64> {
+        models.iter().map(|m| m.l2_distance(reference)).collect()
+    }
+}
 
 /// Number of cases the default `forall` runs.
 pub const DEFAULT_CASES: usize = 100;

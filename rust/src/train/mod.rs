@@ -68,15 +68,72 @@ pub trait Backend {
 
     /// Weight divergences ‖mᵢ − reference‖₂ (grouping metric, IV-C1).
     fn distances(&mut self, models: &[&ModelParams], reference: &ModelParams) -> Vec<f64>;
+
+    // --- in-place variants (the event-loop fast path) ---------------
+    //
+    // Strategies call these on every train/aggregate step so a run
+    // allocates scratch once, not per event. The defaults delegate to
+    // the allocating methods (the pre-fast-path behaviour, kept as the
+    // executable reference — `testkit::ReferenceSurrogate` relies on
+    // it); hot backends override them allocation-free. Contract: same
+    // floats, same order of operations as the allocating calls.
+
+    /// In-place [`Self::train_local`]: writes the updated params into
+    /// `out` (reusing its allocation) and returns the mean loss.
+    fn train_local_into(
+        &mut self,
+        sat: usize,
+        params: &ModelParams,
+        dispatches: usize,
+        out: &mut ModelParams,
+    ) -> f64 {
+        let (m, loss) = self.train_local(sat, params, dispatches);
+        *out = m;
+        loss
+    }
+
+    /// In-place [`Self::aggregate`]: writes the aggregate into `out`,
+    /// which must not alias `prev` or any of `models`.
+    fn aggregate_into(
+        &mut self,
+        prev: &ModelParams,
+        models: &[&ModelParams],
+        coeffs: &[f32],
+        coeff_prev: f32,
+        out: &mut ModelParams,
+    ) {
+        *out = self.aggregate(prev, models, coeffs, coeff_prev);
+    }
+
+    /// In-place [`Self::distances`]: clears and fills `out`.
+    fn distances_into(
+        &mut self,
+        models: &[&ModelParams],
+        reference: &ModelParams,
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        out.extend(self.distances(models, reference));
+    }
 }
 
 /// FedAvg data-size weights m_n/m over a set of shard sizes.
 pub fn fedavg_weights(sizes: &[usize]) -> Vec<f32> {
+    let mut out = Vec::new();
+    fedavg_weights_into(sizes, &mut out);
+    out
+}
+
+/// In-place [`fedavg_weights`]: clears and fills `out` (identical
+/// values, reused allocation — per-tick callers like FedSpace use it).
+pub fn fedavg_weights_into(sizes: &[usize], out: &mut Vec<f32>) {
+    out.clear();
     let total: usize = sizes.iter().sum();
     if total == 0 {
-        return vec![0.0; sizes.len()];
+        out.resize(sizes.len(), 0.0);
+        return;
     }
-    sizes.iter().map(|&s| s as f32 / total as f32).collect()
+    out.extend(sizes.iter().map(|&s| s as f32 / total as f32));
 }
 
 #[cfg(test)]

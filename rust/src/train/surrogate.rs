@@ -52,6 +52,17 @@ impl SurrogateBackend {
         Self::for_planes(&crate::orbit::uniform_plane_of(n_orbits, sats_per_orbit), iid, base_size)
     }
 
+    /// The backend a config's surrogate run uses: one sizing rule
+    /// shared by the experiment drivers, the run-equivalence suite and
+    /// `bench_runloop` (so they can never drift apart).
+    pub fn for_config(cfg: &crate::config::ExperimentConfig) -> Self {
+        Self::for_planes(
+            &cfg.constellation.plane_of(),
+            cfg.fl.partition == crate::data::Partition::Iid,
+            cfg.data.train_samples / cfg.n_sats().max(1),
+        )
+    }
+
     /// Build from an explicit satellite→plane mapping (multi-shell
     /// constellations; see `WalkerConstellation::plane_of`). The paper
     /// non-IID structure generalizes by *global* plane index: the first
@@ -109,9 +120,22 @@ impl Backend for SurrogateBackend {
         params: &ModelParams,
         dispatches: usize,
     ) -> (ModelParams, f64) {
+        let mut out = ModelParams { data: Vec::with_capacity(CLASSES) };
+        let loss = self.train_local_into(sat, params, dispatches, &mut out);
+        (out, loss)
+    }
+
+    /// Allocation-free training: a stack `[f64; CLASSES]` buffer plus
+    /// the caller's reused `out` — nothing is heap-allocated on the
+    /// event loop once `out` has capacity.
+    fn train_local_into(
+        &mut self,
+        sat: usize,
+        params: &ModelParams,
+        dispatches: usize,
+        out: &mut ModelParams,
+    ) -> f64 {
         let mix = &self.class_mix[sat];
-        // stack buffer: this runs inside every cell's event loop, so
-        // the only allocation per call is the returned ModelParams
         // loud in release too: a mis-sized model must fail fast, not
         // train on a zero-filled tail (the old Vec path panicked here)
         assert_eq!(params.data.len(), CLASSES, "surrogate params dim");
@@ -131,13 +155,15 @@ impl Backend for SurrogateBackend {
                 }
             }
         }
-        let new = ModelParams { data: k.iter().map(|&v| v as f32).collect() };
+        out.data.clear();
+        out.data.extend(k.iter().map(|&v| v as f32));
         // surrogate loss: cross-entropy-ish on local mix
         let local_acc: f64 = (0..CLASSES).map(|c| mix[c] * k[c]).sum();
-        let loss = -(local_acc.clamp(1e-3, 1.0)).ln();
-        (new, loss)
+        -(local_acc.clamp(1e-3, 1.0)).ln()
     }
 
+    // evaluate is already allocation-free: the accuracy reduction runs
+    // on the borrowed knowledge slice and returns a Copy struct.
     fn evaluate(&mut self, params: &ModelParams) -> EvalResult {
         let k = Self::knowledge(params);
         let floor = 1.0 / CLASSES as f64;
@@ -157,15 +183,45 @@ impl Backend for SurrogateBackend {
         coeffs: &[f32],
         coeff_prev: f32,
     ) -> ModelParams {
-        let mut refs: Vec<&ModelParams> = vec![prev];
-        refs.extend_from_slice(models);
-        let mut weights = vec![coeff_prev];
-        weights.extend_from_slice(coeffs);
-        ModelParams::weighted_sum(&refs, &weights)
+        let mut out = ModelParams { data: Vec::with_capacity(prev.dim()) };
+        self.aggregate_into(prev, models, coeffs, coeff_prev, &mut out);
+        out
+    }
+
+    /// Allocation-free aggregation: the zero-init + axpy sequence of
+    /// `weighted_sum([prev, models...], [coeff_prev, coeffs...])`
+    /// applied directly to `out` — same floats, no ref/weight vectors.
+    fn aggregate_into(
+        &mut self,
+        prev: &ModelParams,
+        models: &[&ModelParams],
+        coeffs: &[f32],
+        coeff_prev: f32,
+        out: &mut ModelParams,
+    ) {
+        assert_eq!(models.len(), coeffs.len());
+        out.reset_zeros(prev.dim());
+        out.axpy(coeff_prev, prev);
+        for (m, &c) in models.iter().zip(coeffs) {
+            out.axpy(c, m);
+        }
     }
 
     fn distances(&mut self, models: &[&ModelParams], reference: &ModelParams) -> Vec<f64> {
-        models.iter().map(|m| m.l2_distance(reference)).collect()
+        let mut out = Vec::with_capacity(models.len());
+        self.distances_into(models, reference, &mut out);
+        out
+    }
+
+    /// Allocation-free distance batch into the caller's reused buffer.
+    fn distances_into(
+        &mut self,
+        models: &[&ModelParams],
+        reference: &ModelParams,
+        out: &mut Vec<f64>,
+    ) {
+        out.clear();
+        out.extend(models.iter().map(|m| m.l2_distance(reference)));
     }
 }
 
@@ -238,5 +294,39 @@ mod tests {
         let b = SurrogateBackend::paper_split(5, 8, true, 100);
         let sizes: Vec<usize> = (0..40).map(|s| b.shard_size(s)).collect();
         assert!(sizes.iter().any(|&s| s != sizes[0]));
+    }
+
+    #[test]
+    fn in_place_variants_match_allocating_bitwise() {
+        let mut b = SurrogateBackend::paper_split(5, 8, false, 100);
+        let g = b.init_global(0);
+        let (m0, l0) = b.train_local(3, &g, 4);
+        let mut m0b = ModelParams::zeros(0);
+        let l0b = b.train_local_into(3, &g, 4, &mut m0b);
+        assert_eq!(l0.to_bits(), l0b.to_bits());
+        for (a, c) in m0.data.iter().zip(&m0b.data) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+
+        let (m1, _) = b.train_local(39, &g, 4);
+        let agg = b.aggregate(&g, &[&m0, &m1], &[0.3, 0.2], 0.5);
+        let mut aggb = ModelParams::zeros(0);
+        b.aggregate_into(&g, &[&m0, &m1], &[0.3, 0.2], 0.5, &mut aggb);
+        for (a, c) in agg.data.iter().zip(&aggb.data) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+        // and against the original two-Vec weighted_sum assembly
+        let want = ModelParams::weighted_sum(&[&g, &m0, &m1], &[0.5, 0.3, 0.2]);
+        for (a, c) in want.data.iter().zip(&aggb.data) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
+
+        let d = b.distances(&[&m0, &m1], &g);
+        let mut db = vec![99.0]; // dirty reused buffer
+        b.distances_into(&[&m0, &m1], &g, &mut db);
+        assert_eq!(d.len(), db.len());
+        for (a, c) in d.iter().zip(&db) {
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
     }
 }

@@ -1,0 +1,144 @@
+//! Run-loop fast-path equivalence suite (the PR-5 bit-identity
+//! contract):
+//!
+//! * for every built-in preset, each compared scheme produces
+//!   **bit-identical** accuracy curves and transfer counts on the
+//!   cached-kinematics fast path and on the kept pre-cache reference
+//!   (`SimEnv::set_reference_path(true)` + the allocating
+//!   `testkit::ReferenceSurrogate` plumbing);
+//! * the scheme×scenario sweep writes byte-identical `scenarios.csv`
+//!   at `--jobs 1` and `--jobs 4` with the fast path underneath —
+//!   together the two assertions pin `results/*.csv` to the pre-PR
+//!   bytes on all presets;
+//! * the 1584-satellite `starlink-phase1` stress preset passes the
+//!   same equivalence as a smoke (shortened horizon).
+
+use asyncfleo::config::{ExperimentConfig, SchemeKind};
+use asyncfleo::coordinator::{RunResult, SimEnv};
+use asyncfleo::experiments::drivers::ExpOptions;
+use asyncfleo::experiments::scenarios::run_compare;
+use asyncfleo::fl::{make_strategy, Strategy};
+use asyncfleo::scenario::{Scenario, ScenarioRegistry};
+use asyncfleo::testkit::{assert_runs_identical, ReferenceSurrogate};
+use asyncfleo::train::SurrogateBackend;
+use std::path::PathBuf;
+
+/// The schemes the equivalence contract covers: ours plus one
+/// synchronous and one asynchronous baseline (the scenario sweep trio).
+const SCHEMES: &[SchemeKind] = &[SchemeKind::AsyncFleo, SchemeKind::FedHap, SchemeKind::FedSat];
+
+/// The six presets that existed before the fast path landed.
+const EXISTING_PRESETS: &[&str] = &[
+    "paper-40",
+    "starlink-lite",
+    "polar-star",
+    "sparse-iot",
+    "equatorial-dense",
+    "haps-degraded",
+];
+
+/// Trim a preset for the suite: equivalence needs events, not
+/// convergence — short horizons keep the debug-mode run fast while
+/// still driving broadcasts, relays, training and aggregations through
+/// both paths.
+fn trimmed(cfg: &ExperimentConfig) -> ExperimentConfig {
+    let mut c = cfg.clone();
+    if c.n_sats() >= 1000 {
+        c.fl.horizon_s = 2.0 * 3600.0;
+        c.fl.max_epochs = 2;
+    } else if c.n_sats() >= 100 {
+        c.fl.horizon_s = 6.0 * 3600.0;
+        c.fl.max_epochs = 3;
+    } else {
+        c.fl.horizon_s = 12.0 * 3600.0;
+        c.fl.max_epochs = 4;
+    }
+    c
+}
+
+/// One run on the cached-kinematics fast path.
+fn run_fast(cfg: &ExperimentConfig) -> RunResult {
+    let mut b = SurrogateBackend::for_config(cfg);
+    let mut env = SimEnv::new(cfg, &mut b);
+    make_strategy(cfg.fl.scheme).run(&mut env)
+}
+
+/// One run on the pre-cache reference: per-call site trig + virtual
+/// `dim()` delays, allocating model plumbing.
+fn run_reference(cfg: &ExperimentConfig) -> RunResult {
+    let mut b = ReferenceSurrogate(SurrogateBackend::for_config(cfg));
+    let mut env = SimEnv::new(cfg, &mut b);
+    env.set_reference_path(true);
+    make_strategy(cfg.fl.scheme).run(&mut env)
+}
+
+#[test]
+fn all_existing_presets_bitwise_equal_fast_vs_reference() {
+    let reg = ScenarioRegistry::builtin();
+    for name in EXISTING_PRESETS {
+        let sc = reg.get(name).unwrap_or_else(|| panic!("missing preset {name}"));
+        for &scheme in SCHEMES {
+            let mut cfg = trimmed(&sc.cfg);
+            cfg.fl.scheme = scheme;
+            let fast = run_fast(&cfg);
+            let reference = run_reference(&cfg);
+            assert_runs_identical(
+                &fast,
+                &reference,
+                &format!("{name}/{}", scheme.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn starlink_phase1_smoke_bitwise_equal() {
+    let reg = ScenarioRegistry::builtin();
+    let sc = reg.get("starlink-phase1").expect("stress preset in catalog");
+    let mut cfg = trimmed(&sc.cfg);
+    assert_eq!(cfg.n_sats(), 1584);
+    cfg.fl.scheme = SchemeKind::AsyncFleo;
+    let fast = run_fast(&cfg);
+    let reference = run_reference(&cfg);
+    assert_runs_identical(&fast, &reference, "starlink-phase1/asyncfleo");
+    assert!(
+        !fast.curve.points.is_empty(),
+        "the mega-constellation run must record at least the initial evaluation"
+    );
+}
+
+fn temp_out(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("asyncfleo_runloop_equiv_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn scenario_csv_byte_identical_jobs_1_vs_4_on_existing_presets() {
+    let reg = ScenarioRegistry::builtin();
+    let scenarios: Vec<Scenario> = EXISTING_PRESETS
+        .iter()
+        .map(|name| {
+            let sc = reg.get(name).unwrap();
+            Scenario::new(sc.name.clone(), sc.summary.clone(), trimmed(&sc.cfg))
+        })
+        .collect();
+    let dir1 = temp_out("jobs1");
+    let dir4 = temp_out("jobs4");
+    let opts1 =
+        ExpOptions { out_dir: dir1.clone(), fast: true, surrogate: true, seed: 42, jobs: 1 };
+    let opts4 = ExpOptions { out_dir: dir4.clone(), jobs: 4, ..opts1.clone() };
+    run_compare(&scenarios, &opts1).expect("--jobs 1 sweep");
+    run_compare(&scenarios, &opts4).expect("--jobs 4 sweep");
+    let a = std::fs::read(dir1.join("scenarios.csv")).unwrap();
+    let b = std::fs::read(dir4.join("scenarios.csv")).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "scenarios.csv must be byte-identical at --jobs 1 and --jobs 4");
+    let text = String::from_utf8(a).unwrap();
+    for name in EXISTING_PRESETS {
+        assert!(text.contains(&format!("{name},asyncfleo")), "{name} row present");
+    }
+    let _ = std::fs::remove_dir_all(&dir1);
+    let _ = std::fs::remove_dir_all(&dir4);
+}
