@@ -1,0 +1,173 @@
+//! ISL topology benchmark: graph construction cost, shortest-delay
+//! route throughput, and the sink-satellite scheme's whole-run
+//! wall-time against AsyncFLEO, per scenario preset. Numbers are
+//! determinism-gated: the router must reproduce bit-identical distance
+//! tables and sinksat must reproduce bit-identical curves before
+//! anything is timed.
+//!
+//! Emits `BENCH_topology.json` (graph builds/sec per topology, route
+//! queries/sec, sinksat vs AsyncFLEO run seconds) so the graph
+//! subsystem's perf trajectory is tracked across PRs.
+//!
+//! Run: `cargo bench --offline --bench bench_topology`
+//!      (`-- --presets paper-40,starlink-lite` selects presets; default
+//!      is paper-40 + the two-shell starlink-lite)
+
+use asyncfleo::bench::{bench, print_header, BenchConfig};
+use asyncfleo::comm::LinkParams;
+use asyncfleo::config::{ExperimentConfig, SchemeKind};
+use asyncfleo::coordinator::{Geometry, RunResult, SimEnv};
+use asyncfleo::fl::make_strategy;
+use asyncfleo::orbit::WalkerConstellation;
+use asyncfleo::scenario::ScenarioRegistry;
+use asyncfleo::testkit::assert_runs_identical;
+use asyncfleo::topology::{IslConfig, IslGraph, IslTopology};
+use asyncfleo::train::SurrogateBackend;
+use std::io::Write;
+use std::time::Instant;
+
+/// Route queries per timed iteration.
+const ROUTE_QUERIES: usize = 200;
+/// Payload used for route-delay snapshots (1 Mbit model).
+const PAYLOAD_BITS: f64 = 1.0e6;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let presets: Vec<String> = match args.iter().position(|a| a == "--presets") {
+        Some(i) => {
+            let value = args
+                .get(i + 1)
+                .unwrap_or_else(|| panic!("--presets needs a comma-separated preset list"));
+            value.split(',').map(str::to_string).collect()
+        }
+        None => vec!["paper-40".to_string(), "starlink-lite".to_string()],
+    };
+
+    let reg = ScenarioRegistry::builtin();
+    let mut rows: Vec<String> = Vec::new();
+    for name in &presets {
+        let sc = reg
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown preset {name}; known: {:?}", reg.names()));
+        let cfg = bench_cfg(sc.cfg.clone());
+        let c = WalkerConstellation::from_shells(&cfg.constellation.shells());
+
+        let (builds_ring, builds_grid) = build_benches(name, &c);
+        let routes_per_sec = route_benches(name, &c);
+        let (async_s, sink_s, async_r, sink_r) = run_benches(name, &cfg);
+
+        rows.push(format!(
+            "    {{\"name\": \"{name}\", \"sats\": {}, \"graph_builds_per_sec_ring\": {builds_ring:.1}, \"graph_builds_per_sec_grid\": {builds_grid:.1}, \"route_queries_per_sec\": {routes_per_sec:.1}, \"asyncfleo_run_s\": {async_s:.6}, \"sinksat_run_s\": {sink_s:.6}, \"asyncfleo_epochs\": {}, \"sinksat_epochs\": {}, \"asyncfleo_transfers\": {}, \"sinksat_transfers\": {}}}",
+            cfg.n_sats(),
+            async_r.epochs,
+            sink_r.epochs,
+            async_r.transfers,
+            sink_r.transfers,
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"topology\",\n  \"route_queries_per_iter\": {ROUTE_QUERIES},\n  \"presets\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    let mut f =
+        std::fs::File::create("BENCH_topology.json").expect("create BENCH_topology.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_topology.json");
+    println!("\nwrote BENCH_topology.json");
+}
+
+/// Trim a preset to bench size (same policy as bench_runloop).
+fn bench_cfg(mut cfg: ExperimentConfig) -> ExperimentConfig {
+    if cfg.n_sats() >= 1000 {
+        cfg.fl.horizon_s = cfg.fl.horizon_s.min(12.0 * 3600.0);
+        cfg.fl.max_epochs = cfg.fl.max_epochs.min(6);
+    } else {
+        cfg.fl.horizon_s = cfg.fl.horizon_s.min(24.0 * 3600.0);
+        cfg.fl.max_epochs = cfg.fl.max_epochs.min(12);
+    }
+    cfg
+}
+
+fn grid_cfg() -> IslConfig {
+    IslConfig { topology: IslTopology::Grid, cross_shell: true, ..Default::default() }
+}
+
+/// Graph construction throughput, ring and grid edge sets.
+/// Returns (builds/sec ring, builds/sec grid).
+fn build_benches(name: &str, c: &WalkerConstellation) -> (f64, f64) {
+    print_header(&format!("{name}: graph build, ring vs grid ({} sats)", c.len()));
+    let link = LinkParams::default();
+    let bcfg = BenchConfig { warmup_iters: 2, sample_iters: 10, max_seconds: 120.0 };
+    let r_ring = bench(&format!("{name}: build ring"), &bcfg, || {
+        IslGraph::build(c, &IslConfig::default(), &link).n_edges()
+    });
+    println!("{}", r_ring.report());
+    let r_grid = bench(&format!("{name}: build grid+gateways"), &bcfg, || {
+        IslGraph::build(c, &grid_cfg(), &link).n_edges()
+    });
+    println!("{}", r_grid.report());
+    (1.0 / r_ring.stats.mean.max(1e-12), 1.0 / r_grid.stats.mean.max(1e-12))
+}
+
+/// Shortest-delay route throughput on the connected grid graph,
+/// determinism-gated. Returns route queries/sec.
+fn route_benches(name: &str, c: &WalkerConstellation) -> f64 {
+    print_header(&format!("{name}: route queries ({ROUTE_QUERIES} per iter)"));
+    let g = IslGraph::build(c, &grid_cfg(), &LinkParams::default());
+    assert!(g.is_connected(), "{name}: bench graph must be connected");
+
+    // determinism gate: repeated queries reproduce the distance table
+    let p1 = g.shortest_delays(c, 0, 900.0, PAYLOAD_BITS);
+    let p2 = g.shortest_delays(c, 0, 900.0, PAYLOAD_BITS);
+    assert_eq!(p1.parent, p2.parent, "{name}: router parents must be deterministic");
+    for (a, b) in p1.dist.iter().zip(&p2.dist) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{name}: router delays must be deterministic");
+    }
+
+    let n = c.len();
+    let bcfg = BenchConfig { warmup_iters: 2, sample_iters: 10, max_seconds: 120.0 };
+    let r = bench(&format!("{name}: shortest_delays"), &bcfg, || {
+        let mut acc = 0.0f64;
+        for k in 0..ROUTE_QUERIES {
+            let t = (k as f64 * 61.0) % 5400.0;
+            let plan = g.shortest_delays(c, k % n, t, PAYLOAD_BITS);
+            acc += plan.dist[(k + n / 2) % n];
+        }
+        acc
+    });
+    println!("{}", r.report());
+    let per_sec = ROUTE_QUERIES as f64 / r.stats.mean.max(1e-12);
+    println!("{name}: {:.1} route queries/s", per_sec);
+    per_sec
+}
+
+/// Whole-run wall-time: sinksat (graph-routed) vs AsyncFLEO, with a
+/// sinksat determinism gate. Returns (async s, sinksat s, results).
+fn run_benches(name: &str, cfg: &ExperimentConfig) -> (f64, f64, RunResult, RunResult) {
+    print_header(&format!("{name}: whole runs, sinksat vs AsyncFLEO (surrogate)"));
+    // prewarm the shared geometry so run timings measure the schemes
+    Geometry::shared(cfg);
+
+    let gate_a = timed_run(cfg, SchemeKind::SinkSat).0;
+    let gate_b = timed_run(cfg, SchemeKind::SinkSat).0;
+    assert_runs_identical(&gate_a, &gate_b, &format!("{name}/sinksat determinism"));
+
+    let (async_r, async_s) = timed_run(cfg, SchemeKind::AsyncFleo);
+    let (sink_r, sink_s) = timed_run(cfg, SchemeKind::SinkSat);
+    println!(
+        "{name}: asyncfleo {async_s:.3} s ({} epochs), sinksat {sink_s:.3} s ({} plane updates)",
+        async_r.epochs, sink_r.epochs
+    );
+    (async_s, sink_s, async_r, sink_r)
+}
+
+fn timed_run(cfg: &ExperimentConfig, scheme: SchemeKind) -> (RunResult, f64) {
+    let mut c = cfg.clone();
+    c.fl.scheme = scheme;
+    let mut strategy = make_strategy(scheme);
+    let mut b = SurrogateBackend::for_config(&c);
+    let mut env = SimEnv::new(&c, &mut b);
+    let t0 = Instant::now();
+    let r = strategy.run(&mut env);
+    (r, t0.elapsed().as_secs_f64())
+}

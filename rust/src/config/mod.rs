@@ -11,6 +11,7 @@ use crate::comm::LinkParams;
 use crate::data::{DatasetKind, Partition};
 use crate::faults::{FaultConfig, FaultScenario};
 use crate::orbit::{ShellSpec, WalkerPattern};
+use crate::topology::{IslConfig, IslTopology};
 use parser::{Doc, ParseError, Value};
 
 /// FL scheme under test (AsyncFLEO + the paper's baselines, Sec. V-A).
@@ -30,6 +31,10 @@ pub enum SchemeKind {
     FedSpace,
     /// FedHAP: synchronous FL with HAP parameter servers.
     FedHap,
+    /// Sink-satellite scheduling (arXiv 2302.13447): per-plane ring
+    /// collection into a PS-visibility-scheduled sink satellite,
+    /// asynchronous per-plane global updates.
+    SinkSat,
 }
 
 impl SchemeKind {
@@ -42,6 +47,7 @@ impl SchemeKind {
             "fedsat" => SchemeKind::FedSat,
             "fedspace" => SchemeKind::FedSpace,
             "fedhap" => SchemeKind::FedHap,
+            "sinksat" => SchemeKind::SinkSat,
             _ => return None,
         })
     }
@@ -55,6 +61,7 @@ impl SchemeKind {
             SchemeKind::FedSat => "fedsat",
             SchemeKind::FedSpace => "fedspace",
             SchemeKind::FedHap => "fedhap",
+            SchemeKind::SinkSat => "sinksat",
         }
     }
 
@@ -250,6 +257,10 @@ pub struct ExperimentConfig {
     pub constellation: ConstellationConfig,
     pub placement: PsPlacement,
     pub link: LinkParams,
+    /// ISL graph topology + per-shell link budgets (the `[isl]` and
+    /// `[isl_linkN]` TOML sections; defaults reproduce the paper's
+    /// intra-plane rings under the global link budget).
+    pub isl: IslConfig,
     pub fl: FlConfig,
     pub data: DataConfig,
     /// Fault-injection knobs (nominal = the perfect network).
@@ -274,6 +285,7 @@ impl ExperimentConfig {
             },
             placement: PsPlacement::HapRolla,
             link: LinkParams::default(),
+            isl: IslConfig::default(),
             fl: FlConfig {
                 scheme: SchemeKind::AsyncFleo,
                 model: ModelKind::Cnn,
@@ -340,6 +352,20 @@ impl ExperimentConfig {
             errs.push(format!(
                 "at most 8 extra shells are supported ({} given)",
                 self.constellation.extra_shells.len()
+            ));
+        }
+        // [isl_link1]..[isl_link9] is the parseable range, and a link
+        // override beyond the shell list would silently do nothing
+        let n_shells = 1 + self.constellation.extra_shells.len();
+        if self.isl.shell_links.len() > 9 {
+            errs.push(format!(
+                "at most 9 per-shell ISL link overrides are supported ({} given)",
+                self.isl.shell_links.len()
+            ));
+        } else if self.isl.shell_links.len() > n_shells {
+            errs.push(format!(
+                "{} ISL link overrides for {n_shells} shell(s)",
+                self.isl.shell_links.len()
             ));
         }
         if self.fl.lr <= 0.0 || self.fl.lr > 1.0 {
@@ -424,6 +450,18 @@ impl ExperimentConfig {
             "link.noise_temp_k" => self.link.noise_temp_k = need_f64()?,
             "link.data_rate_mbps" => self.link.data_rate_bps = need_f64()? * 1e6,
             "link.bandwidth_mhz" => self.link.bandwidth_hz = need_f64()? * 1e6,
+            // ISL graph topology ([isl]; per-shell budgets live in the
+            // [isl_linkN] sections handled below)
+            "isl.topology" => {
+                self.isl.topology = IslTopology::parse(need_str()?)
+                    .ok_or(format!("{key}: unknown topology (ring|grid)"))?
+            }
+            "isl.cross_shell" => {
+                self.isl.cross_shell = val.as_bool().ok_or(format!("{key}: expected bool"))?
+            }
+            "isl.doppler" => {
+                self.isl.doppler = val.as_bool().ok_or(format!("{key}: expected bool"))?
+            }
             "fl.scheme" => {
                 self.fl.scheme =
                     SchemeKind::parse(need_str()?).ok_or(format!("{key}: unknown scheme"))?
@@ -474,12 +512,23 @@ impl ExperimentConfig {
             "faults.sat_mttr_s" => self.faults.sat_mttr_s = need_f64()?,
             "faults.hap_mtbf_s" => self.faults.hap_mtbf_s = need_f64()?,
             "faults.hap_mttr_s" => self.faults.hap_mttr_s = need_f64()?,
+            "faults.isl_edge_outage_period_s" => {
+                self.faults.isl_edge_outage_period_s = need_f64()?
+            }
+            "faults.isl_edge_outage_duration_s" => {
+                self.faults.isl_edge_outage_duration_s = need_f64()?
+            }
             "seed" => self.seed = need_usize()? as u64,
             other => {
                 // [shellN] sections (N >= 2) declare extra constellation
                 // shells; shell 1 is the [constellation] section itself.
                 if let Some((idx, field)) = parse_shell_key(other) {
                     return self.apply_shell_key(idx, field, key, val);
+                }
+                // [isl_linkN] sections (N >= 1) declare per-shell ISL
+                // link budgets; N = 1 is the primary shell.
+                if let Some((idx, field)) = parse_isl_link_key(other) {
+                    return self.apply_isl_link_key(idx, field, key, val);
                 }
                 return Err(format!("unknown config key: {other}"));
             }
@@ -532,13 +581,56 @@ impl ExperimentConfig {
         Ok(())
     }
 
+    /// Apply one `[isl_linkN]` key. Like shells, the link overrides
+    /// must be declared contiguously from `isl_link1`; unspecified
+    /// fields of a new entry default to the paper's Table-I budget
+    /// (order-independent — `to_toml` always dumps every field, so
+    /// configs round-trip exactly).
+    fn apply_isl_link_key(
+        &mut self,
+        idx: usize,
+        field: &str,
+        key: &str,
+        val: &Value,
+    ) -> Result<(), String> {
+        let links = &mut self.isl.shell_links;
+        if idx > links.len() {
+            return Err(format!(
+                "{key}: isl_link{} declared without isl_link{}",
+                idx + 1,
+                idx
+            ));
+        }
+        if idx == links.len() {
+            links.push(LinkParams::default());
+        }
+        let l = &mut links[idx];
+        let need_f64 = || val.as_f64().ok_or(format!("{key}: expected number"));
+        match field {
+            "tx_power_dbm" => l.tx_power_dbm = need_f64()?,
+            "antenna_gain_dbi" => {
+                let g = need_f64()?;
+                l.tx_gain_dbi = g;
+                l.rx_gain_dbi = g;
+            }
+            "carrier_ghz" => l.carrier_hz = need_f64()? * 1e9,
+            "noise_temp_k" => l.noise_temp_k = need_f64()?,
+            "data_rate_mbps" => l.data_rate_bps = need_f64()? * 1e6,
+            "bandwidth_mhz" => l.bandwidth_hz = need_f64()? * 1e6,
+            "processing_delay_s" => l.processing_delay_s = need_f64()?,
+            other => return Err(format!("unknown isl_link key: {other}")),
+        }
+        Ok(())
+    }
+
     /// Serialize back to the TOML subset (round-trips through
     /// [`Self::from_toml`]; embedded in result CSVs). Extra shells are
-    /// dumped as `[shellN]` sections (N starting at 2) after the main
-    /// sections.
+    /// dumped as `[shellN]` sections (N starting at 2) and per-shell
+    /// ISL budgets as `[isl_linkN]` sections (N starting at 1) after
+    /// the main sections.
     pub fn to_toml(&self) -> String {
         let mut out = format!(
-            "seed = {}\n\n[constellation]\npattern = \"{}\"\norbits = {}\nsats_per_orbit = {}\naltitude_km = {}\ninclination_deg = {}\nphasing = {}\n\n[ps]\nplacement = \"{}\"\nmin_elevation_deg = {}\n\n[link]\ntx_power_dbm = {}\nantenna_gain_dbi = {}\ncarrier_ghz = {}\nnoise_temp_k = {}\ndata_rate_mbps = {}\nbandwidth_mhz = {}\n\n[fl]\nscheme = \"{}\"\nmodel = \"{}\"\ndataset = \"{}\"\npartition = \"{}\"\nlr = {}\nlocal_dispatches = {}\nmax_epochs = {}\nhorizon_hours = {}\ntrain_time_s = {}\n\n[data]\ntrain_samples = {}\ntest_samples = {}\n\n[faults]\nloss_prob = {}\nmax_retransmits = {}\nretransmit_backoff_s = {}\noutage_period_s = {}\noutage_duration_s = {}\nisl_outage = {}\nsat_mtbf_s = {}\nsat_mttr_s = {}\nhap_mtbf_s = {}\nhap_mttr_s = {}\n",
+            "seed = {}\n\n[constellation]\npattern = \"{}\"\norbits = {}\nsats_per_orbit = {}\naltitude_km = {}\ninclination_deg = {}\nphasing = {}\n\n[ps]\nplacement = \"{}\"\nmin_elevation_deg = {}\n\n[link]\ntx_power_dbm = {}\nantenna_gain_dbi = {}\ncarrier_ghz = {}\nnoise_temp_k = {}\ndata_rate_mbps = {}\nbandwidth_mhz = {}\n\n[fl]\nscheme = \"{}\"\nmodel = \"{}\"\ndataset = \"{}\"\npartition = \"{}\"\nlr = {}\nlocal_dispatches = {}\nmax_epochs = {}\nhorizon_hours = {}\ntrain_time_s = {}\n\n[data]\ntrain_samples = {}\ntest_samples = {}\n\n[faults]\nloss_prob = {}\nmax_retransmits = {}\nretransmit_backoff_s = {}\noutage_period_s = {}\noutage_duration_s = {}\nisl_outage = {}\nsat_mtbf_s = {}\nsat_mttr_s = {}\nhap_mtbf_s = {}\nhap_mttr_s = {}\nisl_edge_outage_period_s = {}\nisl_edge_outage_duration_s = {}\n",
             self.seed,
             self.constellation.pattern.name(),
             self.constellation.n_orbits,
@@ -578,7 +670,28 @@ impl ExperimentConfig {
             self.faults.sat_mttr_s,
             self.faults.hap_mtbf_s,
             self.faults.hap_mttr_s,
+            self.faults.isl_edge_outage_period_s,
+            self.faults.isl_edge_outage_duration_s,
         );
+        out.push_str(&format!(
+            "\n[isl]\ntopology = \"{}\"\ncross_shell = {}\ndoppler = {}\n",
+            self.isl.topology.name(),
+            self.isl.cross_shell,
+            self.isl.doppler,
+        ));
+        for (i, l) in self.isl.shell_links.iter().enumerate() {
+            out.push_str(&format!(
+                "\n[isl_link{}]\ntx_power_dbm = {}\nantenna_gain_dbi = {}\ncarrier_ghz = {}\nnoise_temp_k = {}\ndata_rate_mbps = {}\nbandwidth_mhz = {}\nprocessing_delay_s = {}\n",
+                i + 1,
+                l.tx_power_dbm,
+                l.tx_gain_dbi,
+                l.carrier_hz / 1e9,
+                l.noise_temp_k,
+                l.data_rate_bps / 1e6,
+                l.bandwidth_hz / 1e6,
+                l.processing_delay_s,
+            ));
+        }
         for (i, sh) in self.constellation.extra_shells.iter().enumerate() {
             out.push_str(&format!(
                 "\n[shell{}]\npattern = \"{}\"\norbits = {}\nsats_per_orbit = {}\naltitude_km = {}\ninclination_deg = {}\nphasing = {}\n",
@@ -607,6 +720,20 @@ fn parse_shell_key(key: &str) -> Option<(usize, &str)> {
         return None;
     }
     Some((n - 2, field))
+}
+
+/// `"isl_link1.data_rate_mbps"` → `Some((0, "data_rate_mbps"))`: index
+/// into `isl.shell_links` plus the field name. Numbering starts at 1
+/// (the primary shell); at most `[isl_link9]`, so the sorted flattened
+/// document keeps the sections in declaration order.
+fn parse_isl_link_key(key: &str) -> Option<(usize, &str)> {
+    let rest = key.strip_prefix("isl_link")?;
+    let (num, field) = rest.split_once('.')?;
+    let n: usize = num.parse().ok()?;
+    if !(1..=9).contains(&n) {
+        return None;
+    }
+    Some((n - 1, field))
 }
 
 #[cfg(test)]
@@ -672,6 +799,7 @@ mod tests {
             SchemeKind::FedSat,
             SchemeKind::FedSpace,
             SchemeKind::FedHap,
+            SchemeKind::SinkSat,
         ] {
             assert_eq!(SchemeKind::parse(s.name()), Some(s));
         }
@@ -685,6 +813,7 @@ mod tests {
         assert!(!SchemeKind::AsyncFleo.is_synchronous());
         assert!(!SchemeKind::FedSat.is_synchronous());
         assert!(!SchemeKind::FedSpace.is_synchronous());
+        assert!(!SchemeKind::SinkSat.is_synchronous(), "per-plane async updates");
     }
 
     #[test]
@@ -790,6 +919,48 @@ mod tests {
         c.constellation.extra_shells = vec![ShellSpec::delta(2, 2, 50_000.0, 53.0, 0)];
         let errs = c.validate();
         assert!(errs.iter().any(|e| e.contains("shell2")), "{errs:?}");
+    }
+
+    #[test]
+    fn isl_config_roundtrips_through_toml() {
+        let mut c0 = ExperimentConfig::paper_defaults();
+        c0.isl.topology = IslTopology::Grid;
+        c0.isl.cross_shell = true;
+        c0.isl.doppler = false;
+        c0.isl.shell_links =
+            vec![LinkParams { data_rate_bps: 2.0e6, tx_power_dbm: 33.0, ..LinkParams::default() }];
+        let c1 = ExperimentConfig::from_toml(&c0.to_toml()).unwrap();
+        assert_eq!(c0, c1);
+        // defaults round-trip too (the [isl] section is always dumped)
+        let d0 = ExperimentConfig::paper_defaults();
+        assert_eq!(ExperimentConfig::from_toml(&d0.to_toml()).unwrap(), d0);
+    }
+
+    #[test]
+    fn isl_sections_parse() {
+        let c = ExperimentConfig::from_toml(
+            "[isl]\ntopology = \"grid\"\ncross_shell = true\n\n[isl_link1]\ndata_rate_mbps = 2\n",
+        )
+        .unwrap();
+        assert_eq!(c.isl.topology, IslTopology::Grid);
+        assert!(c.isl.cross_shell);
+        assert!(c.isl.doppler, "default kept");
+        assert_eq!(c.isl.shell_links.len(), 1);
+        assert_eq!(c.isl.shell_links[0].data_rate_bps, 2.0e6);
+        assert_eq!(c.isl.shell_links[0].tx_power_dbm, 40.0, "unset fields keep Table I");
+        // non-contiguous link sections and unknown keys are rejected
+        assert!(ExperimentConfig::from_toml("[isl_link2]\ndata_rate_mbps = 2\n").is_err());
+        assert!(ExperimentConfig::from_toml("[isl_link1]\nbogus = 2\n").is_err());
+        assert!(ExperimentConfig::from_toml("[isl]\ntopology = \"mesh\"\n").is_err());
+    }
+
+    #[test]
+    fn isl_link_overrides_beyond_shells_fail_validation() {
+        let mut c = ExperimentConfig::paper_defaults();
+        c.isl.shell_links = vec![LinkParams::default(); 2]; // 2 overrides, 1 shell
+        assert!(!c.validate().is_empty());
+        c.constellation.extra_shells = vec![ShellSpec::delta(2, 2, 550.0, 53.0, 0)];
+        assert!(c.validate().is_empty());
     }
 
     #[test]

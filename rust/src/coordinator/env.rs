@@ -213,6 +213,26 @@ impl<'a> SimEnv<'a> {
         self.apply_faults(LinkClass::Isl { sat_a, sat_b }, t, base)
     }
 
+    /// One-hop transfer delay over typed ISL graph edge `e` at time
+    /// `t`: the Doppler-derated, per-shell-budget base delay from
+    /// [`crate::topology::IslGraph::edge_delay_s`], fault-adjusted
+    /// (endpoint churn, orbit outages and the typed per-edge outage
+    /// windows all participate). The hop primitive of graph-routed
+    /// schemes (`fl::baselines::sinksat`).
+    pub fn graph_edge_delay(&mut self, e: usize, t: f64) -> f64 {
+        self.state.transfers += 1;
+        let edge = self.geo.isl.edges()[e];
+        let base =
+            self.geo
+                .isl
+                .edge_delay_s(&self.geo.constellation, e, t, self.state.payload_bits);
+        self.apply_faults(
+            LinkClass::Isl { sat_a: edge.a as usize, sat_b: edge.b as usize },
+            t,
+            base,
+        )
+    }
+
     /// HAP↔HAP (IHL) hop delay at time `t`, fault-adjusted.
     pub fn ihl_hop_delay(&mut self, site_a: usize, site_b: usize, t: f64) -> f64 {
         self.state.transfers += 1;

@@ -21,6 +21,7 @@ use super::contact::ContactPlan;
 use crate::comm::LinkParams;
 use crate::config::{ExperimentConfig, PsPlacement};
 use crate::orbit::{GeodeticSite, SitePropagator, WalkerConstellation, WalkerPattern};
+use crate::topology::IslGraph;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -30,6 +31,14 @@ pub struct Geometry {
     pub sites: Vec<GeodeticSite>,
     pub plan: ContactPlan,
     pub link: LinkParams,
+    /// The explicit ISL graph (typed edges, per-shell link budgets,
+    /// Doppler-derated delays — `topology::graph`), built once per
+    /// geometry from the config's `[isl]` section. The default `ring`
+    /// topology reproduces `ring_neighbors` exactly; the pre-graph
+    /// schemes keep evaluating the implicit ring directly, so they are
+    /// bit-identical with the graph present (pinned by
+    /// `tests/topology_equivalence.rs`).
+    pub isl: IslGraph,
     /// Per-site hoisted position formulas (latitude trigonometry paid
     /// once here): the run loop's delay calls evaluate site positions
     /// through these, bit-identical to `GeodeticSite::position_eci` —
@@ -51,6 +60,10 @@ struct GeometryKey {
     min_elevation_bits: u64,
     horizon_bits: u64,
     link_bits: [u64; 8],
+    /// The `[isl]` section's contribution (topology, cross-shell,
+    /// Doppler flag, per-shell link budgets) — the ISL graph lives on
+    /// the geometry, so its knobs must key the cache.
+    isl_bits: Vec<u64>,
 }
 
 /// One shell's geometry-relevant bits.
@@ -94,6 +107,7 @@ impl GeometryKey {
                 l.data_rate_bps.to_bits(),
                 l.processing_delay_s.to_bits(),
             ],
+            isl_bits: cfg.isl.key_bits(),
         }
     }
 }
@@ -134,7 +148,8 @@ impl Geometry {
             cfg.fl.horizon_s,
         );
         let site_props = sites.iter().map(SitePropagator::new).collect();
-        Geometry { constellation, sites, plan, link: cfg.link, site_props }
+        let isl = IslGraph::build(&constellation, &cfg.isl, &cfg.link);
+        Geometry { constellation, sites, plan, link: cfg.link, isl, site_props }
     }
 
     /// The hoisted position formula of site `site` (what the run loop's
@@ -230,6 +245,27 @@ mod tests {
         assert!(!Arc::ptr_eq(&a, &Geometry::shared(&pl)), "placement keys");
 
         // the base entry is still shared and still built once
+        assert!(Arc::ptr_eq(&a, &Geometry::shared(&base)));
+        assert_eq!(Geometry::build_count(&base), 1);
+    }
+
+    #[test]
+    fn isl_knobs_key_fresh_instances() {
+        let base = unique_cfg(1240.125);
+        let a = Geometry::shared(&base);
+        assert!(a.isl.n_edges() > 0, "ring edges built by default");
+
+        let mut grid = base.clone();
+        grid.isl.topology = crate::topology::IslTopology::Grid;
+        let g = Geometry::shared(&grid);
+        assert!(!Arc::ptr_eq(&a, &g), "isl topology keys");
+        assert!(g.isl.n_edges() > a.isl.n_edges(), "grid adds cross-plane edges");
+
+        let mut linked = base.clone();
+        linked.isl.shell_links =
+            vec![LinkParams { data_rate_bps: 2.0e6, ..LinkParams::default() }];
+        assert!(!Arc::ptr_eq(&a, &Geometry::shared(&linked)), "shell links key");
+
         assert!(Arc::ptr_eq(&a, &Geometry::shared(&base)));
         assert_eq!(Geometry::build_count(&base), 1);
     }

@@ -3,9 +3,11 @@
 //!
 //! For every selected [`Scenario`] (a complete experiment world:
 //! multi-shell constellation, site layout, data distribution, optional
-//! faults) the driver runs AsyncFLEO plus one synchronous (FedHAP) and
-//! one asynchronous (FedSat) baseline *in that world* — same geometry,
-//! same seeds, same impairments — and tabulates accuracy, convergence
+//! faults) the driver runs AsyncFLEO plus one synchronous (FedHAP)
+//! baseline, one asynchronous (FedSat) baseline, and the sink-satellite
+//! scheme (SinkSat, routed over the ISL topology graph) *in that
+//! world* — same geometry, same seeds, same impairments — and
+//! tabulates accuracy, convergence
 //! and communication cost into `results/scenarios.csv`. This is the
 //! cross-design generalization probe: the paper's claims are about
 //! contact-pattern statistics, and every scenario has different ones.
@@ -24,13 +26,16 @@ use crate::scenario::Scenario;
 use crate::util::fmt_hm;
 use anyhow::Result;
 
-/// Schemes compared in every scenario: ours plus one synchronous and
-/// one asynchronous baseline. All run at the *scenario's* placement —
-/// the world is the variable under test, not the sink layout.
+/// Schemes compared in every scenario: ours plus one synchronous
+/// baseline, one asynchronous baseline, and the sink-satellite
+/// follow-up scheme routed over the ISL graph. All run at the
+/// *scenario's* placement — the world is the variable under test, not
+/// the sink layout.
 pub const SCENARIO_SCHEMES: &[(&str, SchemeKind)] = &[
     ("AsyncFLEO", SchemeKind::AsyncFleo),
     ("FedHAP", SchemeKind::FedHap),
     ("FedSat", SchemeKind::FedSat),
+    ("SinkSat", SchemeKind::SinkSat),
 ];
 
 /// Accuracy level for the stopping-rule-independent speed column.
@@ -167,5 +172,6 @@ mod tests {
         assert!(SCENARIO_SCHEMES.len() >= 2);
         assert!(SCENARIO_SCHEMES.iter().any(|&(_, s)| s == SchemeKind::AsyncFleo));
         assert!(SCENARIO_SCHEMES.iter().any(|&(_, s)| s == SchemeKind::FedHap));
+        assert!(SCENARIO_SCHEMES.iter().any(|&(_, s)| s == SchemeKind::SinkSat));
     }
 }

@@ -81,6 +81,13 @@ pub struct FaultConfig {
     pub hap_mtbf_s: f64,
     /// Mean HAP downtime per failure, seconds.
     pub hap_mttr_s: f64,
+    /// Typed per-ISL-edge outage cycle period, seconds (0 = none).
+    /// Unlike `isl_outage` (which blacks out whole orbits alongside
+    /// eclipse windows), these windows hit individual graph edges with
+    /// a per-edge deterministic phase.
+    pub isl_edge_outage_period_s: f64,
+    /// Per-ISL-edge outage window length within each period, seconds.
+    pub isl_edge_outage_duration_s: f64,
 }
 
 impl Default for FaultConfig {
@@ -103,6 +110,8 @@ impl FaultConfig {
             sat_mttr_s: 0.0,
             hap_mtbf_s: 0.0,
             hap_mttr_s: 0.0,
+            isl_edge_outage_period_s: 0.0,
+            isl_edge_outage_duration_s: 0.0,
         }
     }
 
@@ -154,6 +163,7 @@ impl FaultConfig {
             && (self.outage_period_s <= 0.0 || self.outage_duration_s <= 0.0)
             && self.sat_mtbf_s <= 0.0
             && self.hap_mtbf_s <= 0.0
+            && (self.isl_edge_outage_period_s <= 0.0 || self.isl_edge_outage_duration_s <= 0.0)
     }
 
     /// Validate invariants; returns a list of problems (empty = OK).
@@ -177,6 +187,14 @@ impl FaultConfig {
         if self.hap_mtbf_s > 0.0 && self.hap_mttr_s <= 0.0 {
             errs.push("faults.hap_mtbf_s needs hap_mttr_s > 0".into());
         }
+        if self.isl_edge_outage_period_s > 0.0
+            && self.isl_edge_outage_duration_s >= self.isl_edge_outage_period_s
+        {
+            errs.push(format!(
+                "faults.isl_edge_outage_duration_s {} must be shorter than the period {}",
+                self.isl_edge_outage_duration_s, self.isl_edge_outage_period_s
+            ));
+        }
         for (name, v) in [
             ("retransmit_backoff_s", self.retransmit_backoff_s),
             ("outage_period_s", self.outage_period_s),
@@ -185,6 +203,8 @@ impl FaultConfig {
             ("sat_mttr_s", self.sat_mttr_s),
             ("hap_mtbf_s", self.hap_mtbf_s),
             ("hap_mttr_s", self.hap_mttr_s),
+            ("isl_edge_outage_period_s", self.isl_edge_outage_period_s),
+            ("isl_edge_outage_duration_s", self.isl_edge_outage_duration_s),
         ] {
             if !v.is_finite() || v < 0.0 {
                 errs.push(format!("faults.{name} {v} must be finite and >= 0"));
@@ -250,5 +270,19 @@ mod tests {
         let mut c = FaultConfig::preset(FaultScenario::Eclipse, 1.0);
         c.outage_duration_s = c.outage_period_s + 1.0;
         assert_eq!(c.validate().len(), 1);
+    }
+
+    #[test]
+    fn isl_edge_outage_knobs_activate_and_validate() {
+        let mut c = FaultConfig::nominal();
+        c.isl_edge_outage_period_s = 3600.0;
+        assert!(c.is_nop(), "period without duration stays a no-op");
+        c.isl_edge_outage_duration_s = 600.0;
+        assert!(!c.is_nop());
+        assert!(c.validate().is_empty(), "{:?}", c.validate());
+        c.isl_edge_outage_duration_s = 3700.0;
+        assert_eq!(c.validate().len(), 1, "duration must fit inside the period");
+        c.isl_edge_outage_duration_s = f64::NAN;
+        assert!(!c.validate().is_empty());
     }
 }

@@ -101,7 +101,7 @@ pub struct FaultSchedule {
 /// `FaultConfig::validate`).
 #[derive(Clone, PartialEq, Eq, Hash)]
 struct ScheduleKey {
-    cfg_bits: [u64; 8],
+    cfg_bits: [u64; 10],
     max_retransmits: u32,
     isl_outage: bool,
     seed: u64,
@@ -128,6 +128,8 @@ impl ScheduleKey {
                 cfg.sat_mttr_s.to_bits(),
                 cfg.hap_mtbf_s.to_bits(),
                 cfg.hap_mttr_s.to_bits(),
+                cfg.isl_edge_outage_period_s.to_bits(),
+                cfg.isl_edge_outage_duration_s.to_bits(),
             ],
             max_retransmits: cfg.max_retransmits,
             isl_outage: cfg.isl_outage,
@@ -374,12 +376,43 @@ impl FaultSchedule {
             LinkClass::SatSite { site, .. } => {
                 self.site_outages.get(site).map_or(t, |o| o.clear_time(t))
             }
-            LinkClass::Isl { sat_a, .. } => {
+            LinkClass::Isl { sat_a, sat_b } => {
                 let orbit = self.plane_of.get(sat_a).copied().unwrap_or(0);
-                self.orbit_outages.get(orbit).map_or(t, |o| o.clear_time(t))
+                let t = self.orbit_outages.get(orbit).map_or(t, |o| o.clear_time(t));
+                // the transfer fixpoint re-applies outage_clear, so a
+                // clear instant that lands inside the other window
+                // still converges
+                self.edge_outage_clear(sat_a, sat_b, t)
             }
             LinkClass::Ihl { .. } => t,
         }
+    }
+
+    /// Earliest time `>= t` outside the typed per-edge outage window of
+    /// ISL edge `(a, b)`. Each edge gets its own deterministic phase,
+    /// hashed from the channel seed and the direction-normalized
+    /// endpoint pair, so outages roll across the graph instead of
+    /// blacking out every edge in lockstep. Identity when the
+    /// edge-outage knobs are zero (every pre-existing scenario).
+    pub fn edge_outage_clear(&self, a: usize, b: usize, t: f64) -> f64 {
+        let period = self.cfg.isl_edge_outage_period_s;
+        let duration = self.cfg.isl_edge_outage_duration_s;
+        if !self.enabled || period <= 0.0 || duration <= 0.0 {
+            return t;
+        }
+        let (lo, hi) = (a.min(b) as u64, a.max(b) as u64);
+        let mut h = self.channel_seed;
+        for v in [4u64, lo, hi] {
+            h = mix64(h ^ v.wrapping_mul(0x9E3779B97F4A7C15));
+        }
+        // top 53 bits -> uniform [0, 1) phase fraction
+        let frac = (h >> 11) as f64 / (1u64 << 53) as f64;
+        let windows = OutageWindows {
+            period_s: period,
+            duration_s: duration,
+            phase_s: frac * period,
+        };
+        windows.clear_time(t)
     }
 
     /// Push the schedule's discrete transitions (churn up/down, outage
@@ -568,6 +601,14 @@ impl FaultPlan {
             self.stats.retransmits += retransmits as u64;
         }
         LinkOutcome { delay_s: delay, retransmits, newly_observed }
+    }
+
+    /// [`Self::transfer`] for one typed ISL graph edge `(a, b)` — the
+    /// entry point `topology::IslGraph` routing uses per hop. The edge's
+    /// own outage window participates in the deferral fixpoint alongside
+    /// endpoint churn and orbit-level outages.
+    pub fn edge_transfer(&mut self, a: usize, b: usize, t: f64, base_delay_s: f64) -> LinkOutcome {
+        self.transfer(LinkClass::Isl { sat_a: a, sat_b: b }, t, base_delay_s)
     }
 
     /// Push the plan's discrete transitions (churn up/down, outage
@@ -816,6 +857,61 @@ mod tests {
             assert!(ev.time_s >= last);
             last = ev.time_s;
             assert!(matches!(ev.kind, EventKind::SatChurn { .. }));
+        }
+    }
+
+    #[test]
+    fn typed_edge_outages_defer_single_edges() {
+        let mut cfg = FaultConfig::nominal();
+        cfg.isl_edge_outage_period_s = 7200.0;
+        cfg.isl_edge_outage_duration_s = 1800.0;
+        assert!(!cfg.is_nop());
+        assert!(cfg.validate().is_empty());
+        let mut p = FaultPlan::new(&cfg, 33, 40, 2, 8, 72.0 * 3600.0);
+        assert!(p.enabled());
+        let sched = p.schedule().clone();
+        // find an instant inside edge (2,3)'s window (25% duty cycle)
+        let t_in = (0..72)
+            .map(|i| i as f64 * 100.0)
+            .find(|&t| sched.edge_outage_clear(2, 3, t) > t)
+            .expect("a 25% duty cycle must be hit by a 100 s scan");
+        // the window is direction-normalized and deferral-visible
+        let clear = sched.edge_outage_clear(2, 3, t_in);
+        assert_eq!(clear, sched.edge_outage_clear(3, 2, t_in));
+        let out = p.edge_transfer(2, 3, t_in, 0.1);
+        assert!((out.delay_s - ((clear - t_in) + 0.1)).abs() < 1e-9);
+        assert_eq!(p.stats().deferrals, 1);
+        // phases are per-edge: some other ring edge is clear at t_in
+        let other = (4..40)
+            .find(|&a| sched.edge_outage_clear(a, a + 1, t_in) == t_in)
+            .expect("independent phases cannot all cover one instant");
+        let out = p.edge_transfer(other, other + 1, t_in, 0.1);
+        assert_eq!(out.delay_s, 0.1, "clear edge is untouched");
+        // star links never see edge outages
+        let out = p.transfer(LinkClass::SatSite { sat: 2, site: 0 }, t_in, 0.2);
+        assert_eq!(out.delay_s, 0.2);
+    }
+
+    #[test]
+    fn edge_outages_are_deterministic_and_off_by_default() {
+        let mut cfg = FaultConfig::nominal();
+        cfg.isl_edge_outage_period_s = 3600.0;
+        cfg.isl_edge_outage_duration_s = 900.0;
+        let a = FaultPlan::new(&cfg, 5, 24, 2, 8, 36.0 * 3600.0);
+        let b = FaultPlan::new(&cfg, 5, 24, 2, 8, 36.0 * 3600.0);
+        for t in [0.0, 500.0, 2000.0, 3500.0] {
+            assert_eq!(
+                a.schedule().edge_outage_clear(7, 8, t),
+                b.schedule().edge_outage_clear(7, 8, t),
+                "same seed, same windows"
+            );
+        }
+        // every pre-existing preset leaves the edge oracle as identity
+        for &s in crate::faults::config::FaultScenario::ALL {
+            let p = plan(s, 1.0, 9);
+            for t in [0.0, 1234.5, 50_000.0] {
+                assert_eq!(p.schedule().edge_outage_clear(0, 1, t), t, "{s:?}");
+            }
         }
     }
 

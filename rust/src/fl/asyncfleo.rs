@@ -123,6 +123,30 @@ struct RunScratch {
     used: Vec<bool>,
     /// Distinct-orbit working set of the pre-grouping trigger check.
     orbit_ids: Vec<usize>,
+    /// Free-pool of per-arriving-model owned buffers: training results
+    /// check a `ModelParams` out, buffer eviction / dedup replacement /
+    /// undeliverable results return it. Bounded, so a long run recycles
+    /// a small working set instead of allocating per arrival.
+    pool: Vec<ModelParams>,
+}
+
+/// Upper bound on pooled model buffers (more than the sink ever holds
+/// in flight per epoch in practice; beyond it, buffers just drop).
+const MODEL_POOL_CAP: usize = 32;
+
+impl RunScratch {
+    /// Check a model buffer out of the pool (empty if the pool is dry;
+    /// `train_local_into` sizes it).
+    fn take_model(&mut self) -> ModelParams {
+        self.pool.pop().unwrap_or(ModelParams { data: Vec::new() })
+    }
+
+    /// Return a no-longer-needed model buffer to the pool.
+    fn recycle(&mut self, m: ModelParams) {
+        if self.pool.len() < MODEL_POOL_CAP {
+            self.pool.push(m);
+        }
+    }
 }
 
 impl Strategy for AsyncFleo {
@@ -230,8 +254,16 @@ impl Strategy for AsyncFleo {
                         env.state.faults.note_dropped();
                         continue;
                     }
-                    let (model, _loss) =
-                        env.state.backend.train_local(sat, &globals[epoch as usize], dispatches);
+                    // the result buffer comes from the free-pool (same
+                    // in-place training API, same floats — the fresh
+                    // allocation only happens while the pool is dry)
+                    let mut model = scratch.take_model();
+                    env.state.backend.train_local_into(
+                        sat,
+                        &globals[epoch as usize],
+                        dispatches,
+                        &mut model,
+                    );
                     let meta = self.metadata(env, sat, t, epoch);
                     // route to a HAP, then along the ring to the sink
                     let route = if self.disable_isl_relay {
@@ -244,19 +276,34 @@ impl Strategy for AsyncFleo {
                     } else {
                         uplink_route(env, sat, t)
                     };
-                    if let Some((site, t_site, _hops)) = route {
-                        let t_sink = ihl_to_sink(env, &ring, site, t_site);
-                        if t_sink <= horizon {
-                            in_flight.insert((sat, epoch), (model, meta));
-                            queue.push(crate::sim::Event::new(
-                                t_sink,
-                                EventKind::HapLocalArrival { hap: ring.sink(), origin_sat: sat, epoch },
-                            ));
-                        } else if env.state.faults.enabled() {
-                            env.state.faults.note_dropped(); // deferred past horizon
+                    let delivered = match route {
+                        Some((site, t_site, _hops)) => {
+                            let t_sink = ihl_to_sink(env, &ring, site, t_site);
+                            if t_sink <= horizon {
+                                queue.push(crate::sim::Event::new(
+                                    t_sink,
+                                    EventKind::HapLocalArrival {
+                                        hap: ring.sink(),
+                                        origin_sat: sat,
+                                        epoch,
+                                    },
+                                ));
+                                true
+                            } else {
+                                false // deferred past horizon
+                            }
                         }
-                    } else if env.state.faults.enabled() {
-                        env.state.faults.note_dropped(); // no reachable PS anymore
+                        None => false, // no reachable PS anymore
+                    };
+                    if delivered {
+                        if let Some((old, _)) = in_flight.insert((sat, epoch), (model, meta)) {
+                            scratch.recycle(old);
+                        }
+                    } else {
+                        scratch.recycle(model);
+                        if env.state.faults.enabled() {
+                            env.state.faults.note_dropped();
+                        }
                     }
                     // start next training round if a newer global arrived
                     let done = t + train_time(sat, env);
@@ -276,8 +323,16 @@ impl Strategy for AsyncFleo {
                         if let Some(existing) =
                             buffer.iter_mut().find(|b| b.meta.sat_id == origin_sat)
                         {
+                            // either the displaced or the discarded
+                            // model's buffer returns to the free-pool
                             if meta.epoch >= existing.meta.epoch {
-                                *existing = Buffered { params, meta, arrived_epoch: beta };
+                                let old = std::mem::replace(
+                                    existing,
+                                    Buffered { params, meta, arrived_epoch: beta },
+                                );
+                                scratch.recycle(old.params);
+                            } else {
+                                scratch.recycle(params);
                             }
                         } else {
                             buffer.push(Buffered { params, meta, arrived_epoch: beta });
@@ -575,8 +630,9 @@ impl AsyncFleo {
         }
 
         // retention: drop used models and over-aged stale ones
-        // (in-place compaction in buffer order — same survivors, same
-        // order as the old drain-into-keep pass)
+        // (order-preserving in-place compaction — same survivors, same
+        // order as the old drain-into-keep pass; evicted model buffers
+        // go back to the free-pool)
         scratch.used.clear();
         scratch.used.resize(buffer.len(), false);
         for &(i, _) in &scratch.selection.chosen {
@@ -584,13 +640,18 @@ impl AsyncFleo {
         }
         let retention = self.stale_retention_epochs;
         let cur = *beta;
-        let used = &scratch.used;
-        let mut idx = 0;
-        buffer.retain(|b| {
-            let keep = !used[idx] && cur.saturating_sub(b.arrived_epoch) < retention;
-            idx += 1;
-            keep
-        });
+        let mut kept = 0;
+        for i in 0..buffer.len() {
+            let keep =
+                !scratch.used[i] && cur.saturating_sub(buffer[i].arrived_epoch) < retention;
+            if keep {
+                buffer.swap(kept, i);
+                kept += 1;
+            }
+        }
+        for b in buffer.drain(kept..) {
+            scratch.recycle(b.params);
+        }
 
         // evaluate + record + convergence
         let e = env.state.backend.evaluate(globals.last().unwrap());

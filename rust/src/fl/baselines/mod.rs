@@ -9,13 +9,16 @@
 //! * [`fedisl`]   — FedISL: synchronous + intra-orbit ISL relay
 //!   (arbitrary-GS and North-Pole "ideal" variants via placement);
 //! * [`fedsat`]   — FedSat: asynchronous per-visit updates, NP GS;
-//! * [`fedspace`] — FedSpace: scheduled aggregation + raw-data uploads.
+//! * [`fedspace`] — FedSpace: scheduled aggregation + raw-data uploads;
+//! * [`sinksat`]  — sink-satellite scheduling (arXiv 2302.13447):
+//!   per-plane collection over the ISL graph, async plane updates.
 
 pub mod fedavg;
 pub mod fedhap;
 pub mod fedisl;
 pub mod fedsat;
 pub mod fedspace;
+pub mod sinksat;
 
 use crate::coordinator::SimEnv;
 use crate::fl::propagation::sat_receive_times;
@@ -40,10 +43,45 @@ pub(crate) const SYNC_MIN_ROUNDS: u64 = 4;
 ///
 /// Returns `None` if any satellite cannot complete within the horizon.
 pub(crate) fn sync_round_end(env: &mut SimEnv, t: f64, use_isl: bool) -> Option<f64> {
+    sync_round(env, t, use_isl).map(|(end, _)| end)
+}
+
+/// [`sync_round_end`] plus typed churn consumption (the PR-1 gap):
+/// returns the round end and the per-satellite participation mask. A
+/// satellite dark at the round start skips the pass — it is neither
+/// waited on nor aggregated — and a PS contact at a failed site slides
+/// to the next live one. Both predicates are always-true with faults
+/// disabled, so clean rounds make the exact same delay calls in the
+/// same order and stay bit-identical.
+pub(crate) fn sync_round(
+    env: &mut SimEnv,
+    t: f64,
+    use_isl: bool,
+) -> Option<(f64, Vec<bool>)> {
     let geo = env.geo.clone();
     let n_sats = geo.constellation.len();
     let horizon = env.cfg.fl.horizon_s;
     let train = env.cfg.fl.train_time_s;
+
+    let participants: Vec<bool> =
+        (0..n_sats).map(|sat| env.state.faults.sat_alive(sat, t)).collect();
+
+    // the sink-side guard: first contact whose site is alive at contact
+    // time (the first contact unconditionally when faults are disabled)
+    fn next_live_contact(env: &mut SimEnv, sat: usize, from: f64) -> Option<(f64, usize)> {
+        let plan = env.geo.clone();
+        let mut t_try = from;
+        for _ in 0..8 {
+            match plan.plan.next_visible_any(sat, t_try) {
+                Some((tv, site)) if env.state.faults.hap_alive(site, tv) => {
+                    return Some((tv, site));
+                }
+                Some((tv, _)) => t_try = tv + 300.0,
+                None => return None,
+            }
+        }
+        None
+    }
 
     // --- delivery ---
     let recv: Vec<f64> = if use_isl {
@@ -51,19 +89,27 @@ pub(crate) fn sync_round_end(env: &mut SimEnv, t: f64, use_isl: bool) -> Option<
         sat_receive_times(env, &bcasts)
     } else {
         (0..n_sats)
-            .map(|sat| match geo.plan.next_visible_any(sat, t) {
-                Some((tv, site)) => {
-                    let d = env.site_link_delay(site, sat, tv);
-                    tv + d
+            .map(|sat| {
+                if !participants[sat] {
+                    return f64::INFINITY; // skipped pass: no downlink happens
                 }
-                None => f64::INFINITY,
+                match next_live_contact(env, sat, t) {
+                    Some((tv, site)) => {
+                        let d = env.site_link_delay(site, sat, tv);
+                        tv + d
+                    }
+                    None => f64::INFINITY,
+                }
             })
             .collect()
     };
 
-    // --- training + upload ---
+    // --- training + upload (skipped sats don't gate the round) ---
     let mut round_end: f64 = t;
     for sat in 0..n_sats {
+        if !participants[sat] {
+            continue;
+        }
         if !recv[sat].is_finite() || recv[sat] > horizon {
             return None;
         }
@@ -71,7 +117,7 @@ pub(crate) fn sync_round_end(env: &mut SimEnv, t: f64, use_isl: bool) -> Option<
         let up = if use_isl {
             crate::fl::propagation::uplink_route(env, sat, done).map(|(_, arr, _)| arr)
         } else {
-            geo.plan.next_visible_any(sat, done).map(|(tv, site)| {
+            next_live_contact(env, sat, done).map(|(tv, site)| {
                 let d = env.site_link_delay(site, sat, tv);
                 tv + d
             })
@@ -81,7 +127,7 @@ pub(crate) fn sync_round_end(env: &mut SimEnv, t: f64, use_isl: bool) -> Option<
             _ => return None,
         }
     }
-    Some(round_end)
+    Some((round_end, participants))
 }
 
 /// The synchronous outer loop shared by FedAvg / FedHAP / FedISL:
@@ -111,15 +157,37 @@ pub(crate) fn run_synchronous(
     let mut t = 0.0f64;
     let mut round: u64 = 0;
     while round < env.cfg.fl.max_epochs {
-        let Some(end) = sync_round_end(env, t, use_isl) else {
+        let Some((end, participants)) = sync_round(env, t, use_isl) else {
             break; // straggler cannot complete within horizon
         };
-        // all satellites train from the same global model (Eq. 4)
-        for (sat, local) in locals.iter_mut().enumerate() {
-            env.state.backend.train_local_into(sat, &global, dispatches, local);
+        // typed churn: a round with no live satellite produces nothing;
+        // retry once the next one can start (progress is guaranteed —
+        // churn downtimes are finite)
+        if participants.iter().all(|&p| !p) {
+            t = end.max(t) + 600.0;
+            if t >= env.cfg.fl.horizon_s {
+                break;
+            }
+            continue;
         }
-        let refs: Vec<&ModelParams> = locals.iter().collect();
-        env.state.backend.aggregate_into(&global, &refs, &weights, 0.0, &mut next);
+        // all participating satellites train from the same global model
+        // (Eq. 4); dark ones skip the pass. Clean rounds keep the full
+        // set and the precomputed weights — bit-identical.
+        for (sat, local) in locals.iter_mut().enumerate() {
+            if participants[sat] {
+                env.state.backend.train_local_into(sat, &global, dispatches, local);
+            }
+        }
+        if participants.iter().all(|&p| p) {
+            let refs: Vec<&ModelParams> = locals.iter().collect();
+            env.state.backend.aggregate_into(&global, &refs, &weights, 0.0, &mut next);
+        } else {
+            let idx: Vec<usize> = (0..n_sats).filter(|&s| participants[s]).collect();
+            let sub_sizes: Vec<usize> = idx.iter().map(|&s| sizes[s]).collect();
+            let sub_weights = fedavg_weights(&sub_sizes);
+            let refs: Vec<&ModelParams> = idx.iter().map(|&s| &locals[s]).collect();
+            env.state.backend.aggregate_into(&global, &refs, &sub_weights, 0.0, &mut next);
+        }
         std::mem::swap(&mut global, &mut next);
         round += 1;
         t = end;
@@ -155,6 +223,31 @@ mod tests {
         let mut env = SimEnv::new(&cfg, &mut b);
         let end = sync_round_end(&mut env, 0.0, false).expect("round completes in 72h");
         assert!(end > 0.0 && end <= 72.0 * 3600.0);
+    }
+
+    #[test]
+    fn sync_round_mask_consumes_typed_churn() {
+        use crate::faults::{FaultConfig, FaultScenario};
+        // clean: everyone participates
+        let cfg = env_cfg(PsPlacement::HapRolla, 72.0);
+        let mut b = SurrogateBackend::paper_split(5, 8, false, 100);
+        let mut env = SimEnv::new(&cfg, &mut b);
+        let (_, mask) = sync_round(&mut env, 0.0, false).expect("clean round");
+        assert!(mask.iter().all(|&p| p), "no faults, no skips");
+        // churn: a dark satellite skips the pass instead of gating it
+        let mut cfg = env_cfg(PsPlacement::HapRolla, 72.0);
+        cfg.faults = FaultConfig::preset(FaultScenario::Churn, 1.0);
+        let mut b = SurrogateBackend::paper_split(5, 8, false, 100);
+        let mut env = SimEnv::new(&cfg, &mut b);
+        let sat = (0..40)
+            .find(|&s| !env.state.faults.sat_downtime(s).is_empty())
+            .expect("full-intensity churn over 72 h must hit someone");
+        let (down, up) = env.state.faults.sat_downtime(sat)[0];
+        let mid = 0.5 * (down + up);
+        if let Some((_, mask)) = sync_round(&mut env, mid, false) {
+            assert!(!mask[sat], "dark satellite must skip the pass");
+            assert!(mask.iter().filter(|&&p| p).count() > 0);
+        }
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! Sink-satellite scheduling (the AsyncFLEO authors' follow-up,
+//! arXiv 2302.13447): per-plane intra-plane model propagation with one
+//! *sink satellite* per orbital plane.
+//!
+//! Each plane runs its own pipelined round: every live member trains
+//! from the current global model, the plane's models are collected at
+//! the sink over the ISL graph (shortest-delay routes on the plane
+//! ring, Doppler-derated per-shell budgets — `topology::IslGraph`), and
+//! the sink uploads the plane aggregate at its next PS visibility. The
+//! sink is *scheduled*: the round picks the live member whose next PS
+//! contact after training is earliest, so the collected aggregate waits
+//! the least before reaching the parameter server. The PS applies an
+//! immediate asynchronous update `w ← (1-α)·w + α·w_plane`, the sink
+//! downloads the fresh global and the plane starts over — planes never
+//! wait for each other, which is where the scheme's delay win over
+//! synchronous ISL baselines comes from.
+//!
+//! Faults are consumed as typed events: dark members skip the round's
+//! pass, a plane with no live members retries later, a failed PS site
+//! at contact time pushes the upload to the next live visibility, and
+//! every collection hop runs through the per-edge fault oracle
+//! (including the typed per-ISL-edge outage windows). All guards are
+//! provably inert when faults are disabled.
+
+use crate::coordinator::{RunResult, SimEnv};
+use crate::fl::Strategy;
+use crate::metrics::ConvergenceDetector;
+use crate::model::ModelParams;
+
+/// Mixing rate of one asynchronous plane update (scaled by the plane's
+/// relative data share, clipped for stability — the `fedsat` rule
+/// lifted from satellites to planes).
+const BASE_ALPHA: f64 = 0.12;
+/// Evaluate the global model every this many async plane updates.
+const EVAL_EVERY: usize = 10;
+/// Retry delay when a plane has no live member at a round start.
+const DEAD_PLANE_RETRY_S: f64 = 600.0;
+/// Retry delay past a failed PS site's contact, and the cap on upload
+/// retries per round (bounded so a round always terminates).
+const SITE_RETRY_S: f64 = 300.0;
+const MAX_UPLOAD_TRIES: usize = 8;
+
+#[derive(Default)]
+pub struct SinkSat;
+
+impl Strategy for SinkSat {
+    fn name(&self) -> &'static str {
+        "sinksat"
+    }
+
+    fn run(&mut self, env: &mut SimEnv) -> RunResult {
+        let geo = env.geo.clone();
+        let c = &geo.constellation;
+        let n_planes = c.n_orbits;
+        let dispatches = env.cfg.fl.local_dispatches;
+        let train_time = env.cfg.fl.train_time_s;
+        let horizon = env.cfg.fl.horizon_s;
+        let payload = env.payload_bits();
+        let mut detector = ConvergenceDetector::new(8, 0.003);
+
+        let mut global = env.state.backend.init_global(env.cfg.seed as i32);
+        let e0 = env.state.backend.evaluate(&global);
+        env.record(0.0, 0, e0.accuracy, e0.loss);
+
+        let total_shard: f64 =
+            (0..c.len()).map(|s| env.state.backend.shard_size(s) as f64).sum();
+        let mean_plane_shard = total_shard / n_planes.max(1) as f64;
+
+        // reused round buffers: one local slot per largest-plane member,
+        // plus the plane-aggregate / global double buffers (in-place
+        // backend API — no per-round allocation of model storage)
+        let max_plane = (0..n_planes).map(|p| c.orbit_members(p).len()).max().unwrap_or(0);
+        let mut locals: Vec<ModelParams> =
+            (0..max_plane).map(|_| ModelParams { data: Vec::new() }).collect();
+        let mut plane_model = ModelParams { data: Vec::new() };
+        let mut next = ModelParams { data: Vec::with_capacity(global.dim()) };
+
+        // per-plane pipeline clock: when the plane's sink holds the
+        // global model and the next round may begin
+        let mut next_start = vec![0.0f64; n_planes];
+        let mut updates: u64 = 0;
+        let mut converged = false;
+        let mut last_t = 0.0f64;
+
+        loop {
+            // earliest-starting plane next; ties break toward the lower
+            // plane index (strict less keeps the first minimum)
+            let mut p_best: Option<usize> = None;
+            for p in 0..n_planes {
+                let better = match p_best {
+                    None => next_start[p].is_finite(),
+                    Some(bp) => next_start[p] < next_start[bp],
+                };
+                if better {
+                    p_best = Some(p);
+                }
+            }
+            let Some(p) = p_best else { break };
+            let t0 = next_start[p];
+            if t0 > horizon || converged {
+                break;
+            }
+
+            // typed churn: a dark member's pass simply doesn't happen;
+            // an empty plane retries later (always all-live when faults
+            // are disabled)
+            let alive: Vec<usize> =
+                c.orbit_members(p).filter(|&m| env.state.faults.sat_alive(m, t0)).collect();
+            if alive.is_empty() {
+                next_start[p] = t0 + DEAD_PLANE_RETRY_S;
+                continue;
+            }
+
+            // sink scheduling: the live member whose next PS contact
+            // after training is earliest (ties: lower id, because the
+            // ascending scan only replaces on strictly-earlier)
+            let t_train = t0 + train_time;
+            let mut sink: Option<(f64, usize)> = None;
+            for &m in &alive {
+                if let Some((tv, _)) = geo.plan.next_visible_any(m, t_train) {
+                    if sink.map_or(true, |(bt, _)| tv < bt) {
+                        sink = Some((tv, m));
+                    }
+                }
+            }
+            let Some((_, sink)) = sink else {
+                next_start[p] = f64::INFINITY; // plane never sees a PS again
+                continue;
+            };
+
+            // members train from the current global, then the models
+            // ride the ISL graph to the sink (one Dijkstra snapshot per
+            // round; per-hop delays through the edge fault oracle)
+            let routes = geo.isl.shortest_delays(c, sink, t_train, payload);
+            let mut t_collect = t_train;
+            let mut shards: Vec<f64> = Vec::with_capacity(alive.len());
+            for (i, &m) in alive.iter().enumerate() {
+                env.state.backend.train_local_into(m, &global, dispatches, &mut locals[i]);
+                shards.push(env.state.backend.shard_size(m) as f64);
+                if m == sink {
+                    continue;
+                }
+                let Some(path) = routes.path_to(m) else { continue };
+                // walk the sink→m path backwards: the hop sequence the
+                // member's model takes toward the sink
+                let mut arr = t_train;
+                for w in path.windows(2).rev() {
+                    let e = geo.isl.edge_between(w[0], w[1]).expect("route uses graph edges");
+                    arr += env.graph_edge_delay(e, arr);
+                }
+                t_collect = t_collect.max(arr);
+            }
+
+            // plane aggregate: FedAvg over the collected members
+            let plane_shard: f64 = shards.iter().sum();
+            let wts: Vec<f32> = shards.iter().map(|&s| (s / plane_shard) as f32).collect();
+            let refs: Vec<&ModelParams> = locals[..alive.len()].iter().collect();
+            env.state.backend.aggregate_into(&global, &refs, &wts, 0.0, &mut plane_model);
+
+            // upload at the sink's next visibility with a live PS site
+            // (the hap_alive guard never fires with faults disabled)
+            let mut t_try = t_collect;
+            let mut upload = None;
+            for _ in 0..MAX_UPLOAD_TRIES {
+                match geo.plan.next_visible_any(sink, t_try) {
+                    Some((tv, site)) if env.state.faults.hap_alive(site, tv) => {
+                        upload = Some((tv, site));
+                        break;
+                    }
+                    Some((tv, _)) => t_try = tv + SITE_RETRY_S,
+                    None => break,
+                }
+            }
+            let Some((tv, site)) = upload.filter(|&(tv, _)| tv <= horizon) else {
+                if env.state.faults.enabled() {
+                    for _ in &alive {
+                        env.state.faults.note_dropped();
+                    }
+                }
+                next_start[p] = f64::INFINITY;
+                continue;
+            };
+            let d_up = env.site_link_delay(site, sink, tv);
+            let t_arr = tv + d_up;
+
+            // immediate asynchronous update, α scaled by the plane's
+            // share of the data (fedsat's rule, per plane)
+            let alpha =
+                (BASE_ALPHA * plane_shard / mean_plane_shard).clamp(0.01, 0.5) as f32;
+            env.state
+                .backend
+                .aggregate_into(&global, &[&plane_model], &[alpha], 1.0 - alpha, &mut next);
+            std::mem::swap(&mut global, &mut next);
+            updates += 1;
+            last_t = t_arr;
+            if updates as usize % EVAL_EVERY == 0 {
+                let e = env.state.backend.evaluate(&global);
+                env.record(t_arr, updates, e.accuracy, e.loss);
+                converged = detector.update(e.accuracy) && updates >= 30;
+            }
+
+            // the sink downloads the fresh global; the plane pipeline
+            // restarts as soon as it lands
+            let d_down = env.site_link_delay(site, sink, t_arr);
+            next_start[p] = t_arr + d_down;
+        }
+
+        if env.state.curve.points.len() < 2 {
+            let e = env.state.backend.evaluate(&global);
+            env.record(last_t.max(1.0), updates, e.accuracy, e.loss);
+        }
+        RunResult::from_env("sinksat", env, updates)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, PsPlacement, SchemeKind};
+    use crate::coordinator::SimEnv;
+    use crate::train::SurrogateBackend;
+
+    fn run_with(cfg: &ExperimentConfig) -> RunResult {
+        let mut b = SurrogateBackend::for_config(cfg);
+        let mut env = SimEnv::new(cfg, &mut b);
+        SinkSat.run(&mut env)
+    }
+
+    fn paper_cfg(horizon_h: f64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::paper_defaults();
+        cfg.placement = PsPlacement::TwoHaps;
+        cfg.fl.horizon_s = horizon_h * 3600.0;
+        cfg
+    }
+
+    #[test]
+    fn plane_updates_accumulate_and_learn() {
+        let r = run_with(&paper_cfg(24.0));
+        assert!(r.epochs > 10, "plane updates {}", r.epochs);
+        assert!(r.final_accuracy > 0.5, "acc {}", r.final_accuracy);
+        assert!(r.transfers > r.epochs, "collection hops must show up in transfers");
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let cfg = paper_cfg(12.0);
+        let a = run_with(&cfg);
+        let b = run_with(&cfg);
+        assert_eq!(a.epochs, b.epochs);
+        assert_eq!(a.transfers, b.transfers);
+        assert_eq!(a.curve.points.len(), b.curve.points.len());
+        for (x, y) in a.curve.points.iter().zip(&b.curve.points) {
+            assert_eq!(x.time_s.to_bits(), y.time_s.to_bits());
+            assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits());
+        }
+    }
+
+    #[test]
+    fn survives_churn_with_typed_skips() {
+        use crate::faults::{FaultConfig, FaultScenario};
+        let mut cfg = paper_cfg(24.0);
+        cfg.faults = FaultConfig::preset(FaultScenario::Churn, 1.0);
+        let r = run_with(&cfg);
+        assert!(r.epochs > 0, "churn must not starve every plane");
+        let clean = run_with(&paper_cfg(24.0));
+        assert_eq!(clean.fault_stats, crate::faults::FaultStats::default());
+    }
+
+    #[test]
+    fn factory_builds_sinksat() {
+        let s = crate::fl::make_strategy(SchemeKind::SinkSat);
+        assert_eq!(s.name(), "sinksat");
+    }
+}

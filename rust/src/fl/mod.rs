@@ -1,5 +1,7 @@
 //! Federated-learning strategies: AsyncFLEO (the paper's contribution,
-//! Sec. IV) and the five baselines it is evaluated against (Sec. V).
+//! Sec. IV), the five baselines it is evaluated against (Sec. V), and
+//! the authors' follow-up sink-satellite scheme
+//! (`baselines::sinksat`, arXiv 2302.13447).
 //!
 //! Every strategy implements [`Strategy`] and runs against a
 //! [`SimEnv`]: geometry and link delays drive the *simulated clock*
@@ -32,6 +34,7 @@ pub fn make_strategy(kind: SchemeKind) -> Box<dyn Strategy> {
         SchemeKind::FedSat => Box::new(baselines::fedsat::FedSat::default()),
         SchemeKind::FedSpace => Box::new(baselines::fedspace::FedSpace::default()),
         SchemeKind::FedHap => Box::new(baselines::fedhap::FedHap),
+        SchemeKind::SinkSat => Box::new(baselines::sinksat::SinkSat),
     }
 }
 
@@ -49,6 +52,7 @@ mod tests {
             SchemeKind::FedSat,
             SchemeKind::FedSpace,
             SchemeKind::FedHap,
+            SchemeKind::SinkSat,
         ] {
             let s = make_strategy(kind);
             assert!(!s.name().is_empty());

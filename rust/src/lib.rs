@@ -17,7 +17,18 @@
 //!   formulas — pinned by bitwise tests);
 //! * [`comm`] — the paper's RF link model (Eqs. 5–9): FSPL, SNR,
 //!   Shannon rate, delay composition;
-//! * [`topology`] — the ring-of-stars SAT↔HAP topology (Sec. IV-A);
+//! * [`topology`] — the ring-of-stars SAT↔HAP topology (Sec. IV-A)
+//!   plus the explicit ISL graph (PR 6): satellites as nodes, typed
+//!   edges (intra-plane ring / cross-plane grid / cross-shell
+//!   gateways) carrying per-shell `LinkParams`, per-edge delays from
+//!   the actual geometry with Doppler-derated rates
+//!   (`orbit::doppler` in the hot path), and deterministic
+//!   shortest-delay routing. The `Ring` edge set is the executable
+//!   reference — it reproduces `ring_neighbors` exactly, so every
+//!   pre-graph scheme keeps its semantics
+//!   (`tests/topology_equivalence.rs` pins all six bitwise against
+//!   the kept reference path on every preset;
+//!   `BENCH_topology.json` tracks build/route throughput);
 //! * [`sim`] — a discrete-event simulation engine (the "event loop");
 //! * [`data`] — synthetic class-structured datasets + IID / paper
 //!   non-IID partitioning (MNIST/CIFAR stand-ins, DESIGN.md §1);
@@ -32,12 +43,19 @@
 //!   the allocating calls; `testkit::ReferenceSurrogate` keeps the old
 //!   plumbing executable as the reference);
 //! * [`fl`] — the FL strategies: AsyncFLEO (grouping, staleness
-//!   discounting, model propagation — Algorithms 1 & 2) and the five
-//!   baselines (FedAvg, FedISL, FedSat, FedSpace, FedHAP);
+//!   discounting, model propagation — Algorithms 1 & 2), the five
+//!   baselines (FedAvg, FedISL, FedSat, FedSpace, FedHAP), and the
+//!   authors' follow-up sink-satellite scheme (`sinksat`,
+//!   arXiv 2302.13447): one scheduled sink per orbital plane collects
+//!   the plane's models over the ISL graph and uploads at its
+//!   earliest PS visibility;
 //! * [`faults`] — deterministic fault injection: packet loss with
-//!   retransmission, eclipse outage windows, satellite churn and HAP
-//!   failures, applied transparently to every strategy through the
-//!   env's link-delay calls; split into an immutable shareable
+//!   retransmission, eclipse outage windows, typed per-ISL-edge
+//!   outage windows (per-edge deterministic phases), satellite churn
+//!   and HAP failures, applied transparently to every strategy
+//!   through the env's link-delay calls — and consumed as *typed
+//!   events* by every scheme (a dead satellite or failed PS site
+//!   skips the pass); split into an immutable shareable
 //!   `FaultSchedule` and per-run `FaultPlan` counters;
 //! * [`coordinator`] — the orchestrator that drives everything. Split
 //!   along the sweep axis: `coordinator::Geometry` holds everything
@@ -65,7 +83,9 @@
 //!   run speedups);
 //! * [`scenario`] — declarative experiment worlds: a named preset or a
 //!   TOML file (with `[shellN]` sections for multi-shell
-//!   constellations) becomes a complete, reproducible
+//!   constellations and `[isl]` / `[isl_linkN]` sections for the ISL
+//!   graph topology and per-shell link budgets) becomes a complete,
+//!   reproducible
 //!   `ExperimentConfig`; the built-in `ScenarioRegistry` catalogs ≥7
 //!   presets (paper-40, starlink-lite, polar-star, sparse-iot,
 //!   equatorial-dense, haps-degraded, and the 1584-satellite

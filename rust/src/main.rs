@@ -47,9 +47,11 @@ USAGE:
       equatorial-dense, haps-degraded, starlink-phase1 mega-scale);
       --list shows them, --dump prints
       a preset as TOML (editable, reloadable via --config FILE, with
-      [shellN] sections for multi-shell constellations). Running a
-      selection sweeps AsyncFLEO vs FedHAP vs FedSat in each world into
-      DIR/scenarios.csv. Surrogate backend by default (contact-pattern
+      [shellN] sections for multi-shell constellations and [isl] /
+      [isl_linkN] sections for the ISL topology graph). Running a
+      selection sweeps AsyncFLEO vs FedHAP vs FedSat vs SinkSat (the
+      sink-satellite scheme routed over the ISL graph) in each world
+      into DIR/scenarios.csv. Surrogate backend by default (contact-pattern
       studies; --pjrt opts into the compiled artifacts); output is
       byte-identical at any --jobs N.
 

@@ -138,6 +138,83 @@ mod tests {
     }
 
     #[test]
+    fn zero_shift_at_closest_approach() {
+        use crate::util::Vec3;
+        // Velocity perpendicular to the line of sight is exactly the
+        // closest-approach condition: range rate 0, shift 0.
+        let d = doppler_shift_hz(
+            Vec3::ZERO,
+            Vec3::ZERO,
+            Vec3::new(1000.0, 0.0, 0.0),
+            Vec3::new(0.0, 7.5, 0.0),
+            F,
+        );
+        assert_eq!(d, 0.0);
+
+        // Same fact on real orbits: at the sampled distance minimum of
+        // a cross-plane pair the shift passes through ~0, far below the
+        // pair's worst case.
+        let c = WalkerConstellation::paper();
+        let (a, b) = (0usize, 8usize);
+        let mut t_min = 0.0;
+        let mut d_min = f64::INFINITY;
+        let mut t = 0.0;
+        while t <= 7200.0 {
+            let ea = &c.satellites[a].elements;
+            let eb = &c.satellites[b].elements;
+            let d = (satellite_position_eci(ea, t) - satellite_position_eci(eb, t)).norm();
+            if d < d_min {
+                d_min = d;
+                t_min = t;
+            }
+            t += 1.0;
+        }
+        let at_min = sat_sat_doppler_hz(&c, a, b, t_min, F).abs();
+        let worst = max_abs_doppler_hz(&c, a, b, 7200.0, 60.0, F);
+        assert!(
+            at_min < 0.05 * worst,
+            "closest approach shift {at_min} Hz vs worst {worst} Hz"
+        );
+    }
+
+    #[test]
+    fn shift_is_endpoint_symmetric() {
+        // Swapping tx and rx negates both the separation vector and the
+        // relative velocity, leaving the range rate — and the shift —
+        // bit-identical. The graph relies on this to keep edge delays
+        // direction-free.
+        let c = WalkerConstellation::paper();
+        for (a, b) in [(0usize, 1usize), (0, 8), (5, 23)] {
+            for &t in &[0.0, 900.0, 3600.0] {
+                let ab = sat_sat_doppler_hz(&c, a, b, t, F);
+                let ba = sat_sat_doppler_hz(&c, b, a, t, F);
+                assert_eq!(ab.to_bits(), ba.to_bits(), "pair ({a},{b}) at t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn shift_magnitude_bounded_by_relative_speed() {
+        // |Δf| <= |v_rel| f / c: the radial component never exceeds the
+        // full relative speed, itself at most |v_a| + |v_b|.
+        let c = WalkerConstellation::paper();
+        for (a, b) in [(0usize, 1usize), (0, 8), (10, 30)] {
+            let mut t = 0.0;
+            while t <= 7200.0 {
+                let va = satellite_velocity_eci(&c.satellites[a].elements, t).norm();
+                let vb = satellite_velocity_eci(&c.satellites[b].elements, t).norm();
+                let bound = (va + vb) * F / SPEED_OF_LIGHT_KM_S;
+                let shift = sat_sat_doppler_hz(&c, a, b, t, F).abs();
+                assert!(
+                    shift <= bound * (1.0 + 1e-12),
+                    "pair ({a},{b}) at t={t}: {shift} Hz > bound {bound} Hz"
+                );
+                t += 120.0;
+            }
+        }
+    }
+
+    #[test]
     fn doppler_scale_sanity() {
         // 5 km/s radial at 2.4 GHz is ~40 kHz.
         use crate::util::Vec3;

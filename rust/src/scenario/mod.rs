@@ -13,6 +13,33 @@
 //! and it round-trips losslessly through the TOML subset
 //! ([`Scenario::to_toml`] / [`Scenario::from_toml`]).
 //!
+//! **ISL topology sections**: the `[isl]` section configures the
+//! explicit ISL graph ([`crate::topology::IslGraph`]) the world is
+//! built with, and `[isl_linkN]` sections override the RF budget per
+//! shell:
+//!
+//! ```toml
+//! [isl]
+//! topology = "grid"      # "ring" (paper default) | "grid"
+//! cross_shell = true     # gateway edges between stacked shells
+//! doppler = true         # Doppler-derate per-edge rates
+//!
+//! [isl_link1]            # shell 0's ISL budget (contiguous from 1)
+//! tx_power_dbm = 30
+//! antenna_gain_dbi = 30
+//! carrier_ghz = 2.4
+//! noise_temp_k = 290
+//! data_rate_mbps = 16
+//! bandwidth_mhz = 20
+//! processing_delay_s = 0.1
+//! ```
+//!
+//! Shells without an `[isl_linkN]` entry fall back to the global
+//! `[link]` budget. Typed per-ISL-edge outage windows ride the
+//! `[faults]` section (`isl_edge_outage_period_s` /
+//! `isl_edge_outage_duration_s`). Everything round-trips through
+//! `to_toml`/`from_toml` like the rest of the config.
+//!
 //! The built-in catalog ([`ScenarioRegistry::builtin`]) ships ≥7
 //! presets spanning the design space the related work evaluates on
 //! (paper 5×8, a two-shell Starlink-like mix, a OneWeb-like polar star,

@@ -1,17 +1,33 @@
-//! The ring-of-stars communication topology (paper Sec. IV-A, Fig. 3).
+//! The communication topology: the ring-of-stars of the paper
+//! (Sec. IV-A, Fig. 3) plus the explicit ISL graph of the follow-up
+//! work (arXiv 2302.13447).
 //!
-//! Two layers:
+//! Layers:
 //!
-//! * **HAP layer** — the HAPs form a ring; one is designated *source*
-//!   and one *sink* (typically the farthest around the ring); global
-//!   models flow source→sink along both arcs, local-model sets flow the
-//!   same way toward the sink, and the roles swap each global epoch
-//!   (Sec. IV-B3).
-//! * **SAT layer** — each HAP runs a star over its currently visible
-//!   satellites, and satellites in the same orbit form intra-orbit
-//!   ISL rings ([`crate::orbit::WalkerConstellation::ring_neighbors`]).
+//! * **HAP layer** ([`ring::HapRing`]) — the HAPs form a ring; one is
+//!   designated *source* and one *sink* (typically the farthest around
+//!   the ring); global models flow source→sink along both arcs,
+//!   local-model sets flow the same way toward the sink, and the roles
+//!   swap each global epoch (Sec. IV-B3).
+//! * **SAT layer, implicit** — each HAP runs a star over its currently
+//!   visible satellites, and satellites in the same orbit form
+//!   intra-orbit ISL rings
+//!   ([`crate::orbit::WalkerConstellation::ring_neighbors`]).
 //!   Inter-orbit ISLs are deliberately absent (Doppler, Sec. IV-A).
+//!   This is the path every pre-graph scheme still runs on,
+//!   bit-identical (pinned by `tests/topology_equivalence.rs`).
+//! * **SAT layer, explicit** ([`graph::IslGraph`]) — the same
+//!   satellites as a typed graph: intra-plane ring edges, optional
+//!   cross-plane grid and cross-shell gateway edges, per-shell
+//!   [`crate::comm::LinkParams`] budgets, Doppler-derated per-edge
+//!   delays, and deterministic shortest-delay routing. Built once per
+//!   [`crate::coordinator::Geometry`] from the `[isl]` scenario
+//!   section; a `ring` topology reproduces `ring_neighbors` exactly
+//!   (the executable reference). The sink-satellite scheme
+//!   (`fl::baselines::sinksat`) routes plane collection over it.
 
+pub mod graph;
 pub mod ring;
 
+pub use graph::{IslConfig, IslEdge, IslEdgeKind, IslGraph, IslTopology, RoutePlan};
 pub use ring::HapRing;

@@ -1,0 +1,225 @@
+//! ISL topology graph equivalence suite (the PR-6 bit-identity
+//! contract):
+//!
+//! * with the explicit ISL graph built into every `Geometry`, all six
+//!   pre-existing schemes still produce **bit-identical** curves and
+//!   transfer counts against the kept pre-graph reference path
+//!   (`SimEnv::set_reference_path(true)` + `testkit::ReferenceSurrogate`)
+//!   on every built-in preset — the graph subsystem must not perturb
+//!   the ring semantics those schemes were built on;
+//! * the graph is pure *plumbing* for them: rebuilding the world with a
+//!   different `[isl]` topology (grid + cross-shell instead of the ring
+//!   default) leaves ring-routed schemes bit-identical, because only
+//!   graph-routed schemes read the edge set;
+//! * the new `sinksat` scheme is deterministic under the sweep
+//!   executor: `scenarios.csv` (which now carries a SinkSat row per
+//!   world) is byte-identical at `--jobs 1` and `--jobs 4`;
+//! * topology properties hold on every preset: intra-plane rings plus
+//!   the cross-plane grid (with cross-shell gateways where there are
+//!   stacked shells) form one connected component, and every edge's
+//!   delay is finite, positive, and direction-free.
+
+use asyncfleo::comm::LinkParams;
+use asyncfleo::config::{ExperimentConfig, SchemeKind};
+use asyncfleo::coordinator::{RunResult, SimEnv};
+use asyncfleo::experiments::drivers::ExpOptions;
+use asyncfleo::experiments::scenarios::run_compare;
+use asyncfleo::fl::make_strategy;
+use asyncfleo::scenario::{Scenario, ScenarioRegistry};
+use asyncfleo::testkit::{assert_runs_identical, ReferenceSurrogate};
+use asyncfleo::topology::{IslConfig, IslGraph, IslTopology};
+use asyncfleo::train::SurrogateBackend;
+use std::path::PathBuf;
+
+/// The six schemes that existed before the graph subsystem landed.
+const PRE_GRAPH_SCHEMES: &[SchemeKind] = &[
+    SchemeKind::AsyncFleo,
+    SchemeKind::FedAvg,
+    SchemeKind::FedIsl,
+    SchemeKind::FedSat,
+    SchemeKind::FedSpace,
+    SchemeKind::FedHap,
+];
+
+/// The six presets that existed before this PR.
+const EXISTING_PRESETS: &[&str] = &[
+    "paper-40",
+    "starlink-lite",
+    "polar-star",
+    "sparse-iot",
+    "equatorial-dense",
+    "haps-degraded",
+];
+
+/// Equivalence needs events, not convergence: shortened horizons keep
+/// debug-mode runs fast while still driving every code path.
+fn trimmed(cfg: &ExperimentConfig) -> ExperimentConfig {
+    let mut c = cfg.clone();
+    if c.n_sats() >= 1000 {
+        c.fl.horizon_s = 2.0 * 3600.0;
+        c.fl.max_epochs = 2;
+    } else if c.n_sats() >= 100 {
+        c.fl.horizon_s = 6.0 * 3600.0;
+        c.fl.max_epochs = 3;
+    } else {
+        c.fl.horizon_s = 12.0 * 3600.0;
+        c.fl.max_epochs = 4;
+    }
+    c
+}
+
+/// One run on the graph-bearing fast path.
+fn run_fast(cfg: &ExperimentConfig) -> RunResult {
+    let mut b = SurrogateBackend::for_config(cfg);
+    let mut env = SimEnv::new(cfg, &mut b);
+    make_strategy(cfg.fl.scheme).run(&mut env)
+}
+
+/// One run on the kept pre-graph reference path.
+fn run_reference(cfg: &ExperimentConfig) -> RunResult {
+    let mut b = ReferenceSurrogate(SurrogateBackend::for_config(cfg));
+    let mut env = SimEnv::new(cfg, &mut b);
+    env.set_reference_path(true);
+    make_strategy(cfg.fl.scheme).run(&mut env)
+}
+
+#[test]
+fn all_pre_graph_schemes_bitwise_equal_on_all_presets() {
+    let reg = ScenarioRegistry::builtin();
+    for name in EXISTING_PRESETS {
+        let sc = reg.get(name).unwrap_or_else(|| panic!("missing preset {name}"));
+        for &scheme in PRE_GRAPH_SCHEMES {
+            let mut cfg = trimmed(&sc.cfg);
+            cfg.fl.scheme = scheme;
+            let fast = run_fast(&cfg);
+            let reference = run_reference(&cfg);
+            assert_runs_identical(&fast, &reference, &format!("{name}/{}", scheme.name()));
+        }
+    }
+}
+
+#[test]
+fn isl_topology_choice_does_not_perturb_ring_routed_schemes() {
+    // Ring-routed schemes never read the edge set, so swapping the
+    // world's [isl] topology must leave them bit-identical — the graph
+    // only changes behaviour for schemes that route over it.
+    let reg = ScenarioRegistry::builtin();
+    let sc = reg.get("starlink-lite").expect("multi-shell preset");
+    for &scheme in &[SchemeKind::AsyncFleo, SchemeKind::FedIsl, SchemeKind::FedHap] {
+        let mut ring_cfg = trimmed(&sc.cfg);
+        ring_cfg.fl.scheme = scheme;
+        let mut grid_cfg = ring_cfg.clone();
+        grid_cfg.isl.topology = IslTopology::Grid;
+        grid_cfg.isl.cross_shell = true;
+        let a = run_fast(&ring_cfg);
+        let b = run_fast(&grid_cfg);
+        assert_runs_identical(&a, &b, &format!("ring-vs-grid world/{}", scheme.name()));
+    }
+}
+
+fn temp_out(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("asyncfleo_topology_equiv_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn sinksat_scenario_rows_byte_identical_jobs_1_vs_4() {
+    let reg = ScenarioRegistry::builtin();
+    // a representative world slice: the paper's constellation, a
+    // two-shell design, and the sparse low-connectivity one
+    let scenarios: Vec<Scenario> = ["paper-40", "starlink-lite", "sparse-iot"]
+        .iter()
+        .map(|name| {
+            let sc = reg.get(name).unwrap();
+            Scenario::new(sc.name.clone(), sc.summary.clone(), trimmed(&sc.cfg))
+        })
+        .collect();
+    let dir1 = temp_out("jobs1");
+    let dir4 = temp_out("jobs4");
+    let opts1 =
+        ExpOptions { out_dir: dir1.clone(), fast: true, surrogate: true, seed: 42, jobs: 1 };
+    let opts4 = ExpOptions { out_dir: dir4.clone(), jobs: 4, ..opts1.clone() };
+    run_compare(&scenarios, &opts1).expect("--jobs 1 sweep");
+    run_compare(&scenarios, &opts4).expect("--jobs 4 sweep");
+    let a = std::fs::read(dir1.join("scenarios.csv")).unwrap();
+    let b = std::fs::read(dir4.join("scenarios.csv")).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "scenarios.csv must be byte-identical at --jobs 1 and --jobs 4");
+    let text = String::from_utf8(a).unwrap();
+    for sc in &scenarios {
+        assert!(
+            text.contains(&format!("{},sinksat", sc.name)),
+            "{} sinksat row present",
+            sc.name
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir1);
+    let _ = std::fs::remove_dir_all(&dir4);
+}
+
+#[test]
+fn graph_properties_hold_on_every_preset() {
+    let reg = ScenarioRegistry::builtin();
+    for sc in reg.iter() {
+        let cfg = &sc.cfg;
+        let c = asyncfleo::orbit::WalkerConstellation::from_shells(&cfg.constellation.shells());
+        let link = LinkParams::default();
+
+        // the ring reference: intra-plane edges only, each plane with
+        // >= 2 members internally connected
+        let ring = IslGraph::build(&c, &IslConfig::default(), &link);
+        for e in ring.edges() {
+            assert_eq!(
+                c.satellites[e.a as usize].orbit,
+                c.satellites[e.b as usize].orbit,
+                "{}: ring edge crosses planes",
+                sc.name
+            );
+        }
+
+        // ring + grid (+ cross-shell gateways when shells stack) must
+        // form one component
+        let full = IslGraph::build(
+            &c,
+            &IslConfig {
+                topology: IslTopology::Grid,
+                cross_shell: true,
+                ..Default::default()
+            },
+            &link,
+        );
+        assert!(full.is_connected(), "{}: grid+gateways disconnected", sc.name);
+
+        // every edge: registered in both directions (delay is therefore
+        // direction-free by construction) and finite positive delay
+        let payload = 1.0e6;
+        for (e, edge) in full.edges().iter().enumerate() {
+            let (a, b) = (edge.a as usize, edge.b as usize);
+            assert_eq!(full.edge_between(a, b), Some(e), "{}: edge {e}", sc.name);
+            assert_eq!(full.edge_between(b, a), Some(e), "{}: edge {e} reversed", sc.name);
+            for &t in &[0.0, 3600.0] {
+                let d = full.edge_delay_s(&c, e, t, payload);
+                assert!(
+                    d.is_finite() && d > 0.0,
+                    "{}: edge {e} delay {d} at t={t}",
+                    sc.name
+                );
+            }
+        }
+
+        // routing over the component is symmetric up to float
+        // re-association along the reversed path
+        let plan_fwd = full.shortest_delays(&c, 0, 0.0, payload);
+        let far = c.len() - 1;
+        let plan_rev = full.shortest_delays(&c, far, 0.0, payload);
+        let (df, dr) = (plan_fwd.dist[far], plan_rev.dist[0]);
+        assert!(df.is_finite() && dr.is_finite(), "{}: route unreachable", sc.name);
+        assert!(
+            (df - dr).abs() <= 1e-9 * df.max(1.0),
+            "{}: asymmetric routes {df} vs {dr}",
+            sc.name
+        );
+    }
+}
