@@ -151,11 +151,16 @@ fn main() {
 }
 
 /// Per-preset `ContactPlan` build timings: the kept-as-specification
-/// reference scan vs the fast scanner at 1 and 4 threads, gated on
-/// window equality so a speedup can never be reported on diverged
-/// output. Emits `BENCH_geometry.json`.
+/// reference sweep, the rate-bound-only scanner (analytic pass maps
+/// disabled) and the full analytic scanner at 1 and 4 threads — gated
+/// on window equality so a speedup can never be reported on diverged
+/// output. On mega-constellation presets (> 2000 satellites) the dense
+/// reference is only too slow to *time*; the analytic-vs-scan gate
+/// still pins correctness (both are reference-bitwise by the
+/// equivalence suite). Emits `BENCH_geometry.json`, including the
+/// process peak RSS after each preset.
 fn geometry_benches(preset_names: &[String]) {
-    print_header("geometry: ContactPlan build, reference vs fast scanner (24 h horizon)");
+    print_header("geometry: ContactPlan build, reference vs scan vs analytic (24 h horizon)");
     let reg = ScenarioRegistry::builtin();
     let horizon_s = 86_400.0;
     let plan_cfg = BenchConfig { warmup_iters: 1, sample_iters: 3, max_seconds: 240.0 };
@@ -167,43 +172,80 @@ fn geometry_benches(preset_names: &[String]) {
         let constellation = WalkerConstellation::from_shells(&sc.cfg.constellation.shells());
         let sites = sc.cfg.placement.sites();
         let min_elev = sc.cfg.min_elevation_deg;
+        let n_sats = constellation.len();
+        let time_reference = n_sats <= 2000;
 
-        // identity gate
-        let reference = ContactPlan::build_reference(&constellation, &sites, min_elev, horizon_s);
+        // identity gates: analytic scanner ≡ rate-bound-only scanner,
+        // and both ≡ dense reference where we can afford to build it
+        let scan_only =
+            ContactPlan::build_with_options(&constellation, &sites, min_elev, horizon_s, 1, false);
         let fast = ContactPlan::build_with_threads(&constellation, &sites, min_elev, horizon_s, 1);
         for site in 0..sites.len() {
-            for sat in 0..constellation.len() {
+            for sat in 0..n_sats {
                 assert_eq!(
-                    reference.windows(site, sat),
+                    scan_only.windows(site, sat),
                     fast.windows(site, sat),
-                    "{name}: fast scanner diverged from reference (site {site} sat {sat})"
+                    "{name}: analytic scanner diverged from rate-bound scan (site {site} sat {sat})"
                 );
             }
         }
+        if time_reference {
+            let reference =
+                ContactPlan::build_reference(&constellation, &sites, min_elev, horizon_s);
+            for site in 0..sites.len() {
+                for sat in 0..n_sats {
+                    assert_eq!(
+                        reference.windows(site, sat),
+                        fast.windows(site, sat),
+                        "{name}: fast scanner diverged from reference (site {site} sat {sat})"
+                    );
+                }
+            }
+        }
 
-        let r_ref = bench(&format!("{name}: reference scan"), &plan_cfg, || {
-            ContactPlan::build_reference(&constellation, &sites, min_elev, horizon_s)
+        let r_ref = time_reference.then(|| {
+            let r = bench(&format!("{name}: reference scan"), &plan_cfg, || {
+                ContactPlan::build_reference(&constellation, &sites, min_elev, horizon_s)
+            });
+            println!("{}", r.report());
+            r
         });
-        println!("{}", r_ref.report());
-        let r_fast1 = bench(&format!("{name}: fast scan, 1 thread"), &plan_cfg, || {
+        let r_scan1 = bench(&format!("{name}: rate-bound scan, 1 thread"), &plan_cfg, || {
+            ContactPlan::build_with_options(&constellation, &sites, min_elev, horizon_s, 1, false)
+        });
+        println!("{}", r_scan1.report());
+        let r_an1 = bench(&format!("{name}: analytic scan, 1 thread"), &plan_cfg, || {
             ContactPlan::build_with_threads(&constellation, &sites, min_elev, horizon_s, 1)
         });
-        println!("{}", r_fast1.report());
-        let r_fast4 = bench(&format!("{name}: fast scan, 4 threads"), &plan_cfg, || {
+        println!("{}", r_an1.report());
+        let r_an4 = bench(&format!("{name}: analytic scan, 4 threads"), &plan_cfg, || {
             ContactPlan::build_with_threads(&constellation, &sites, min_elev, horizon_s, 4)
         });
-        println!("{}", r_fast4.report());
+        println!("{}", r_an4.report());
 
-        let speedup1 = r_ref.stats.mean / r_fast1.stats.mean.max(1e-12);
-        let speedup4 = r_ref.stats.mean / r_fast4.stats.mean.max(1e-12);
-        println!("{name}: speedup {speedup1:.2}x (1 thread), {speedup4:.2}x (4 threads)");
+        let speedup_analytic = r_scan1.stats.mean / r_an1.stats.mean.max(1e-12);
+        println!("{name}: analytic vs rate-bound scan {speedup_analytic:.2}x (1 thread)");
+        let ref_ms = r_ref
+            .as_ref()
+            .map(|r| format!("{:.3}", r.stats.mean * 1e3))
+            .unwrap_or_else(|| "null".to_string());
+        let speedup1 = r_ref
+            .as_ref()
+            .map(|r| format!("{:.3}", r.stats.mean / r_an1.stats.mean.max(1e-12)))
+            .unwrap_or_else(|| "null".to_string());
+        let speedup4 = r_ref
+            .as_ref()
+            .map(|r| format!("{:.3}", r.stats.mean / r_an4.stats.mean.max(1e-12)))
+            .unwrap_or_else(|| "null".to_string());
+        let rss = asyncfleo::bench::peak_rss_mb()
+            .map(|mb| format!("{mb:.1}"))
+            .unwrap_or_else(|| "null".to_string());
         rows.push(format!(
-            "    {{\"name\": \"{name}\", \"sats\": {}, \"sites\": {}, \"horizon_s\": {horizon_s:.1}, \"reference_ms\": {:.3}, \"fast_1thread_ms\": {:.3}, \"fast_4thread_ms\": {:.3}, \"speedup_1thread\": {speedup1:.3}, \"speedup_4thread\": {speedup4:.3}}}",
-            constellation.len(),
+            "    {{\"name\": \"{name}\", \"sats\": {n_sats}, \"sites\": {}, \"horizon_s\": {horizon_s:.1}, \"reference_ms\": {ref_ms}, \"scan_1thread_ms\": {:.3}, \"analytic_1thread_ms\": {:.3}, \"analytic_4thread_ms\": {:.3}, \"speedup_1thread\": {speedup1}, \"speedup_4thread\": {speedup4}, \"speedup_analytic_vs_scan\": {speedup_analytic:.3}, \"peak_rss_mb\": {rss}}}",
             sites.len(),
-            r_ref.stats.mean * 1e3,
-            r_fast1.stats.mean * 1e3,
-            r_fast4.stats.mean * 1e3,
+            r_scan1.stats.mean * 1e3,
+            r_an1.stats.mean * 1e3,
+            r_an4.stats.mean * 1e3,
         ));
     }
     let json = format!(

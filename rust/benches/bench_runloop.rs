@@ -96,7 +96,12 @@ fn main() {
 /// Trim a preset to bench size: runs stay in seconds while each still
 /// drives thousands of delay calls and full aggregation epochs.
 fn bench_cfg(mut cfg: ExperimentConfig) -> ExperimentConfig {
-    if cfg.n_sats() >= 1000 {
+    if cfg.n_sats() >= 5000 {
+        // the 10k+ worlds are a smoke: one short horizon exercises the
+        // plan build, broadcasts and aggregation without dominating CI
+        cfg.fl.horizon_s = cfg.fl.horizon_s.min(6.0 * 3600.0);
+        cfg.fl.max_epochs = cfg.fl.max_epochs.min(2);
+    } else if cfg.n_sats() >= 1000 {
         cfg.fl.horizon_s = cfg.fl.horizon_s.min(12.0 * 3600.0);
         cfg.fl.max_epochs = cfg.fl.max_epochs.min(6);
     } else {

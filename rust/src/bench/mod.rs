@@ -91,6 +91,17 @@ pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> Benc
     BenchResult { name: name.to_string(), stats: summarize(&samples).expect("samples") }
 }
 
+/// Peak resident set size of this process in MiB (`VmHWM` from
+/// `/proc/self/status`), or `None` off Linux / if the field is absent.
+/// Benches report it next to their timings so memory regressions on
+/// the mega-constellation presets show up in the same JSON artifact.
+pub fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
 /// Print the standard report header (aligns with [`BenchResult::report`]).
 pub fn print_header(title: &str) {
     println!("\n== {title} ==");
@@ -126,6 +137,13 @@ mod tests {
         assert!(fmt_duration(5e-6).ends_with("µs"));
         assert!(fmt_duration(5e-3).ends_with("ms"));
         assert!(fmt_duration(5.0).ends_with("s"));
+    }
+
+    #[test]
+    fn peak_rss_is_positive_on_linux() {
+        if let Some(mb) = peak_rss_mb() {
+            assert!(mb > 0.0, "VmHWM parsed as {mb} MiB");
+        }
     }
 
     #[test]

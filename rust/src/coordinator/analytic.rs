@@ -1,0 +1,511 @@
+//! Analytic first-contact prediction: closed-form `γ(t) = γ_max`
+//! pass maps shared per (shell, site-latitude-band).
+//!
+//! # The closed form
+//!
+//! For a circular orbit the satellite's geocentric direction is
+//! `d(t) = p·cos u + q·sin u` with `u(t) = phase + n·t` and the plane
+//! basis `p = (cos Ω, sin Ω, 0)`,
+//! `q = (−sin Ω·cos i, cos Ω·cos i, sin i)`. The site direction on the
+//! rotating Earth is
+//! `s(t) = (cos φ·cos λ, cos φ·sin λ, sin φ)` with geodetic latitude
+//! `φ` and `λ(t) = λ₀ + ω_E·t`. Taking dot products,
+//!
+//! ```text
+//! cos γ(t) = P(Δ)·cos u + Q(Δ)·sin u
+//!     P(Δ) = cos φ · cos Δ
+//!     Q(Δ) = cos i · cos φ · sin Δ + sin i · sin φ
+//!     Δ(t) = λ(t) − Ω      (site longitude relative to the node)
+//! ```
+//!
+//! so visibility `e(t) ≥ e_min ⟺ cos γ(t) ≥ cos γ_max` (see
+//! [`max_central_angle_rad`]) is a condition on the two-angle torus
+//! `(Δ, u)`. For fixed `Δ`, the set of visible `u` is a single arc
+//! centered on `atan2(Q, P)` with half-width `acos(τ / hypot(P, Q))`.
+//!
+//! # The pass map and why it is shared
+//!
+//! A [`PassMap`] discretizes `Δ` into [`DELTA_BUCKETS`] buckets and
+//! stores, per bucket, a conservative superset of the visible `u` arc:
+//! `P` and `Q` are monotone images of `cos Δ` / `sin Δ`, so interval
+//! bounds over the bucket give a box `[P_lo,P_hi]×[Q_lo,Q_hi]`;
+//! `cos γ` is *linear* in `(P, Q)` for fixed `u`, hence its maximum
+//! over the box is attained at a corner, and the union of the four
+//! corner arcs (enclosed in one padded arc) covers every visible `u`
+//! anywhere in the bucket. A bucket whose four corners cannot reach
+//! the threshold is `Never` — provably invisible for the full bucket
+//! dwell time (`2π/K/ω_E ≈ 337 s` at K = 256).
+//!
+//! The map depends only on `(shell altitude, shell inclination,
+//! site latitude, site altitude, effective min elevation)` — not on
+//! RAAN, phase, site *longitude*, horizon, or scan step. Those enter
+//! only through the per-pair offsets `Δ(0) = λ₀ − Ω` and
+//! `u(0) = phase` at query time. Every satellite of a shell therefore
+//! shares one map with every site at the same latitude (the
+//! "latitude-band equivalence"), and a process-wide cache
+//! ([`shared_pass_map`]) shares maps across presets and builds, like
+//! the `Geometry` Arc cache one level up.
+//!
+//! # Safety contract
+//!
+//! [`PassMap::next_possible`] returns a time `t* ≥ t` such that the
+//! pair is **provably invisible on `[t, t*)`** (or `∞` when nothing
+//! remains before the horizon). It may be conservative (early) but
+//! never late; the scanner (`coordinator::contact`) uses it only to
+//! *skip* grid points inside the proven-invisible span, never to emit
+//! a window, so bit-identity with the dense reference scan is
+//! preserved by construction. The comparison threshold is padded by
+//! [`COS_MARGIN`] in cos-units and every arc by `ARC_PAD_RAD` radians
+//! — orders of magnitude above the ~1e-13 floating-point error of the
+//! closed form, and far below any real pass geometry.
+
+use crate::orbit::{max_central_angle_rad, GeodeticSite, EARTH_RADIUS_KM, EARTH_ROTATION_RAD_S};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Number of `Δ` buckets on the torus. 256 keeps the per-bucket dwell
+/// (`2π/256/ω_E ≈ 337 s`) above ten 30 s grid steps — coarse enough
+/// that a map is 4 KiB, fine enough that `Never` buckets skip real
+/// time.
+pub const DELTA_BUCKETS: usize = 256;
+
+/// Threshold padding in cos-units: the map tests
+/// `cos γ ≥ cos γ_max − COS_MARGIN`, so floating-point error in the
+/// closed form (~1e-13) can never flip a truly-visible instant into a
+/// proven-invisible one.
+pub const COS_MARGIN: f64 = 1e-7;
+
+/// Extra half-width added to every stored arc, radians (~0.8 ms of
+/// orbital motion — pure safety margin).
+const ARC_PAD_RAD: f64 = 1e-6;
+
+/// Outward padding of the per-bucket `(P, Q)` interval box.
+const BOX_PAD: f64 = 1e-12;
+
+const TAU: f64 = 2.0 * std::f64::consts::PI;
+const PI: f64 = std::f64::consts::PI;
+
+/// Conservative visible-`u` superset of one `Δ` bucket.
+#[derive(Clone, Copy, Debug)]
+enum Bucket {
+    /// No `u` anywhere in the bucket can reach the threshold.
+    Never,
+    /// Every `u` might be visible (the enclosing arc wrapped).
+    Always,
+    /// Visibility is impossible outside `|u − center| ≤ half_width`.
+    Arc { center: f64, half_width: f64 },
+}
+
+/// The shared (shell × site-latitude-band) pass map. Immutable after
+/// construction; handed out as `Arc<PassMap>` by [`shared_pass_map`].
+#[derive(Debug)]
+pub struct PassMap {
+    buckets: Vec<Bucket>,
+    any_possible: bool,
+    /// The padded cos-threshold `cos γ_max − COS_MARGIN` (diagnostics).
+    threshold: f64,
+}
+
+/// Wrap to `[−π, π]`.
+fn wrap_pm_pi(x: f64) -> f64 {
+    x - TAU * (x / TAU).round()
+}
+
+/// `[min, max]` of `cos` over the angle interval `[lo, hi]` (assumes
+/// `hi − lo < π`, true for one bucket).
+fn cos_bounds(lo: f64, hi: f64) -> (f64, f64) {
+    let (a, b) = (lo.cos(), hi.cos());
+    let mut min = a.min(b);
+    let mut max = a.max(b);
+    // interior extrema at multiples of π inside [lo, hi]
+    if (lo / TAU).ceil() * TAU <= hi {
+        max = 1.0;
+    }
+    if ((lo - PI) / TAU).ceil() * TAU + PI <= hi {
+        min = -1.0;
+    }
+    (min, max)
+}
+
+/// `[min, max]` of `sin` over `[lo, hi]` (same contract).
+fn sin_bounds(lo: f64, hi: f64) -> (f64, f64) {
+    cos_bounds(lo - PI / 2.0, hi - PI / 2.0)
+}
+
+/// The conservative arc of one bucket from its `(P, Q)` interval box:
+/// union of the four corner arcs `{u : P·cos u + Q·sin u ≥ τ}`,
+/// enclosed in one padded arc. `cos γ` is linear in `(P, Q)` for fixed
+/// `u`, so its maximum over the box sits at a corner — the union
+/// covers every visible `u` for every `Δ` in the bucket.
+fn bucket_from_box(p_lo: f64, p_hi: f64, q_lo: f64, q_hi: f64, tau: f64) -> Bucket {
+    let mut lo_edge = f64::INFINITY;
+    let mut hi_edge = f64::NEG_INFINITY;
+    let mut anchor = f64::NAN;
+    for (p, q) in [(p_lo, q_lo), (p_lo, q_hi), (p_hi, q_lo), (p_hi, q_hi)] {
+        let r = p.hypot(q);
+        // cos(u − φ) ≥ τ/r: empty above 1, the full circle at/below −1
+        let x = if r > 0.0 {
+            tau / r
+        } else if tau > 0.0 {
+            2.0
+        } else {
+            -2.0
+        };
+        if x > 1.0 {
+            continue;
+        }
+        if x <= -1.0 {
+            return Bucket::Always;
+        }
+        let w = x.acos() + ARC_PAD_RAD;
+        let phi = q.atan2(p);
+        if anchor.is_nan() {
+            anchor = phi;
+        }
+        // normalize this corner's center next to the first one so the
+        // enclosing interval is well-defined on the circle
+        let c = anchor + wrap_pm_pi(phi - anchor);
+        lo_edge = lo_edge.min(c - w);
+        hi_edge = hi_edge.max(c + w);
+    }
+    if anchor.is_nan() {
+        return Bucket::Never;
+    }
+    let half_width = 0.5 * (hi_edge - lo_edge);
+    if half_width >= PI {
+        return Bucket::Always;
+    }
+    Bucket::Arc { center: 0.5 * (lo_edge + hi_edge), half_width }
+}
+
+fn build_map(
+    sat_altitude_km: f64,
+    inclination_rad: f64,
+    site_lat_deg: f64,
+    site_alt_km: f64,
+    eff_min_elev_deg: f64,
+) -> PassMap {
+    let a = EARTH_RADIUS_KM + site_alt_km;
+    let b = EARTH_RADIUS_KM + sat_altitude_km;
+    let gamma_max = max_central_angle_rad(a, b, eff_min_elev_deg);
+    let tau = gamma_max.cos() - COS_MARGIN;
+    let lat = site_lat_deg.to_radians();
+    let (sin_lat, cos_lat) = lat.sin_cos();
+    let (sin_inc, cos_inc) = inclination_rad.sin_cos();
+
+    // class-level prune: the sub-satellite track never exceeds
+    // latitude λ_max = asin(|sin i|); a site whose latitude is farther
+    // from the track than the visibility cone is never visible at all
+    // (cos of the best-case central angle below threshold)
+    let lam_max = sin_inc.abs().min(1.0).asin();
+    if lat.abs() > lam_max && (lat.abs() - lam_max).cos() < tau {
+        return PassMap {
+            buckets: vec![Bucket::Never; DELTA_BUCKETS],
+            any_possible: false,
+            threshold: tau,
+        };
+    }
+
+    let bw = TAU / DELTA_BUCKETS as f64;
+    let mut any_possible = false;
+    let buckets: Vec<Bucket> = (0..DELTA_BUCKETS)
+        .map(|k| {
+            let lo = k as f64 * bw;
+            let hi = lo + bw;
+            let (c_lo, c_hi) = cos_bounds(lo, hi);
+            let (s_lo, s_hi) = sin_bounds(lo, hi);
+            // P = cos φ · cos Δ  (cos φ ≥ 0)
+            let p_lo = cos_lat * c_lo - BOX_PAD;
+            let p_hi = cos_lat * c_hi + BOX_PAD;
+            // Q = (cos i · cos φ) · sin Δ + sin i · sin φ
+            let ci_cl = cos_inc * cos_lat;
+            let q_off = sin_inc * sin_lat;
+            let (q_lo, q_hi) = if ci_cl >= 0.0 {
+                (ci_cl * s_lo + q_off - BOX_PAD, ci_cl * s_hi + q_off + BOX_PAD)
+            } else {
+                (ci_cl * s_hi + q_off - BOX_PAD, ci_cl * s_lo + q_off + BOX_PAD)
+            };
+            let bucket = bucket_from_box(p_lo, p_hi, q_lo, q_hi, tau);
+            if !matches!(bucket, Bucket::Never) {
+                any_possible = true;
+            }
+            bucket
+        })
+        .collect();
+    PassMap { buckets, any_possible, threshold: tau }
+}
+
+impl PassMap {
+    /// Can this (shell, site-latitude) class ever be visible? `false`
+    /// means every pair of the class is pruned outright — zero
+    /// predicate evaluations for the whole build.
+    pub fn any_possible(&self) -> bool {
+        self.any_possible
+    }
+
+    /// Number of `Δ` buckets proven never-visible (diagnostics).
+    pub fn never_bucket_count(&self) -> usize {
+        self.buckets.iter().filter(|b| matches!(b, Bucket::Never)).count()
+    }
+
+    /// The padded cos-threshold the map was built against.
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// Earliest time `≥ t` at which visibility is *possible* for the
+    /// pair with torus offsets `Δ(0) = dlon0_rad` (site longitude −
+    /// RAAN) and `u(0) = u0_rad`, mean motion `n_rad_s`, searched up to
+    /// `horizon_s`. Everything in `[t, return)` is provably invisible;
+    /// `∞` means provably invisible through the horizon.
+    pub fn next_possible(
+        &self,
+        dlon0_rad: f64,
+        u0_rad: f64,
+        n_rad_s: f64,
+        horizon_s: f64,
+        t: f64,
+    ) -> f64 {
+        if !self.any_possible {
+            return f64::INFINITY;
+        }
+        let bw = TAU / DELTA_BUCKETS as f64;
+        let mut t = t;
+        while t <= horizon_s {
+            let delta = (dlon0_rad + EARTH_ROTATION_RAD_S * t).rem_euclid(TAU);
+            let k = ((delta / bw) as usize).min(DELTA_BUCKETS - 1);
+            // time the site rotates into the next bucket; the 1 µs
+            // floor guarantees progress (1 µs of Earth rotation is
+            // ~7e-11 rad, far inside the arc pads)
+            let t_exit = t + (((k + 1) as f64 * bw - delta) / EARTH_ROTATION_RAD_S).max(1e-6);
+            match self.buckets[k] {
+                Bucket::Always => return t,
+                Bucket::Never => t = t_exit,
+                Bucket::Arc { center, half_width } => {
+                    let u = (u0_rad + n_rad_s * t).rem_euclid(TAU);
+                    if wrap_pm_pi(u - center).abs() <= half_width {
+                        return t;
+                    }
+                    // u advances monotonically: next arc entry is at
+                    // center − half_width (mod 2π) ahead of u
+                    let du = (center - half_width - u).rem_euclid(TAU);
+                    let t_enter = t + du / n_rad_s;
+                    if t_enter < t_exit {
+                        return t_enter;
+                    }
+                    t = t_exit;
+                }
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Cache key: exact bit patterns of the five class parameters (the
+/// same idiom as the `Geometry` cache key one level up).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct MapKey {
+    sat_altitude: u64,
+    inclination: u64,
+    site_lat: u64,
+    site_alt: u64,
+    eff_min_elev: u64,
+}
+
+impl MapKey {
+    fn new(
+        sat_altitude_km: f64,
+        inclination_rad: f64,
+        site: &GeodeticSite,
+        eff_min_elev_deg: f64,
+    ) -> Self {
+        MapKey {
+            sat_altitude: sat_altitude_km.to_bits(),
+            inclination: inclination_rad.to_bits(),
+            site_lat: site.lat_deg.to_bits(),
+            site_alt: site.alt_km.to_bits(),
+            eff_min_elev: eff_min_elev_deg.to_bits(),
+        }
+    }
+}
+
+fn cache() -> &'static Mutex<HashMap<MapKey, Arc<PassMap>>> {
+    static CACHE: OnceLock<Mutex<HashMap<MapKey, Arc<PassMap>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn build_counts() -> &'static Mutex<HashMap<MapKey, u64>> {
+    static COUNTS: OnceLock<Mutex<HashMap<MapKey, u64>>> = OnceLock::new();
+    COUNTS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// The process-wide shared pass map of one (shell, site-latitude-band)
+/// class: built once per unique `(altitude, inclination, site
+/// latitude, site altitude, effective min elevation)` and shared
+/// across satellites, sites, plan builds, and presets. Note the key
+/// has no site *longitude* — sites on the same latitude band share.
+pub fn shared_pass_map(
+    sat_altitude_km: f64,
+    inclination_rad: f64,
+    site: &GeodeticSite,
+    eff_min_elev_deg: f64,
+) -> Arc<PassMap> {
+    let key = MapKey::new(sat_altitude_km, inclination_rad, site, eff_min_elev_deg);
+    if let Some(map) = cache().lock().unwrap().get(&key) {
+        return Arc::clone(map);
+    }
+    // build outside the cache lock (maps are deterministic — a rare
+    // double build is wasted work, not divergence; last insert wins)
+    let map = Arc::new(build_map(
+        sat_altitude_km,
+        inclination_rad,
+        site.lat_deg,
+        site.alt_km,
+        eff_min_elev_deg,
+    ));
+    *build_counts().lock().unwrap().entry(key).or_insert(0) += 1;
+    cache().lock().unwrap().insert(key, Arc::clone(&map));
+    map
+}
+
+/// How many times the map of this class was actually built (tests
+/// assert `1` for shared classes).
+pub fn pass_map_build_count(
+    sat_altitude_km: f64,
+    inclination_rad: f64,
+    site: &GeodeticSite,
+    eff_min_elev_deg: f64,
+) -> u64 {
+    let key = MapKey::new(sat_altitude_km, inclination_rad, site, eff_min_elev_deg);
+    build_counts().lock().unwrap().get(&key).copied().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::{elevation_deg, satellite_position_eci, OrbitalElements};
+
+    fn paper_like_elements() -> OrbitalElements {
+        OrbitalElements {
+            altitude_km: 2000.0,
+            inclination_rad: 80f64.to_radians(),
+            raan_rad: 0.7,
+            phase_rad: 0.3,
+        }
+    }
+
+    /// The soundness contract, sampled densely: whenever the real
+    /// geometry says *visible*, the map must say *possible at exactly
+    /// that instant* — `next_possible(t) == t`.
+    #[test]
+    fn map_never_contradicts_real_visibility() {
+        let e = paper_like_elements();
+        let site = GeodeticSite::rolla_hap();
+        let eff = site.effective_min_elevation_deg(10.0);
+        let map = build_map(e.altitude_km, e.inclination_rad, site.lat_deg, site.alt_km, eff);
+        let dlon0 = site.lon_deg.to_radians() - e.raan_rad;
+        let n = e.mean_motion_rad_s();
+        let horizon = 86_400.0;
+        let mut visible_samples = 0u32;
+        for i in 0..(86_400 / 60) {
+            let t = i as f64 * 60.0;
+            let elev = elevation_deg(site.position_eci(t), satellite_position_eci(&e, t));
+            // skip knife-edge samples within the margin of the threshold
+            if elev >= eff + 0.01 {
+                visible_samples += 1;
+                let tp = map.next_possible(dlon0, e.phase_rad, n, horizon, t);
+                assert_eq!(tp, t, "visible at t={t} (elev {elev:.3}) but map says {tp}");
+            }
+        }
+        assert!(visible_samples > 10, "test must exercise real passes");
+    }
+
+    /// Same dense sweep, but checking the map is not vacuously
+    /// `Always`: when the map proves a span invisible, the geometry
+    /// must agree.
+    #[test]
+    fn proven_invisible_spans_are_really_invisible() {
+        let e = paper_like_elements();
+        let site = GeodeticSite::rolla_hap();
+        let eff = site.effective_min_elevation_deg(10.0);
+        let map = build_map(e.altitude_km, e.inclination_rad, site.lat_deg, site.alt_km, eff);
+        let dlon0 = site.lon_deg.to_radians() - e.raan_rad;
+        let n = e.mean_motion_rad_s();
+        let horizon = 86_400.0;
+        let mut proven = 0u32;
+        for i in 0..(86_400 / 60) {
+            let t = i as f64 * 60.0;
+            let tp = map.next_possible(dlon0, e.phase_rad, n, horizon, t);
+            if tp > t {
+                proven += 1;
+                let elev = elevation_deg(site.position_eci(t), satellite_position_eci(&e, t));
+                assert!(elev < eff, "map proved t={t} invisible but elev is {elev:.3}");
+            }
+        }
+        assert!(proven > 100, "map must prove real spans invisible, proved {proven}");
+    }
+
+    #[test]
+    fn out_of_reach_latitude_class_is_pruned() {
+        // 5°-inclination shell never climbs anywhere near Rolla.
+        let site = GeodeticSite::rolla_hap();
+        let eff = site.effective_min_elevation_deg(10.0);
+        let map = build_map(550.0, 5f64.to_radians(), site.lat_deg, site.alt_km, eff);
+        assert!(!map.any_possible());
+        assert_eq!(map.never_bucket_count(), DELTA_BUCKETS);
+        assert_eq!(map.next_possible(1.234, 0.5, 0.001, 86_400.0, 0.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn low_inclination_shell_has_never_buckets_at_mid_latitude() {
+        // 33° shell seen from Portland (45.5°): reachable, but only in
+        // a narrow Δ band — most buckets must be proven Never.
+        let site = GeodeticSite::portland_hap();
+        let eff = site.effective_min_elevation_deg(10.0);
+        let map = build_map(535.0, 33f64.to_radians(), site.lat_deg, site.alt_km, eff);
+        assert!(map.any_possible());
+        let never = map.never_bucket_count();
+        assert!(
+            never > DELTA_BUCKETS / 4 && never < DELTA_BUCKETS,
+            "expected a partial Never band, got {never}/{DELTA_BUCKETS}"
+        );
+    }
+
+    #[test]
+    fn shared_map_is_built_once_and_pointer_shared() {
+        // altitude unique to this test so parallel test binaries can't
+        // collide on the process-wide key
+        let alt = 913.6251;
+        let inc = 0.9251;
+        let site = GeodeticSite::rolla_hap();
+        let eff = site.effective_min_elevation_deg(10.0);
+        let a = shared_pass_map(alt, inc, &site, eff);
+        let b = shared_pass_map(alt, inc, &site, eff);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(pass_map_build_count(alt, inc, &site, eff), 1);
+        // a site at the same latitude but different longitude shares
+        let mut moved = site;
+        moved.lon_deg += 47.0;
+        let c = shared_pass_map(alt, inc, &moved, eff);
+        assert!(Arc::ptr_eq(&a, &c), "longitude must not enter the key");
+    }
+
+    #[test]
+    fn wrap_and_interval_helpers() {
+        // 3π wraps to ±π (either boundary representative is fine)
+        assert!((wrap_pm_pi(3.0 * PI).abs() - PI).abs() < 1e-12);
+        assert!((wrap_pm_pi(-0.25) + 0.25).abs() < 1e-12);
+        assert!((wrap_pm_pi(TAU + 0.5) - 0.5).abs() < 1e-12);
+        let (lo, hi) = cos_bounds(0.1, 0.3);
+        assert!(lo <= 0.3f64.cos() && hi >= 0.1f64.cos());
+        // interval straddling 0 must include cos = 1
+        let (_, hi) = cos_bounds(-0.1, 0.1);
+        assert_eq!(hi, 1.0);
+        // interval straddling π must include cos = −1
+        let (lo, _) = cos_bounds(PI - 0.05, PI + 0.05);
+        assert_eq!(lo, -1.0);
+        let (lo, hi) = sin_bounds(PI / 2.0 - 0.1, PI / 2.0 + 0.1);
+        assert_eq!(hi, 1.0);
+        assert!(lo <= (PI / 2.0 - 0.1).sin());
+    }
+}

@@ -5,12 +5,12 @@
 //! visits; pre-computing the windows once keeps the event loop free of
 //! trigonometry (perf: the coordinator must never be the bottleneck).
 //!
-//! # The fast scanner (PR 4)
+//! # The fast scanner (PRs 4 + 7)
 //!
 //! [`ContactPlan::build`] used to re-propagate the whole constellation
 //! per (site, sat) pair over the full horizon — ~8 M predicate calls on
 //! a `starlink-lite` world, each paying two rotation matrices and fresh
-//! site trig, on one thread. The production path now stacks four
+//! site trig, on one thread. The production path now stacks six
 //! optimizations, all of them **bit-identity preserving** (the naive
 //! per-pair sweep is kept as [`ContactPlan::build_reference`], and
 //! `tests/contact_equivalence.rs` asserts bitwise-equal windows on
@@ -25,15 +25,29 @@
 //!    (pair, step)), and each satellite's position once per step across
 //!    all its site pairs; per grid step the scan does O(sites + sats)
 //!    position work, not O(sites × sats).
-//! 3. **Provable interval skipping** — see below: whole grid intervals
-//!    where no visibility flip can occur evaluate *nothing*; the
-//!    remaining steps sample the exact same grid points and bisection
-//!    brackets as the reference.
-//! 4. **Parallel build** — per-satellite scan rows fan out across a
-//!    `std::thread::scope` pool ([`worker_count`] governs the pool size
-//!    here and in the sweep executor), each row writing its result slot
-//!    by index, so the plan is deterministic — and bit-identical —
-//!    regardless of thread count.
+//! 3. **Provable interval skipping (rate bound)** — see below: whole
+//!    grid intervals where no visibility flip can occur evaluate
+//!    *nothing*; the remaining steps sample the exact same grid points
+//!    and bisection brackets as the reference.
+//! 4. **Analytic first-contact prediction (PR 7)** — the closed-form
+//!    `γ(t) = γ_max` pass maps of [`super::analytic`], shared per
+//!    (shell, site-latitude-band) and across presets, prove whole
+//!    *pass gaps* invisible at once: while a pair is out of contact the
+//!    scanner jumps straight to the next analytically-possible pass
+//!    instead of rate-bound-stepping through the gap, and pairs whose
+//!    class can never be visible (a low-inclination shell seen from a
+//!    high-latitude site) are pruned without a single predicate call.
+//! 5. **Chunked, flat materialization (PR 7)** — the horizon is
+//!    scanned in fixed chunks with per-chunk site tables in reused
+//!    buffers, window events append to one per-satellite vector, and
+//!    the final plan is a single flat arena indexed by (site, sat) —
+//!    no per-pair `Vec` allocations anywhere, so memory stays flat as
+//!    satellite count grows into the 10k+ regime.
+//! 6. **Parallel build** — satellites fan out across a
+//!    `std::thread::scope` pool per chunk ([`worker_count`] governs the
+//!    pool size here and in the sweep executor); each satellite owns
+//!    its scan state, so the plan is deterministic — and bit-identical
+//!    — regardless of thread count or chunk partitioning.
 //!
 //! # Why interval skipping is safe (the rate bound)
 //!
@@ -58,24 +72,69 @@
 //! that window provably carries the same visibility value, so the
 //! scanner jumps straight to the first grid index at or beyond it
 //! ([`SKIP_SAFETY`] shaves 0.1 % off the window to absorb the
-//! floating-point rounding of the bound arithmetic itself). When a flip
-//! *is* detected at grid index `j`, the previous grid point `j − 1` is
-//! by construction inside some earlier sample's proven-constant window,
-//! so the bisection bracket `[t_{j−1}, t_j]` — and therefore the
-//! refined edge — is exactly the reference scanner's.
+//! floating-point rounding of the bound arithmetic itself).
+//!
+//! # Why the analytic skip is safe (the closed form)
+//!
+//! Expanding the same central angle via the plane basis
+//! `p = (cos Ω, sin Ω, 0)`, `q = (−sin Ω·cos i, cos Ω·cos i, sin i)`
+//! and the rotating site direction at latitude `φ`, longitude
+//! `λ(t) = λ₀ + ω_E·t`:
+//!
+//! ```text
+//! cos γ(t) = P(Δ)·cos u + Q(Δ)·sin u      u(t) = phase + n·t
+//!     P(Δ) = cos φ · cos Δ                Δ(t) = λ(t) − Ω
+//!     Q(Δ) = cos i · cos φ · sin Δ + sin i · sin φ
+//! ```
+//!
+//! and `e ≥ e_min ⟺ γ ≤ γ_max` with the closed-form threshold
+//! `γ_max = acos((a/b)·cos e_min) − e_min`
+//! ([`crate::orbit::max_central_angle_rad`] — elevation is strictly
+//! monotone in `γ`, so the inequality direction is exact). Visibility
+//! is therefore a fixed region on the `(Δ, u)` torus, determined
+//! entirely by `(altitude, inclination, φ, site altitude, e_min)`:
+//! every satellite of a shell and every site on the same latitude band
+//! share it — RAAN, phase, and site longitude only shift the
+//! trajectory's starting point on the torus, not the region. That is
+//! the **latitude-band equivalence**, and it is why
+//! [`super::analytic::shared_pass_map`] memoizes one conservative
+//! bucketed superset of the region per class, process-wide across
+//! presets. `PassMap::next_possible` walks the torus trajectory
+//! through that superset and returns a time before which visibility is
+//! *provably impossible*; the scanner combines it (only while the pair
+//! is invisible — the map proves nothing about staying visible) with
+//! the rate bound by taking the larger skip: every skipped grid point
+//! is proven constant-false by at least one of the two bounds.
+//!
+//! Whichever bound produced a skip, when a flip *is* detected at grid
+//! index `j`, the previous grid point `j − 1` is inside some
+//! proven-constant span (or was sampled), so the bisection bracket
+//! `[t_{j−1}, t_j]` — and therefore the refined edge — is exactly the
+//! reference scanner's.
 
+use super::analytic::{self, PassMap};
 use crate::orbit::{
     bisect_edge, elevation_deg, scan_grid, ContactWindow, GeodeticSite, PlaneBasis,
     SitePropagator, WalkerConstellation, EARTH_RADIUS_KM, EARTH_ROTATION_RAD_S,
 };
 use crate::util::Vec3;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Contact windows for all (satellite, site) pairs over `[0, horizon]`.
+///
+/// Storage is one flat arena: the windows of pair `(site, sat)` occupy
+/// `arena[offsets[site·n_sats + sat] .. offsets[site·n_sats + sat + 1]]`,
+/// sorted by start time. Two allocations for the whole plan, O(1)
+/// pair lookup, no per-pair `Vec` headers — on a 10k-satellite world
+/// the old `Vec<Vec<Vec<_>>>` layout spent more memory on vector
+/// bookkeeping than on windows.
 pub struct ContactPlan {
-    /// windows[site][sat] sorted by start time.
-    windows: Vec<Vec<Vec<ContactWindow>>>,
+    arena: Vec<ContactWindow>,
+    /// `n_sites · n_sats + 1` prefix offsets into `arena`.
+    offsets: Vec<usize>,
+    n_sites: usize,
+    n_sats: usize,
     pub horizon_s: f64,
 }
 
@@ -88,6 +147,11 @@ const SCAN_STEP_S: f64 = 30.0;
 /// against the (at most a-few-ulp) floating-point rounding of the
 /// bound arithmetic, while giving up a negligible amount of skipping.
 const SKIP_SAFETY: f64 = 0.999;
+
+/// Grid steps per scan chunk: per-chunk site tables stay cache-sized
+/// and horizon-independent (~2048 × 24 B per site), the knob behind
+/// the flat-memory claim of module-docs item 5.
+const CHUNK_STEPS: usize = 2048;
 
 /// Worker-thread count for `n_units` independent units of work: the
 /// requested count clamped to `[1, n_units]`. One policy shared by the
@@ -122,13 +186,39 @@ fn next_check_index(
     i + ((dt / step_s).ceil() as usize).max(1)
 }
 
+/// Grid-index form of an analytic `next_possible` time: every grid
+/// point *strictly below* index `floor(t/step)` has `t_i < t_possible`
+/// and is proven invisible; backing off one more index makes the first
+/// evaluated point provably-invisible too (one extra safe sample, and
+/// the flip-detection bracket `[j−1, j]` always has a proven `j−1`).
+fn analytic_index(t_possible: f64) -> usize {
+    if t_possible.is_finite() {
+        ((t_possible / SCAN_STEP_S) as usize).saturating_sub(1)
+    } else {
+        usize::MAX
+    }
+}
+
 /// Per-(site, sat) scan state of the skipping scanner.
 struct PairScan {
     prev_v: bool,
     start: Option<f64>,
-    windows: Vec<ContactWindow>,
     /// Earliest grid index at which a visibility flip is possible.
     next_check: usize,
+    /// Cached rate bound of the pair.
+    rate: f64,
+    /// Torus offset `Δ(0) = λ₀ − Ω` for the pair's pass-map queries.
+    dlon0: f64,
+}
+
+/// One satellite's persistent scan state across horizon chunks.
+struct SatScan {
+    /// Next grid index to process (`n_steps` when finished).
+    i: usize,
+    pairs: Vec<PairScan>,
+    /// Detected windows as `(site, window)` events, per-pair in time
+    /// order — one growable vector per satellite, not per pair.
+    events: Vec<(u32, ContactWindow)>,
 }
 
 impl ContactPlan {
@@ -166,141 +256,249 @@ impl ContactPlan {
         horizon_s: f64,
         jobs: usize,
     ) -> Self {
+        Self::build_with_options(constellation, sites, min_elev_deg, horizon_s, jobs, true)
+    }
+
+    /// [`Self::build_with_threads`] with the analytic pass-map layer
+    /// switchable: `use_analytic = false` runs the pure rate-bound scanner
+    /// (PR 4 behavior). Both settings produce bit-identical plans —
+    /// the flag exists so benches can report analytic-vs-scan build
+    /// time and tests can pin the equality.
+    pub fn build_with_options(
+        constellation: &WalkerConstellation,
+        sites: &[GeodeticSite],
+        min_elev_deg: f64,
+        horizon_s: f64,
+        jobs: usize,
+        use_analytic: bool,
+    ) -> Self {
         let grid = scan_grid(horizon_s, SCAN_STEP_S);
+        let n_steps = grid.len();
         let n_sats = constellation.len();
         let n_sites = sites.len();
         let site_props: Vec<SitePropagator> = sites.iter().map(SitePropagator::new).collect();
-        // time-major site table: every site position computed once per
-        // grid step, shared by all satellite rows (and worker threads)
-        let site_grids: Vec<Vec<Vec3>> = site_props
-            .iter()
-            .map(|p| grid.iter().map(|&t| p.position_at(t)).collect())
-            .collect();
         // HAPs gain horizon dip: theta_min is measured from the
         // apparent horizon (the paper's "slightly better visibility"
         // of elevated platforms).
         let eff_min: Vec<f64> =
             sites.iter().map(|s| s.effective_min_elevation_deg(min_elev_deg)).collect();
+        let site_lon0: Vec<f64> = sites.iter().map(|s| s.lon_deg.to_radians()).collect();
 
-        // One satellite's scan row: all its site pairs swept together
-        // over the grid, so its position is computed at most once per
-        // step — and not at all on steps every pair provably skips.
-        let scan_sat = |sat: usize| -> Vec<Vec<ContactWindow>> {
-            let basis = constellation.propagator(sat);
-            let rates: Vec<f64> =
-                sites.iter().map(|s| elevation_rate_bound_rad_s(s, basis)).collect();
-            let sat0 = basis.position_at(grid[0]);
-            let mut pairs: Vec<PairScan> = (0..n_sites)
-                .map(|s| {
-                    let e = elevation_deg(site_grids[s][0], sat0);
-                    let v = e >= eff_min[s];
-                    PairScan {
-                        prev_v: v,
-                        start: if v { Some(0.0) } else { None },
-                        windows: Vec::new(),
-                        next_check: next_check_index(0, e, eff_min[s], rates[s], SCAN_STEP_S),
-                    }
+        // shared analytic pass maps, one per (shell, site) class —
+        // fetched from the process-wide cache before the parallel scan
+        let maps: Option<Vec<Vec<Arc<PassMap>>>> = use_analytic.then(|| {
+            constellation
+                .shells
+                .iter()
+                .map(|sh| {
+                    let inc = sh.inclination_deg.to_radians();
+                    sites
+                        .iter()
+                        .zip(&eff_min)
+                        .map(|(site, &em)| {
+                            analytic::shared_pass_map(sh.altitude_km, inc, site, em)
+                        })
+                        .collect()
                 })
-                .collect();
-            let mut i = 1;
-            while i < grid.len() {
-                // jump straight past steps every pair provably skips
-                let due = pairs.iter().map(|p| p.next_check).min().unwrap_or(usize::MAX);
-                if due > i {
-                    if due >= grid.len() {
-                        break;
-                    }
-                    i = due;
-                    continue;
+                .collect()
+        });
+
+        let mut states: Vec<Mutex<SatScan>> = (0..n_sats)
+            .map(|_| Mutex::new(SatScan { i: 0, pairs: Vec::new(), events: Vec::new() }))
+            .collect();
+
+        // per-chunk time-major site tables, reused across chunks
+        let mut site_chunk: Vec<Vec<Vec3>> = vec![Vec::new(); n_sites];
+        let mut chunk_lo = 0usize;
+        while chunk_lo < n_steps {
+            let chunk_hi = (chunk_lo + CHUNK_STEPS).min(n_steps);
+            for (s, buf) in site_chunk.iter_mut().enumerate() {
+                buf.clear();
+                buf.extend(grid[chunk_lo..chunk_hi].iter().map(|&t| site_props[s].position_at(t)));
+            }
+
+            // One satellite's scan over this chunk: all its site pairs
+            // swept together, so its position is computed at most once
+            // per step — and not at all on steps every pair provably
+            // skips. The evaluated-index set per pair depends only on
+            // the skip bounds, never on chunk or thread boundaries.
+            let scan_sat_chunk = |st: &mut SatScan, sat: usize| {
+                if st.i >= n_steps {
+                    return;
                 }
-                let t = grid[i];
-                let mut sat_pos: Option<Vec3> = None;
-                for s in 0..n_sites {
-                    if pairs[s].next_check > i {
+                let basis = constellation.propagator(sat);
+                let shell_maps = maps.as_ref().map(|m| &m[constellation.shell_of(sat)]);
+                let raan = constellation.satellites[sat].elements.raan_rad;
+                let u0 = basis.phase_rad();
+                let n_rad = basis.mean_motion_rad_s();
+
+                if st.i == 0 {
+                    // first chunk: initialize every pair at grid[0].
+                    // A pair whose pass map proves t = 0 invisible
+                    // skips the initial sample outright (prev_v =
+                    // false is proven, not sampled — the reference
+                    // would have sampled false).
+                    debug_assert_eq!(chunk_lo, 0);
+                    let mut sat0: Option<Vec3> = None;
+                    for s in 0..n_sites {
+                        let rate = elevation_rate_bound_rad_s(&sites[s], basis);
+                        let dlon0 = site_lon0[s] - raan;
+                        let t_poss = shell_maps
+                            .map(|m| m[s].next_possible(dlon0, u0, n_rad, horizon_s, 0.0));
+                        if let Some(tp) = t_poss.filter(|&tp| tp > 0.0) {
+                            st.pairs.push(PairScan {
+                                prev_v: false,
+                                start: None,
+                                next_check: analytic_index(tp).max(1),
+                                rate,
+                                dlon0,
+                            });
+                            continue;
+                        }
+                        let sp = *sat0.get_or_insert_with(|| basis.position_at(grid[0]));
+                        let e = elevation_deg(site_chunk[s][0], sp);
+                        let v = e >= eff_min[s];
+                        let mut next = next_check_index(0, e, eff_min[s], rate, SCAN_STEP_S);
+                        if !v {
+                            if let Some(m) = shell_maps {
+                                let tp = m[s].next_possible(dlon0, u0, n_rad, horizon_s, grid[0]);
+                                next = next.max(analytic_index(tp));
+                            }
+                        }
+                        st.pairs.push(PairScan {
+                            prev_v: v,
+                            start: if v { Some(0.0) } else { None },
+                            next_check: next,
+                            rate,
+                            dlon0,
+                        });
+                    }
+                    st.i = 1;
+                }
+
+                while st.i < chunk_hi {
+                    // jump straight past steps every pair provably skips
+                    let due = st.pairs.iter().map(|p| p.next_check).min().unwrap_or(usize::MAX);
+                    if due > st.i {
+                        if due >= n_steps {
+                            st.i = n_steps;
+                            return;
+                        }
+                        st.i = due;
                         continue;
                     }
-                    let sp = *sat_pos.get_or_insert_with(|| basis.position_at(t));
-                    let e = elevation_deg(site_grids[s][i], sp);
-                    let v = e >= eff_min[s];
-                    let pair = &mut pairs[s];
-                    if v != pair.prev_v {
-                        // grid[i-1] provably carries prev_v (it is
-                        // inside the window that let us skip to i, or
-                        // it was sampled), so this is the reference
-                        // scanner's bracket — and the same edge
-                        let edge = bisect_edge(
-                            &mut |tt: f64| {
-                                elevation_deg(
-                                    site_props[s].position_at(tt),
-                                    basis.position_at(tt),
-                                ) >= eff_min[s]
-                            },
-                            grid[i - 1],
-                            t,
-                            pair.prev_v,
-                        );
-                        if v {
-                            pair.start = Some(edge);
-                        } else if let Some(ws) = pair.start.take() {
-                            pair.windows.push(ContactWindow { start_s: ws, end_s: edge });
+                    let i = st.i;
+                    let t = grid[i];
+                    let mut sat_pos: Option<Vec3> = None;
+                    for s in 0..n_sites {
+                        if st.pairs[s].next_check > i {
+                            continue;
                         }
+                        let sp = *sat_pos.get_or_insert_with(|| basis.position_at(t));
+                        let e = elevation_deg(site_chunk[s][i - chunk_lo], sp);
+                        let v = e >= eff_min[s];
+                        let pair = &mut st.pairs[s];
+                        if v != pair.prev_v {
+                            // grid[i-1] provably carries prev_v (it is
+                            // inside the span that let us skip to i, or
+                            // it was sampled), so this is the reference
+                            // scanner's bracket — and the same edge
+                            let edge = bisect_edge(
+                                &mut |tt: f64| {
+                                    elevation_deg(
+                                        site_props[s].position_at(tt),
+                                        basis.position_at(tt),
+                                    ) >= eff_min[s]
+                                },
+                                grid[i - 1],
+                                t,
+                                pair.prev_v,
+                            );
+                            if v {
+                                pair.start = Some(edge);
+                            } else if let Some(ws) = pair.start.take() {
+                                st.events
+                                    .push((s as u32, ContactWindow { start_s: ws, end_s: edge }));
+                            }
+                        }
+                        let pair = &mut st.pairs[s];
+                        pair.prev_v = v;
+                        let mut next = next_check_index(i, e, eff_min[s], pair.rate, SCAN_STEP_S);
+                        if !v {
+                            // invisible: the pass map may prove the
+                            // whole gap to the next pass; take the
+                            // larger of the two proofs
+                            if let Some(m) = shell_maps {
+                                let tp = m[s].next_possible(pair.dlon0, u0, n_rad, horizon_s, t);
+                                next = next.max(analytic_index(tp));
+                            }
+                        }
+                        pair.next_check = next;
                     }
-                    pair.prev_v = v;
-                    pair.next_check = next_check_index(i, e, eff_min[s], rates[s], SCAN_STEP_S);
+                    st.i += 1;
                 }
-                i += 1;
+            };
+
+            let workers = worker_count(jobs, n_sats);
+            if workers <= 1 {
+                for (sat, st) in states.iter_mut().enumerate() {
+                    scan_sat_chunk(st.get_mut().unwrap(), sat);
+                }
+            } else {
+                // fan satellites across a scoped pool; each satellite
+                // owns its state, so scheduling cannot affect output
+                let next = AtomicUsize::new(0);
+                std::thread::scope(|scope| {
+                    for _ in 0..workers {
+                        scope.spawn(|| loop {
+                            let sat = next.fetch_add(1, Ordering::Relaxed);
+                            if sat >= n_sats {
+                                break;
+                            }
+                            scan_sat_chunk(&mut states[sat].lock().unwrap(), sat);
+                        });
+                    }
+                });
             }
-            pairs
-                .into_iter()
-                .map(|mut pair| {
-                    if let Some(ws) = pair.start.take() {
-                        pair.windows.push(ContactWindow { start_s: ws, end_s: horizon_s });
-                    }
-                    pair.windows
-                })
-                .collect()
-        };
+            chunk_lo = chunk_hi;
+        }
 
-        let per_sat: Vec<Vec<Vec<ContactWindow>>> = if jobs <= 1 {
-            (0..n_sats).map(scan_sat).collect()
-        } else {
-            // fan satellite rows across a scoped pool; every row lands
-            // in its index-addressed slot, so the assembled plan is
-            // independent of scheduling
-            let next = AtomicUsize::new(0);
-            let slots: Mutex<Vec<Option<Vec<Vec<ContactWindow>>>>> =
-                Mutex::new((0..n_sats).map(|_| None).collect());
-            std::thread::scope(|scope| {
-                for _ in 0..jobs {
-                    scope.spawn(|| loop {
-                        let sat = next.fetch_add(1, Ordering::Relaxed);
-                        if sat >= n_sats {
-                            break;
-                        }
-                        let row = scan_sat(sat);
-                        slots.lock().unwrap()[sat] = Some(row);
-                    });
+        // close still-open windows at the horizon (reference behavior)
+        let mut states: Vec<SatScan> =
+            states.into_iter().map(|m| m.into_inner().unwrap()).collect();
+        for st in &mut states {
+            for (s, pair) in st.pairs.iter_mut().enumerate() {
+                if let Some(ws) = pair.start.take() {
+                    st.events.push((s as u32, ContactWindow { start_s: ws, end_s: horizon_s }));
                 }
-            });
-            slots
-                .into_inner()
-                .unwrap()
-                .into_iter()
-                .map(|row| row.expect("scanned satellite row"))
-                .collect()
-        };
-
-        // transpose the per-satellite rows into the windows[site][sat]
-        // layout the query API serves
-        let mut windows: Vec<Vec<Vec<ContactWindow>>> =
-            (0..n_sites).map(|_| Vec::with_capacity(n_sats)).collect();
-        for row in per_sat {
-            debug_assert_eq!(row.len(), n_sites);
-            for (site, w) in row.into_iter().enumerate() {
-                windows[site].push(w);
             }
         }
-        Self::finish(windows, horizon_s)
+
+        // counting-sort the per-satellite event streams into the flat
+        // (site, sat) arena: count → prefix offsets → stable scatter
+        // (satellites ascending, events in detection order preserves
+        // each pair's time order)
+        let n_pairs = n_sites * n_sats;
+        let mut offsets = vec![0usize; n_pairs + 1];
+        for (sat, st) in states.iter().enumerate() {
+            for &(s, _) in &st.events {
+                offsets[s as usize * n_sats + sat + 1] += 1;
+            }
+        }
+        for p in 0..n_pairs {
+            offsets[p + 1] += offsets[p];
+        }
+        let total = offsets[n_pairs];
+        let mut arena = vec![ContactWindow { start_s: 0.0, end_s: 0.0 }; total];
+        let mut cursor: Vec<usize> = offsets[..n_pairs].to_vec();
+        for (sat, st) in states.into_iter().enumerate() {
+            for (s, w) in st.events {
+                let p = s as usize * n_sats + sat;
+                arena[cursor[p]] = w;
+                cursor[p] += 1;
+            }
+        }
+        Self::finish(arena, offsets, n_sites, n_sats, horizon_s)
     }
 
     /// The naive pre-PR-4 scanner, kept as the executable
@@ -315,56 +513,67 @@ impl ContactPlan {
         min_elev_deg: f64,
         horizon_s: f64,
     ) -> Self {
-        let windows = sites
-            .iter()
-            .map(|site| {
-                let eff_min = site.effective_min_elevation_deg(min_elev_deg);
-                (0..constellation.len())
-                    .map(|sat| {
-                        crate::orbit::contact_windows(
-                            |t| {
-                                elevation_deg(
-                                    site.position_eci(t),
-                                    constellation.position(sat, t),
-                                ) >= eff_min
-                            },
-                            horizon_s,
-                            SCAN_STEP_S,
-                        )
-                    })
-                    .collect()
-            })
-            .collect();
-        Self::finish(windows, horizon_s)
+        let n_sats = constellation.len();
+        let mut arena = Vec::new();
+        let mut offsets = Vec::with_capacity(sites.len() * n_sats + 1);
+        offsets.push(0);
+        for site in sites {
+            let eff_min = site.effective_min_elevation_deg(min_elev_deg);
+            for sat in 0..n_sats {
+                let ws = crate::orbit::contact_windows(
+                    |t| {
+                        elevation_deg(site.position_eci(t), constellation.position(sat, t))
+                            >= eff_min
+                    },
+                    horizon_s,
+                    SCAN_STEP_S,
+                );
+                arena.extend_from_slice(&ws);
+                offsets.push(arena.len());
+            }
+        }
+        Self::finish(arena, offsets, sites.len(), n_sats, horizon_s)
     }
 
     /// Assemble the plan and assert the finite-window invariant.
-    fn finish(windows: Vec<Vec<Vec<ContactWindow>>>, horizon_s: f64) -> Self {
-        let plan = ContactPlan { windows, horizon_s };
+    fn finish(
+        arena: Vec<ContactWindow>,
+        offsets: Vec<usize>,
+        n_sites: usize,
+        n_sats: usize,
+        horizon_s: f64,
+    ) -> Self {
+        debug_assert_eq!(offsets.len(), n_sites * n_sats + 1);
         // Window times are finite by construction (finite horizon/step,
         // bisection only averages); assert it once here so every
         // downstream total-order min / sort / event push can rely on it
         // instead of carrying per-call `partial_cmp(..).unwrap()` panic
         // paths.
-        for site_windows in &plan.windows {
-            for sat_windows in site_windows {
-                for w in sat_windows {
-                    assert!(
-                        w.start_s.is_finite() && w.end_s.is_finite(),
-                        "non-finite contact window {w:?}"
-                    );
-                }
-            }
+        for w in &arena {
+            assert!(
+                w.start_s.is_finite() && w.end_s.is_finite(),
+                "non-finite contact window {w:?}"
+            );
         }
-        plan
+        ContactPlan { arena, offsets, n_sites, n_sats, horizon_s }
     }
 
     pub fn n_sites(&self) -> usize {
-        self.windows.len()
+        self.n_sites
+    }
+
+    pub fn n_sats(&self) -> usize {
+        self.n_sats
     }
 
     pub fn windows(&self, site: usize, sat: usize) -> &[ContactWindow] {
-        &self.windows[site][sat]
+        let p = site * self.n_sats + sat;
+        &self.arena[self.offsets[p]..self.offsets[p + 1]]
+    }
+
+    /// Total number of windows across all pairs (O(1) on the arena).
+    pub fn total_windows(&self) -> usize {
+        self.arena.len()
     }
 
     /// Is `sat` visible from `site` at time `t`?
@@ -374,7 +583,7 @@ impl ContactPlan {
 
     /// The window containing `t`, if any (binary search).
     pub fn window_at(&self, site: usize, sat: usize, t: f64) -> Option<ContactWindow> {
-        let ws = &self.windows[site][sat];
+        let ws = self.windows(site, sat);
         let idx = ws.partition_point(|w| w.end_s < t);
         ws.get(idx).filter(|w| w.contains(t)).copied()
     }
@@ -382,7 +591,7 @@ impl ContactPlan {
     /// Earliest time ≥ `t` at which `sat` is visible from `site`
     /// (start of the next window, or `t` itself if inside one).
     pub fn next_visible(&self, site: usize, sat: usize, t: f64) -> Option<f64> {
-        let ws = &self.windows[site][sat];
+        let ws = self.windows(site, sat);
         let idx = ws.partition_point(|w| w.end_s < t);
         ws.get(idx).map(|w| w.start_s.max(t))
     }
@@ -391,7 +600,7 @@ impl ContactPlan {
     /// Allocation-free: callers iterate (or `collect` when they truly
     /// need a `Vec`) — this sits inside broadcast/relay hot loops.
     pub fn visible_sats(&self, site: usize, t: f64) -> impl Iterator<Item = usize> + '_ {
-        (0..self.windows[site].len()).filter(move |&s| self.visible(site, s, t))
+        (0..self.n_sats).filter(move |&s| self.visible(site, s, t))
     }
 
     /// Earliest time ≥ `t` at which `sat` is visible from *any* site;
@@ -406,7 +615,7 @@ impl ContactPlan {
 
     /// Fraction of the horizon that `sat` is visible from `site`.
     pub fn visibility_fraction(&self, site: usize, sat: usize) -> f64 {
-        self.windows[site][sat].iter().map(|w| w.duration_s()).sum::<f64>() / self.horizon_s
+        self.windows(site, sat).iter().map(|w| w.duration_s()).sum::<f64>() / self.horizon_s
     }
 }
 
@@ -422,6 +631,29 @@ mod tests {
         (c, p)
     }
 
+    fn assert_plans_bit_identical(a: &ContactPlan, b: &ContactPlan, what: &str) {
+        assert_eq!(a.n_sites(), b.n_sites());
+        assert_eq!(a.n_sats(), b.n_sats());
+        for site in 0..a.n_sites() {
+            for sat in 0..a.n_sats() {
+                let (x, y) = (a.windows(site, sat), b.windows(site, sat));
+                assert_eq!(x.len(), y.len(), "{what}: site {site} sat {sat}");
+                for (wa, wb) in x.iter().zip(y) {
+                    assert_eq!(
+                        wa.start_s.to_bits(),
+                        wb.start_s.to_bits(),
+                        "{what}: site {site} sat {sat}"
+                    );
+                    assert_eq!(
+                        wa.end_s.to_bits(),
+                        wb.end_s.to_bits(),
+                        "{what}: site {site} sat {sat}"
+                    );
+                }
+            }
+        }
+    }
+
     #[test]
     fn consistency_with_live_predicate() {
         let (c, p) = plan();
@@ -431,8 +663,7 @@ mod tests {
         for sat in [0usize, 13, 39] {
             for i in 0..48 {
                 let t = i as f64 * 1800.0;
-                let live =
-                    elevation_deg(site.position_eci(t), c.position(sat, t)) >= eff;
+                let live = elevation_deg(site.position_eci(t), c.position(sat, t)) >= eff;
                 let planned = p.visible(0, sat, t);
                 if live != planned {
                     // tolerate only near-edge disagreement (< 60 s)
@@ -499,18 +730,41 @@ mod tests {
         // contract close to the implementation
         let c = WalkerConstellation::paper();
         let sites = [GeodeticSite::rolla_hap(), GeodeticSite::portland_hap()];
-        let fast = ContactPlan::build_with_threads(&c, &sites, 10.0, 43_200.0, 1);
         let reference = ContactPlan::build_reference(&c, &sites, 10.0, 43_200.0);
-        for site in 0..2 {
-            for sat in 0..c.len() {
-                let (a, b) = (fast.windows(site, sat), reference.windows(site, sat));
-                assert_eq!(a.len(), b.len(), "site {site} sat {sat}");
-                for (x, y) in a.iter().zip(b) {
-                    assert_eq!(x.start_s.to_bits(), y.start_s.to_bits(), "site {site} sat {sat}");
-                    assert_eq!(x.end_s.to_bits(), y.end_s.to_bits(), "site {site} sat {sat}");
-                }
-            }
+        let fast = ContactPlan::build_with_threads(&c, &sites, 10.0, 43_200.0, 1);
+        let scan_only = ContactPlan::build_with_options(&c, &sites, 10.0, 43_200.0, 1, false);
+        assert_plans_bit_identical(&fast, &reference, "analytic vs reference");
+        assert_plans_bit_identical(&scan_only, &reference, "scan-only vs reference");
+        assert!(fast.total_windows() > 0);
+    }
+
+    #[test]
+    fn chunked_scan_matches_reference_across_chunk_boundaries() {
+        // a 3-day horizon spans several 2048-step chunks; windows
+        // crossing chunk boundaries must still match the reference
+        let c = WalkerConstellation::paper();
+        let sites = [GeodeticSite::rolla_hap()];
+        let horizon = 3.0 * 86_400.0;
+        let reference = ContactPlan::build_reference(&c, &sites, 10.0, horizon);
+        for jobs in [1, 3] {
+            let fast = ContactPlan::build_with_threads(&c, &sites, 10.0, horizon, jobs);
+            assert_plans_bit_identical(&fast, &reference, "multi-chunk");
         }
+    }
+
+    #[test]
+    fn never_visible_class_is_pruned_to_empty_windows() {
+        // a 5°-inclination shell can never be seen from Rolla: the
+        // analytic layer proves it without sampling, and the result
+        // still matches the (sampling) reference bitwise
+        let c = WalkerConstellation::from_shells(&[crate::orbit::ShellSpec::delta(
+            2, 4, 781.25, 5.0, 1,
+        )]);
+        let sites = [GeodeticSite::rolla_hap()];
+        let reference = ContactPlan::build_reference(&c, &sites, 10.0, 86_400.0);
+        let fast = ContactPlan::build_with_threads(&c, &sites, 10.0, 86_400.0, 1);
+        assert_plans_bit_identical(&fast, &reference, "pruned class");
+        assert_eq!(fast.total_windows(), 0);
     }
 
     #[test]
@@ -528,5 +782,15 @@ mod tests {
             let rate = 3.8e-3;
             assert!(next_check_index(7, e, eff, rate, SCAN_STEP_S) > 7);
         }
+    }
+
+    #[test]
+    fn analytic_index_is_conservative() {
+        assert_eq!(analytic_index(f64::INFINITY), usize::MAX);
+        assert_eq!(analytic_index(0.0), 0);
+        // t_possible = 95 s: grid index 3 (t = 90) may be visible;
+        // index computed = floor(95/30) − 1 = 2, one before it
+        assert_eq!(analytic_index(95.0), 2);
+        assert_eq!(analytic_index(60.0), 1);
     }
 }

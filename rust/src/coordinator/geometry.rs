@@ -10,11 +10,16 @@
 //! `Arc`s, so sweep cells (including the parallel executor's worker
 //! threads) share one immutable instance; and the one build that does
 //! run goes through the fast contact scanner (plane-basis propagation,
-//! time-major position sharing, provable interval skipping, parallel
+//! time-major position sharing, provable interval skipping, analytic
+//! pass-gap prediction, chunked flat-arena materialization, parallel
 //! per-satellite rows — see `contact`'s module docs), which is
 //! bit-identical to the naive reference sweep at any thread count, so
-//! the cache key → plan mapping stays deterministic. Per-run mutable
-//! state lives in [`super::env::RunState`]; `Geometry` is strictly
+//! the cache key → plan mapping stays deterministic. The analytic
+//! layer (`super::analytic`) has its own process-wide cache one level
+//! below this one, keyed by (shell, site-latitude-band) rather than
+//! full geometry — presets that share a shell share those pass maps
+//! even when their `Geometry` entries differ. Per-run mutable state
+//! lives in [`super::env::RunState`]; `Geometry` is strictly
 //! `Send + Sync`.
 
 use super::contact::ContactPlan;

@@ -6,8 +6,13 @@
 //! (constellation, sites, contact plan, link params) behind a
 //! process-wide `Arc` cache keyed by the geometry-relevant config
 //! subset; [`env::RunState`] holds what a single run mutates; `SimEnv`
-//! is the facade strategies program against.
+//! is the facade strategies program against. Underneath the plan,
+//! [`analytic`] holds the closed-form `γ(t) = γ_max` pass maps (PR 7)
+//! — shared per (shell, site-latitude-band) through their own
+//! process-wide cache — that [`contact`]'s scanner uses to skip whole
+//! pass gaps without sampling.
 
+pub mod analytic;
 pub mod contact;
 pub mod env;
 pub mod geometry;

@@ -19,10 +19,12 @@
 //! receive-time vectors are allocated once per run, not per event.
 //! Plane membership is a contiguous id range
 //! (`WalkerConstellation::orbit_members`), so relay sweeps and uplink
-//! routing never materialize member lists either.
+//! routing never materialize member lists either. Intra-plane neighbor
+//! and slot lookups go through the [`IslGraph`] ring tables (PR 7),
+//! keeping ring-routed schemes independent of the general ISL edge set.
 
 use crate::coordinator::SimEnv;
-use crate::topology::HapRing;
+use crate::topology::{HapRing, IslGraph};
 
 /// Receive time of the global model at every HAP when `source` starts
 /// the ring relay at `t` (Sec. IV-B1; Fig. 4a). Index = site id.
@@ -111,13 +113,21 @@ pub fn sat_receive_times_into(env: &mut SimEnv, bcasts: &[f64], recv: &mut Vec<f
                 continue; // orbit unreachable within horizon
             }
         }
-        relax_ring(env, members, recv);
+        relax_ring(env, &geo.isl, members, recv);
     }
 }
 
 /// Bidirectional ring relaxation of receive times within one orbit
-/// (`members` is the plane's contiguous id range).
-fn relax_ring(env: &mut SimEnv, members: std::ops::Range<usize>, recv: &mut [f64]) {
+/// (`members` is the plane's contiguous id range). Neighbors come from
+/// the [`IslGraph`] ring tables, which pin the intra-plane ring for
+/// every topology — so ring-routed schemes stay bit-identical whichever
+/// general edge set the graph carries.
+fn relax_ring(
+    env: &mut SimEnv,
+    graph: &IslGraph,
+    members: std::ops::Range<usize>,
+    recv: &mut [f64],
+) {
     let start = members.start;
     let n = members.len();
     if n <= 1 {
@@ -131,7 +141,8 @@ fn relax_ring(env: &mut SimEnv, members: std::ops::Range<usize>, recv: &mut [f64
             if !recv[cur].is_finite() {
                 continue;
             }
-            for nb in [start + (i + 1) % n, start + (i + n - 1) % n] {
+            let (prev, next) = graph.ring_neighbors(cur);
+            for nb in [next, prev] {
                 let d = env.isl_hop_delay(cur, nb, recv[cur]);
                 if recv[cur] + d < recv[nb] {
                     recv[nb] = recv[cur] + d;
@@ -154,11 +165,11 @@ pub fn uplink_route(env: &mut SimEnv, sat: usize, t_ready: f64) -> Option<(usize
     let orbit = geo.constellation.satellites[sat].orbit;
     let members = geo.constellation.orbit_members(orbit);
     let n = members.len();
-    let my_slot = geo.constellation.satellites[sat].slot;
+    let my_slot = geo.isl.ring_pos(sat);
 
     // Estimate the (near-constant) intra-orbit hop delay once.
     let hop_delay = if n > 1 {
-        let (prev, _) = geo.constellation.ring_neighbors(sat);
+        let (prev, _) = geo.isl.ring_neighbors(sat);
         env.isl_hop_delay(sat, prev, t_ready)
     } else {
         0.0

@@ -67,10 +67,17 @@
 //!   strategies program against. The `ContactPlan` inside a geometry
 //!   is built by the fast scanner (`coordinator::contact`): time-major
 //!   position sharing, a provable elevation-rate bound that skips whole
-//!   grid intervals, and per-satellite rows fanned across a scoped
-//!   thread pool — bit-identical to the kept-as-reference naive sweep
-//!   at any thread count (`tests/contact_equivalence.rs` asserts it on
-//!   every preset; `BENCH_geometry.json` tracks the speedup). The
+//!   grid intervals, an analytic pass-gap predictor
+//!   (`coordinator::analytic`, PR 7: the closed-form `γ(t) = γ_max`
+//!   condition bucketed over the (phase, Δ-longitude) torus, memoized
+//!   process-wide per (shell, site-latitude-band) so same-shell
+//!   satellites and same-latitude sites share one map), chunked
+//!   materialization into a flat window arena indexed by (site, sat),
+//!   and per-satellite rows fanned across a scoped thread pool —
+//!   bit-identical to the kept-as-reference naive sweep at any thread
+//!   count (`tests/contact_equivalence.rs` asserts it on every preset,
+//!   analytic layer on and off; `BENCH_geometry.json` tracks the
+//!   speedup and peak memory up to the 10,440-satellite preset). The
 //!   *run loop* on top of it has the same two-tier design (PR 5):
 //!   every `SimEnv` delay call evaluates through the geometry's cached
 //!   per-site `SitePropagator`s / per-satellite `PlaneBasis` values
@@ -86,11 +93,12 @@
 //!   constellations and `[isl]` / `[isl_linkN]` sections for the ISL
 //!   graph topology and per-shell link budgets) becomes a complete,
 //!   reproducible
-//!   `ExperimentConfig`; the built-in `ScenarioRegistry` catalogs ≥7
+//!   `ExperimentConfig`; the built-in `ScenarioRegistry` catalogs ≥8
 //!   presets (paper-40, starlink-lite, polar-star, sparse-iot,
-//!   equatorial-dense, haps-degraded, and the 1584-satellite
-//!   starlink-phase1 stress shell — see the module docs for how to
-//!   add one) behind `asyncfleo scenario`;
+//!   equatorial-dense, haps-degraded, the 1584-satellite
+//!   starlink-phase1 stress shell, and the 10,440-satellite four-shell
+//!   starlink-gen2 world — see the module docs for how to add one)
+//!   behind `asyncfleo scenario`;
 //! * [`experiments`] — drivers regenerating every paper table & figure,
 //!   plus the `resilience` sweep comparing graceful degradation across
 //!   schemes under the fault scenarios and the `scenarios` sweep

@@ -32,7 +32,9 @@ pub use doppler::{doppler_shift_hz, sat_sat_doppler_hz};
 pub use elements::{OrbitalElements, EARTH_RADIUS_KM, EARTH_ROTATION_RAD_S, MU_EARTH};
 pub use ground::{GeodeticSite, SiteKind, SitePropagator};
 pub use propagation::{satellite_position_eci, satellite_velocity_eci, PlaneBasis};
-pub use visibility::{contact_windows, elevation_deg, sat_sat_los, scan_grid, ContactWindow};
+pub use visibility::{
+    contact_windows, elevation_deg, max_central_angle_rad, sat_sat_los, scan_grid, ContactWindow,
+};
 // the fast scanner (coordinator::contact) refines the same brackets
 // with the same bisection as the reference scanner
 pub(crate) use visibility::bisect_edge;

@@ -70,6 +70,14 @@ impl PlaneBasis {
         self.n_rad_s
     }
 
+    /// Argument of latitude at t = 0, radians. Together with
+    /// [`Self::mean_motion_rad_s`] this determines `u(t) = phase + n·t`,
+    /// which the analytic contact predictor (`coordinator::analytic`)
+    /// inverts for first-possible-contact times.
+    pub fn phase_rad(&self) -> f64 {
+        self.phase_rad
+    }
+
     /// Rotate an in-plane vector `(x, y, 0)` into ECI. Op-for-op the
     /// original `rot_x(inc)` + `rot_z(raan)` chain with the per-call
     /// trigonometry hoisted into the constructor (the dropped

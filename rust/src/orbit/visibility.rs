@@ -36,6 +36,35 @@ pub fn sat_sat_los(a: Vec3, b: Vec3) -> bool {
     closest.norm() >= r_block
 }
 
+/// Maximum central angle between a site's and a satellite's geocentric
+/// direction vectors at which the satellite still clears the minimum
+/// elevation, radians.
+///
+/// In the Earth-center / site / satellite triangle, the angle at the
+/// site is `90° + e` (elevation measured from the local tangent plane)
+/// and the angle at the satellite is `90° − γ − e`. The law of sines
+/// with site radius `a` and satellite radius `b` gives
+/// `a / cos(γ + e) = b / cos e`, hence
+///
+/// ```text
+/// γ_max = acos((a / b) · cos e_min) − e_min
+/// ```
+///
+/// Elevation decreases strictly monotonically in γ
+/// (`de/dγ = −b(b − a·cos γ)/d² < 0` for `b > a`), so
+/// `e(t) ≥ e_min  ⟺  γ(t) ≤ γ_max` — the scalar threshold the analytic
+/// contact predictor (`coordinator::analytic`) tests instead of the
+/// full elevation formula. Negative `min_elev_deg` (an elevated site's
+/// horizon dip) is valid and simply widens the cone.
+pub fn max_central_angle_rad(site_radius_km: f64, sat_radius_km: f64, min_elev_deg: f64) -> f64 {
+    assert!(
+        sat_radius_km > site_radius_km && site_radius_km > 0.0,
+        "max central angle needs sat above site, got {site_radius_km}/{sat_radius_km}"
+    );
+    let e = min_elev_deg.to_radians();
+    ((site_radius_km / sat_radius_km) * e.cos()).acos() - e
+}
+
 /// A closed interval of continuous visibility.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ContactWindow {
@@ -275,6 +304,36 @@ mod tests {
             .sum()
         };
         assert!(total(5.0) > total(25.0));
+    }
+
+    #[test]
+    fn max_central_angle_matches_elevation_threshold() {
+        // Place the site on the x axis and sweep satellites at central
+        // angle γ: elevation crosses min_elev exactly at γ_max.
+        let a = EARTH_RADIUS_KM;
+        let b = EARTH_RADIUS_KM + 550.0;
+        let site = Vec3::new(a, 0.0, 0.0);
+        for min_elev in [0.0, 10.0, 25.0, -1.5] {
+            let gamma_max = max_central_angle_rad(a, b, min_elev);
+            assert!(gamma_max > 0.0 && gamma_max < std::f64::consts::FRAC_PI_2);
+            let at = |gamma: f64| {
+                elevation_deg(site, Vec3::new(b * gamma.cos(), b * gamma.sin(), 0.0))
+            };
+            assert!((at(gamma_max) - min_elev).abs() < 1e-9, "edge at {min_elev}");
+            assert!(at(gamma_max - 0.01) > min_elev);
+            assert!(at(gamma_max + 0.01) < min_elev);
+        }
+    }
+
+    #[test]
+    fn max_central_angle_shrinks_with_elevation_and_grows_with_altitude() {
+        let a = EARTH_RADIUS_KM;
+        assert!(
+            max_central_angle_rad(a, a + 550.0, 5.0) > max_central_angle_rad(a, a + 550.0, 25.0)
+        );
+        assert!(
+            max_central_angle_rad(a, a + 1200.0, 10.0) > max_central_angle_rad(a, a + 550.0, 10.0)
+        );
     }
 
     #[test]

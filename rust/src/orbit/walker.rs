@@ -274,6 +274,14 @@ impl WalkerConstellation {
         start..start + self.shells[shell].n_sats()
     }
 
+    /// Shell index of satellite `id`. Every satellite in a shell shares
+    /// altitude and inclination, so per-(shell, site) results — like the
+    /// analytic pass maps in `coordinator::analytic` — are computed once
+    /// and shared across the whole shell.
+    pub fn shell_of(&self, id: usize) -> usize {
+        self.satellites[id].shell
+    }
+
     /// Position of satellite `id` at time `t` (ECI, km), via the
     /// cached plane basis (bit-identical to
     /// [`super::propagation::satellite_position_eci`]).
@@ -425,6 +433,16 @@ mod tests {
         // altitudes follow the shell
         assert_eq!(c.satellites[0].elements.altitude_km, 550.0);
         assert_eq!(c.satellites[6].elements.altitude_km, 1110.0);
+    }
+
+    #[test]
+    fn shell_of_follows_id_ranges() {
+        let c = two_shell();
+        for shell in 0..c.n_shells() {
+            for id in c.shell_id_range(shell) {
+                assert_eq!(c.shell_of(id), shell);
+            }
+        }
     }
 
     #[test]

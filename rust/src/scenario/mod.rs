@@ -40,12 +40,14 @@
 //! `isl_edge_outage_duration_s`). Everything round-trips through
 //! `to_toml`/`from_toml` like the rest of the config.
 //!
-//! The built-in catalog ([`ScenarioRegistry::builtin`]) ships ≥7
+//! The built-in catalog ([`ScenarioRegistry::builtin`]) ships ≥8
 //! presets spanning the design space the related work evaluates on
 //! (paper 5×8, a two-shell Starlink-like mix, a OneWeb-like polar star,
 //! a sparse IoT constellation, an equatorial shell, a HAP-degraded
-//! world, and the 1584-satellite `starlink-phase1` stress shell the
-//! run-loop bench drives). `asyncfleo scenario` lists the catalog, dumps
+//! world, the 1584-satellite `starlink-phase1` stress shell the
+//! run-loop bench drives, and the 10,440-satellite four-shell
+//! `starlink-gen2` world that stresses the analytic contact
+//! predictor). `asyncfleo scenario` lists the catalog, dumps
 //! presets to TOML, and sweeps scheme×scenario comparison grids through
 //! `experiments::scenarios` into `results/scenarios.csv`.
 //!
@@ -153,6 +155,7 @@ impl ScenarioRegistry {
                 equatorial_dense(),
                 haps_degraded(),
                 starlink_phase1(),
+                starlink_gen2(),
             ],
         }
     }
@@ -283,6 +286,35 @@ fn starlink_phase1() -> Scenario {
     )
 }
 
+/// Starlink Gen2-flavored four-shell constellation at 10k+ scale: three
+/// dense 28×110 shells stacked at 525/530/535 km with spread
+/// inclinations (53°/43°/33°) plus a 12×100 high-inclination shell at
+/// 604 km — 10,440 satellites total, two HAP sinks. The geometry stress
+/// world for the analytic contact predictor: three shells share
+/// latitude bands per site, so the (shell, site-latitude-band) pass-map
+/// cache and the pass-gap skip are both load-bearing here. Training
+/// sample count is raised so every satellite still gets a shard.
+fn starlink_gen2() -> Scenario {
+    let mut cfg = base();
+    cfg.constellation.n_orbits = 28;
+    cfg.constellation.sats_per_orbit = 110;
+    cfg.constellation.altitude_km = 525.0;
+    cfg.constellation.inclination_deg = 53.0;
+    cfg.constellation.phasing = 1;
+    cfg.constellation.extra_shells = vec![
+        ShellSpec::delta(28, 110, 530.0, 43.0, 1),
+        ShellSpec::delta(28, 110, 535.0, 33.0, 1),
+        ShellSpec::delta(12, 100, 604.0, 70.0, 1),
+    ];
+    cfg.placement = PsPlacement::TwoHaps;
+    cfg.data.train_samples = 20_880; // 2 samples per satellite
+    Scenario::new(
+        "starlink-gen2",
+        "Starlink Gen2-like four-shell mix, 10440 sats, two HAPs",
+        cfg,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,7 +323,7 @@ mod tests {
     #[test]
     fn catalog_has_at_least_six_presets() {
         let reg = ScenarioRegistry::builtin();
-        assert!(reg.len() >= 7, "catalog has {}", reg.len());
+        assert!(reg.len() >= 8, "catalog has {}", reg.len());
         for name in [
             "paper-40",
             "starlink-lite",
@@ -300,6 +332,7 @@ mod tests {
             "equatorial-dense",
             "haps-degraded",
             "starlink-phase1",
+            "starlink-gen2",
         ] {
             assert!(reg.get(name).is_some(), "missing preset {name}");
         }
@@ -319,6 +352,17 @@ mod tests {
         // dumps + reloads like every other preset (also covered by the
         // round-trip test, pinned here so the stress preset never
         // silently drops out of the catalog)
+        let reloaded = Scenario::from_toml(&sc.to_toml()).unwrap();
+        assert_eq!(reloaded, sc);
+    }
+
+    #[test]
+    fn starlink_gen2_is_ten_thousand_sats_four_shells() {
+        let sc = ScenarioRegistry::builtin().get("starlink-gen2").unwrap().clone();
+        assert_eq!(sc.cfg.n_sats(), 10_440, "3x(28x110) + 12x100");
+        assert_eq!(sc.cfg.constellation.shells().len(), 4, "four shells");
+        assert!(sc.cfg.data.train_samples >= sc.cfg.n_sats(), "every sat gets a shard");
+        assert!(sc.cfg.validate().is_empty(), "{:?}", sc.cfg.validate());
         let reloaded = Scenario::from_toml(&sc.to_toml()).unwrap();
         assert_eq!(reloaded, sc);
     }

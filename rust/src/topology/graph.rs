@@ -222,6 +222,15 @@ pub struct IslGraph {
     edges: Vec<IslEdge>,
     /// Per node: `(edge index, neighbor id)`, sorted by neighbor id.
     adj: Vec<Vec<(u32, u32)>>,
+    /// Intra-plane ring tables, one entry per node: previous / next
+    /// slot in the same plane and the node's ring position. Filled for
+    /// every topology (the intra-plane ring is part of every edge set),
+    /// so ring-routed schemes can read their neighborhood off the graph
+    /// without consulting general adjacency — which would leak grid /
+    /// gateway edges into schemes defined on the ring.
+    ring_prev: Vec<u32>,
+    ring_next: Vec<u32>,
+    ring_pos: Vec<u32>,
     /// Resolved per-shell link budgets (index = shell).
     links: Vec<LinkParams>,
 }
@@ -239,11 +248,21 @@ impl IslGraph {
             edges.push(IslEdge { a: a as u32, b: b as u32, kind, shell: shell as u32 });
         };
 
-        // intra-plane rings (every topology)
+        // intra-plane rings (every topology) + per-node ring tables
+        // (identical to `WalkerConstellation::ring_neighbors` / slot by
+        // construction; a single-member plane points at itself)
+        let mut ring_prev: Vec<u32> = (0..n as u32).collect();
+        let mut ring_next: Vec<u32> = (0..n as u32).collect();
+        let mut ring_pos: Vec<u32> = vec![0; n];
         for orbit in 0..c.n_orbits {
             let members = c.orbit_members(orbit);
             let (start, len) = (members.start, members.len());
             let shell = c.satellites[start].shell;
+            for i in 0..len {
+                ring_pos[start + i] = i as u32;
+                ring_prev[start + i] = (start + (i + len - 1) % len) as u32;
+                ring_next[start + i] = (start + (i + 1) % len) as u32;
+            }
             if len == 2 {
                 push(start, start + 1, IslEdgeKind::IntraPlane, shell);
             } else if len >= 3 {
@@ -313,7 +332,21 @@ impl IslGraph {
         for list in &mut adj {
             list.sort_unstable_by_key(|&(_, nb)| nb);
         }
-        IslGraph { n, doppler: cfg.doppler, edges, adj, links }
+        IslGraph { n, doppler: cfg.doppler, edges, adj, ring_prev, ring_next, ring_pos, links }
+    }
+
+    /// Intra-plane ring neighbors of `id` as `(prev, next)` — the same
+    /// integers as [`WalkerConstellation::ring_neighbors`] (pinned by
+    /// tests). Available under every topology, so ring-routed schemes
+    /// (`fl::propagation`) read the ring off the graph without their
+    /// semantics depending on the configured edge set.
+    pub fn ring_neighbors(&self, id: usize) -> (usize, usize) {
+        (self.ring_prev[id] as usize, self.ring_next[id] as usize)
+    }
+
+    /// In-plane ring position (slot index) of `id`.
+    pub fn ring_pos(&self, id: usize) -> usize {
+        self.ring_pos[id] as usize
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -492,6 +525,27 @@ mod tests {
             expect.dedup();
             let got: Vec<usize> = g.neighbors(id).collect();
             assert_eq!(got, expect, "sat {id}");
+        }
+    }
+
+    #[test]
+    fn ring_tables_pin_ring_neighbors_and_slots_under_every_topology() {
+        // The per-node ring tables must reproduce the constellation's
+        // `ring_neighbors` / `slot` integers exactly — including on
+        // multi-shell worlds with odd plane sizes and under the Grid
+        // topology (the tables must not depend on the edge set).
+        let multi = WalkerConstellation::from_shells(&[
+            ShellSpec::delta(2, 3, 551.5, 53.0, 1),
+            ShellSpec::delta(3, 4, 1111.5, 53.8, 1),
+            ShellSpec::delta(1, 2, 1475.5, 70.0, 0),
+        ]);
+        for c in [&paper(), &multi] {
+            for g in [&ring_graph(c), &grid_graph(c)] {
+                for id in 0..c.len() {
+                    assert_eq!(g.ring_neighbors(id), c.ring_neighbors(id), "sat {id}");
+                    assert_eq!(g.ring_pos(id), c.satellites[id].slot, "sat {id}");
+                }
+            }
         }
     }
 

@@ -10,6 +10,9 @@
 //!
 //! * fast single-thread scan ≡ reference scan (to_bits equality on
 //!   every window edge of every (site, sat) pair);
+//! * the scan with the analytic pass-gap predictor disabled ≡ reference
+//!   (PR 7: the closed-form skip may only remove provably-invisible
+//!   samples, never change which grid points flip);
 //! * 4-thread build ≡ 1-thread build (the parallel builder writes rows
 //!   by index, so thread count must never leak into the plan);
 //! * the default `build` entry point (auto thread count) ≡ both.
@@ -56,7 +59,13 @@ fn fast_scanner_bit_identical_to_reference_on_every_preset() {
         // stays affordable (the scan logic has no horizon-dependent
         // branches — every code path runs within hours of simulated
         // time)
-        let horizon_s = if constellation.len() > 100 { 6.0 * 3600.0 } else { 86_400.0 };
+        let horizon_s = if constellation.len() > 5000 {
+            2.0 * 3600.0
+        } else if constellation.len() > 100 {
+            6.0 * 3600.0
+        } else {
+            86_400.0
+        };
         let min_elev = cfg.min_elevation_deg;
 
         let reference = ContactPlan::build_reference(&constellation, &sites, min_elev, horizon_s);
@@ -66,6 +75,18 @@ fn fast_scanner_bit_identical_to_reference_on_every_preset() {
             &fast1,
             constellation.len(),
             &format!("{}: fast(1) vs reference", sc.name),
+        );
+
+        // the rate-bound-only scanner (analytic layer disabled) must
+        // also match: the pass-gap skip may only remove work, never
+        // change which grid samples flip
+        let scan_only =
+            ContactPlan::build_with_options(&constellation, &sites, min_elev, horizon_s, 1, false);
+        assert_bit_identical(
+            &reference,
+            &scan_only,
+            constellation.len(),
+            &format!("{}: scan-only vs reference", sc.name),
         );
 
         let fast4 = ContactPlan::build_with_threads(&constellation, &sites, min_elev, horizon_s, 4);

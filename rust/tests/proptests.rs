@@ -2,10 +2,14 @@
 //! routing, batching, staleness, event ordering) using the in-crate
 //! testkit (`forall` with seeded, replayable cases).
 
+use asyncfleo::coordinator::analytic::{pass_map_build_count, shared_pass_map};
+use asyncfleo::coordinator::ContactPlan;
 use asyncfleo::fl::aggregation::{select_and_weigh, Candidate};
 use asyncfleo::fl::grouping::GroupingState;
 use asyncfleo::model::{ModelMetadata, ModelParams};
-use asyncfleo::orbit::{contact_windows, OrbitalElements, WalkerConstellation};
+use asyncfleo::orbit::{
+    contact_windows, GeodeticSite, OrbitalElements, SiteKind, WalkerConstellation,
+};
 use asyncfleo::sim::{Event, EventKind, EventQueue};
 use asyncfleo::testkit::{forall, forall_seeded};
 use asyncfleo::topology::HapRing;
@@ -239,6 +243,90 @@ fn contact_windows_are_sorted_disjoint_within_horizon() {
             assert!(p[0].end_s <= p[1].start_s);
         }
     });
+}
+
+// ---------------------------------------------------------------------
+// Analytic pass maps (PR 7)
+// ---------------------------------------------------------------------
+
+#[test]
+fn analytic_first_contact_never_later_than_reference() {
+    // The pass map's `next_possible(…, 0.0)` is a conservative lower
+    // bound on the first contact: everything before it is proven
+    // invisible, so the reference scan's first window cannot start
+    // earlier than one grid step below it — and an INFINITY verdict
+    // means the reference must find no windows at all.
+    let populated = std::sync::atomic::AtomicUsize::new(0);
+    forall_seeded(0xA11C, 25, |rng| {
+        let alt = rng.range_f64(500.0, 2000.0);
+        let inc_deg = rng.range_f64(10.0, 170.0);
+        let lat = rng.range_f64(-80.0, 80.0);
+        let lon = rng.range_f64(-180.0, 180.0);
+        let c = WalkerConstellation::new(1, 1, alt, inc_deg, 0);
+        let site = GeodeticSite { kind: SiteKind::Hap, lat_deg: lat, lon_deg: lon, alt_km: 20.0 };
+        let eff = site.effective_min_elevation_deg(10.0);
+        let e = &c.satellites[0].elements;
+        let horizon = 86_400.0;
+
+        let map = shared_pass_map(alt, e.inclination_rad, &site, eff);
+        let tp = map.next_possible(
+            site.lon_deg.to_radians() - e.raan_rad,
+            e.phase_rad,
+            e.mean_motion_rad_s(),
+            horizon,
+            0.0,
+        );
+        let plan = ContactPlan::build_reference(&c, &[site], 10.0, horizon);
+        let ws = plan.windows(0, 0);
+        if tp.is_infinite() {
+            assert!(
+                ws.is_empty(),
+                "map proved no pass within {horizon} s but reference found {} windows \
+                 (alt {alt}, inc {inc_deg}, lat {lat})",
+                ws.len()
+            );
+        } else if let Some(w) = ws.first() {
+            // the bisected start lies within one 30 s grid step of the
+            // true flip, and the true flip is >= tp
+            assert!(
+                w.start_s >= tp - 30.0 - 1e-6,
+                "reference window starts {} but map promised nothing before {tp} \
+                 (alt {alt}, inc {inc_deg}, lat {lat})",
+                w.start_s
+            );
+            populated.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+    });
+    // the property must not hold vacuously: most draws see real passes
+    assert!(
+        populated.load(std::sync::atomic::Ordering::Relaxed) >= 5,
+        "too few draws produced contact windows"
+    );
+}
+
+#[test]
+fn pass_map_is_memoized_across_a_whole_shell() {
+    // One shell × one site = one pass-map build, however many
+    // satellites the plan scans (raan/phase enter the query, not the
+    // map key). The altitude is unique to this test so parallel tests
+    // can't warm the process-wide cache for us.
+    let alt = 913.7753;
+    let inc_deg = 61.37;
+    let c = WalkerConstellation::new(3, 5, alt, inc_deg, 1);
+    let site = GeodeticSite::rolla_hap();
+    let eff = site.effective_min_elevation_deg(10.0);
+    let inc_rad = inc_deg.to_radians();
+
+    let plan = ContactPlan::build_with_threads(&c, &[site], 10.0, 21_600.0, 2);
+    assert_eq!(
+        pass_map_build_count(alt, inc_rad, &site, eff),
+        1,
+        "15 satellites over one site must share a single pass map"
+    );
+    // a second build (any thread count) hits the cache, builds nothing
+    let plan2 = ContactPlan::build_with_threads(&c, &[site], 10.0, 21_600.0, 1);
+    assert_eq!(pass_map_build_count(alt, inc_rad, &site, eff), 1);
+    assert_eq!(plan.total_windows(), plan2.total_windows());
 }
 
 // ---------------------------------------------------------------------
