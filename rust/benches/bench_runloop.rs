@@ -58,8 +58,8 @@ fn main() {
         for &(label, scheme) in SCENARIO_SCHEMES {
             let mut c = cfg.clone();
             c.fl.scheme = scheme;
-            let (fast_r, fast_s) = timed_run(&c, false);
-            let (ref_r, ref_s) = timed_run(&c, true);
+            let (fast_r, fast_s, fast_phases) = timed_run(&c, false);
+            let (ref_r, ref_s, _) = timed_run(&c, true);
             assert_runs_identical(&fast_r, &ref_r, &format!("{name}/{label}"));
             let speedup = ref_s / fast_s.max(1e-9);
             println!(
@@ -67,11 +67,18 @@ fn main() {
                 fast_r.epochs,
                 fast_r.transfers
             );
+            let phases_json: Vec<String> = fast_phases
+                .iter()
+                .map(|(n, s, cnt)| {
+                    format!("{{\"name\": \"{n}\", \"secs\": {s:.6}, \"count\": {cnt}}}")
+                })
+                .collect();
             scheme_rows.push(format!(
-                "        {{\"scheme\": \"{}\", \"fast_s\": {fast_s:.6}, \"reference_s\": {ref_s:.6}, \"speedup\": {speedup:.4}, \"epochs\": {}, \"transfers\": {}}}",
+                "        {{\"scheme\": \"{}\", \"fast_s\": {fast_s:.6}, \"reference_s\": {ref_s:.6}, \"speedup\": {speedup:.4}, \"epochs\": {}, \"transfers\": {}, \"phases\": [{}]}}",
                 scheme.name(),
                 fast_r.epochs,
                 fast_r.transfers,
+                phases_json.join(", "),
             ));
         }
 
@@ -84,8 +91,15 @@ fn main() {
         ));
     }
 
+    // process-wide substrate phases (geometry build, contact scan,
+    // analytic pass-map memoization) accumulated across every preset
+    let substrate: Vec<String> = asyncfleo::obs::global_phases()
+        .into_iter()
+        .map(|(n, s, c)| format!("    {{\"name\": \"{n}\", \"secs\": {s:.6}, \"count\": {c}}}"))
+        .collect();
     let json = format!(
-        "{{\n  \"bench\": \"runloop\",\n  \"delay_calls_per_iter\": {DELAY_CALLS},\n  \"presets\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"runloop\",\n  \"delay_calls_per_iter\": {DELAY_CALLS},\n  \"substrate_phases\": [\n{}\n  ],\n  \"presets\": [\n{}\n  ]\n}}\n",
+        substrate.join(",\n"),
         rows.join(",\n")
     );
     let mut f = std::fs::File::create("BENCH_runloop.json").expect("create BENCH_runloop.json");
@@ -175,8 +189,17 @@ fn delay_benches(name: &str, cfg: &ExperimentConfig) -> (f64, f64) {
 
 /// One whole strategy run, timed. `reference` routes delays through the
 /// pre-cache formulas and model compute through the allocating
-/// `ReferenceSurrogate` plumbing.
-fn timed_run(cfg: &ExperimentConfig, reference: bool) -> (RunResult, f64) {
+/// `ReferenceSurrogate` plumbing. The fast run carries metrics-only
+/// observation so its per-scheme phase split (event loop vs
+/// aggregation) lands in `BENCH_runloop.json` — the timing therefore
+/// *includes* the observation overhead, which doubles as a live gate
+/// that it stays near zero (results are bit-identical either way;
+/// `assert_runs_identical` above pins that against the unobserved
+/// reference run).
+fn timed_run(
+    cfg: &ExperimentConfig,
+    reference: bool,
+) -> (RunResult, f64, Vec<(&'static str, f64, u64)>) {
     let mut strategy = make_strategy(cfg.fl.scheme);
     if reference {
         let mut b = ReferenceSurrogate(SurrogateBackend::for_config(cfg));
@@ -184,12 +207,18 @@ fn timed_run(cfg: &ExperimentConfig, reference: bool) -> (RunResult, f64) {
         env.set_reference_path(true);
         let t0 = Instant::now();
         let r = strategy.run(&mut env);
-        (r, t0.elapsed().as_secs_f64())
+        (r, t0.elapsed().as_secs_f64(), Vec::new())
     } else {
         let mut b = SurrogateBackend::for_config(cfg);
         let mut env = SimEnv::new(cfg, &mut b);
+        env.enable_obs(asyncfleo::obs::RunObs::metrics_only());
         let t0 = Instant::now();
         let r = strategy.run(&mut env);
-        (r, t0.elapsed().as_secs_f64())
+        let wall = t0.elapsed().as_secs_f64();
+        let phases = env
+            .take_obs()
+            .map(|o| o.phases.entries().collect())
+            .unwrap_or_default();
+        (r, wall, phases)
     }
 }

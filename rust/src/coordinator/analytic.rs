@@ -356,6 +356,7 @@ pub fn shared_pass_map(
     }
     // build outside the cache lock (maps are deterministic — a rare
     // double build is wasted work, not divergence; last insert wins)
+    let _phase = crate::obs::global_phase("pass_map");
     let map = Arc::new(build_map(
         sat_altitude_km,
         inclination_rad,

@@ -45,6 +45,7 @@ use crate::comm::delay::{model_bits, total_delay_s};
 use crate::config::ExperimentConfig;
 use crate::faults::{FaultPlan, FaultSchedule, FaultStats, LinkClass};
 use crate::metrics::{Curve, CurvePoint};
+use crate::obs::{ObsReport, RunObs};
 use crate::orbit::{GeodeticSite, WalkerConstellation};
 use crate::train::Backend;
 use crate::util::{Rng, SPEED_OF_LIGHT_KM_S};
@@ -74,6 +75,12 @@ pub struct RunState<'a> {
     /// Route delay calls through the pre-cache reference formulas
     /// (see the module docs). Off on every normal run.
     reference_path: bool,
+    /// Observability state (trace sink + metrics registry + phase
+    /// timers), `None` unless this run is observed. Strictly
+    /// observe-only: every hook draws nothing from the RNG and changes
+    /// no arithmetic, so observed runs stay bit-identical to
+    /// unobserved ones (`tests/obs_equivalence.rs`).
+    pub obs: Option<Box<RunObs>>,
 }
 
 /// Everything a strategy needs: geometry, contacts, delays, compute.
@@ -135,7 +142,48 @@ impl<'a> SimEnv<'a> {
                 transmission_s,
                 processing_s,
                 reference_path: false,
+                obs: None,
             },
+        }
+    }
+
+    /// Attach observability state to this run (trace sink + metrics +
+    /// phase timers). Observation is strictly observe-only — see the
+    /// `obs` module docs for the bit-identity contract.
+    pub fn enable_obs(&mut self, obs: RunObs) {
+        self.state.obs = Some(Box::new(obs));
+    }
+
+    /// The run's observability state, if observed. Strategies emit
+    /// through this (`if let Some(obs) = env.obs() { ... }` — one
+    /// branch when observation is off).
+    #[inline]
+    pub fn obs(&mut self) -> Option<&mut RunObs> {
+        self.state.obs.as_deref_mut()
+    }
+
+    /// Detach the observability state (flush/inspect the sink after
+    /// the strategy returned).
+    pub fn take_obs(&mut self) -> Option<Box<RunObs>> {
+        self.state.obs.take()
+    }
+
+    /// Start a per-run phase timer — `None` (and free) when the run is
+    /// not observed. Close with [`SimEnv::phase_end`].
+    #[inline]
+    pub fn phase_start(&self) -> Option<std::time::Instant> {
+        if self.state.obs.is_some() {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Charge the elapsed time since `phase_start` to `name`.
+    #[inline]
+    pub fn phase_end(&mut self, name: &'static str, t0: Option<std::time::Instant>) {
+        if let (Some(t0), Some(obs)) = (t0, self.state.obs.as_deref_mut()) {
+            obs.phases.add(name, t0.elapsed().as_secs_f64());
         }
     }
 
@@ -255,22 +303,59 @@ impl<'a> SimEnv<'a> {
     /// Route one transfer through the fault oracle. With faults
     /// disabled this returns `base` untouched and draws nothing, so
     /// clean runs stay bit-identical to the pre-faults code path.
+    ///
+    /// The unobserved branch is the exact historical code path; the
+    /// observed branch performs the same arithmetic in the same order
+    /// and only *reads* the outcome (one `model_tx` record per call —
+    /// aligned 1:1 with the `transfers` accounting — plus `fault_hit`
+    /// records derived from the stats deltas), so observed and
+    /// unobserved runs return bit-identical delays.
     fn apply_faults(&mut self, class: LinkClass, t: f64, base: f64) -> f64 {
-        if !self.state.faults.enabled() {
-            return base;
+        if self.state.obs.is_none() {
+            if !self.state.faults.enabled() {
+                return base;
+            }
+            let out = self.state.faults.transfer(class, t, base);
+            // every retransmission re-sends the payload: communication
+            // cost — counted once per channel event, not per probe of it
+            if out.newly_observed {
+                self.state.transfers += out.retransmits as u64;
+            }
+            return out.delay_s;
         }
-        let out = self.state.faults.transfer(class, t, base);
-        // every retransmission re-sends the payload: communication
-        // cost — counted once per channel event, not per probe of it
-        if out.newly_observed {
-            self.state.transfers += out.retransmits as u64;
-        }
-        out.delay_s
+        let (delay, counted_retransmits) = if self.state.faults.enabled() {
+            let before = self.state.faults.stats();
+            let out = self.state.faults.transfer(class, t, base);
+            if out.newly_observed {
+                self.state.transfers += out.retransmits as u64;
+            }
+            let after = self.state.faults.stats();
+            let obs = self.state.obs.as_deref_mut().unwrap();
+            if after.retransmits > before.retransmits {
+                obs.fault_hit(t, "loss", after.retransmits - before.retransmits);
+            }
+            if after.deferrals > before.deferrals {
+                obs.fault_hit(t, "defer", after.deferrals - before.deferrals);
+            }
+            (
+                out.delay_s,
+                if out.newly_observed { out.retransmits } else { 0 },
+            )
+        } else {
+            (base, 0)
+        };
+        let payload_bits = self.state.payload_bits;
+        let obs = self.state.obs.as_deref_mut().unwrap();
+        obs.model_tx(t, &class, base, delay, counted_retransmits, payload_bits);
+        delay
     }
 
     /// Record an evaluation point on the run curve.
     pub fn record(&mut self, t: f64, epoch: u64, accuracy: f64, loss: f64) {
         self.state.curve.push(CurvePoint { time_s: t, epoch, accuracy, loss });
+        if let Some(obs) = self.state.obs.as_deref_mut() {
+            obs.eval(t, epoch, accuracy, loss);
+        }
     }
 
     /// On-board training wall time per visit (the compute-time model:
@@ -292,6 +377,10 @@ pub struct RunResult {
     pub transfers: u64,
     /// Fault-injection accounting (all zero on clean runs).
     pub fault_stats: FaultStats,
+    /// Observability snapshot (metrics, link loads, phase times) when
+    /// the run was observed, `None` otherwise. Boxed: the report is
+    /// cold data and most runs never carry one.
+    pub obs: Option<Box<ObsReport>>,
 }
 
 impl RunResult {
@@ -309,6 +398,9 @@ impl RunResult {
             epochs,
             transfers: env.state.transfers,
             fault_stats: env.state.faults.stats(),
+            // snapshot (not take): the sink stays on the env so the
+            // caller can still flush / inspect the trace afterwards
+            obs: env.state.obs.as_ref().map(|o| Box::new(o.report())),
         }
     }
 

@@ -139,6 +139,7 @@ impl Geometry {
     /// Build from scratch, bypassing the cache (benches time this; the
     /// rest of the crate goes through [`Geometry::shared`]).
     pub fn build(cfg: &ExperimentConfig) -> Geometry {
+        let _phase = crate::obs::global_phase("geometry_build");
         *build_counts()
             .lock()
             .unwrap()
@@ -146,12 +147,15 @@ impl Geometry {
             .or_insert(0) += 1;
         let constellation = WalkerConstellation::from_shells(&cfg.constellation.shells());
         let sites = cfg.placement.sites();
-        let plan = ContactPlan::build(
-            &constellation,
-            &sites,
-            cfg.min_elevation_deg,
-            cfg.fl.horizon_s,
-        );
+        let plan = {
+            let _phase = crate::obs::global_phase("contact_scan");
+            ContactPlan::build(
+                &constellation,
+                &sites,
+                cfg.min_elevation_deg,
+                cfg.fl.horizon_s,
+            )
+        };
         let site_props = sites.iter().map(SitePropagator::new).collect();
         let isl = IslGraph::build(&constellation, &cfg.isl, &cfg.link);
         Geometry { constellation, sites, plan, link: cfg.link, isl, site_props }

@@ -31,6 +31,11 @@ pub struct ExpOptions {
     /// only; PJRT sweeps stay sequential (`executor::effective_jobs`).
     /// Output is bit-identical to `jobs = 1` at any value.
     pub jobs: usize,
+    /// Attach metrics-only observation (`obs::RunObs::metrics_only`) to
+    /// every run, so sweep drivers can fold an aggregate
+    /// `results/report.json`. Observe-only: CSV bytes are unchanged
+    /// (`tests/obs_equivalence.rs`).
+    pub report: bool,
 }
 
 impl Default for ExpOptions {
@@ -41,6 +46,7 @@ impl Default for ExpOptions {
             surrogate: false,
             seed: 42,
             jobs: 1,
+            report: false,
         }
     }
 }
@@ -107,13 +113,35 @@ pub fn run_one_with(
     if opts.surrogate {
         let mut backend = SurrogateBackend::for_config(cfg);
         let mut env = SimEnv::new(cfg, &mut backend);
+        attach_report_obs(cfg, opts, &mut env);
         Ok(strategy.run(&mut env))
     } else {
         let runtime = runtime_handle()?;
         let mut backend = PjrtBackend::from_config(runtime, cfg)?;
         let mut env = SimEnv::new(cfg, &mut backend);
+        attach_report_obs(cfg, opts, &mut env);
         Ok(strategy.run(&mut env))
     }
+}
+
+/// With `--report`, attach metrics-only observation (no trace sink, no
+/// record formatting) so the run's `RunResult` carries an `ObsReport`
+/// snapshot. Observe-only: output bytes are pinned unchanged by
+/// `tests/obs_equivalence.rs`.
+fn attach_report_obs(cfg: &ExperimentConfig, opts: &ExpOptions, env: &mut SimEnv<'_>) {
+    if !opts.report {
+        return;
+    }
+    let mut obs = crate::obs::RunObs::metrics_only();
+    obs.meta(
+        "sweep-cell",
+        cfg.fl.scheme.name(),
+        cfg.seed,
+        cfg.fl.horizon_s,
+        cfg.n_sats(),
+        cfg.placement.sites().len(),
+    );
+    env.enable_obs(obs);
 }
 
 thread_local! {

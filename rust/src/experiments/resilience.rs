@@ -84,6 +84,9 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
             "deferrals",
             "deferred_h",
             "dropped_results",
+            "losses",
+            "outages_hit",
+            "churn_deaths",
         ],
     )?
     .autoflush(true);
@@ -129,6 +132,9 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
             i(fs.deferrals),
             f(fs.deferred_s / 3600.0),
             i(fs.dropped_results),
+            i(fs.losses),
+            i(fs.outages_hit),
+            i(fs.churn_deaths),
         ])?;
         println!(
             "{:<12} {:>4.2} {:<10} {:>8.2} {:>10} {:>7} {:>9} {:>8}",

@@ -109,7 +109,14 @@ pub fn run_compare(scenarios: &[Scenario], opts: &ExpOptions) -> Result<()> {
         "{:<18} {:<10} {:>5} {:>8} {:>10} {:>8} {:>7}",
         "scenario", "scheme", "sats", "acc(%)", "conv(h:mm)", "t70(h)", "epochs"
     );
+    // --report: cells run with metrics-only observation attached (see
+    // ExpOptions::report); their snapshots stream out with the rows in
+    // cell order, so report.json is deterministic at any --jobs N
+    let mut reports: Vec<(String, Box<crate::obs::ObsReport>)> = Vec::new();
     run_cells_streaming(&cells, opts, |idx, r| {
+        if let Some(rep) = &r.obs {
+            reports.push((cells[idx].label.clone(), rep.clone()));
+        }
         let sc = &scenarios[idx / SCENARIO_SCHEMES.len()];
         let (label, scheme) = SCENARIO_SCHEMES[idx % SCENARIO_SCHEMES.len()];
         let cfg = &cells[idx].cfg;
@@ -141,6 +148,43 @@ pub fn run_compare(scenarios: &[Scenario], opts: &ExpOptions) -> Result<()> {
         Ok(())
     })?;
     w.flush()?;
+    if opts.report {
+        let path = opts.out_dir.join("report.json");
+        write_report_json(&path, &reports)?;
+        println!("report: {}", path.display());
+    }
+    Ok(())
+}
+
+/// Fold the per-cell observation snapshots into one `report.json`:
+/// a `"runs"` object keyed by cell label, plus the process-wide
+/// substrate phases (geometry build, contact scan, pass-map
+/// memoization — wall-clock, so explicitly non-deterministic).
+fn write_report_json(
+    path: &std::path::Path,
+    reports: &[(String, Box<crate::obs::ObsReport>)],
+) -> Result<()> {
+    use crate::obs::trace::{jnum, json_escape};
+    let mut out = String::from("{\n  \"runs\": {\n");
+    let runs: Vec<String> = reports
+        .iter()
+        .map(|(label, rep)| format!("    \"{}\": {}", json_escape(label), rep.to_json("    ")))
+        .collect();
+    out.push_str(&runs.join(",\n"));
+    out.push_str("\n  },\n  \"substrate_phases\": [\n");
+    let phases: Vec<String> = crate::obs::global_phases()
+        .into_iter()
+        .map(|(n, s, c)| {
+            format!(
+                "    {{\"name\": \"{}\", \"secs\": {}, \"count\": {c}}}",
+                json_escape(n),
+                jnum(s)
+            )
+        })
+        .collect();
+    out.push_str(&phases.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    std::fs::write(path, out)?;
     Ok(())
 }
 

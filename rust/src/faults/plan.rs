@@ -62,6 +62,16 @@ pub struct FaultStats {
     /// Training results that never reached a PS (dead satellite or
     /// past-horizon delivery).
     pub dropped_results: u64,
+    /// Channel events that suffered at least one packet loss (each may
+    /// contribute several `retransmits`).
+    pub losses: u64,
+    /// Deferred channel events whose deferral was (at least partly)
+    /// caused by an outage window, as opposed to endpoint churn alone.
+    pub outages_hit: u64,
+    /// Churn down-transitions on the schedule within the horizon
+    /// (satellite deaths + HAP failures) — a schedule property, set at
+    /// plan construction rather than accumulated per transfer.
+    pub churn_deaths: u64,
 }
 
 /// Never defer a transfer more than this far past the horizon (keeps
@@ -415,6 +425,21 @@ impl FaultSchedule {
         windows.clear_time(t)
     }
 
+    /// Churn down-transitions within the horizon (satellite deaths +
+    /// HAP failures) on this schedule — the `churn_deaths` half of
+    /// [`FaultStats`]. Zero when disabled.
+    pub fn churn_deaths(&self) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        self.sat_churn
+            .iter()
+            .chain(self.hap_churn.iter())
+            .flat_map(|sched| sched.down.iter())
+            .filter(|&&(s, _)| s <= self.horizon_s)
+            .count() as u64
+    }
+
     /// Push the schedule's discrete transitions (churn up/down, outage
     /// boundaries) as typed events. No-op when disabled, so clean runs
     /// see an untouched queue.
@@ -498,10 +523,14 @@ impl FaultPlan {
     /// Fresh per-run counters over an existing (possibly shared)
     /// schedule.
     pub fn from_schedule(schedule: Arc<FaultSchedule>) -> Self {
+        let stats = FaultStats {
+            churn_deaths: schedule.churn_deaths(),
+            ..FaultStats::default()
+        };
         FaultPlan {
             schedule,
             seen: std::collections::HashSet::new(),
-            stats: FaultStats::default(),
+            stats,
         }
     }
 
@@ -597,6 +626,15 @@ impl FaultPlan {
             if start > t {
                 self.stats.deferrals += 1;
                 self.stats.deferred_s += start - t;
+                // attribute the deferral: did an outage window (not
+                // just endpoint churn) push the send time? pure
+                // re-query of the deterministic window oracle.
+                if sched.outage_clear(&class, t) > t {
+                    self.stats.outages_hit += 1;
+                }
+            }
+            if retransmits > 0 {
+                self.stats.losses += 1;
             }
             self.stats.retransmits += retransmits as u64;
         }

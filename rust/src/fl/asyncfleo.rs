@@ -128,6 +128,9 @@ struct RunScratch {
     /// undeliverable results return it. Bounded, so a long run recycles
     /// a small working set instead of allocating per arrival.
     pool: Vec<ModelParams>,
+    /// Buffers returned to the pool over the run (observability: the
+    /// `pool_recycles` counter).
+    recycles: u64,
 }
 
 /// Upper bound on pooled model buffers (more than the sink ever holds
@@ -143,6 +146,7 @@ impl RunScratch {
 
     /// Return a no-longer-needed model buffer to the pool.
     fn recycle(&mut self, m: ModelParams) {
+        self.recycles += 1;
         if self.pool.len() < MODEL_POOL_CAP {
             self.pool.push(m);
         }
@@ -207,8 +211,12 @@ impl Strategy for AsyncFleo {
         env.state.faults.schedule_events(&mut queue);
 
         let mut converged = false;
+        let ph_loop = env.phase_start();
         while let Some(ev) = queue.pop() {
             let t = ev.time_s;
+            if let Some(obs) = env.obs() {
+                obs.queue_depth(queue.len());
+            }
             if t > horizon || converged || beta >= env.cfg.fl.max_epochs {
                 break;
             }
@@ -252,6 +260,9 @@ impl Strategy for AsyncFleo {
                         sats[sat].pending_epoch = None;
                         sats[sat].train_done_at = None;
                         env.state.faults.note_dropped();
+                        if let Some(obs) = env.obs() {
+                            obs.model_dropped(t, sat, epoch, "dead");
+                        }
                         continue;
                     }
                     // the result buffer comes from the free-pool (same
@@ -303,6 +314,9 @@ impl Strategy for AsyncFleo {
                         scratch.recycle(model);
                         if env.state.faults.enabled() {
                             env.state.faults.note_dropped();
+                        }
+                        if let Some(obs) = env.obs() {
+                            obs.model_dropped(t, sat, epoch, "past_horizon");
                         }
                     }
                     // start next training round if a newer global arrived
@@ -396,8 +410,11 @@ impl Strategy for AsyncFleo {
                 EventKind::SatChurn { sat, up } => {
                     if !up {
                         // dropout: an in-flight training run is lost
-                        if sats[sat].training_epoch.take().is_some() {
+                        if let Some(ep) = sats[sat].training_epoch.take() {
                             env.state.faults.note_dropped();
+                            if let Some(obs) = env.obs() {
+                                obs.model_dropped(t, sat, ep, "churn");
+                            }
                         }
                         sats[sat].pending_epoch = None;
                         sats[sat].train_done_at = None;
@@ -449,6 +466,11 @@ impl Strategy for AsyncFleo {
                 }
                 _ => {}
             }
+        }
+        env.phase_end("event_loop", ph_loop);
+        if let Some(obs) = env.obs() {
+            obs.metrics.set_max("queue_high_water", queue.high_water() as u64);
+            obs.metrics.add("pool_recycles", scratch.recycles);
         }
         RunResult::from_env("asyncfleo", env, beta)
     }
@@ -536,6 +558,7 @@ impl AsyncFleo {
         total_data: usize,
         scratch: &mut RunScratch,
     ) -> bool {
+        let ph = env.phase_start();
         // --- grouping of newly-seen orbits (Sec. IV-C1) ---
         // cold path: once every buffered orbit is grouped, the guard is
         // false for the rest of the run and nothing below allocates
@@ -606,6 +629,24 @@ impl AsyncFleo {
         }
 
         if !scratch.selection.chosen.is_empty() {
+            if let Some(obs) = env.obs() {
+                let mut worst = 0.0f64;
+                for &(i, _) in &scratch.selection.chosen {
+                    let s =
+                        beta.saturating_sub(scratch.candidates[i].meta.epoch) as f64;
+                    obs.staleness(s);
+                    if s > worst {
+                        worst = s;
+                    }
+                }
+                obs.aggregate(
+                    t,
+                    grouping.n_groups() as u64,
+                    scratch.selection.chosen.len(),
+                    worst,
+                    scratch.selection.gamma,
+                );
+            }
             // the ref list borrows the buffer compacted just below, so
             // it cannot live in the cross-epoch scratch
             let models: Vec<&ModelParams> = scratch
@@ -640,6 +681,18 @@ impl AsyncFleo {
         }
         let retention = self.stale_retention_epochs;
         let cur = *beta;
+        if let Some(obs) = env.obs() {
+            for (i, b) in buffer.iter().enumerate() {
+                if scratch.used[i] {
+                    continue; // aggregated, neither kept nor dropped
+                }
+                if cur.saturating_sub(b.arrived_epoch) < retention {
+                    obs.model_retained(t, b.meta.sat_id, b.meta.epoch);
+                } else {
+                    obs.model_dropped(t, b.meta.sat_id, b.meta.epoch, "stale");
+                }
+            }
+        }
         let mut kept = 0;
         for i in 0..buffer.len() {
             let keep =
@@ -681,6 +734,7 @@ impl AsyncFleo {
         // role swap + rebroadcast (Sec. IV-B3)
         ring.swap_roles();
         self.broadcast(env, ring, queue, *beta, t, scratch);
+        env.phase_end("aggregate", ph);
         converged
     }
 }

@@ -69,6 +69,7 @@ impl Strategy for FedSat {
         let mut local = ModelParams { data: Vec::new() };
         let mut next = ModelParams { data: Vec::with_capacity(global.dim()) };
 
+        let ph_loop = env.phase_start();
         for (t, sat, site) in visits {
             if t > horizon || converged {
                 break;
@@ -99,6 +100,12 @@ impl Strategy for FedSat {
                         .aggregate_into(&global, &[&local], &[alpha], 1.0 - alpha, &mut next);
                     std::mem::swap(&mut global, &mut next);
                     updates += 1;
+                    if let Some(obs) = env.obs() {
+                        // immediate per-visit update: one model, never
+                        // stale, mixed in at rate alpha
+                        obs.staleness(0.0);
+                        obs.aggregate(t, 1, 1, 0.0, alpha as f64);
+                    }
                     let d_down = env.site_link_delay(site, sat, t + d_up);
                     ready_at[sat] = Some(t + d_up + d_down + train_time);
                     if updates as usize % EVAL_EVERY == 0 {
@@ -110,6 +117,7 @@ impl Strategy for FedSat {
                 Some(_) => {} // still training: skip this pass
             }
         }
+        env.phase_end("event_loop", ph_loop);
         if env.state.curve.points.len() < 2 {
             let e = env.state.backend.evaluate(&global);
             env.record(last_t.max(1.0), updates, e.accuracy, e.loss);

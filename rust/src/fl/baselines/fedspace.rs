@@ -73,7 +73,9 @@ impl Strategy for FedSpace {
         let mut next = ModelParams { data: Vec::with_capacity(global.dim()) };
         let mut pool: Vec<ModelParams> = Vec::new();
 
+        let mut recycles: u64 = 0;
         let mut tick = AGG_PERIOD_S;
+        let ph_loop = env.phase_start();
         while tick <= horizon && !converged && rounds < env.cfg.fl.max_epochs * 4 {
             // process all visits before this tick
             while let Some(&(t, sat, site)) = visit_iter.peek() {
@@ -128,13 +130,24 @@ impl Strategy for FedSpace {
                 env.state.backend.aggregate_into(&global, &refs, &weights, 0.0, &mut next);
                 std::mem::swap(&mut global, &mut next);
                 rounds += 1;
+                if let Some(obs) = env.obs() {
+                    // whatever arrived enters at full weight: no
+                    // staleness discount by design
+                    obs.staleness(0.0);
+                    obs.aggregate(tick, 1, arrived.len(), 0.0, 1.0);
+                }
                 let e = env.state.backend.evaluate(&global);
                 env.record(tick, rounds, e.accuracy, e.loss);
                 converged = detector.update(e.accuracy) && rounds >= 12;
                 // recycle the aggregated model buffers
+                recycles += arrived.len() as u64;
                 pool.extend(arrived.drain(..).map(|(_, _, m)| m));
             }
             tick += AGG_PERIOD_S;
+        }
+        env.phase_end("event_loop", ph_loop);
+        if let Some(obs) = env.obs() {
+            obs.metrics.add("pool_recycles", recycles);
         }
         RunResult::from_env("fedspace", env, rounds)
     }

@@ -156,6 +156,7 @@ pub(crate) fn run_synchronous(
     let mut next = ModelParams { data: Vec::with_capacity(global.dim()) };
     let mut t = 0.0f64;
     let mut round: u64 = 0;
+    let ph_loop = env.phase_start();
     while round < env.cfg.fl.max_epochs {
         let Some((end, participants)) = sync_round(env, t, use_isl) else {
             break; // straggler cannot complete within horizon
@@ -178,19 +179,29 @@ pub(crate) fn run_synchronous(
                 env.state.backend.train_local_into(sat, &global, dispatches, local);
             }
         }
-        if participants.iter().all(|&p| p) {
+        let ph_agg = env.phase_start();
+        let n_in = if participants.iter().all(|&p| p) {
             let refs: Vec<&ModelParams> = locals.iter().collect();
             env.state.backend.aggregate_into(&global, &refs, &weights, 0.0, &mut next);
+            n_sats
         } else {
             let idx: Vec<usize> = (0..n_sats).filter(|&s| participants[s]).collect();
             let sub_sizes: Vec<usize> = idx.iter().map(|&s| sizes[s]).collect();
             let sub_weights = fedavg_weights(&sub_sizes);
             let refs: Vec<&ModelParams> = idx.iter().map(|&s| &locals[s]).collect();
             env.state.backend.aggregate_into(&global, &refs, &sub_weights, 0.0, &mut next);
-        }
+            idx.len()
+        };
         std::mem::swap(&mut global, &mut next);
         round += 1;
         t = end;
+        // synchronous rounds are staleness-free by construction: every
+        // model is one round behind, no discount applies
+        if let Some(obs) = env.obs() {
+            obs.staleness(0.0);
+            obs.aggregate(t, 1, n_in, 0.0, 1.0);
+        }
+        env.phase_end("aggregate", ph_agg);
         let e = env.state.backend.evaluate(&global);
         env.record(t, round, e.accuracy, e.loss);
         if detector.update(e.accuracy) && round >= SYNC_MIN_ROUNDS {
@@ -200,6 +211,7 @@ pub(crate) fn run_synchronous(
             break;
         }
     }
+    env.phase_end("event_loop", ph_loop);
     crate::coordinator::RunResult::from_env(name, env, round)
 }
 

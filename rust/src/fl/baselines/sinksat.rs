@@ -82,6 +82,7 @@ impl Strategy for SinkSat {
         let mut converged = false;
         let mut last_t = 0.0f64;
 
+        let ph_loop = env.phase_start();
         loop {
             // earliest-starting plane next; ties break toward the lower
             // plane index (strict less keeps the first minimum)
@@ -146,7 +147,11 @@ impl Strategy for SinkSat {
                 let mut arr = t_train;
                 for w in path.windows(2).rev() {
                     let e = geo.isl.edge_between(w[0], w[1]).expect("route uses graph edges");
-                    arr += env.graph_edge_delay(e, arr);
+                    let d = env.graph_edge_delay(e, arr);
+                    if let Some(obs) = env.obs() {
+                        obs.relay_hop(arr, "isl_route", w[0], w[1], d);
+                    }
+                    arr += d;
                 }
                 t_collect = t_collect.max(arr);
             }
@@ -177,6 +182,11 @@ impl Strategy for SinkSat {
                         env.state.faults.note_dropped();
                     }
                 }
+                if let Some(obs) = env.obs() {
+                    for &m in &alive {
+                        obs.model_dropped(t_collect, m, updates, "past_horizon");
+                    }
+                }
                 next_start[p] = f64::INFINITY;
                 continue;
             };
@@ -193,6 +203,11 @@ impl Strategy for SinkSat {
             std::mem::swap(&mut global, &mut next);
             updates += 1;
             last_t = t_arr;
+            if let Some(obs) = env.obs() {
+                // one plane folded per update, mixed in at rate alpha
+                obs.staleness(0.0);
+                obs.aggregate(t_arr, 1, alive.len(), 0.0, alpha as f64);
+            }
             if updates as usize % EVAL_EVERY == 0 {
                 let e = env.state.backend.evaluate(&global);
                 env.record(t_arr, updates, e.accuracy, e.loss);
@@ -205,6 +220,7 @@ impl Strategy for SinkSat {
             next_start[p] = t_arr + d_down;
         }
 
+        env.phase_end("event_loop", ph_loop);
         if env.state.curve.points.len() < 2 {
             let e = env.state.backend.evaluate(&global);
             env.record(last_t.max(1.0), updates, e.accuracy, e.loss);

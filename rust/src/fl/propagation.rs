@@ -51,6 +51,9 @@ pub fn hap_ring_receive_times_into(
             let t_h = recv[h];
             debug_assert!(t_h.is_finite(), "relay plan visits {h} before receiving");
             let d = env.ihl_hop_delay(h, fwd, t_h);
+            if let Some(obs) = env.obs() {
+                obs.relay_hop(t_h, "ihl_ring", h, fwd, d);
+            }
             recv[fwd] = recv[fwd].min(t_h + d);
         }
     }
@@ -189,8 +192,11 @@ pub fn uplink_route(env: &mut SimEnv, sat: usize, t_ready: f64) -> Option<(usize
         }
     }
     // account the relay hops as transfers
-    if let Some((_, _, hops)) = best {
+    if let Some((site, arrival, hops)) = best {
         env.state.transfers += hops as u64;
+        if let Some(obs) = env.obs() {
+            obs.relay_hop(t_ready, "isl_uplink", sat, site, arrival - t_ready);
+        }
     }
     best
 }
@@ -201,7 +207,11 @@ pub fn ihl_to_sink(env: &mut SimEnv, ring: &HapRing, from_site: usize, t: f64) -
     let mut cur = from_site;
     let mut time = t;
     while let Some(next) = ring.next_hop_toward(cur, ring.sink()) {
-        time += env.ihl_hop_delay(cur, next, time);
+        let d = env.ihl_hop_delay(cur, next, time);
+        if let Some(obs) = env.obs() {
+            obs.relay_hop(time, "ihl_sink", cur, next, d);
+        }
+        time += d;
         cur = next;
     }
     time

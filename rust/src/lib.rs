@@ -88,6 +88,18 @@
 //!   asserts bit-identical curves and transfer counts on every preset;
 //!   `BENCH_runloop.json` tracks delay-call throughput and per-scheme
 //!   run speedups);
+//! * [`obs`] — structured run observability (PR 8): a typed event
+//!   trace (JSONL via a hand-rolled serde-free writer), a metrics
+//!   registry (counters, fixed-bucket histograms, per-link loads) and
+//!   scoped phase profiling, carried as an `Option` by the run state
+//!   and threaded through every scheme, the faults engine and the
+//!   event loop. Strictly observe-only: tracing on vs. off produces
+//!   bit-identical curves, transfers and CSVs
+//!   (`tests/obs_equivalence.rs`), and same-seed traces are
+//!   byte-identical. `asyncfleo trace` writes one instrumented run's
+//!   `trace.jsonl` + `report.json`; `asyncfleo report` renders the
+//!   staleness histogram, top links by utilization and time-in-phase
+//!   table;
 //! * [`scenario`] — declarative experiment worlds: a named preset or a
 //!   TOML file (with `[shellN]` sections for multi-shell
 //!   constellations and `[isl]` / `[isl_linkN]` sections for the ISL
@@ -129,6 +141,7 @@ pub mod faults;
 pub mod fl;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod orbit;
 pub mod runtime;
 pub mod scenario;

@@ -5,6 +5,8 @@
 //! asyncfleo run [--config FILE] [--scheme S] [--placement P] ...
 //! asyncfleo resilience [--out DIR] [--fast] [--surrogate] [--seed N] [--jobs N]
 //! asyncfleo scenario [--list | --dump NAME | --preset NAME[,NAME..] | --all | --config FILE]
+//! asyncfleo trace [--preset NAME] [--scheme S] [--seed N] [--out FILE]
+//! asyncfleo report [TRACE.jsonl]
 //! asyncfleo info
 //! ```
 
@@ -12,6 +14,7 @@ use asyncfleo::cli::Args;
 use asyncfleo::config::{ExperimentConfig, ModelKind, PsPlacement, SchemeKind};
 use asyncfleo::experiments::drivers::{print_info, run_one, ExpOptions};
 use asyncfleo::experiments::run_experiment;
+use asyncfleo::fl::{make_strategy, Strategy};
 use asyncfleo::scenario::{Scenario, ScenarioRegistry};
 use asyncfleo::util::fmt_hm;
 
@@ -55,8 +58,27 @@ USAGE:
       studies; --pjrt opts into the compiled artifacts); output is
       byte-identical at any --jobs N.
 
+  asyncfleo trace [--preset NAME] [--scheme S] [--seed N] [--out FILE]
+      Run one scenario preset (default paper-40) under one scheme
+      (default: the preset's) with the typed event trace enabled and
+      write the JSONL record stream to FILE (default
+      results/trace.jsonl) plus a metrics/phase report.json next to
+      it. Surrogate backend. Observation is observe-only: the traced
+      run is bit-identical to an untraced one, and the trace itself is
+      deterministic (tests/obs_equivalence.rs pins both).
+
+  asyncfleo report [TRACE.jsonl]
+      Summarize a trace written by `asyncfleo trace`: record counts,
+      the staleness-at-aggregation histogram, the top links by
+      utilization, the time-in-phase table (wall-clock, from the
+      sibling report.json) and the accuracy curve.
+
   asyncfleo info
       Show artifact manifest + paper constellation info.
+
+The scenario sweep also takes --report: attach metrics-only
+observation to every cell and fold the per-run reports into
+DIR/report.json (scenarios.csv stays byte-identical).
 ";
 
 fn main() {
@@ -65,9 +87,9 @@ fn main() {
     // keep rejecting them instead of silently swallowing a flag
     let scenario_mode = argv.first().map(|s| s == "scenario").unwrap_or(false);
     let known_flags: &[&str] = if scenario_mode {
-        &["fast", "surrogate", "help", "list", "all", "pjrt"]
+        &["fast", "surrogate", "help", "list", "all", "pjrt", "report"]
     } else {
-        &["fast", "surrogate", "help"]
+        &["fast", "surrogate", "help", "report"]
     };
     let args = match Args::parse(&argv, true, known_flags) {
         Ok(a) => a,
@@ -85,6 +107,8 @@ fn main() {
         "run" => cmd_run(&args),
         "resilience" => cmd_resilience(&args),
         "scenario" => cmd_scenario(&args),
+        "trace" => cmd_trace(&args),
+        "report" => cmd_report(&args),
         "info" => print_info(&asyncfleo::runtime::Runtime::default_dir()),
         other => {
             eprintln!("unknown subcommand {other:?}\n\n{USAGE}");
@@ -104,6 +128,7 @@ fn sweep_options(args: &Args) -> anyhow::Result<ExpOptions> {
         surrogate: args.flag("surrogate"),
         seed: args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)?.unwrap_or(42),
         jobs: args.opt_parse::<usize>("jobs").map_err(anyhow::Error::msg)?.unwrap_or(1),
+        report: args.flag("report"),
     })
 }
 
@@ -168,6 +193,100 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
     let mut opts = sweep_options(args)?;
     opts.surrogate = !args.flag("pjrt");
     asyncfleo::experiments::scenarios::run_compare(&scenarios, &opts)
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let registry = ScenarioRegistry::builtin();
+    let preset = args.opt_or("preset", "paper-40");
+    let sc = registry
+        .get(preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {preset:?}; try `scenario --list`"))?;
+    let mut cfg = sc.cfg.clone();
+    if let Some(s) = args.opt("scheme") {
+        cfg.fl.scheme =
+            SchemeKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scheme {s}"))?;
+    }
+    if let Some(n) = args.opt_parse::<u64>("seed").map_err(anyhow::Error::msg)? {
+        cfg.seed = n;
+    }
+    if let Some(h) = args.opt_parse::<f64>("horizon-hours").map_err(anyhow::Error::msg)? {
+        cfg.fl.horizon_s = h * 3600.0;
+    }
+    let out = std::path::PathBuf::from(args.opt_or("out", "results/trace.jsonl"));
+
+    let mut obs = asyncfleo::obs::RunObs::to_file(&out)?;
+    obs.meta(
+        preset,
+        cfg.fl.scheme.name(),
+        cfg.seed,
+        cfg.fl.horizon_s,
+        cfg.n_sats(),
+        cfg.placement.sites().len(),
+    );
+
+    let mut backend = asyncfleo::train::SurrogateBackend::for_config(&cfg);
+    let mut env = asyncfleo::coordinator::SimEnv::new(&cfg, &mut backend);
+    env.enable_obs(obs);
+    // contact windows are precomputed geometry: emit the open/close
+    // record stream up front, ordered by open time (then site, sat)
+    let geo = env.geo.clone();
+    let mut contacts: Vec<(f64, f64, usize, usize)> = Vec::new();
+    for site in 0..geo.plan.n_sites() {
+        for sat in 0..geo.plan.n_sats() {
+            for w in geo.plan.windows(site, sat) {
+                contacts.push((w.start_s, w.end_s, site, sat));
+            }
+        }
+    }
+    contacts.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.2.cmp(&y.2)).then(x.3.cmp(&y.3)));
+    if let Some(o) = env.obs() {
+        for &(start, end, site, sat) in &contacts {
+            o.contact_open(start, site, sat);
+            o.contact_close(end, site, sat);
+        }
+    }
+
+    println!(
+        "tracing {} on {} (seed {}, {:.1} h) -> {}",
+        cfg.fl.scheme.name(),
+        preset,
+        cfg.seed,
+        cfg.fl.horizon_s / 3600.0,
+        out.display()
+    );
+    let r = make_strategy(cfg.fl.scheme).run(&mut env);
+    let mut obs = env.take_obs().expect("trace run is observed");
+    obs.sink.flush();
+    // fold the process-wide substrate phases (geometry build, contact
+    // scan, pass-map memoization) into this run's report — wall-clock
+    // timings live only here, never in the deterministic trace
+    for (name, secs, _count) in asyncfleo::obs::global_phases() {
+        obs.phases.add(name, secs);
+    }
+    let report_path = out.with_file_name("report.json");
+    std::fs::write(&report_path, obs.report().to_json("") + "\n")?;
+    println!(
+        "done: {} epochs, final accuracy {:.2}%, {} transfers",
+        r.epochs,
+        r.final_accuracy * 100.0,
+        r.transfers
+    );
+    println!("wrote {} and {}", out.display(), report_path.display());
+    println!("render with `asyncfleo report {}`", out.display());
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let path = std::path::PathBuf::from(
+        args.opt("trace")
+            .or_else(|| args.positional.first().map(String::as_str))
+            .unwrap_or("results/trace.jsonl"),
+    );
+    let trace = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("cannot read trace {}: {e}", path.display()))?;
+    let report_json = std::fs::read_to_string(path.with_file_name("report.json")).ok();
+    print!("{}", asyncfleo::obs::summarize_trace(&trace, report_json.as_deref()));
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
@@ -264,11 +383,15 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let fs = r.fault_stats;
     if fs != asyncfleo::faults::FaultStats::default() {
         println!(
-            "faults: {} retransmissions, {} deferrals ({:.2} h deferred), {} results lost",
+            "faults: {} retransmissions over {} lossy transfers, {} deferrals \
+             ({:.2} h deferred, {} at outages), {} results lost, {} churn deaths",
             fs.retransmits,
+            fs.losses,
             fs.deferrals,
             fs.deferred_s / 3600.0,
-            fs.dropped_results
+            fs.outages_hit,
+            fs.dropped_results,
+            fs.churn_deaths
         );
     }
     Ok(())

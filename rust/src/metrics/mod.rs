@@ -142,6 +142,43 @@ mod tests {
     }
 
     #[test]
+    fn convergence_single_point_curve() {
+        let c = curve(&[(5.0, 0.42)]);
+        let (t, plateau) = c.convergence(0.01, 3).unwrap();
+        assert_eq!(t, 5.0);
+        assert_eq!(plateau, 0.42);
+    }
+
+    #[test]
+    fn convergence_tail_longer_than_curve_clamps() {
+        // a 100-point tail over a 3-point curve averages what exists
+        let c = curve(&[(0.0, 0.2), (1.0, 0.4), (2.0, 0.6)]);
+        let (t, plateau) = c.convergence(0.5, 100).unwrap();
+        assert!((plateau - 0.4).abs() < 1e-12);
+        // tolerance 0.5 admits every point: convergence at the start
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn convergence_zero_tail_acts_as_final_point() {
+        let c = curve(&[(0.0, 0.2), (1.0, 0.8)]);
+        let (t, plateau) = c.convergence(0.01, 0).unwrap();
+        assert_eq!(plateau, 0.8);
+        assert_eq!(t, 1.0);
+    }
+
+    #[test]
+    fn convergence_non_monotone_dip_resets_entry_point() {
+        // a late dip below plateau - tolerance disqualifies everything
+        // before it: convergence is the earliest *suffix* inside the
+        // band, not the first crossing
+        let c = curve(&[(0.0, 0.1), (1.0, 0.8), (2.0, 0.5), (3.0, 0.8), (4.0, 0.8)]);
+        let (t, plateau) = c.convergence(0.05, 2).unwrap();
+        assert!((plateau - 0.8).abs() < 1e-12);
+        assert_eq!(t, 3.0, "the dip at t=2 must push convergence past it");
+    }
+
+    #[test]
     fn best_and_final() {
         let c = curve(&[(0.0, 0.3), (1.0, 0.9), (2.0, 0.7)]);
         assert_eq!(c.best_accuracy(), Some(0.9));
@@ -165,6 +202,27 @@ mod tests {
         assert!(!d.update(0.602)); // stale 2
         assert!(d.update(0.6)); // stale 3 -> converged
         assert!((d.best() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn detector_matches_documented_definition() {
+        // doc'd rule: converged exactly when `patience` consecutive
+        // updates fail to improve more than `min_delta` over the
+        // running best (hand-traced expectations, patience 3, δ 0.005)
+        let mut d = ConvergenceDetector::new(3, 0.005);
+        let steps = [
+            (0.3, false),    // best := 0.3
+            (0.31, false),   // 0.31 > 0.305: best := 0.31
+            (0.305, false),  // stale 1
+            (0.32, false),   // 0.32 > 0.315: best := 0.32, stale resets
+            (0.321, false),  // stale 1 (not > 0.325)
+            (0.3215, false), // stale 2
+            (0.3205, true),  // stale 3 = patience -> converged
+        ];
+        for (i, &(a, expect)) in steps.iter().enumerate() {
+            assert_eq!(d.update(a), expect, "step {i} (acc {a})");
+        }
+        assert!((d.best() - 0.32).abs() < 1e-12, "ties below delta never move best");
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! The metrics registry: named counters, fixed-bucket histograms and
+//! per-link load accumulators, folded into an
+//! [`super::report::ObsReport`] at the end of a run.
+//!
+//! Everything is keyed by `&'static str` in `BTreeMap`s (plus one
+//! `HashMap` for the per-link loads, sorted at report time), so a
+//! report's serialization order is deterministic — two identical runs
+//! produce byte-identical `report.json` metric sections.
+
+use std::collections::{BTreeMap, HashMap};
+
+/// Buckets for the staleness-at-aggregation histogram (global epochs a
+/// model lagged the round it was folded into; AsyncFLEO's discounting
+/// lever — paper Sec. V).
+pub const STALENESS_BUCKETS: &[f64] = &[0.0, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0];
+
+/// Buckets for the event-queue depth histogram (sampled at pops).
+pub const DEPTH_BUCKETS: &[f64] =
+    &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 2048.0];
+
+/// Buckets for per-transfer effective delay, seconds (fault deferrals
+/// push the tail into the hours).
+pub const DELAY_BUCKETS: &[f64] =
+    &[0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 300.0, 1800.0, 7200.0];
+
+/// A fixed-bucket histogram: `bounds[i]` is the inclusive upper edge of
+/// bucket `i`, with one extra overflow bucket past the last bound.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &'static [f64]) -> Self {
+        Histogram {
+            bounds,
+            counts: vec![0; bounds.len() + 1],
+            total: 0,
+            sum: 0.0,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn bounds(&self) -> &'static [f64] {
+        self.bounds
+    }
+
+    /// Per-bucket counts (`bounds.len() + 1` entries, last = overflow).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Human label of bucket `i` (`<=bound` or `>last`).
+    pub fn bucket_label(&self, i: usize) -> String {
+        if i < self.bounds.len() {
+            format!("<={}", self.bounds[i])
+        } else {
+            format!(">{}", self.bounds.last().copied().unwrap_or(0.0))
+        }
+    }
+}
+
+/// Identity of one physical link in the load table. Bidirectional
+/// classes (ISL, IHL) are direction-normalized by the caller so both
+/// directions accumulate into one row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkKey {
+    /// Link class tag (`"site"`, `"isl"`, `"ihl"`).
+    pub class: &'static str,
+    pub a: u32,
+    pub b: u32,
+}
+
+/// Accumulated load of one link.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkLoad {
+    /// Total seconds the link spent carrying (or deferring) transfers.
+    pub busy_s: f64,
+    /// Total payload bits sent, retransmissions included.
+    pub bits: f64,
+    /// Transfer count.
+    pub count: u64,
+}
+
+/// The per-run metrics registry (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<&'static str, u64>,
+    histograms: BTreeMap<&'static str, Histogram>,
+    links: HashMap<LinkKey, LinkLoad>,
+}
+
+impl Metrics {
+    pub fn inc(&mut self, name: &'static str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &'static str, n: u64) {
+        *self.counters.entry(name).or_insert(0) += n;
+    }
+
+    /// Keep the maximum of all reported values (high-water marks).
+    pub fn set_max(&mut self, name: &'static str, v: u64) {
+        let e = self.counters.entry(name).or_insert(0);
+        if v > *e {
+            *e = v;
+        }
+    }
+
+    /// Observe `v` into the named histogram, creating it with `bounds`
+    /// on first use.
+    pub fn observe(&mut self, name: &'static str, bounds: &'static [f64], v: f64) {
+        self.histograms
+            .entry(name)
+            .or_insert_with(|| Histogram::new(bounds))
+            .observe(v);
+    }
+
+    /// Accumulate load on one link.
+    pub fn link(&mut self, class: &'static str, a: u32, b: u32, busy_s: f64, bits: f64) {
+        let e = self.links.entry(LinkKey { class, a, b }).or_default();
+        e.busy_s += busy_s;
+        e.bits += bits;
+        e.count += 1;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn counters(&self) -> &BTreeMap<&'static str, u64> {
+        &self.counters
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn histograms(&self) -> &BTreeMap<&'static str, Histogram> {
+        &self.histograms
+    }
+
+    /// Links sorted busiest-first (ties broken by key), for the top-N
+    /// utilization tables. The underlying `HashMap` iteration order
+    /// never leaks into output.
+    pub fn sorted_links(&self) -> Vec<(LinkKey, LinkLoad)> {
+        let mut rows: Vec<(LinkKey, LinkLoad)> =
+            self.links.iter().map(|(k, v)| (*k, *v)).collect();
+        rows.sort_by(|x, y| y.1.busy_s.total_cmp(&x.1.busy_s).then(x.0.cmp(&y.0)));
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(&[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.0, 1.5, 3.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.counts(), &[2, 1, 1, 1], "<=1 twice, <=2 once, <=4 once, overflow once");
+        assert_eq!(h.total(), 5);
+        assert!((h.mean() - 21.2).abs() < 1e-12);
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.bucket_label(0), "<=1");
+        assert_eq!(h.bucket_label(3), ">4");
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroed() {
+        let h = Histogram::new(STALENESS_BUCKETS);
+        assert_eq!(h.total(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn counters_accumulate_and_high_water() {
+        let mut m = Metrics::default();
+        m.inc("evals");
+        m.add("evals", 2);
+        assert_eq!(m.counter("evals"), 3);
+        m.set_max("hw", 5);
+        m.set_max("hw", 3);
+        assert_eq!(m.counter("hw"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn links_sort_busiest_first_deterministically() {
+        let mut m = Metrics::default();
+        m.link("isl", 1, 2, 0.5, 100.0);
+        m.link("isl", 1, 2, 0.5, 100.0);
+        m.link("site", 3, 0, 0.25, 100.0);
+        m.link("ihl", 0, 1, 1.5, 100.0);
+        let rows = m.sorted_links();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].0, LinkKey { class: "ihl", a: 0, b: 1 });
+        assert_eq!(rows[1].0, LinkKey { class: "isl", a: 1, b: 2 });
+        assert_eq!(rows[1].1.count, 2);
+        assert_eq!(rows[1].1.busy_s, 1.0);
+        assert_eq!(rows[2].0.class, "site");
+    }
+}

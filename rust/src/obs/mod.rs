@@ -1,0 +1,369 @@
+//! Structured run observability: typed event tracing, a metrics
+//! registry and phase profiling — observe-only, with a bit-identity
+//! guarantee.
+//!
+//! The paper's central claims (22× lower convergence delay, 40% higher
+//! accuracy) rest on mechanisms the accuracy curves alone cannot show:
+//! idle-waiting eliminated by asynchrony, staleness bounded by grouping
+//! and discounting, link load concentrated on few HAP contacts. This
+//! module makes those observable:
+//!
+//! * **typed event trace** — a [`TraceSink`] carried by
+//!   `coordinator::RunState` receives typed records from every scheme,
+//!   the faults engine and the event loop, written as JSONL by a
+//!   hand-rolled serde-free writer ([`trace`]). Record kinds (one flat
+//!   JSON object per line, tagged `"ev"`): `meta`, `contact_open` /
+//!   `contact_close`, `model_tx` (every fault-adjusted link-delay call:
+//!   src, dst, link class, base vs effective delay, retransmissions),
+//!   `relay_hop`, `aggregate` (group count, staleness, discount factor,
+//!   models folded), `model_dropped` / `model_retained`, `fault_hit`,
+//!   `eval`;
+//! * **metrics registry** ([`metrics`]) — counters and fixed-bucket
+//!   histograms (staleness at aggregation, per-link busy-time and
+//!   bits, event-queue depth, delay calls, retransmissions, pool
+//!   recycles) folded into an [`ObsReport`] and `results/report.json`;
+//! * **phase profiling** ([`phase`]) — scoped wall-time timers around
+//!   geometry build / contact scan / pass-map memoization (process-wide
+//!   registry) and per-scheme event processing / aggregation (per-run),
+//!   surfaced in `report.json` and `BENCH_runloop.json`, never in the
+//!   trace (wall time would break trace determinism).
+//!
+//! # The bit-identity contract
+//!
+//! Observation is strictly *observe-only*: enabling it draws nothing
+//! from any RNG, reorders no events and changes no arithmetic, so
+//! curves, transfer counts and result CSVs are **bit-identical** with
+//! tracing on or off (`tests/obs_equivalence.rs` pins this for every
+//! preset × scheme, and pins trace determinism: same seed → identical
+//! JSONL). A run without observation carries `None` and pays one
+//! branch per delay call; the [`TraceSink::Disabled`] variant
+//! additionally supports metrics-only observation (no record
+//! formatting) for sweep drivers.
+//!
+//! Entry points: `asyncfleo trace --preset X --scheme Y` writes one
+//! instrumented run's `trace.jsonl` + `report.json`;
+//! `asyncfleo report` renders the staleness histogram, top links by
+//! utilization and the time-in-phase table from them.
+
+pub mod metrics;
+pub mod phase;
+pub mod report;
+pub mod trace;
+
+pub use metrics::{Histogram, LinkKey, LinkLoad, Metrics};
+pub use phase::{global_phase, global_phases, PhaseTimes, ScopedPhase};
+pub use report::{summarize_trace, LinkRow, ObsReport};
+pub use trace::TraceSink;
+
+use crate::faults::LinkClass;
+use trace::{jnum, json_escape};
+
+/// Per-run observability state: the trace sink, the metrics registry
+/// and the per-run phase timers. Carried as
+/// `Option<Box<RunObs>>` by `coordinator::RunState` — `None` (the
+/// default) means observation is off and every hook is one branch.
+pub struct RunObs {
+    pub sink: TraceSink,
+    pub metrics: Metrics,
+    pub phases: PhaseTimes,
+    /// Simulated horizon, for link-utilization denominators (set by
+    /// [`RunObs::meta`]).
+    pub horizon_s: f64,
+}
+
+impl RunObs {
+    fn with_sink(sink: TraceSink) -> Self {
+        RunObs {
+            sink,
+            metrics: Metrics::default(),
+            phases: PhaseTimes::default(),
+            horizon_s: 0.0,
+        }
+    }
+
+    /// Metrics-only observation (disabled sink): counters, histograms
+    /// and phase timers without trace formatting. What sweep drivers
+    /// enable for `report.json`.
+    pub fn metrics_only() -> Self {
+        Self::with_sink(TraceSink::Disabled)
+    }
+
+    /// Trace into memory (tests, in-process summaries).
+    pub fn to_memory() -> Self {
+        Self::with_sink(TraceSink::Memory(Vec::new()))
+    }
+
+    /// Trace into a JSONL file.
+    pub fn to_file(path: &std::path::Path) -> std::io::Result<Self> {
+        Ok(Self::with_sink(TraceSink::file(path)?))
+    }
+
+    /// Run header: world identity + denominators. Emit once, first.
+    pub fn meta(
+        &mut self,
+        preset: &str,
+        scheme: &str,
+        seed: u64,
+        horizon_s: f64,
+        n_sats: usize,
+        n_sites: usize,
+    ) {
+        self.horizon_s = horizon_s;
+        if self.sink.enabled() {
+            let line = format!(
+                "{{\"ev\":\"meta\",\"preset\":\"{}\",\"scheme\":\"{}\",\"seed\":{seed},\"horizon_s\":{},\"n_sats\":{n_sats},\"n_sites\":{n_sites}}}",
+                json_escape(preset),
+                json_escape(scheme),
+                jnum(horizon_s),
+            );
+            self.sink.write_line(&line);
+        }
+    }
+
+    /// A contact window opens between `site` and `sat`.
+    pub fn contact_open(&mut self, t: f64, site: usize, sat: usize) {
+        self.metrics.inc("contacts");
+        if self.sink.enabled() {
+            let line = format!(
+                "{{\"ev\":\"contact_open\",\"t\":{},\"site\":{site},\"sat\":{sat}}}",
+                jnum(t)
+            );
+            self.sink.write_line(&line);
+        }
+    }
+
+    /// A contact window closes between `site` and `sat`.
+    pub fn contact_close(&mut self, t: f64, site: usize, sat: usize) {
+        if self.sink.enabled() {
+            let line = format!(
+                "{{\"ev\":\"contact_close\",\"t\":{},\"site\":{site},\"sat\":{sat}}}",
+                jnum(t)
+            );
+            self.sink.write_line(&line);
+        }
+    }
+
+    /// One fault-adjusted link-delay call: the model-transfer primitive
+    /// every scheme's traffic flows through (aligned 1:1 with the
+    /// `transfers` accounting). `retransmits` counts only newly
+    /// observed channel events, matching `FaultStats`.
+    pub fn model_tx(
+        &mut self,
+        t: f64,
+        class: &LinkClass,
+        base_s: f64,
+        delay_s: f64,
+        retransmits: u32,
+        payload_bits: f64,
+    ) {
+        let (tag, a, b, ctr) = match *class {
+            LinkClass::SatSite { sat, site } => ("site", sat as u32, site as u32, "tx.site"),
+            LinkClass::Isl { sat_a, sat_b } => (
+                "isl",
+                sat_a.min(sat_b) as u32,
+                sat_a.max(sat_b) as u32,
+                "tx.isl",
+            ),
+            LinkClass::Ihl { site_a, site_b } => (
+                "ihl",
+                site_a.min(site_b) as u32,
+                site_a.max(site_b) as u32,
+                "tx.ihl",
+            ),
+        };
+        self.metrics.inc(ctr);
+        if retransmits > 0 {
+            self.metrics.add("retransmissions", retransmits as u64);
+        }
+        self.metrics.observe("delay_s", metrics::DELAY_BUCKETS, delay_s);
+        self.metrics
+            .link(tag, a, b, delay_s, payload_bits * (1.0 + retransmits as f64));
+        if self.sink.enabled() {
+            let line = format!(
+                "{{\"ev\":\"model_tx\",\"t\":{},\"link\":\"{tag}\",\"src\":{a},\"dst\":{b},\"base_s\":{},\"delay_s\":{},\"retx\":{retransmits}}}",
+                jnum(t),
+                jnum(base_s),
+                jnum(delay_s),
+            );
+            self.sink.write_line(&line);
+        }
+    }
+
+    /// One hop of a routed multi-hop path (ISL graph routes, the HAP
+    /// relay ring). The underlying delay call already accounts the
+    /// link load; this marks path structure.
+    pub fn relay_hop(&mut self, t: f64, kind: &'static str, a: usize, b: usize, delay_s: f64) {
+        self.metrics.inc("relay_hops");
+        if self.sink.enabled() {
+            let line = format!(
+                "{{\"ev\":\"relay_hop\",\"t\":{},\"kind\":\"{kind}\",\"a\":{a},\"b\":{b},\"delay_s\":{}}}",
+                jnum(t),
+                jnum(delay_s),
+            );
+            self.sink.write_line(&line);
+        }
+    }
+
+    /// Observe one aggregated model's staleness (global epochs behind).
+    pub fn staleness(&mut self, s: f64) {
+        self.metrics
+            .observe("staleness", metrics::STALENESS_BUCKETS, s);
+    }
+
+    /// One aggregation: `group` partitions folded, `n_models` models,
+    /// worst `staleness` among them, applied discount factor.
+    pub fn aggregate(&mut self, t: f64, group: u64, n_models: usize, staleness: f64, discount: f64) {
+        self.metrics.inc("aggregations");
+        if self.sink.enabled() {
+            let line = format!(
+                "{{\"ev\":\"aggregate\",\"t\":{},\"group\":{group},\"n_models\":{n_models},\"staleness\":{},\"discount\":{}}}",
+                jnum(t),
+                jnum(staleness),
+                jnum(discount),
+            );
+            self.sink.write_line(&line);
+        }
+    }
+
+    /// A buffered model was discarded (`reason`: `"stale"`, `"dead"`,
+    /// `"past_horizon"`, …).
+    pub fn model_dropped(&mut self, t: f64, sat: usize, epoch: u64, reason: &'static str) {
+        self.metrics.inc("models_dropped");
+        if self.sink.enabled() {
+            let line = format!(
+                "{{\"ev\":\"model_dropped\",\"t\":{},\"sat\":{sat},\"epoch\":{epoch},\"reason\":\"{reason}\"}}",
+                jnum(t)
+            );
+            self.sink.write_line(&line);
+        }
+    }
+
+    /// A buffered model was kept for a later aggregation round.
+    pub fn model_retained(&mut self, t: f64, sat: usize, epoch: u64) {
+        self.metrics.inc("models_retained");
+        if self.sink.enabled() {
+            let line = format!(
+                "{{\"ev\":\"model_retained\",\"t\":{},\"sat\":{sat},\"epoch\":{epoch}}}",
+                jnum(t)
+            );
+            self.sink.write_line(&line);
+        }
+    }
+
+    /// The faults engine impaired a transfer (`kind`: `"loss"`,
+    /// `"defer"`), `n` events.
+    pub fn fault_hit(&mut self, t: f64, kind: &'static str, n: u64) {
+        match kind {
+            "loss" => self.metrics.add("faults.loss", n),
+            "defer" => self.metrics.add("faults.defer", n),
+            _ => self.metrics.add("faults.other", n),
+        }
+        if self.sink.enabled() {
+            let line = format!(
+                "{{\"ev\":\"fault_hit\",\"t\":{},\"kind\":\"{kind}\",\"n\":{n}}}",
+                jnum(t)
+            );
+            self.sink.write_line(&line);
+        }
+    }
+
+    /// One global-model evaluation (mirrors the accuracy curve).
+    pub fn eval(&mut self, t: f64, epoch: u64, accuracy: f64, loss: f64) {
+        self.metrics.inc("evals");
+        if self.sink.enabled() {
+            let line = format!(
+                "{{\"ev\":\"eval\",\"t\":{},\"epoch\":{epoch},\"accuracy\":{},\"loss\":{}}}",
+                jnum(t),
+                jnum(accuracy),
+                jnum(loss),
+            );
+            self.sink.write_line(&line);
+        }
+    }
+
+    /// Sample the event-queue depth (called at pops; also feeds the
+    /// high-water counter).
+    pub fn queue_depth(&mut self, depth: usize) {
+        self.metrics
+            .observe("queue_depth", metrics::DEPTH_BUCKETS, depth as f64);
+        self.metrics.set_max("queue_high_water", depth as u64);
+    }
+
+    /// Snapshot this run's metrics + phases into a serializable report.
+    pub fn report(&self) -> ObsReport {
+        ObsReport::of(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_only_mode_formats_nothing() {
+        let mut o = RunObs::metrics_only();
+        o.meta("p", "s", 1, 100.0, 4, 2);
+        o.model_tx(
+            1.0,
+            &LinkClass::SatSite { sat: 3, site: 0 },
+            0.1,
+            0.2,
+            1,
+            1000.0,
+        );
+        o.eval(2.0, 1, 0.5, 1.0);
+        assert!(o.sink.lines().is_empty());
+        assert_eq!(o.metrics.counter("tx.site"), 1);
+        assert_eq!(o.metrics.counter("retransmissions"), 1);
+        assert_eq!(o.metrics.counter("evals"), 1);
+        assert_eq!(o.horizon_s, 100.0);
+    }
+
+    #[test]
+    fn memory_trace_is_valid_flat_jsonl() {
+        let mut o = RunObs::to_memory();
+        o.meta("paper-40", "asyncfleo", 42, 259200.0, 40, 2);
+        o.contact_open(10.0, 0, 7);
+        o.model_tx(
+            11.0,
+            &LinkClass::Isl { sat_a: 5, sat_b: 4 },
+            0.05,
+            0.05,
+            0,
+            1e6,
+        );
+        o.relay_hop(11.5, "isl", 4, 3, 0.05);
+        o.staleness(2.0);
+        o.aggregate(12.0, 3, 5, 2.0, 0.5);
+        o.model_dropped(12.0, 9, 1, "stale");
+        o.model_retained(12.0, 8, 2);
+        o.fault_hit(13.0, "loss", 2);
+        o.eval(14.0, 1, 0.7, 0.9);
+        o.contact_close(20.0, 0, 7);
+        let lines = o.sink.lines();
+        assert_eq!(lines.len(), 10);
+        for line in lines {
+            assert!(line.starts_with("{\"ev\":\""), "line {line}");
+            assert!(line.ends_with('}'), "line {line}");
+            // flat records: no nested objects, so brace balance is 1+1
+            assert_eq!(line.matches('{').count(), 1, "line {line}");
+            assert_eq!(line.matches('}').count(), 1, "line {line}");
+        }
+        // ISL endpoints are direction-normalized in the load table
+        assert_eq!(
+            o.metrics.sorted_links()[0].0,
+            LinkKey { class: "isl", a: 4, b: 5 }
+        );
+        assert_eq!(o.metrics.histogram("staleness").unwrap().total(), 1);
+    }
+
+    #[test]
+    fn queue_depth_tracks_high_water() {
+        let mut o = RunObs::metrics_only();
+        o.queue_depth(3);
+        o.queue_depth(17);
+        o.queue_depth(5);
+        assert_eq!(o.metrics.counter("queue_high_water"), 17);
+        assert_eq!(o.metrics.histogram("queue_depth").unwrap().total(), 3);
+    }
+}

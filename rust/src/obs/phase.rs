@@ -1,0 +1,121 @@
+//! Phase profiling: scoped wall-time timers whose totals surface in
+//! `report.json` and `BENCH_runloop.json` — never in the trace JSONL
+//! (wall-clock readings would break the trace's byte-determinism).
+//!
+//! Two registries:
+//!
+//! * [`PhaseTimes`] — the per-run accumulator carried by
+//!   `obs::RunObs`. Strategies bracket their event processing and
+//!   aggregation with `SimEnv::phase_start` / `SimEnv::phase_end`,
+//!   which cost one `Option` branch when observation is off.
+//! * the process-wide global registry ([`global_phase`] /
+//!   [`global_phases`]) — for cold-path substrate phases that run
+//!   inside process-wide caches with no run to charge them to:
+//!   geometry build, the contact scan, analytic pass-map
+//!   memoization. A [`ScopedPhase`] guard adds its elapsed time on
+//!   drop; these sites build each unique artifact once per process,
+//!   so the mutex is far off every hot path.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-run accumulated wall time by phase name.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimes {
+    acc: BTreeMap<&'static str, (f64, u64)>,
+}
+
+impl PhaseTimes {
+    /// Charge `secs` of wall time to `name`.
+    pub fn add(&mut self, name: &'static str, secs: f64) {
+        let e = self.acc.entry(name).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+
+    /// `(name, total seconds, times entered)` in name order.
+    pub fn entries(&self) -> impl Iterator<Item = (&'static str, f64, u64)> + '_ {
+        self.acc.iter().map(|(&n, &(s, c))| (n, s, c))
+    }
+
+    pub fn get(&self, name: &str) -> Option<(f64, u64)> {
+        self.acc.get(name).copied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.acc.is_empty()
+    }
+}
+
+fn global() -> &'static Mutex<BTreeMap<&'static str, (f64, u64)>> {
+    static REG: OnceLock<Mutex<BTreeMap<&'static str, (f64, u64)>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Guard returned by [`global_phase`]: charges its elapsed wall time
+/// to the global registry when dropped.
+pub struct ScopedPhase {
+    name: &'static str,
+    t0: Instant,
+}
+
+/// Start timing a named substrate phase (geometry build, contact scan,
+/// pass-map memoization). Hold the guard for the phase's extent.
+pub fn global_phase(name: &'static str) -> ScopedPhase {
+    ScopedPhase { name, t0: Instant::now() }
+}
+
+impl Drop for ScopedPhase {
+    fn drop(&mut self) {
+        let secs = self.t0.elapsed().as_secs_f64();
+        let mut reg = global().lock().unwrap();
+        let e = reg.entry(self.name).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+}
+
+/// Snapshot of the process-wide substrate phases:
+/// `(name, total seconds, times entered)` in name order.
+pub fn global_phases() -> Vec<(&'static str, f64, u64)> {
+    global()
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(&n, &(s, c))| (n, s, c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_times_accumulate() {
+        let mut p = PhaseTimes::default();
+        assert!(p.is_empty());
+        p.add("aggregate", 0.25);
+        p.add("aggregate", 0.75);
+        p.add("event_loop", 2.0);
+        assert_eq!(p.get("aggregate"), Some((1.0, 2)));
+        let rows: Vec<_> = p.entries().collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "aggregate", "BTreeMap order is deterministic");
+    }
+
+    #[test]
+    fn scoped_phase_lands_in_global_registry() {
+        {
+            let _g = global_phase("obs_phase_unit_test");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let rows = global_phases();
+        let row = rows
+            .iter()
+            .find(|(n, _, _)| *n == "obs_phase_unit_test")
+            .expect("guard must register its phase");
+        assert!(row.1 > 0.0);
+        assert!(row.2 >= 1);
+    }
+}

@@ -1,0 +1,440 @@
+//! The per-run observation report ([`ObsReport`]): counters,
+//! histograms, link loads and phase timings folded into one
+//! serializable value, plus [`summarize_trace`] — the renderer behind
+//! `asyncfleo report` (staleness histogram, top links by utilization,
+//! time-in-phase table, accuracy curve via [`crate::metrics::chart`]).
+//!
+//! JSON is emitted by the same hand-rolled writer as the trace
+//! ([`super::trace`]); map-backed sections serialize in key order, so
+//! identical runs produce byte-identical reports (modulo the
+//! wall-clock phase values, which are explicitly non-deterministic).
+
+use super::metrics::{Histogram, LinkKey, LinkLoad};
+use super::trace::{jnum, json_escape};
+use super::RunObs;
+use crate::metrics::{chart, Curve, CurvePoint};
+use std::collections::HashMap;
+
+/// How many links `to_json` and the trace summary keep (the full table
+/// can be 4·n_sats wide on mega-constellations; the report states the
+/// total so the cap is never silent).
+const TOP_LINKS: usize = 20;
+
+/// One link's aggregated load row.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkRow {
+    pub class: &'static str,
+    pub a: u32,
+    pub b: u32,
+    pub busy_s: f64,
+    pub bits: f64,
+    pub count: u64,
+}
+
+/// Snapshot of one run's observation state (see module docs). Carried
+/// by `coordinator::RunResult` when the run was observed, so sweep
+/// executors stream it with the result rows.
+#[derive(Clone, Debug)]
+pub struct ObsReport {
+    pub horizon_s: f64,
+    pub counters: Vec<(&'static str, u64)>,
+    pub histograms: Vec<(&'static str, Histogram)>,
+    /// All links, busiest first (serialization caps at [`TOP_LINKS`]).
+    pub links: Vec<LinkRow>,
+    /// Per-run phases: `(name, total seconds, times entered)`.
+    pub phases: Vec<(&'static str, f64, u64)>,
+}
+
+impl ObsReport {
+    pub(super) fn of(obs: &RunObs) -> ObsReport {
+        ObsReport {
+            horizon_s: obs.horizon_s,
+            counters: obs.metrics.counters().iter().map(|(&k, &v)| (k, v)).collect(),
+            histograms: obs
+                .metrics
+                .histograms()
+                .iter()
+                .map(|(&k, v)| (k, v.clone()))
+                .collect(),
+            links: obs
+                .metrics
+                .sorted_links()
+                .into_iter()
+                .map(|(LinkKey { class, a, b }, LinkLoad { busy_s, bits, count })| LinkRow {
+                    class,
+                    a,
+                    b,
+                    busy_s,
+                    bits,
+                    count,
+                })
+                .collect(),
+            phases: obs.phases.entries().collect(),
+        }
+    }
+
+    /// Fraction of the horizon a link spent busy (0 when the horizon
+    /// is unknown).
+    pub fn utilization(&self, row: &LinkRow) -> f64 {
+        if self.horizon_s > 0.0 {
+            row.busy_s / self.horizon_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Serialize as a JSON object, indented under `pad` (the object's
+    /// own braces are flush with `pad`).
+    pub fn to_json(&self, pad: &str) -> String {
+        let q = format!("{pad}  ");
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("{q}\"horizon_s\": {},\n", jnum(self.horizon_s)));
+        let counters: Vec<String> = self
+            .counters
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {v}", json_escape(k)))
+            .collect();
+        out.push_str(&format!("{q}\"counters\": {{{}}},\n", counters.join(", ")));
+        let hists: Vec<String> = self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                let bounds: Vec<String> = h.bounds().iter().map(|&b| jnum(b)).collect();
+                let counts: Vec<String> = h.counts().iter().map(|c| c.to_string()).collect();
+                format!(
+                    "\"{}\": {{\"bounds\": [{}], \"counts\": [{}], \"total\": {}, \"mean\": {}, \"max\": {}}}",
+                    json_escape(k),
+                    bounds.join(", "),
+                    counts.join(", "),
+                    h.total(),
+                    jnum(h.mean()),
+                    jnum(h.max()),
+                )
+            })
+            .collect();
+        if hists.is_empty() {
+            out.push_str(&format!("{q}\"histograms\": {{}},\n"));
+        } else {
+            out.push_str(&format!(
+                "{q}\"histograms\": {{\n{q}  {}\n{q}}},\n",
+                hists.join(&format!(",\n{q}  "))
+            ));
+        }
+        out.push_str(&format!("{q}\"links_total\": {},\n", self.links.len()));
+        let links: Vec<String> = self
+            .links
+            .iter()
+            .take(TOP_LINKS)
+            .map(|r| {
+                format!(
+                    "{{\"class\": \"{}\", \"a\": {}, \"b\": {}, \"busy_s\": {}, \"bits\": {}, \"count\": {}, \"utilization\": {}}}",
+                    r.class,
+                    r.a,
+                    r.b,
+                    jnum(r.busy_s),
+                    jnum(r.bits),
+                    r.count,
+                    jnum(self.utilization(r)),
+                )
+            })
+            .collect();
+        if links.is_empty() {
+            out.push_str(&format!("{q}\"links\": [],\n"));
+        } else {
+            out.push_str(&format!(
+                "{q}\"links\": [\n{q}  {}\n{q}],\n",
+                links.join(&format!(",\n{q}  "))
+            ));
+        }
+        let phases: Vec<String> = self
+            .phases
+            .iter()
+            .map(|(n, s, c)| {
+                format!(
+                    "{{\"name\": \"{}\", \"secs\": {}, \"count\": {c}}}",
+                    json_escape(n),
+                    jnum(*s),
+                )
+            })
+            .collect();
+        if phases.is_empty() {
+            out.push_str(&format!("{q}\"phases\": []\n"));
+        } else {
+            out.push_str(&format!(
+                "{q}\"phases\": [\n{q}  {}\n{q}]\n",
+                phases.join(&format!(",\n{q}  "))
+            ));
+        }
+        out.push_str(&format!("{pad}}}"));
+        out
+    }
+}
+
+/// Extract the raw value of `"key":` from one flat JSON record line
+/// (string quotes stripped). Only valid for the flat single-object
+/// lines this crate's trace writer emits.
+fn field<'x>(line: &'x str, key: &str) -> Option<&'x str> {
+    let pat = format!("\"{key}\":");
+    let i = line.find(&pat)? + pat.len();
+    let rest = &line[i..];
+    let end = rest
+        .find(|c| c == ',' || c == '}')
+        .unwrap_or(rest.len());
+    Some(rest[..end].trim().trim_matches('"'))
+}
+
+fn fnum(line: &str, key: &str) -> Option<f64> {
+    field(line, key)?.parse().ok()
+}
+
+/// One ASCII histogram bar, scaled to `width` at `max`.
+fn bar(count: u64, max: u64, width: usize) -> String {
+    if max == 0 {
+        return String::new();
+    }
+    let n = ((count as f64 / max as f64) * width as f64).round() as usize;
+    "#".repeat(n.min(width))
+}
+
+/// Render a human summary of one trace: record counts, the staleness
+/// histogram, the top links by utilization, the accuracy curve, and —
+/// when the sibling `report.json` text is supplied — the time-in-phase
+/// table (wall-clock phases live only in the report, never in the
+/// deterministic trace).
+pub fn summarize_trace(trace: &str, report_json: Option<&str>) -> String {
+    let mut out = String::new();
+    let mut counts: Vec<(String, u64)> = Vec::new();
+    let mut horizon_s = 0.0f64;
+    let mut staleness: Vec<f64> = Vec::new();
+    let mut links: HashMap<(String, String, String), (f64, u64)> = HashMap::new();
+    let mut curve = Curve::default();
+    let mut n_lines = 0u64;
+
+    for line in trace.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        n_lines += 1;
+        let ev = field(line, "ev").unwrap_or("?").to_string();
+        match counts.iter_mut().find(|(k, _)| *k == ev) {
+            Some((_, c)) => *c += 1,
+            None => counts.push((ev.clone(), 1)),
+        }
+        match ev.as_str() {
+            "meta" => {
+                horizon_s = fnum(line, "horizon_s").unwrap_or(0.0);
+                out.push_str(&format!(
+                    "trace: preset {} · scheme {} · seed {} · horizon {:.1} h · {} sats, {} sites\n",
+                    field(line, "preset").unwrap_or("?"),
+                    field(line, "scheme").unwrap_or("?"),
+                    field(line, "seed").unwrap_or("?"),
+                    horizon_s / 3600.0,
+                    field(line, "n_sats").unwrap_or("?"),
+                    field(line, "n_sites").unwrap_or("?"),
+                ));
+            }
+            "aggregate" => {
+                if let Some(s) = fnum(line, "staleness") {
+                    staleness.push(s);
+                }
+            }
+            "model_tx" => {
+                let key = (
+                    field(line, "link").unwrap_or("?").to_string(),
+                    field(line, "src").unwrap_or("?").to_string(),
+                    field(line, "dst").unwrap_or("?").to_string(),
+                );
+                let e = links.entry(key).or_insert((0.0, 0));
+                e.0 += fnum(line, "delay_s").unwrap_or(0.0);
+                e.1 += 1;
+            }
+            "eval" => {
+                curve.push(CurvePoint {
+                    time_s: fnum(line, "t").unwrap_or(0.0),
+                    epoch: fnum(line, "epoch").unwrap_or(0.0) as u64,
+                    accuracy: fnum(line, "accuracy").unwrap_or(0.0),
+                    loss: fnum(line, "loss").unwrap_or(0.0),
+                });
+            }
+            _ => {}
+        }
+    }
+
+    out.push_str(&format!("records: {n_lines} ("));
+    let parts: Vec<String> = counts.iter().map(|(k, c)| format!("{k} {c}")).collect();
+    out.push_str(&parts.join(", "));
+    out.push_str(")\n");
+
+    // -- staleness histogram (from aggregate records) --
+    out.push_str("\n== staleness at aggregation ==\n");
+    if staleness.is_empty() {
+        out.push_str("  (no aggregate records)\n");
+    } else {
+        let bounds = super::metrics::STALENESS_BUCKETS;
+        let mut h = Histogram::new(bounds);
+        for &s in &staleness {
+            h.observe(s);
+        }
+        out.push_str(&format!(
+            "  {} aggregations, mean {:.2}, max {:.0}\n",
+            h.total(),
+            h.mean(),
+            h.max()
+        ));
+        let peak = h.counts().iter().copied().max().unwrap_or(0);
+        for (i, &c) in h.counts().iter().enumerate() {
+            out.push_str(&format!(
+                "  {:>6} {:>6}  {}\n",
+                h.bucket_label(i),
+                c,
+                bar(c, peak, 40)
+            ));
+        }
+    }
+
+    // -- top links by utilization (busy time / horizon) --
+    out.push_str("\n== top links by utilization ==\n");
+    if links.is_empty() {
+        out.push_str("  (no model_tx records)\n");
+    } else {
+        let mut rows: Vec<((String, String, String), (f64, u64))> = links.into_iter().collect();
+        rows.sort_by(|x, y| y.1 .0.total_cmp(&x.1 .0).then(x.0.cmp(&y.0)));
+        out.push_str(&format!(
+            "  {:<6} {:>6} {:>6} {:>10} {:>9} {:>12}\n",
+            "link", "a", "b", "busy_s", "transfers", "utilization"
+        ));
+        for ((class, a, b), (busy, count)) in rows.iter().take(10) {
+            let util = if horizon_s > 0.0 { busy / horizon_s } else { 0.0 };
+            out.push_str(&format!(
+                "  {class:<6} {a:>6} {b:>6} {busy:>10.3} {count:>9} {util:>11.4}%\n",
+                util = util * 100.0
+            ));
+        }
+        if rows.len() > 10 {
+            out.push_str(&format!("  ({} more links)\n", rows.len() - 10));
+        }
+    }
+
+    // -- time in phase (wall clock; from report.json when available) --
+    out.push_str("\n== time in phase ==\n");
+    match report_json.map(phase_rows) {
+        Some(rows) if !rows.is_empty() => {
+            out.push_str(&format!(
+                "  {:<24} {:>10} {:>8}\n",
+                "phase", "secs", "count"
+            ));
+            for (name, secs, count) in rows {
+                out.push_str(&format!("  {name:<24} {secs:>10.4} {count:>8}\n"));
+            }
+        }
+        _ => out.push_str("  (no report.json alongside the trace — wall-clock phases unavailable)\n"),
+    }
+
+    // -- accuracy curve (from eval records) --
+    if curve.points.len() >= 2 {
+        out.push_str("\n== accuracy ==\n");
+        out.push_str(&chart::render_curve(&curve, 64, 12));
+        out.push('\n');
+    }
+    out
+}
+
+/// Pull every `{"name": ..., "secs": ..., "count": ...}` row out of the
+/// report's `"phases"` arrays (per-run and substrate alike).
+fn phase_rows(report: &str) -> Vec<(String, f64, u64)> {
+    let mut rows = Vec::new();
+    let mut rest = report;
+    while let Some(i) = rest.find("\"name\":") {
+        let tail = &rest[i..];
+        let end = tail.find('}').unwrap_or(tail.len());
+        let obj = &tail[..end];
+        if let (Some(name), Some(secs)) = (field(obj, "name"), fnum(obj, "secs")) {
+            let count = fnum(obj, "count").unwrap_or(0.0) as u64;
+            rows.push((name.to_string(), secs, count));
+        }
+        rest = &tail[end..];
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::LinkClass;
+
+    fn sample_obs() -> RunObs {
+        let mut o = RunObs::to_memory();
+        o.meta("paper-40", "asyncfleo", 42, 7200.0, 6, 2);
+        o.model_tx(
+            10.0,
+            &LinkClass::SatSite { sat: 1, site: 0 },
+            0.1,
+            0.3,
+            1,
+            1000.0,
+        );
+        o.model_tx(
+            20.0,
+            &LinkClass::SatSite { sat: 1, site: 0 },
+            0.1,
+            0.1,
+            0,
+            1000.0,
+        );
+        o.staleness(0.0);
+        o.staleness(3.0);
+        o.aggregate(30.0, 2, 2, 3.0, 0.5);
+        o.eval(30.0, 1, 0.4, 1.2);
+        o.eval(60.0, 2, 0.6, 0.8);
+        o.phases.add("aggregate", 0.5);
+        o
+    }
+
+    #[test]
+    fn report_serializes_deterministic_json() {
+        let obs = sample_obs();
+        let r = obs.report();
+        assert_eq!(r.horizon_s, 7200.0);
+        let json = r.to_json("");
+        assert!(json.contains("\"counters\""));
+        assert!(json.contains("\"tx.site\": 2"));
+        assert!(json.contains("\"staleness\""));
+        assert!(json.contains("\"phases\""));
+        assert!(json.contains("\"name\": \"aggregate\""));
+        // byte-determinism of the metric sections
+        assert_eq!(json, sample_obs().report().to_json(""));
+        // link rows carry utilization against the meta horizon
+        let row = r.links.first().expect("one link row");
+        assert_eq!(row.count, 2);
+        assert!((r.utilization(row) - 0.4 / 7200.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn summarize_renders_histogram_links_and_phases() {
+        let obs = sample_obs();
+        let trace = obs.sink.lines().join("\n");
+        let report = obs.report().to_json("");
+        let s = summarize_trace(&trace, Some(&report));
+        assert!(s.contains("preset paper-40"), "{s}");
+        assert!(s.contains("staleness at aggregation"), "{s}");
+        assert!(s.contains("top links by utilization"), "{s}");
+        assert!(s.contains("time in phase"), "{s}");
+        assert!(s.contains("aggregate"), "{s}");
+        assert!(s.contains("site"), "{s}");
+        // without a report, phases degrade gracefully
+        let s2 = summarize_trace(&trace, None);
+        assert!(s2.contains("wall-clock phases unavailable"), "{s2}");
+    }
+
+    #[test]
+    fn field_extractor_handles_strings_and_numbers() {
+        let line = "{\"ev\":\"meta\",\"preset\":\"paper-40\",\"seed\":42,\"horizon_s\":259200}";
+        assert_eq!(field(line, "ev"), Some("meta"));
+        assert_eq!(field(line, "preset"), Some("paper-40"));
+        assert_eq!(fnum(line, "seed"), Some(42.0));
+        assert_eq!(fnum(line, "horizon_s"), Some(259200.0));
+        assert_eq!(field(line, "missing"), None);
+    }
+}

@@ -1,0 +1,147 @@
+//! The typed-event trace sink: JSONL output with a hand-rolled,
+//! serde-free writer (crates.io is unreachable; see DESIGN.md §1).
+//!
+//! Every record is one flat JSON object per line with an `"ev"` tag
+//! (`model_tx`, `aggregate`, `eval`, …— the full schema is documented
+//! in [`super`]'s module docs and ROADMAP.md). Records carry only
+//! *simulated*-time data — never wall-clock readings — so two traced
+//! runs of the same seed produce byte-identical JSONL
+//! (`tests/obs_equivalence.rs` pins that). Wall-clock phase timings go
+//! to `report.json` instead (see [`super::phase`]).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Where trace lines go. `Disabled` is the no-op variant carried by
+/// metrics-only observation (the scenario driver's `report.json` path):
+/// emission helpers skip record formatting entirely when the sink is
+/// disabled, so the only cost left is the metrics fold.
+pub enum TraceSink {
+    /// Drop every record (metrics-only observation).
+    Disabled,
+    /// Collect lines in memory (tests, `summarize_trace` inputs).
+    Memory(Vec<String>),
+    /// Stream lines to a JSONL file (`asyncfleo trace --out PATH`).
+    File(BufWriter<File>),
+}
+
+impl TraceSink {
+    /// Open a file sink, creating parent directories as needed.
+    pub fn file(path: &Path) -> std::io::Result<TraceSink> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        Ok(TraceSink::File(BufWriter::new(File::create(path)?)))
+    }
+
+    /// Does this sink record anything? Emission helpers check this
+    /// before formatting a record, so `Disabled` pays no allocation.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        !matches!(self, TraceSink::Disabled)
+    }
+
+    /// Append one record line (without trailing newline).
+    pub fn write_line(&mut self, line: &str) {
+        match self {
+            TraceSink::Disabled => {}
+            TraceSink::Memory(lines) => lines.push(line.to_string()),
+            TraceSink::File(w) => {
+                // trace output is best-effort diagnostics: an I/O error
+                // must never abort (or perturb) the run it observes
+                let _ = w.write_all(line.as_bytes());
+                let _ = w.write_all(b"\n");
+            }
+        }
+    }
+
+    /// The collected lines of a `Memory` sink (empty otherwise).
+    pub fn lines(&self) -> &[String] {
+        match self {
+            TraceSink::Memory(lines) => lines,
+            _ => &[],
+        }
+    }
+
+    /// Flush buffered file output (no-op for the other variants).
+    pub fn flush(&mut self) {
+        if let TraceSink::File(w) = self {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// JSON string escaping (quotes, backslashes, control characters).
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A JSON number literal for `x` (`null` for non-finite values, which
+/// JSON cannot represent). Rust's shortest-roundtrip `Display` is
+/// deterministic, so identical values always serialize identically.
+pub(crate) fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        let mut s = TraceSink::Disabled;
+        assert!(!s.enabled());
+        s.write_line("{\"ev\":\"x\"}");
+        assert!(s.lines().is_empty());
+    }
+
+    #[test]
+    fn memory_sink_collects_lines_in_order() {
+        let mut s = TraceSink::Memory(Vec::new());
+        assert!(s.enabled());
+        s.write_line("a");
+        s.write_line("b");
+        assert_eq!(s.lines(), &["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn file_sink_writes_jsonl() {
+        let path = std::env::temp_dir().join("asyncfleo_obs_trace_sink_test.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let mut s = TraceSink::file(&path).unwrap();
+        s.write_line("{\"ev\":\"meta\"}");
+        s.write_line("{\"ev\":\"eval\"}");
+        s.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "{\"ev\":\"meta\"}\n{\"ev\":\"eval\"}\n");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn escaping_and_numbers() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(jnum(1.5), "1.5");
+        assert_eq!(jnum(259200.0), "259200");
+        assert_eq!(jnum(f64::NAN), "null");
+        assert_eq!(jnum(f64::INFINITY), "null");
+    }
+}

@@ -42,11 +42,14 @@ pub struct EventQueue {
     heap: BinaryHeap<Entry>,
     seq: u64,
     now_s: f64,
+    /// Deepest the queue has ever been (backlog accounting for the
+    /// observability report).
+    high_water: usize,
 }
 
 impl EventQueue {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now_s: 0.0 }
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now_s: 0.0, high_water: 0 }
     }
 
     /// Current simulated time (time of the last popped event).
@@ -67,12 +70,16 @@ impl EventQueue {
         );
         assert!(
             e.time_s >= self.now_s,
-            "cannot schedule into the past: {} < {}",
+            "cannot schedule into the past: {} < {} ({:?})",
             e.time_s,
-            self.now_s
+            self.now_s,
+            e.kind
         );
         self.heap.push(Entry { time_s: e.time_s, seq: self.seq, event: e });
         self.seq += 1;
+        if self.heap.len() > self.high_water {
+            self.high_water = self.heap.len();
+        }
     }
 
     /// Schedule `kind` at `now + delay`.
@@ -92,6 +99,11 @@ impl EventQueue {
 
     pub fn len(&self) -> usize {
         self.heap.len()
+    }
+
+    /// Deepest the queue has ever been over its lifetime.
+    pub fn high_water(&self) -> usize {
+        self.high_water
     }
 
     pub fn is_empty(&self) -> bool {
@@ -186,5 +198,33 @@ mod tests {
         assert_eq!(q.len(), 2);
         q.pop();
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn high_water_is_monotone_max_of_len() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.high_water(), 0);
+        q.push(Event::new(1.0, EventKind::Sweep));
+        q.push(Event::new(2.0, EventKind::Sweep));
+        q.push(Event::new(3.0, EventKind::Sweep));
+        assert_eq!(q.high_water(), 3);
+        q.pop();
+        q.pop();
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.high_water(), 3, "draining must not lower the mark");
+        q.push(Event::new(4.0, EventKind::Sweep));
+        assert_eq!(q.high_water(), 3, "refilling below the mark keeps it");
+        q.push(Event::new(5.0, EventKind::Sweep));
+        q.push(Event::new(6.0, EventKind::Sweep));
+        assert_eq!(q.high_water(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "Sweep")]
+    fn past_event_panic_names_the_event_kind() {
+        let mut q = EventQueue::new();
+        q.push(Event::new(5.0, EventKind::Sweep));
+        q.pop();
+        q.push(Event::new(1.0, EventKind::Sweep));
     }
 }

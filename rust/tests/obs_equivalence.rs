@@ -1,0 +1,196 @@
+//! Observability bit-identity suite (the PR-8 contract, `src/obs`):
+//!
+//! * for every built-in preset, each covered scheme produces
+//!   **bit-identical** accuracy curves, transfer counts and fault
+//!   accounting with tracing ON (memory sink) and OFF — observation
+//!   draws nothing from any RNG, reorders no events and changes no
+//!   arithmetic;
+//! * the trace itself is deterministic: two traced runs of the same
+//!   seed emit identical JSONL line-for-line;
+//! * the scenario sweep writes byte-identical `scenarios.csv` with
+//!   `--report` (metrics-only observation on every cell) on and off,
+//!   and `--report` additionally produces a well-formed `report.json`;
+//! * `summarize_trace` renders the staleness histogram, link table and
+//!   time-in-phase table from a real traced run.
+
+use asyncfleo::config::{ExperimentConfig, SchemeKind};
+use asyncfleo::coordinator::{RunResult, SimEnv};
+use asyncfleo::experiments::drivers::ExpOptions;
+use asyncfleo::experiments::scenarios::run_compare;
+use asyncfleo::fl::{make_strategy, Strategy};
+use asyncfleo::obs::{summarize_trace, RunObs};
+use asyncfleo::scenario::{Scenario, ScenarioRegistry};
+use asyncfleo::testkit::assert_runs_identical;
+use asyncfleo::train::SurrogateBackend;
+use std::path::PathBuf;
+
+/// The schemes the contract covers: ours, one synchronous baseline and
+/// the ISL-routed sink-satellite scheme (the widest-instrumented trio).
+const SCHEMES: &[SchemeKind] = &[SchemeKind::AsyncFleo, SchemeKind::FedHap, SchemeKind::SinkSat];
+
+/// Every built-in preset the suite sweeps.
+const PRESETS: &[&str] = &[
+    "paper-40",
+    "starlink-lite",
+    "polar-star",
+    "sparse-iot",
+    "equatorial-dense",
+    "haps-degraded",
+];
+
+/// Trim a preset for the suite (same clamps as the run-loop equivalence
+/// suite): identity needs events, not convergence.
+fn trimmed(cfg: &ExperimentConfig) -> ExperimentConfig {
+    let mut c = cfg.clone();
+    if c.n_sats() >= 1000 {
+        c.fl.horizon_s = 2.0 * 3600.0;
+        c.fl.max_epochs = 2;
+    } else if c.n_sats() >= 100 {
+        c.fl.horizon_s = 6.0 * 3600.0;
+        c.fl.max_epochs = 3;
+    } else {
+        c.fl.horizon_s = 12.0 * 3600.0;
+        c.fl.max_epochs = 4;
+    }
+    c
+}
+
+/// One unobserved run (the historical code path: `state.obs == None`).
+fn run_plain(cfg: &ExperimentConfig) -> RunResult {
+    let mut b = SurrogateBackend::for_config(cfg);
+    let mut env = SimEnv::new(cfg, &mut b);
+    make_strategy(cfg.fl.scheme).run(&mut env)
+}
+
+/// One fully traced run (memory sink); returns the observation state
+/// alongside the result so callers can inspect the emitted JSONL.
+fn run_observed(cfg: &ExperimentConfig) -> (RunResult, Box<RunObs>) {
+    let mut b = SurrogateBackend::for_config(cfg);
+    let mut env = SimEnv::new(cfg, &mut b);
+    let mut obs = RunObs::to_memory();
+    obs.meta(
+        "test",
+        cfg.fl.scheme.name(),
+        cfg.seed,
+        cfg.fl.horizon_s,
+        cfg.n_sats(),
+        cfg.placement.sites().len(),
+    );
+    env.enable_obs(obs);
+    let r = make_strategy(cfg.fl.scheme).run(&mut env);
+    let obs = env.take_obs().expect("run was observed");
+    (r, obs)
+}
+
+#[test]
+fn tracing_on_vs_off_is_bit_identical_and_traces_are_deterministic() {
+    let reg = ScenarioRegistry::builtin();
+    for name in PRESETS {
+        let sc = reg.get(name).unwrap_or_else(|| panic!("missing preset {name}"));
+        for &scheme in SCHEMES {
+            let mut cfg = trimmed(&sc.cfg);
+            cfg.fl.scheme = scheme;
+            let what = format!("{name}/{}", scheme.name());
+            let plain = run_plain(&cfg);
+            let (traced_a, obs_a) = run_observed(&cfg);
+            let (traced_b, obs_b) = run_observed(&cfg);
+            assert_runs_identical(&plain, &traced_a, &what);
+            assert_runs_identical(&traced_a, &traced_b, &what);
+            assert_eq!(
+                obs_a.sink.lines(),
+                obs_b.sink.lines(),
+                "{what}: same seed must emit identical JSONL"
+            );
+            assert!(
+                !obs_a.sink.lines().is_empty(),
+                "{what}: a traced run must emit records"
+            );
+            assert!(
+                plain.obs.is_none() && traced_a.obs.is_some(),
+                "{what}: only the observed result carries a report"
+            );
+        }
+    }
+}
+
+fn temp_out(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("asyncfleo_obs_equiv_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn report_flag_leaves_scenarios_csv_bytes_unchanged() {
+    let reg = ScenarioRegistry::builtin();
+    let scenarios: Vec<Scenario> = ["paper-40", "sparse-iot"]
+        .iter()
+        .map(|name| {
+            let sc = reg.get(name).unwrap();
+            Scenario::new(sc.name.clone(), sc.summary.clone(), trimmed(&sc.cfg))
+        })
+        .collect();
+    let dir_off = temp_out("report_off");
+    let dir_on = temp_out("report_on");
+    let opts_off = ExpOptions {
+        out_dir: dir_off.clone(),
+        fast: true,
+        surrogate: true,
+        seed: 42,
+        jobs: 1,
+        report: false,
+    };
+    let opts_on = ExpOptions { out_dir: dir_on.clone(), report: true, ..opts_off.clone() };
+    run_compare(&scenarios, &opts_off).expect("sweep without report");
+    run_compare(&scenarios, &opts_on).expect("sweep with report");
+    let a = std::fs::read(dir_off.join("scenarios.csv")).unwrap();
+    let b = std::fs::read(dir_on.join("scenarios.csv")).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "--report must not change scenarios.csv bytes");
+    assert!(!dir_off.join("report.json").exists(), "no report without --report");
+    let report = std::fs::read_to_string(dir_on.join("report.json")).unwrap();
+    assert!(report.contains("\"runs\""), "{report}");
+    assert!(report.contains("paper-40/AsyncFLEO"), "cell labels key the runs");
+    assert!(report.contains("sparse-iot/SinkSat"), "every cell reports");
+    assert!(report.contains("\"tx.site\""), "counters folded per cell");
+    assert!(report.contains("\"substrate_phases\""), "{report}");
+    let _ = std::fs::remove_dir_all(&dir_off);
+    let _ = std::fs::remove_dir_all(&dir_on);
+}
+
+#[test]
+fn summarize_trace_renders_staleness_links_and_phases_from_a_real_run() {
+    let reg = ScenarioRegistry::builtin();
+    let sc = reg.get("paper-40").expect("paper preset in catalog");
+    let mut cfg = trimmed(&sc.cfg);
+    cfg.fl.scheme = SchemeKind::AsyncFleo;
+    let (_r, obs) = run_observed(&cfg);
+
+    // every line is one flat JSON record tagged "ev"
+    let lines = obs.sink.lines();
+    for line in lines {
+        assert!(
+            line.starts_with("{\"ev\":\"") && line.ends_with('}'),
+            "malformed trace line: {line}"
+        );
+    }
+    let has = |kind: &str| lines.iter().any(|l| l.starts_with(&format!("{{\"ev\":\"{kind}\"")));
+    assert!(has("meta"), "meta header present");
+    assert!(has("model_tx"), "transfers traced");
+    assert!(has("aggregate"), "aggregations traced");
+    assert!(has("eval"), "evaluations traced");
+    assert!(obs.metrics.counter("aggregations") >= 1);
+    assert!(obs.phases.get("event_loop").is_some(), "event loop phase timed");
+    assert!(obs.phases.get("aggregate").is_some(), "aggregation phase timed");
+
+    let trace = lines.join("\n");
+    let report = obs.report().to_json("");
+    let s = summarize_trace(&trace, Some(&report));
+    assert!(s.contains("staleness at aggregation"), "{s}");
+    assert!(s.contains("aggregations, mean"), "histogram is populated:\n{s}");
+    assert!(s.contains("top links by utilization"), "{s}");
+    assert!(s.contains("time in phase"), "{s}");
+    assert!(s.contains("event_loop"), "phase table rendered from report.json:\n{s}");
+    // without the sibling report the phase table degrades gracefully
+    assert!(summarize_trace(&trace, None).contains("wall-clock phases unavailable"));
+}

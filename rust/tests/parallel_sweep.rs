@@ -25,7 +25,7 @@ fn temp_out(name: &str) -> PathBuf {
 }
 
 fn opts(out: PathBuf, jobs: usize) -> ExpOptions {
-    ExpOptions { out_dir: out, fast: true, surrogate: true, seed: 42, jobs }
+    ExpOptions { out_dir: out, fast: true, surrogate: true, seed: 42, jobs, report: false }
 }
 
 #[test]

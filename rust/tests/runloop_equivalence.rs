@@ -126,8 +126,14 @@ fn scenario_csv_byte_identical_jobs_1_vs_4_on_existing_presets() {
         .collect();
     let dir1 = temp_out("jobs1");
     let dir4 = temp_out("jobs4");
-    let opts1 =
-        ExpOptions { out_dir: dir1.clone(), fast: true, surrogate: true, seed: 42, jobs: 1 };
+    let opts1 = ExpOptions {
+        out_dir: dir1.clone(),
+        fast: true,
+        surrogate: true,
+        seed: 42,
+        jobs: 1,
+        report: false,
+    };
     let opts4 = ExpOptions { out_dir: dir4.clone(), jobs: 4, ..opts1.clone() };
     run_compare(&scenarios, &opts1).expect("--jobs 1 sweep");
     run_compare(&scenarios, &opts4).expect("--jobs 4 sweep");

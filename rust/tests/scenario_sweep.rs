@@ -45,7 +45,7 @@ fn small_scenarios() -> Vec<Scenario> {
 }
 
 fn opts(out: PathBuf, jobs: usize) -> ExpOptions {
-    ExpOptions { out_dir: out, fast: true, surrogate: true, seed: 42, jobs }
+    ExpOptions { out_dir: out, fast: true, surrogate: true, seed: 42, jobs, report: false }
 }
 
 #[test]

@@ -138,8 +138,14 @@ fn sinksat_scenario_rows_byte_identical_jobs_1_vs_4() {
         .collect();
     let dir1 = temp_out("jobs1");
     let dir4 = temp_out("jobs4");
-    let opts1 =
-        ExpOptions { out_dir: dir1.clone(), fast: true, surrogate: true, seed: 42, jobs: 1 };
+    let opts1 = ExpOptions {
+        out_dir: dir1.clone(),
+        fast: true,
+        surrogate: true,
+        seed: 42,
+        jobs: 1,
+        report: false,
+    };
     let opts4 = ExpOptions { out_dir: dir4.clone(), jobs: 4, ..opts1.clone() };
     run_compare(&scenarios, &opts1).expect("--jobs 1 sweep");
     run_compare(&scenarios, &opts4).expect("--jobs 4 sweep");
