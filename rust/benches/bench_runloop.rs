@@ -7,12 +7,15 @@
 //! number is reported.
 //!
 //! Emits `BENCH_runloop.json` (delay-calls/sec fast vs reference, run
-//! wall-time per scheme, before/after speedups) so the perf trajectory
-//! of the run loop is tracked across PRs.
+//! wall-time per scheme, before/after speedups, and the PR-9 multi-lane
+//! run time + speedup per scheme — equality-gated against the
+//! single-lane run) so the perf trajectory of the run loop is tracked
+//! across PRs.
 //!
 //! Run: `cargo bench --offline --bench bench_runloop`
 //!      (`-- --presets paper-40,sparse-iot` selects presets; default is
-//!      paper-40 + the 1584-satellite starlink-phase1 stress world)
+//!      paper-40 + the 1584-satellite starlink-phase1 stress world;
+//!      `-- --lanes N` sets the multi-lane run's lane count, default 4)
 
 use asyncfleo::bench::{bench, print_header, BenchConfig};
 use asyncfleo::config::ExperimentConfig;
@@ -39,6 +42,13 @@ fn main() {
         }
         None => vec!["paper-40".to_string(), "starlink-phase1".to_string()],
     };
+    let lanes: usize = match args.iter().position(|a| a == "--lanes") {
+        Some(i) => args
+            .get(i + 1)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("--lanes needs a positive integer")),
+        None => 4,
+    };
 
     let reg = ScenarioRegistry::builtin();
     let mut rows: Vec<String> = Vec::new();
@@ -61,9 +71,14 @@ fn main() {
             let (fast_r, fast_s, fast_phases) = timed_run(&c, false);
             let (ref_r, ref_s, _) = timed_run(&c, true);
             assert_runs_identical(&fast_r, &ref_r, &format!("{name}/{label}"));
+            // multi-lane run, equality-gated against the single-lane
+            // fast run before its speedup is reported
+            let (lane_r, lane_s) = timed_run_lanes(&c, lanes);
+            assert_runs_identical(&lane_r, &fast_r, &format!("{name}/{label}/lanes{lanes}"));
             let speedup = ref_s / fast_s.max(1e-9);
+            let lanes_speedup = fast_s / lane_s.max(1e-9);
             println!(
-                "{name}/{label}: fast {fast_s:.3} s, reference {ref_s:.3} s  ({speedup:.2}x, {} epochs, {} transfers)",
+                "{name}/{label}: fast {fast_s:.3} s, reference {ref_s:.3} s  ({speedup:.2}x, {} epochs, {} transfers); lanes={lanes} {lane_s:.3} s ({lanes_speedup:.2}x vs fast)",
                 fast_r.epochs,
                 fast_r.transfers
             );
@@ -74,7 +89,7 @@ fn main() {
                 })
                 .collect();
             scheme_rows.push(format!(
-                "        {{\"scheme\": \"{}\", \"fast_s\": {fast_s:.6}, \"reference_s\": {ref_s:.6}, \"speedup\": {speedup:.4}, \"epochs\": {}, \"transfers\": {}, \"phases\": [{}]}}",
+                "        {{\"scheme\": \"{}\", \"fast_s\": {fast_s:.6}, \"reference_s\": {ref_s:.6}, \"speedup\": {speedup:.4}, \"lanes\": {lanes}, \"lanes_s\": {lane_s:.6}, \"lanes_speedup\": {lanes_speedup:.4}, \"epochs\": {}, \"transfers\": {}, \"phases\": [{}]}}",
                 scheme.name(),
                 fast_r.epochs,
                 fast_r.transfers,
@@ -196,6 +211,20 @@ fn delay_benches(name: &str, cfg: &ExperimentConfig) -> (f64, f64) {
 /// that it stays near zero (results are bit-identical either way;
 /// `assert_runs_identical` above pins that against the unobserved
 /// reference run).
+/// One whole strategy run on the fast path with the PR-9 multi-lane
+/// event core (same metrics-only observation as the single-lane fast
+/// run, so the two wall times compare like for like).
+fn timed_run_lanes(cfg: &ExperimentConfig, lanes: usize) -> (RunResult, f64) {
+    let mut strategy = make_strategy(cfg.fl.scheme);
+    let mut b = SurrogateBackend::for_config(cfg);
+    let mut env = SimEnv::new(cfg, &mut b);
+    env.set_lanes(lanes);
+    env.enable_obs(asyncfleo::obs::RunObs::metrics_only());
+    let t0 = Instant::now();
+    let r = strategy.run(&mut env);
+    (r, t0.elapsed().as_secs_f64())
+}
+
 fn timed_run(
     cfg: &ExperimentConfig,
     reference: bool,

@@ -47,6 +47,7 @@ use crate::faults::{FaultPlan, FaultSchedule, FaultStats, LinkClass};
 use crate::metrics::{Curve, CurvePoint};
 use crate::obs::{ObsReport, RunObs};
 use crate::orbit::{GeodeticSite, WalkerConstellation};
+use crate::sim::RunOptions;
 use crate::train::Backend;
 use crate::util::{Rng, SPEED_OF_LIGHT_KM_S};
 use std::sync::Arc;
@@ -75,6 +76,9 @@ pub struct RunState<'a> {
     /// Route delay calls through the pre-cache reference formulas
     /// (see the module docs). Off on every normal run.
     reference_path: bool,
+    /// How to run (lane count for intra-run parallelism) — execution
+    /// shape only, never results. See `sim::lanes`.
+    options: RunOptions,
     /// Observability state (trace sink + metrics registry + phase
     /// timers), `None` unless this run is observed. Strictly
     /// observe-only: every hook draws nothing from the RNG and changes
@@ -142,8 +146,28 @@ impl<'a> SimEnv<'a> {
                 transmission_s,
                 processing_s,
                 reference_path: false,
+                options: RunOptions::default(),
                 obs: None,
             },
+        }
+    }
+
+    /// Set the lane count for intra-run parallelism (default 1 — the
+    /// historical single-lane path). Any value is bit-identical to 1 by
+    /// the `sim::lanes` merge contract; only wall-clock changes.
+    pub fn set_lanes(&mut self, lanes: usize) {
+        self.state.options.lanes = lanes.max(1);
+    }
+
+    /// Effective lane count for this run. The reference path always
+    /// runs single-lane: probe lanes evaluate the *fast-path* base
+    /// formulas, so the executable specification keeps its own serial
+    /// call sequence.
+    pub fn lanes(&self) -> usize {
+        if self.state.reference_path {
+            1
+        } else {
+            self.state.options.lanes.max(1)
         }
     }
 
@@ -350,6 +374,36 @@ impl<'a> SimEnv<'a> {
         delay
     }
 
+    /// Replay one probe-recorded transfer against the run's mutable
+    /// state: counts the transfer and routes it through the exact
+    /// serial fault/observability path (`apply_faults`), so the
+    /// returned delay, stats, `seen`-set evolution and trace records
+    /// are bit-identical to the env having made the original delay
+    /// call itself. The delay is deterministic in `(class, t, base)`,
+    /// so it also equals what the probe lane computed.
+    pub fn replay_tx(&mut self, a: &TxAction) -> f64 {
+        self.state.transfers += 1;
+        self.apply_faults(a.class, a.t, a.base)
+    }
+
+    /// A handle for probe lanes: the shared immutable inputs of the
+    /// fast-path delay calls (geometry, fault schedule, run-constant
+    /// delay terms), detached from the mutable `RunState` so worker
+    /// threads can evaluate delays concurrently. See [`LaneProbe`].
+    pub fn lane_probe(&self) -> LaneProbe {
+        debug_assert!(
+            !self.state.reference_path,
+            "probe lanes evaluate fast-path formulas only"
+        );
+        LaneProbe {
+            geo: self.geo.clone(),
+            schedule: self.state.faults.schedule().clone(),
+            payload_bits: self.state.payload_bits,
+            transmission_s: self.state.transmission_s,
+            processing_s: self.state.processing_s,
+        }
+    }
+
     /// Record an evaluation point on the run curve.
     pub fn record(&mut self, t: f64, epoch: u64, accuracy: f64, loss: f64) {
         self.state.curve.push(CurvePoint { time_s: t, epoch, accuracy, loss });
@@ -362,6 +416,102 @@ impl<'a> SimEnv<'a> {
     /// the paper's I=100 local epochs of on-board compute).
     pub fn train_time_s(&self) -> f64 {
         self.cfg.fl.train_time_s
+    }
+}
+
+/// One transfer a probe lane computed and the serial loop must still
+/// *account for*: the inputs of a delay call, not its outcome. Replay
+/// ([`SimEnv::replay_tx`]) re-runs the serial fault/obs path on these
+/// inputs — the delay is a pure function of them, so replay reproduces
+/// the probe's answer while mutating `transfers`/stats/trace exactly as
+/// the historical single-lane code would have.
+#[derive(Clone, Copy, Debug)]
+pub struct TxAction {
+    pub class: LinkClass,
+    /// Send instant.
+    pub t: f64,
+    /// Clean (fault-free) fast-path delay.
+    pub base: f64,
+}
+
+/// The immutable inputs of the fast-path delay calls, cloneable into
+/// probe lanes (`Arc`s + three `f64`s): worker threads compute
+/// `(delay, TxAction)` pairs concurrently with **zero** access to
+/// `RunState`, and the serial loop replays the actions in merged order.
+/// The probe's delay equals the replay's delay bit for bit because both
+/// evaluate the same pure functions — cached kinematics for the base,
+/// [`FaultSchedule::channel_outcome`] for the impairment (the per-run
+/// `seen` set affects only accounting, never delays).
+#[derive(Clone)]
+pub struct LaneProbe {
+    geo: Arc<Geometry>,
+    schedule: Arc<FaultSchedule>,
+    payload_bits: f64,
+    transmission_s: f64,
+    processing_s: f64,
+}
+
+impl LaneProbe {
+    /// The shared geometry (contact plan, constellation, ISL graph) —
+    /// lanes read visibility and routing through this.
+    pub fn geo(&self) -> &Geometry {
+        &self.geo
+    }
+
+    /// The immutable fault timeline (for liveness queries on lanes).
+    pub fn schedule(&self) -> &FaultSchedule {
+        &self.schedule
+    }
+
+    #[inline]
+    fn base_delay_s(&self, d_km: f64) -> f64 {
+        (self.transmission_s + d_km / SPEED_OF_LIGHT_KM_S) + self.processing_s
+    }
+
+    /// Fault-adjusted delay for `action` — the pure half of
+    /// `SimEnv::apply_faults` (identical arithmetic, no accounting).
+    #[inline]
+    fn channel_delay(&self, action: &TxAction) -> f64 {
+        if !self.schedule.enabled() {
+            return action.base;
+        }
+        self.schedule.channel_outcome(&action.class, action.t, action.base).delay_s
+    }
+
+    /// Probe-side twin of [`SimEnv::site_link_delay`] (fast path).
+    pub fn site_link_delay(&self, site: usize, sat: usize, t: f64) -> (f64, TxAction) {
+        let d = self
+            .geo
+            .site_prop(site)
+            .position_at(t)
+            .distance(self.geo.constellation.position(sat, t));
+        let action =
+            TxAction { class: LinkClass::SatSite { sat, site }, t, base: self.base_delay_s(d) };
+        (self.channel_delay(&action), action)
+    }
+
+    /// Probe-side twin of [`SimEnv::isl_hop_delay`] (fast path).
+    pub fn isl_hop_delay(&self, sat_a: usize, sat_b: usize, t: f64) -> (f64, TxAction) {
+        let d = self
+            .geo
+            .constellation
+            .position(sat_a, t)
+            .distance(self.geo.constellation.position(sat_b, t));
+        let action =
+            TxAction { class: LinkClass::Isl { sat_a, sat_b }, t, base: self.base_delay_s(d) };
+        (self.channel_delay(&action), action)
+    }
+
+    /// Probe-side twin of [`SimEnv::graph_edge_delay`].
+    pub fn graph_edge_delay(&self, e: usize, t: f64) -> (f64, TxAction) {
+        let edge = self.geo.isl.edges()[e];
+        let base = self.geo.isl.edge_delay_s(&self.geo.constellation, e, t, self.payload_bits);
+        let action = TxAction {
+            class: LinkClass::Isl { sat_a: edge.a as usize, sat_b: edge.b as usize },
+            t,
+            base,
+        };
+        (self.channel_delay(&action), action)
     }
 }
 
@@ -568,6 +718,48 @@ mod tests {
         assert_eq!(r.curve.points.len(), 2);
         // the curve moved out of the env instead of being cloned
         assert!(env.state.curve.points.is_empty());
+    }
+
+    #[test]
+    fn lanes_default_to_one_and_reference_path_forces_one() {
+        let mut b = SurrogateBackend::paper_split(2, 3, true, 100);
+        let mut env = small_env(&mut b);
+        assert_eq!(env.lanes(), 1);
+        env.set_lanes(4);
+        assert_eq!(env.lanes(), 4);
+        env.set_lanes(0);
+        assert_eq!(env.lanes(), 1, "lane count clamps to >= 1");
+        env.set_lanes(4);
+        env.set_reference_path(true);
+        assert_eq!(env.lanes(), 1, "the executable spec stays serial");
+    }
+
+    #[test]
+    fn lane_probe_and_replay_match_env_delays_bitwise() {
+        use crate::faults::{FaultConfig, FaultScenario};
+        // a faulty config so the channel oracle participates in probes
+        let mut cfg = ExperimentConfig::test_small();
+        cfg.placement = crate::config::PsPlacement::TwoHaps;
+        cfg.fl.horizon_s = 3600.0 * 12.0;
+        cfg.faults = FaultConfig::preset(FaultScenario::Lossy, 1.0);
+        let mut b1 = SurrogateBackend::paper_split(2, 3, true, 100);
+        let mut serial = SimEnv::new(&cfg, &mut b1);
+        let mut b2 = SurrogateBackend::paper_split(2, 3, true, 100);
+        let mut replayed = SimEnv::new(&cfg, &mut b2);
+        let probe = replayed.lane_probe();
+        for i in 0..200 {
+            let t = 83.5 * i as f64;
+            let a = serial.site_link_delay(i % 2, i % 6, t);
+            let (p, act) = probe.site_link_delay(i % 2, i % 6, t);
+            assert_eq!(a.to_bits(), p.to_bits(), "probe delay at t={t}");
+            assert_eq!(a.to_bits(), replayed.replay_tx(&act).to_bits(), "replay at t={t}");
+            let a = serial.isl_hop_delay(i % 6, (i + 1) % 6, t);
+            let (p, act) = probe.isl_hop_delay(i % 6, (i + 1) % 6, t);
+            assert_eq!(a.to_bits(), p.to_bits());
+            assert_eq!(a.to_bits(), replayed.replay_tx(&act).to_bits());
+        }
+        assert_eq!(serial.state.transfers, replayed.state.transfers);
+        assert_eq!(serial.state.faults.stats(), replayed.state.faults.stats());
     }
 
     #[test]

@@ -18,5 +18,5 @@ pub mod env;
 pub mod geometry;
 
 pub use contact::{worker_count, ContactPlan};
-pub use env::{RunResult, RunState, SimEnv};
+pub use env::{LaneProbe, RunResult, RunState, SimEnv, TxAction};
 pub use geometry::Geometry;

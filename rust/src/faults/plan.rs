@@ -18,7 +18,7 @@
 
 use super::config::FaultConfig;
 use super::schedule::{exp_draw, ChurnSchedule, OutageWindows};
-use crate::sim::{Event, EventKind, EventQueue};
+use crate::sim::{Event, EventKind, EventSink};
 use crate::util::Rng;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -47,6 +47,28 @@ pub struct LinkOutcome {
     /// relaxation, route selection); only the first observation counts
     /// toward [`FaultStats`] and the transfer accounting.
     pub newly_observed: bool,
+}
+
+/// The **pure** half of one channel query: everything the oracle
+/// decides about a transfer over `(class, t, base)` *before* any per-run
+/// accounting — a function of the immutable [`FaultSchedule`] alone, so
+/// probe lanes can evaluate it concurrently and replay it later through
+/// [`FaultPlan::commit`] with bit-identical results.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChannelOutcome {
+    /// Effective delay replacing the clean link delay.
+    pub delay_s: f64,
+    /// Retransmission attempts this transfer suffered.
+    pub retransmits: u32,
+    /// Channel-state key (identifies the (link, coherence-window)
+    /// event for the per-run `seen` set).
+    pub key: u64,
+    /// How far the send instant was deferred (`start - t`; 0 when the
+    /// link was immediately available).
+    pub deferred_s: f64,
+    /// Whether an outage window (not just endpoint churn) contributed
+    /// to the deferral.
+    pub outage_hit: bool,
 }
 
 /// Cumulative injection accounting for one run (reported in
@@ -440,10 +462,57 @@ impl FaultSchedule {
             .count() as u64
     }
 
+    /// The pure channel oracle: what the impairment timeline does to a
+    /// transfer over `class` starting at `t` with clean delay
+    /// `base_delay_s` — deferral fixpoint, channel-state key, loss
+    /// draws and the resulting delay, with **no** per-run state. This
+    /// is [`FaultPlan::transfer`] minus the accounting: `&self` on the
+    /// shared schedule, so probe lanes call it concurrently and the
+    /// serial replay commits the identical outcome via
+    /// [`FaultPlan::commit`].
+    pub fn channel_outcome(&self, class: &LinkClass, t: f64, base_delay_s: f64) -> ChannelOutcome {
+        // -- deferral: availability + outage, to a fixpoint --
+        let mut start = t;
+        for _ in 0..4 {
+            let before = start;
+            start = self.avail_time(class, start);
+            start = self.outage_clear(class, start);
+            if start == before {
+                break;
+            }
+        }
+        let cap = self.horizon_s + DEFER_CAP_SLACK_S;
+        if start > cap {
+            start = cap;
+        }
+        // -- loss + retransmission from the channel state at send time --
+        let key = self.channel_key(class, start);
+        let mut retransmits = 0u32;
+        if self.cfg.loss_prob > 0.0 {
+            let mut chan = Rng::new(key);
+            while retransmits < self.cfg.max_retransmits && chan.f64() < self.cfg.loss_prob {
+                retransmits += 1;
+            }
+        }
+        let backoff_s = self.cfg.retransmit_backoff_s;
+        let delay =
+            (start - t) + base_delay_s + retransmits as f64 * (backoff_s + base_delay_s);
+        ChannelOutcome {
+            delay_s: delay,
+            retransmits,
+            key,
+            deferred_s: start - t,
+            // attribute the deferral: did an outage window (not just
+            // endpoint churn) push the send time? pure re-query of the
+            // deterministic window oracle.
+            outage_hit: self.outage_clear(class, t) > t,
+        }
+    }
+
     /// Push the schedule's discrete transitions (churn up/down, outage
     /// boundaries) as typed events. No-op when disabled, so clean runs
     /// see an untouched queue.
-    pub fn schedule_events(&self, queue: &mut EventQueue) {
+    pub fn schedule_events<Q: EventSink>(&self, queue: &mut Q) {
         if !self.enabled {
             return;
         }
@@ -591,54 +660,36 @@ impl FaultPlan {
     /// makes repeated queries consistent, and [`FaultStats`] counts
     /// each channel event once ([`LinkOutcome::newly_observed`]).
     pub fn transfer(&mut self, class: LinkClass, t: f64, base_delay_s: f64) -> LinkOutcome {
-        let sched = &self.schedule;
-        if !sched.enabled {
+        if !self.schedule.enabled {
             return LinkOutcome { delay_s: base_delay_s, retransmits: 0, newly_observed: false };
         }
-        // -- deferral: availability + outage, to a fixpoint --
-        let mut start = t;
-        for _ in 0..4 {
-            let before = start;
-            start = sched.avail_time(&class, start);
-            start = sched.outage_clear(&class, start);
-            if start == before {
-                break;
-            }
-        }
-        let cap = sched.horizon_s + DEFER_CAP_SLACK_S;
-        if start > cap {
-            start = cap;
-        }
-        // -- loss + retransmission from the channel state at send time --
-        let key = sched.channel_key(&class, start);
-        let mut retransmits = 0u32;
-        if sched.cfg.loss_prob > 0.0 {
-            let mut chan = Rng::new(key);
-            while retransmits < sched.cfg.max_retransmits && chan.f64() < sched.cfg.loss_prob {
-                retransmits += 1;
-            }
-        }
-        let backoff_s = sched.cfg.retransmit_backoff_s;
-        let delay =
-            (start - t) + base_delay_s + retransmits as f64 * (backoff_s + base_delay_s);
-        let newly_observed = self.seen.insert(key);
+        let out = self.schedule.channel_outcome(&class, t, base_delay_s);
+        let newly_observed = self.commit(&out);
+        LinkOutcome { delay_s: out.delay_s, retransmits: out.retransmits, newly_observed }
+    }
+
+    /// Fold one pure [`ChannelOutcome`] (from
+    /// [`FaultSchedule::channel_outcome`], possibly computed on a probe
+    /// lane) into this run's accounting. Returns whether the channel
+    /// event was newly observed. `transfer` ≡ `channel_outcome` +
+    /// `commit`, bit for bit — the replay contract the lane probes
+    /// stand on.
+    pub fn commit(&mut self, out: &ChannelOutcome) -> bool {
+        let newly_observed = self.seen.insert(out.key);
         if newly_observed {
-            if start > t {
+            if out.deferred_s > 0.0 {
                 self.stats.deferrals += 1;
-                self.stats.deferred_s += start - t;
-                // attribute the deferral: did an outage window (not
-                // just endpoint churn) push the send time? pure
-                // re-query of the deterministic window oracle.
-                if sched.outage_clear(&class, t) > t {
+                self.stats.deferred_s += out.deferred_s;
+                if out.outage_hit {
                     self.stats.outages_hit += 1;
                 }
             }
-            if retransmits > 0 {
+            if out.retransmits > 0 {
                 self.stats.losses += 1;
             }
-            self.stats.retransmits += retransmits as u64;
+            self.stats.retransmits += out.retransmits as u64;
         }
-        LinkOutcome { delay_s: delay, retransmits, newly_observed }
+        newly_observed
     }
 
     /// [`Self::transfer`] for one typed ISL graph edge `(a, b)` — the
@@ -652,7 +703,7 @@ impl FaultPlan {
     /// Push the plan's discrete transitions (churn up/down, outage
     /// boundaries) as typed events. No-op when disabled, so clean runs
     /// see an untouched queue.
-    pub fn schedule_events(&self, queue: &mut EventQueue) {
+    pub fn schedule_events<Q: EventSink>(&self, queue: &mut Q) {
         self.schedule.schedule_events(queue);
     }
 }
@@ -686,6 +737,7 @@ fn generate_hap_schedules(
 mod tests {
     use super::*;
     use crate::faults::config::FaultScenario;
+    use crate::sim::EventQueue;
 
     fn plan(scenario: FaultScenario, intensity: f64, seed: u64) -> FaultPlan {
         let cfg = FaultConfig::preset(scenario, intensity);
@@ -949,6 +1001,56 @@ mod tests {
             let p = plan(s, 1.0, 9);
             for t in [0.0, 1234.5, 50_000.0] {
                 assert_eq!(p.schedule().edge_outage_clear(0, 1, t), t, "{s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn channel_outcome_plus_commit_equals_transfer() {
+        // the probe/replay contract: splitting the oracle into its pure
+        // half and the accounting fold changes nothing, bit for bit —
+        // outcomes, stats and the seen-set behaviour all match a
+        // monolithic transfer on a twin plan.
+        for scenario in [FaultScenario::Lossy, FaultScenario::Eclipse, FaultScenario::Churn] {
+            let mut mono = plan(scenario, 1.0, 31);
+            let mut split = plan(scenario, 1.0, 31);
+            for i in 0..100 {
+                let class = match i % 3 {
+                    0 => LinkClass::SatSite { sat: i % 40, site: i % 2 },
+                    1 => LinkClass::Isl { sat_a: i % 40, sat_b: (i + 1) % 40 },
+                    _ => LinkClass::Ihl { site_a: 0, site_b: 1 },
+                };
+                let t = (i as f64) * 37.5;
+                let a = mono.transfer(class, t, 0.2);
+                let out = split.schedule().clone().channel_outcome(&class, t, 0.2);
+                let newly = split.commit(&out);
+                assert_eq!(a.delay_s.to_bits(), out.delay_s.to_bits(), "{scenario:?} #{i}");
+                assert_eq!(a.retransmits, out.retransmits);
+                assert_eq!(a.newly_observed, newly);
+            }
+            assert_eq!(mono.stats(), split.stats(), "{scenario:?}");
+            assert_eq!(
+                mono.stats().deferred_s.to_bits(),
+                split.stats().deferred_s.to_bits(),
+                "float accumulation order must match exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn schedule_events_accepts_laned_queues() {
+        let p = plan(FaultScenario::Churn, 1.0, 5);
+        let mut single = EventQueue::new();
+        let mut laned = crate::sim::LanedQueue::new(4, Vec::new());
+        p.schedule_events(&mut single);
+        p.schedule_events(&mut laned);
+        assert_eq!(single.len(), laned.len());
+        loop {
+            let a = single.pop();
+            let b = laned.pop();
+            assert_eq!(a, b, "lane sharding must not reorder the fault timeline");
+            if a.is_none() {
+                break;
             }
         }
     }

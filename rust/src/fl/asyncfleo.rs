@@ -23,13 +23,14 @@
 use super::aggregation::{select_and_weigh_into, Candidate, Selection, SelectionScratch};
 use super::grouping::{orbit_partial_model, GroupingState};
 use super::propagation::{
-    hap_ring_receive_times_into, ihl_to_sink, sat_receive_times_into, uplink_route,
+    hap_ring_receive_times_into, ihl_to_sink, sat_receive_times_lanes_into, uplink_route,
+    uplink_route_probe, uplink_route_replay, RouteProbe,
 };
 use super::Strategy;
-use crate::coordinator::{RunResult, SimEnv};
+use crate::coordinator::{LaneProbe, RunResult, SimEnv};
 use crate::metrics::ConvergenceDetector;
 use crate::model::{ModelMetadata, ModelParams};
-use crate::sim::{EventKind, EventQueue};
+use crate::sim::{EventKind, LanedQueue};
 use crate::topology::HapRing;
 use std::collections::HashMap;
 
@@ -153,6 +154,78 @@ impl RunScratch {
     }
 }
 
+/// Push-time uplink-route prefetcher (lanes > 1 only): every scheduled
+/// `TrainingDone` files a request here; pending requests are probed in
+/// parallel over the shared [`LaneProbe`] the next time a
+/// `TrainingDone` pops, and the popped event replays its own probe
+/// serially ([`uplink_route_replay`]) so transfer counts, fault stats
+/// and obs lines land in exactly the single-lane order. Routes depend
+/// only on immutable geometry and the fault schedule, so a probe taken
+/// at push time is bit-identical to the serial route at pop time.
+///
+/// A satellite has at most one live training run, so the ready map is
+/// keyed per satellite and a re-request (churn restart) overwrites the
+/// cancelled probe; probes that are never replayed (satellite died, or
+/// the stale event was filtered before routing) are pure and therefore
+/// unobservable.
+struct RoutePrefetcher {
+    lanes: usize,
+    pending: Vec<(usize, f64)>,
+    ready: HashMap<usize, RouteProbe>,
+}
+
+impl RoutePrefetcher {
+    fn new(lanes: usize) -> Self {
+        RoutePrefetcher { lanes, pending: Vec::new(), ready: HashMap::new() }
+    }
+
+    /// File a route request for `sat` finishing training at `t_done`.
+    fn request(&mut self, sat: usize, t_done: f64) {
+        if self.lanes <= 1 {
+            return;
+        }
+        self.pending.push((sat, t_done));
+    }
+
+    /// Probe all pending requests in parallel lane chunks.
+    fn flush(&mut self, probe: &LaneProbe) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let chunk = ((self.pending.len() + self.lanes - 1) / self.lanes).max(1);
+        let pending = &self.pending;
+        let probes: Vec<RouteProbe> = std::thread::scope(|scope| {
+            let handles: Vec<_> = pending
+                .chunks(chunk)
+                .map(|ch| {
+                    scope.spawn(move || {
+                        ch.iter()
+                            .map(|&(sat, t)| uplink_route_probe(probe, sat, t))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("route probe lane panicked"))
+                .collect()
+        });
+        for rp in probes {
+            self.ready.insert(rp.sat, rp);
+        }
+        self.pending.clear();
+    }
+
+    /// Take the probe for `sat`'s run completing at exactly `t` (the
+    /// time match rejects probes of cancelled runs).
+    fn take(&mut self, sat: usize, t: f64) -> Option<RouteProbe> {
+        match self.ready.remove(&sat) {
+            Some(rp) if rp.t_ready == t => Some(rp),
+            _ => None,
+        }
+    }
+}
+
 impl Strategy for AsyncFleo {
     fn name(&self) -> &'static str {
         "asyncfleo"
@@ -166,7 +239,14 @@ impl Strategy for AsyncFleo {
         let dispatches = env.cfg.fl.local_dispatches;
 
         let mut ring = HapRing::new(n_sites);
-        let mut queue = EventQueue::new();
+        // Laned queue: events shard by orbital plane / HAP / site, pops
+        // are provably in single-queue order (see `sim::lanes`), so
+        // every lane count replays the identical history.
+        let mut queue = LanedQueue::new(env.lanes(), env.geo.constellation.plane_of());
+        // Shared pure probe + prefetcher power the parallel route scans
+        // between pops; on the single-lane path neither is ever used.
+        let lane_probe = if env.lanes() > 1 { Some(env.lane_probe()) } else { None };
+        let mut prefetcher = RoutePrefetcher::new(env.lanes());
         let mut sats: Vec<SatState> = vec![SatState::default(); n_sats];
         let mut grouping = GroupingState::new(env.geo.constellation.n_orbits);
         let mut detector = ConvergenceDetector::new(self.patience, self.min_delta);
@@ -239,6 +319,9 @@ impl Strategy for AsyncFleo {
                                 done,
                                 EventKind::TrainingDone { sat },
                             ));
+                            if !self.disable_isl_relay {
+                                prefetcher.request(sat, done);
+                            }
                         } else {
                             s.pending_epoch = Some(epoch);
                         }
@@ -284,6 +367,15 @@ impl Strategy for AsyncFleo {
                             let d = env.site_link_delay(site, sat, tv);
                             (site, tv + d, 0usize)
                         })
+                    } else if let Some(p) = lane_probe.as_ref() {
+                        // multi-lane: drain the probe backlog in
+                        // parallel, then replay this event's own probe
+                        // in pop order (serial fallback covers a miss)
+                        prefetcher.flush(p);
+                        match prefetcher.take(sat, t) {
+                            Some(rp) => uplink_route_replay(env, &rp),
+                            None => uplink_route(env, sat, t),
+                        }
                     } else {
                         uplink_route(env, sat, t)
                     };
@@ -328,6 +420,9 @@ impl Strategy for AsyncFleo {
                         s.training_epoch = Some(p);
                         s.train_done_at = Some(done);
                         queue.push(crate::sim::Event::new(done, EventKind::TrainingDone { sat }));
+                        if !self.disable_isl_relay {
+                            prefetcher.request(sat, done);
+                        }
                     }
                 }
                 EventKind::HapLocalArrival { origin_sat, epoch, .. } => {
@@ -430,6 +525,9 @@ impl Strategy for AsyncFleo {
                                 done,
                                 EventKind::TrainingDone { sat },
                             ));
+                            if !self.disable_isl_relay {
+                                prefetcher.request(sat, done);
+                            }
                         }
                     }
                 }
@@ -497,7 +595,7 @@ impl AsyncFleo {
         &self,
         env: &mut SimEnv,
         ring: &HapRing,
-        queue: &mut EventQueue,
+        queue: &mut LanedQueue,
         epoch: u64,
         t: f64,
         scratch: &mut RunScratch,
@@ -519,7 +617,7 @@ impl AsyncFleo {
                 }
             }
         } else {
-            sat_receive_times_into(env, &scratch.hap_times, &mut scratch.sat_times);
+            sat_receive_times_lanes_into(env, &scratch.hap_times, &mut scratch.sat_times);
         }
         for (sat, &tr) in scratch.sat_times.iter().enumerate() {
             if tr.is_finite() && tr <= env.cfg.fl.horizon_s && tr >= queue.now() {
@@ -548,7 +646,7 @@ impl AsyncFleo {
         &self,
         env: &mut SimEnv,
         ring: &mut HapRing,
-        queue: &mut EventQueue,
+        queue: &mut LanedQueue,
         grouping: &mut GroupingState,
         globals: &mut Vec<ModelParams>,
         beta: &mut u64,

@@ -20,8 +20,11 @@ pub mod fedsat;
 pub mod fedspace;
 pub mod sinksat;
 
-use crate::coordinator::SimEnv;
-use crate::fl::propagation::sat_receive_times;
+use crate::coordinator::{SimEnv, TxAction};
+use crate::fl::propagation::{
+    next_live_contact, sat_receive_times, sat_receive_times_lanes_into, uplink_route_probe,
+    uplink_route_replay, RouteProbe,
+};
 use crate::metrics::ConvergenceDetector;
 use crate::model::ModelParams;
 use crate::train::fedavg_weights;
@@ -58,6 +61,9 @@ pub(crate) fn sync_round(
     t: f64,
     use_isl: bool,
 ) -> Option<(f64, Vec<bool>)> {
+    if env.lanes() > 1 {
+        return sync_round_lanes(env, t, use_isl);
+    }
     let geo = env.geo.clone();
     let n_sats = geo.constellation.len();
     let horizon = env.cfg.fl.horizon_s;
@@ -123,6 +129,143 @@ pub(crate) fn sync_round(
             })
         };
         match up {
+            Some(u) if u <= horizon => round_end = round_end.max(u),
+            _ => return None,
+        }
+    }
+    Some((round_end, participants))
+}
+
+/// Multi-lane [`sync_round`]: the per-satellite contact scans run as
+/// pure probes on parallel lane threads, then every fault-channel
+/// outcome is replayed serially in ascending satellite order — the
+/// exact call sequence of the single-lane body, so delays, transfer
+/// counts and fault stats are bit-identical. Probes of satellites past
+/// a serial early-return point are simply never replayed (probes are
+/// pure, so an unreplayed one is unobservable).
+fn sync_round_lanes(env: &mut SimEnv, t: f64, use_isl: bool) -> Option<(f64, Vec<bool>)> {
+    let geo = env.geo.clone();
+    let n_sats = geo.constellation.len();
+    let horizon = env.cfg.fl.horizon_s;
+    let train = env.cfg.fl.train_time_s;
+    let lanes = env.lanes();
+    let probe = env.lane_probe();
+    let chunk = ((n_sats + lanes - 1) / lanes).max(1);
+    let sat_ids: Vec<usize> = (0..n_sats).collect();
+
+    let participants: Vec<bool> =
+        (0..n_sats).map(|sat| env.state.faults.sat_alive(sat, t)).collect();
+
+    // --- delivery: probe in lanes, replay in satellite order ---
+    let mut recv: Vec<f64> = Vec::new();
+    if use_isl {
+        let bcasts: Vec<f64> = (0..geo.sites.len()).map(|_| t).collect();
+        sat_receive_times_lanes_into(env, &bcasts, &mut recv);
+    } else {
+        let parts = &participants;
+        let pr = &probe;
+        let probed: Vec<(f64, Option<TxAction>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = sat_ids
+                .chunks(chunk)
+                .map(|ch| {
+                    scope.spawn(move || {
+                        ch.iter()
+                            .map(|&sat| {
+                                if !parts[sat] {
+                                    return (f64::INFINITY, None);
+                                }
+                                match next_live_contact(pr.geo(), pr.schedule(), sat, t) {
+                                    Some((tv, site)) => {
+                                        let (d, a) = pr.site_link_delay(site, sat, tv);
+                                        (tv + d, Some(a))
+                                    }
+                                    None => (f64::INFINITY, None),
+                                }
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("delivery probe lane panicked"))
+                .collect()
+        });
+        recv.reserve(n_sats);
+        for (r, action) in probed {
+            if let Some(a) = action.as_ref() {
+                let _ = env.replay_tx(a);
+            }
+            recv.push(r);
+        }
+    }
+
+    // --- training + upload: probe in lanes, replay in satellite order ---
+    enum UploadProbe {
+        /// Non-participant or undeliverable: the serial body never
+        /// reaches this satellite's upload scan.
+        Skipped,
+        Isl(RouteProbe),
+        Star(Option<(f64, TxAction)>),
+    }
+    let parts = &participants;
+    let pr = &probe;
+    let recv_ref = &recv;
+    let probed: Vec<UploadProbe> = std::thread::scope(|scope| {
+        let handles: Vec<_> = sat_ids
+            .chunks(chunk)
+            .map(|ch| {
+                scope.spawn(move || {
+                    ch.iter()
+                        .map(|&sat| {
+                            if !parts[sat]
+                                || !recv_ref[sat].is_finite()
+                                || recv_ref[sat] > horizon
+                            {
+                                return UploadProbe::Skipped;
+                            }
+                            let done = recv_ref[sat] + train;
+                            if use_isl {
+                                UploadProbe::Isl(uplink_route_probe(pr, sat, done))
+                            } else {
+                                UploadProbe::Star(
+                                    next_live_contact(pr.geo(), pr.schedule(), sat, done).map(
+                                        |(tv, site)| {
+                                            let (d, a) = pr.site_link_delay(site, sat, tv);
+                                            (tv + d, a)
+                                        },
+                                    ),
+                                )
+                            }
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("upload probe lane panicked"))
+            .collect()
+    });
+
+    let mut round_end: f64 = t;
+    for (sat, up) in probed.into_iter().enumerate() {
+        if !participants[sat] {
+            continue;
+        }
+        if !recv[sat].is_finite() || recv[sat] > horizon {
+            return None; // same early return as the serial body
+        }
+        let arrival = match up {
+            UploadProbe::Skipped => None, // unreachable: guarded above
+            UploadProbe::Isl(rp) => uplink_route_replay(env, &rp).map(|(_, arr, _)| arr),
+            UploadProbe::Star(Some((arr, a))) => {
+                let _ = env.replay_tx(&a);
+                Some(arr)
+            }
+            UploadProbe::Star(None) => None,
+        };
+        match arrival {
             Some(u) if u <= horizon => round_end = round_end.max(u),
             _ => return None,
         }

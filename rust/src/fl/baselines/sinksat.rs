@@ -22,7 +22,7 @@
 //! (including the typed per-ISL-edge outage windows). All guards are
 //! provably inert when faults are disabled.
 
-use crate::coordinator::{RunResult, SimEnv};
+use crate::coordinator::{RunResult, SimEnv, TxAction};
 use crate::fl::Strategy;
 use crate::metrics::ConvergenceDetector;
 use crate::model::ModelParams;
@@ -74,6 +74,11 @@ impl Strategy for SinkSat {
             (0..max_plane).map(|_| ModelParams { data: Vec::new() }).collect();
         let mut plane_model = ModelParams { data: Vec::new() };
         let mut next = ModelParams { data: Vec::with_capacity(global.dim()) };
+
+        // multi-lane runs pre-walk the collection hop chains as pure
+        // probes on lane threads; the replay below keeps the serial
+        // call order (see `sim::lanes`)
+        let lane_probe = if env.lanes() > 1 { Some(env.lane_probe()) } else { None };
 
         // per-plane pipeline clock: when the plane's sink holds the
         // global model and the next round may begin
@@ -133,12 +138,71 @@ impl Strategy for SinkSat {
             // ride the ISL graph to the sink (one Dijkstra snapshot per
             // round; per-hop delays through the edge fault oracle)
             let routes = geo.isl.shortest_delays(c, sink, t_train, payload);
+            // multi-lane: pre-walk every member's hop chain in parallel
+            // as pure probes (the Dijkstra snapshot and the fault oracle
+            // are immutable); the train loop below replays each chain in
+            // the serial member order, so counters, stats and obs lines
+            // are bit-identical to the single-lane walk
+            let chains: Option<Vec<Vec<(usize, usize, TxAction)>>> =
+                lane_probe.as_ref().map(|pr| {
+                    let lanes = env.lanes();
+                    let chunk = ((alive.len() + lanes - 1) / lanes).max(1);
+                    let routes_ref = &routes;
+                    std::thread::scope(|scope| {
+                        let handles: Vec<_> = alive
+                            .chunks(chunk)
+                            .map(|ch| {
+                                scope.spawn(move || {
+                                    ch.iter()
+                                        .map(|&m| {
+                                            if m == sink {
+                                                return Vec::new();
+                                            }
+                                            let Some(path) = routes_ref.path_to(m) else {
+                                                return Vec::new();
+                                            };
+                                            let mut arr = t_train;
+                                            let mut chain = Vec::new();
+                                            for w in path.windows(2).rev() {
+                                                let e = pr
+                                                    .geo()
+                                                    .isl
+                                                    .edge_between(w[0], w[1])
+                                                    .expect("route uses graph edges");
+                                                let (d, act) = pr.graph_edge_delay(e, arr);
+                                                chain.push((w[0], w[1], act));
+                                                arr += d;
+                                            }
+                                            chain
+                                        })
+                                        .collect::<Vec<_>>()
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .flat_map(|h| h.join().expect("collection probe lane panicked"))
+                            .collect()
+                    })
+                });
             let mut t_collect = t_train;
             let mut shards: Vec<f64> = Vec::with_capacity(alive.len());
             for (i, &m) in alive.iter().enumerate() {
                 env.state.backend.train_local_into(m, &global, dispatches, &mut locals[i]);
                 shards.push(env.state.backend.shard_size(m) as f64);
                 if m == sink {
+                    continue;
+                }
+                if let Some(chains) = chains.as_ref() {
+                    let mut arr = t_train;
+                    for (a, b, act) in &chains[i] {
+                        let d = env.replay_tx(act);
+                        if let Some(obs) = env.obs() {
+                            obs.relay_hop(arr, "isl_route", *a, *b, d);
+                        }
+                        arr += d;
+                    }
+                    t_collect = t_collect.max(arr);
                     continue;
                 }
                 let Some(path) = routes.path_to(m) else { continue };

@@ -23,7 +23,20 @@
 //! and slot lookups go through the [`IslGraph`] ring tables (PR 7),
 //! keeping ring-routed schemes independent of the general ISL edge set.
 
-use crate::coordinator::SimEnv;
+//! # Lane probes (PR 9)
+//!
+//! The multi-lane run path splits every oracle into a **pure probe**
+//! (geometry + fault-channel math over `Arc`-shared immutable state,
+//! evaluated concurrently per lane) and a **serial replay** (the
+//! recorded [`TxAction`]s re-run through `SimEnv::replay_tx` in the
+//! exact serial call order). Every delay is a pure function of
+//! `(link, t, base)`, so the probe's answer equals the replay's bit
+//! for bit, and the replay reproduces the serial path's `transfers`
+//! count, fault stats and trace records op for op — which is how
+//! `lanes=N` stays bit-identical to `lanes=1`.
+
+use crate::coordinator::{Geometry, LaneProbe, SimEnv, TxAction};
+use crate::faults::{FaultSchedule, LinkClass};
 use crate::topology::{HapRing, IslGraph};
 
 /// Receive time of the global model at every HAP when `source` starts
@@ -120,6 +133,152 @@ pub fn sat_receive_times_into(env: &mut SimEnv, bcasts: &[f64], recv: &mut Vec<f
     }
 }
 
+/// Multi-lane [`sat_receive_times_into`]: identical results (and
+/// identical accounting, stats and trace) at any lane count.
+///
+/// Phase 1 probes the star downlinks in parallel over contiguous site
+/// chunks; phase 2 runs the per-orbit seed scan + ring relaxation in
+/// parallel over contiguous plane chunks (plane membership is a
+/// contiguous id range, so each lane owns a disjoint `recv` sub-slice).
+/// Both phases record their [`TxAction`]s in the serial call order and
+/// the single replay pass re-runs them through the env.
+pub fn sat_receive_times_lanes_into(env: &mut SimEnv, bcasts: &[f64], recv: &mut Vec<f64>) {
+    let lanes = env.lanes();
+    if lanes <= 1 {
+        return sat_receive_times_into(env, bcasts, recv);
+    }
+    let geo = env.geo.clone();
+    let probe = env.lane_probe();
+    let n_sats = geo.constellation.len();
+    recv.clear();
+    recv.resize(n_sats, f64::INFINITY);
+
+    // -- phase 1: star downlink probes, parallel by site chunk --
+    let n_sites = bcasts.len();
+    let mut site_actions: Vec<Vec<TxAction>> = vec![Vec::new(); n_sites];
+    let chunk = ((n_sites + lanes - 1) / lanes).max(1);
+    std::thread::scope(|s| {
+        for (ci, out) in site_actions.chunks_mut(chunk).enumerate() {
+            let probe = &probe;
+            let geo = &geo;
+            s.spawn(move || {
+                for (k, acts) in out.iter_mut().enumerate() {
+                    let site = ci * chunk + k;
+                    let tb = bcasts[site];
+                    if !tb.is_finite() {
+                        continue;
+                    }
+                    for sat in geo.plan.visible_sats(site, tb) {
+                        let (_, act) = probe.site_link_delay(site, sat, tb);
+                        acts.push(act);
+                    }
+                }
+            });
+        }
+    });
+    // serial replay in (site asc, visible-sat asc) order — the exact
+    // iteration order of the single-lane loop
+    for (site, acts) in site_actions.iter().enumerate() {
+        let tb = bcasts[site];
+        for act in acts {
+            let d = env.replay_tx(act);
+            let sat = match act.class {
+                LinkClass::SatSite { sat, .. } => sat,
+                _ => unreachable!("phase 1 records star downlinks only"),
+            };
+            recv[sat] = recv[sat].min(tb + d);
+        }
+    }
+
+    // -- phase 2: seed + ring relaxation, parallel by plane chunk --
+    let n_orbits = geo.constellation.n_orbits;
+    let ochunk = ((n_orbits + lanes - 1) / lanes).max(1);
+    let mut orbit_actions: Vec<Vec<TxAction>> = vec![Vec::new(); n_orbits];
+    std::thread::scope(|s| {
+        let mut rest: &mut [f64] = &mut recv[..];
+        let mut offset = 0usize;
+        for (ci, acts_chunk) in orbit_actions.chunks_mut(ochunk).enumerate() {
+            let o_lo = ci * ochunk;
+            let o_hi = o_lo + acts_chunk.len();
+            let sat_end = geo.constellation.orbit_members(o_hi - 1).end;
+            let (mine, tail) = rest.split_at_mut(sat_end - offset);
+            rest = tail;
+            let my_offset = offset;
+            offset = sat_end;
+            let probe = &probe;
+            let geo = &geo;
+            s.spawn(move || {
+                for (oi, orbit) in (o_lo..o_hi).enumerate() {
+                    let members = geo.constellation.orbit_members(orbit);
+                    let out = &mut acts_chunk[oi];
+                    if members.clone().all(|m| !mine[m - my_offset].is_finite()) {
+                        let mut best: Option<(f64, usize, usize)> = None;
+                        for m in members.clone() {
+                            for (site, &tb) in bcasts.iter().enumerate() {
+                                if !tb.is_finite() {
+                                    continue;
+                                }
+                                if let Some(tv) = geo.plan.next_visible(site, m, tb) {
+                                    if best.map_or(true, |b| tv < b.0) {
+                                        best = Some((tv, m, site));
+                                    }
+                                }
+                            }
+                        }
+                        if let Some((tv, m, site)) = best {
+                            let (d, act) = probe.site_link_delay(site, m, tv);
+                            out.push(act);
+                            mine[m - my_offset] = tv + d;
+                        } else {
+                            continue; // orbit unreachable within horizon
+                        }
+                    }
+                    let mut rec = HopRecorder { probe, actions: out };
+                    relax_ring_at(&mut rec, &geo.isl, members, mine, my_offset);
+                }
+            });
+        }
+    });
+    // serial replay, orbit ascending — recv already holds the lane
+    // results (bit-equal to serial by probe purity); the replay re-runs
+    // the accounting and trace on the env
+    for acts in &orbit_actions {
+        for act in acts {
+            let _ = env.replay_tx(act);
+        }
+    }
+}
+
+/// The ring relaxation's delay source: the env itself (serial path —
+/// accounting inline, exactly the historical calls) or a lane recorder
+/// (pure probe + action log for later replay). One generic body keeps
+/// the two paths structurally identical.
+trait HopOracle {
+    fn hop_delay(&mut self, a: usize, b: usize, t: f64) -> f64;
+}
+
+impl HopOracle for SimEnv<'_> {
+    fn hop_delay(&mut self, a: usize, b: usize, t: f64) -> f64 {
+        self.isl_hop_delay(a, b, t)
+    }
+}
+
+/// Lane-side oracle: probes delays purely and logs the action sequence
+/// (which, by the purity argument in the module docs, is exactly the
+/// call sequence the serial path would have made).
+struct HopRecorder<'a> {
+    probe: &'a LaneProbe,
+    actions: &'a mut Vec<TxAction>,
+}
+
+impl HopOracle for HopRecorder<'_> {
+    fn hop_delay(&mut self, a: usize, b: usize, t: f64) -> f64 {
+        let (d, act) = self.probe.isl_hop_delay(a, b, t);
+        self.actions.push(act);
+        d
+    }
+}
+
 /// Bidirectional ring relaxation of receive times within one orbit
 /// (`members` is the plane's contiguous id range). Neighbors come from
 /// the [`IslGraph`] ring tables, which pin the intra-plane ring for
@@ -131,6 +290,19 @@ fn relax_ring(
     members: std::ops::Range<usize>,
     recv: &mut [f64],
 ) {
+    relax_ring_at(env, graph, members, recv, 0);
+}
+
+/// [`relax_ring`] over a delay oracle and an offset view: `recv[i]`
+/// holds the receive time of satellite `offset + i`, so probe lanes can
+/// relax their plane chunk on a disjoint sub-slice of the full vector.
+fn relax_ring_at<O: HopOracle>(
+    oracle: &mut O,
+    graph: &IslGraph,
+    members: std::ops::Range<usize>,
+    recv: &mut [f64],
+    offset: usize,
+) {
     let start = members.start;
     let n = members.len();
     if n <= 1 {
@@ -141,14 +313,14 @@ fn relax_ring(
         let mut changed = false;
         for i in 0..n {
             let cur = start + i;
-            if !recv[cur].is_finite() {
+            if !recv[cur - offset].is_finite() {
                 continue;
             }
             let (prev, next) = graph.ring_neighbors(cur);
             for nb in [next, prev] {
-                let d = env.isl_hop_delay(cur, nb, recv[cur]);
-                if recv[cur] + d < recv[nb] {
-                    recv[nb] = recv[cur] + d;
+                let d = oracle.hop_delay(cur, nb, recv[cur - offset]);
+                if recv[cur - offset] + d < recv[nb - offset] {
+                    recv[nb - offset] = recv[cur - offset] + d;
                     changed = true;
                 }
             }
@@ -199,6 +371,94 @@ pub fn uplink_route(env: &mut SimEnv, sat: usize, t_ready: f64) -> Option<(usize
         }
     }
     best
+}
+
+/// A pre-computed [`uplink_route`]: the probe's action log plus its
+/// answer, ready for a later serial replay. The route depends only on
+/// `(geometry, fault schedule, sat, t_ready)` — all immutable within a
+/// run — so computing it at event push time on a lane and replaying at
+/// pop time yields the identical result.
+pub struct RouteProbe {
+    pub sat: usize,
+    pub t_ready: f64,
+    actions: Vec<TxAction>,
+    best: Option<(usize, f64, usize)>,
+}
+
+/// Lane-side [`uplink_route`]: same scan, same probe order (one ring
+/// hop estimate when the plane has more than one member, then the
+/// ascending member scan), pure over the shared probe state.
+pub fn uplink_route_probe(probe: &LaneProbe, sat: usize, t_ready: f64) -> RouteProbe {
+    let geo = probe.geo();
+    let orbit = geo.constellation.satellites[sat].orbit;
+    let members = geo.constellation.orbit_members(orbit);
+    let n = members.len();
+    let my_slot = geo.isl.ring_pos(sat);
+    let mut actions = Vec::new();
+
+    let hop_delay = if n > 1 {
+        let (prev, _) = geo.isl.ring_neighbors(sat);
+        let (d, act) = probe.isl_hop_delay(sat, prev, t_ready);
+        actions.push(act);
+        d
+    } else {
+        0.0
+    };
+
+    let mut best: Option<(usize, f64, usize)> = None;
+    for (j_idx, j) in members.enumerate() {
+        let fwd = (j_idx + n - my_slot) % n;
+        let hops = fwd.min(n - fwd);
+        let t_at_j = t_ready + hops as f64 * hop_delay;
+        if let Some((tv, site)) = geo.plan.next_visible_any(j, t_at_j) {
+            let (d_up, act) = probe.site_link_delay(site, j, tv);
+            actions.push(act);
+            let arrival = tv + d_up;
+            if best.map_or(true, |b| arrival < b.1) {
+                best = Some((site, arrival, hops));
+            }
+        }
+    }
+    RouteProbe { sat, t_ready, actions, best }
+}
+
+/// Serial replay of a [`RouteProbe`]: re-runs the recorded delay calls
+/// against the env (transfers, stats, trace — op-for-op the serial
+/// [`uplink_route`]) and returns the probed answer. An unreplayed probe
+/// (its satellite died, or its event went stale) costs nothing: probes
+/// are pure and unobservable until replayed.
+pub fn uplink_route_replay(env: &mut SimEnv, rp: &RouteProbe) -> Option<(usize, f64, usize)> {
+    for act in &rp.actions {
+        let _ = env.replay_tx(act);
+    }
+    if let Some((site, arrival, hops)) = rp.best {
+        env.state.transfers += hops as u64;
+        if let Some(obs) = env.obs() {
+            obs.relay_hop(rp.t_ready, "isl_uplink", rp.sat, site, arrival - rp.t_ready);
+        }
+    }
+    rp.best
+}
+
+/// Earliest `(t_visible, site)` contact of `sat` at/after `from` whose
+/// PS is alive — the pure (schedule-only) contact search the sync
+/// baselines retry on. Bounded retries: a dead-site pass re-queries
+/// 300 s after the found contact, at most 8 times.
+pub fn next_live_contact(
+    geo: &Geometry,
+    schedule: &FaultSchedule,
+    sat: usize,
+    from: f64,
+) -> Option<(f64, usize)> {
+    let mut t_try = from;
+    for _ in 0..8 {
+        let (tv, site) = geo.plan.next_visible_any(sat, t_try)?;
+        if schedule.hap_alive(site, tv) {
+            return Some((tv, site));
+        }
+        t_try = tv + 300.0;
+    }
+    None
 }
 
 /// Arrival time at the sink HAP of a local-model batch handed to
@@ -297,6 +557,43 @@ mod tests {
         let (_, arrival, hops) = uplink_route(&mut env, 5, t).unwrap();
         assert_eq!(hops, 0, "already visible: no relay needed");
         assert!(arrival - t < 5.0, "direct uplink, got {}", arrival - t);
+    }
+
+    #[test]
+    fn laned_sat_receive_times_match_serial_bitwise() {
+        for lanes in [2usize, 3, 4, 7] {
+            let (cfg, mut b1) = env_with(crate::config::PsPlacement::TwoHaps);
+            let mut serial = SimEnv::new(&cfg, &mut b1);
+            let mut b2 = SurrogateBackend::paper_split(5, 8, false, 100);
+            let mut laned = SimEnv::new(&cfg, &mut b2);
+            laned.set_lanes(lanes);
+            let bcasts = [0.0, 0.3];
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            sat_receive_times_into(&mut serial, &bcasts, &mut a);
+            sat_receive_times_lanes_into(&mut laned, &bcasts, &mut b);
+            assert_eq!(a.len(), b.len());
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "sat {i} at lanes={lanes}");
+            }
+            assert_eq!(serial.state.transfers, laned.state.transfers, "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn uplink_route_probe_replay_matches_serial() {
+        let (cfg, mut b1) = env_with(crate::config::PsPlacement::HapRolla);
+        let mut serial = SimEnv::new(&cfg, &mut b1);
+        let mut b2 = SurrogateBackend::paper_split(5, 8, false, 100);
+        let mut laned = SimEnv::new(&cfg, &mut b2);
+        let probe = laned.lane_probe();
+        for sat in [0usize, 7, 21, 39] {
+            let a = uplink_route(&mut serial, sat, 1000.0);
+            let rp = uplink_route_probe(&probe, sat, 1000.0);
+            let b = uplink_route_replay(&mut laned, &rp);
+            assert_eq!(a, b, "sat {sat}");
+        }
+        assert_eq!(serial.state.transfers, laned.state.transfers);
     }
 
     #[test]

@@ -29,7 +29,25 @@
 //!   (`tests/topology_equivalence.rs` pins all six bitwise against
 //!   the kept reference path on every preset;
 //!   `BENCH_topology.json` tracks build/route throughput);
-//! * [`sim`] — a discrete-event simulation engine (the "event loop");
+//! * [`sim`] — a discrete-event simulation engine (the "event loop").
+//!   Since PR 9 it carries the **deterministic multi-lane event core**
+//!   (`sim::lanes`): events shard across per-lane heaps by natural
+//!   independence domain (satellite events by orbital plane, HAP/site
+//!   events by id, barrier events in lane 0) while one *global*
+//!   sequence counter is stamped at push, and popping takes the k-way
+//!   minimum over lane heads keyed `(time, seq)` — provably the exact
+//!   pop order of a single queue, for any lane count. The determinism
+//!   contract: lanes never parallelize *effects*; between pops, lane
+//!   threads run *pure probes* (`coordinator::LaneProbe` over the
+//!   immutable geometry + fault schedule — broadcast receive times,
+//!   uplink routes, sync-round contact scans, sinksat collection hop
+//!   chains) and the run loop *replays* each probed outcome serially
+//!   in pop order, so delays, transfer counts, fault stats and obs
+//!   traces are bit-identical at `lanes=N` for every N
+//!   (`RunOptions { lanes: 1 }` is op-for-op the historical path;
+//!   `tests/runloop_equivalence.rs` and `tests/obs_equivalence.rs`
+//!   pin curves, transfers, CSVs and JSONL traces across lane counts,
+//!   and `BENCH_runloop.json` tracks the lanes speedup);
 //! * [`data`] — synthetic class-structured datasets + IID / paper
 //!   non-IID partitioning (MNIST/CIFAR stand-ins, DESIGN.md §1);
 //! * [`model`] — flat `f32` parameter buffers and satellite metadata;

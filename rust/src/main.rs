@@ -5,7 +5,7 @@
 //! asyncfleo run [--config FILE] [--scheme S] [--placement P] ...
 //! asyncfleo resilience [--out DIR] [--fast] [--surrogate] [--seed N] [--jobs N]
 //! asyncfleo scenario [--list | --dump NAME | --preset NAME[,NAME..] | --all | --config FILE]
-//! asyncfleo trace [--preset NAME] [--scheme S] [--seed N] [--out FILE]
+//! asyncfleo trace [--preset NAME] [--scheme S] [--seed N] [--out FILE] [--lanes N]
 //! asyncfleo report [TRACE.jsonl]
 //! asyncfleo info
 //! ```
@@ -59,13 +59,16 @@ USAGE:
       byte-identical at any --jobs N.
 
   asyncfleo trace [--preset NAME] [--scheme S] [--seed N] [--out FILE]
+                  [--lanes N]
       Run one scenario preset (default paper-40) under one scheme
       (default: the preset's) with the typed event trace enabled and
       write the JSONL record stream to FILE (default
       results/trace.jsonl) plus a metrics/phase report.json next to
-      it. Surrogate backend. Observation is observe-only: the traced
-      run is bit-identical to an untraced one, and the trace itself is
-      deterministic (tests/obs_equivalence.rs pins both).
+      it. Surrogate backend. --lanes N runs the multi-lane event core
+      (default 1); traces are byte-identical at any lane count.
+      Observation is observe-only: the traced run is bit-identical to
+      an untraced one, and the trace itself is deterministic
+      (tests/obs_equivalence.rs pins both).
 
   asyncfleo report [TRACE.jsonl]
       Summarize a trace written by `asyncfleo trace`: record counts,
@@ -212,6 +215,7 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     if let Some(h) = args.opt_parse::<f64>("horizon-hours").map_err(anyhow::Error::msg)? {
         cfg.fl.horizon_s = h * 3600.0;
     }
+    let lanes = args.opt_parse::<usize>("lanes").map_err(anyhow::Error::msg)?.unwrap_or(1);
     let out = std::path::PathBuf::from(args.opt_or("out", "results/trace.jsonl"));
 
     let mut obs = asyncfleo::obs::RunObs::to_file(&out)?;
@@ -226,6 +230,7 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
 
     let mut backend = asyncfleo::train::SurrogateBackend::for_config(&cfg);
     let mut env = asyncfleo::coordinator::SimEnv::new(&cfg, &mut backend);
+    env.set_lanes(lanes);
     env.enable_obs(obs);
     // contact windows are precomputed geometry: emit the open/close
     // record stream up front, ordered by open time (then site, sat)

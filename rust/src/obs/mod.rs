@@ -35,10 +35,14 @@
 //! curves, transfer counts and result CSVs are **bit-identical** with
 //! tracing on or off (`tests/obs_equivalence.rs` pins this for every
 //! preset × scheme, and pins trace determinism: same seed → identical
-//! JSONL). A run without observation carries `None` and pays one
-//! branch per delay call; the [`TraceSink::Disabled`] variant
-//! additionally supports metrics-only observation (no record
-//! formatting) for sweep drivers.
+//! JSONL). The multi-lane event core (PR 9, `sim::lanes`) upholds the
+//! same contract from the other side: lanes parallelize only pure
+//! probes between pops and replay every observed effect in pop order,
+//! so traces are **byte-identical at any lane count** (also pinned by
+//! `tests/obs_equivalence.rs`). A run without observation carries
+//! `None` and pays one branch per delay call; the
+//! [`TraceSink::Disabled`] variant additionally supports metrics-only
+//! observation (no record formatting) for sweep drivers.
 //!
 //! Entry points: `asyncfleo trace --preset X --scheme Y` writes one
 //! instrumented run's `trace.jsonl` + `report.json`;

@@ -1,0 +1,341 @@
+//! Multi-lane event core: per-domain event lanes with a deterministic
+//! k-way merge.
+//!
+//! The single [`EventQueue`](super::EventQueue) orders events by
+//! `(time_s, push seq)`. A [`LanedQueue`] shards the *storage* of
+//! pending events into `lanes` heaps — satellite-carrying events by
+//! orbital plane, HAP/site events by their dense id — while stamping
+//! every push with **one global** sequence counter. Popping takes the
+//! minimum `(time_s, seq)` over the lane heads.
+//!
+//! **Determinism contract.** A binary heap pops the global minimum of
+//! its `(time_s, seq)` keys; the k-way merge pops the minimum over
+//! per-lane minima of the *same* keys, and the global `seq` makes every
+//! key unique — so for any push/pop sequence the popped-event order of
+//! a `LanedQueue` is provably identical to a single `EventQueue`, at
+//! any lane count, regardless of how events were sharded. Sharding
+//! affects only *where* an event waits, never *when* it pops. That
+//! property is pinned by a property test over randomized event sets
+//! (`tests/proptests.rs`) and, end to end, by the run-loop and obs
+//! bit-identity suites at lanes ∈ {1, 2, 4}.
+//!
+//! The lanes exist so the expensive *pre-pop* work (delay probes for
+//! broadcasts, uplink routes, collection chains — the geometry and
+//! fault-channel math that dominates a mega-constellation run) can be
+//! computed concurrently per lane between synchronization points, then
+//! replayed serially in merged order. See `coordinator::env::LaneProbe`
+//! and `fl::propagation`.
+
+use super::event::{Event, EventKind};
+use super::queue::Entry;
+use std::collections::BinaryHeap;
+
+/// Per-run execution options (how to run, not what to simulate — these
+/// must never change results, only speed).
+#[derive(Clone, Copy, Debug)]
+pub struct RunOptions {
+    /// Number of event lanes (and probe worker threads) for intra-run
+    /// parallelism. `1` is op-for-op the historical single-queue path;
+    /// any other value is bit-identical to it by the merge contract.
+    pub lanes: usize,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { lanes: 1 }
+    }
+}
+
+/// Anything events can be scheduled into. Lets the fault planner and
+/// other schedulers target either queue flavour generically.
+pub trait EventSink {
+    fn push(&mut self, e: Event);
+}
+
+impl EventSink for super::EventQueue {
+    fn push(&mut self, e: Event) {
+        super::EventQueue::push(self, e);
+    }
+}
+
+impl EventSink for LanedQueue {
+    fn push(&mut self, e: Event) {
+        LanedQueue::push(self, e);
+    }
+}
+
+/// A sharded event queue whose pop order is identical to
+/// [`EventQueue`](super::EventQueue) (see the module docs for the
+/// argument). Drop-in API: `push` / `push_in` / `pop` / `now` / `len` /
+/// `high_water` report exactly what the single queue would.
+pub struct LanedQueue {
+    /// One min-heap per lane, all ordered by the shared `(time_s, seq)`
+    /// key (the `Entry` ordering is the single queue's).
+    heaps: Vec<BinaryHeap<Entry>>,
+    /// Satellite id → orbital plane, for routing satellite events to
+    /// their plane's lane. May be empty (fall back to `sat % lanes`).
+    plane_of: Vec<usize>,
+    /// The **global** push counter — shared across lanes so FIFO ties
+    /// break exactly as they would in one queue.
+    seq: u64,
+    now_s: f64,
+    /// Total pending events (sum over lanes), kept incrementally.
+    total: usize,
+    /// Deepest the queue has ever been, counted across all lanes —
+    /// matches the single queue's mark for the same push/pop sequence.
+    high_water: usize,
+}
+
+impl LanedQueue {
+    /// A queue with `lanes` lanes (clamped to ≥ 1). `plane_of` maps
+    /// satellite ids to orbital planes for lane routing; an empty map
+    /// degrades to `sat % lanes` routing — either way pop order is
+    /// unaffected, only shard balance.
+    pub fn new(lanes: usize, plane_of: Vec<usize>) -> Self {
+        let lanes = lanes.max(1);
+        LanedQueue {
+            heaps: (0..lanes).map(|_| BinaryHeap::new()).collect(),
+            plane_of,
+            seq: 0,
+            now_s: 0.0,
+            total: 0,
+            high_water: 0,
+        }
+    }
+
+    /// Number of lanes.
+    pub fn lanes(&self) -> usize {
+        self.heaps.len()
+    }
+
+    /// Which lane an event waits in: satellite traffic by orbital
+    /// plane (up/downlink and ring collection are per-plane
+    /// independent), HAP/site traffic by dense id (per-star-group),
+    /// global barriers (aggregation ticks, sweeps) in lane 0.
+    fn lane_for(&self, kind: &EventKind) -> usize {
+        let lanes = self.heaps.len();
+        let sat_lane = |sat: usize| {
+            if let Some(&plane) = self.plane_of.get(sat) {
+                plane % lanes
+            } else {
+                sat % lanes
+            }
+        };
+        match *kind {
+            EventKind::TrainingDone { sat }
+            | EventKind::SatModelArrival { sat, .. }
+            | EventKind::Retransmit { sat, .. }
+            | EventKind::SatChurn { sat, .. } => sat_lane(sat),
+            EventKind::HapLocalArrival { hap, .. }
+            | EventKind::HapGlobalArrival { hap, .. }
+            | EventKind::HapChurn { hap, .. } => hap % lanes,
+            EventKind::SinkBatchArrival { from_hap, .. } => from_hap % lanes,
+            EventKind::OutageStart { site } | EventKind::OutageEnd { site } => site % lanes,
+            EventKind::AggregationTick | EventKind::Sweep => 0,
+        }
+    }
+
+    /// Schedule an event. Same panics as the single queue: non-finite
+    /// times and the simulated past are rejected up front.
+    pub fn push(&mut self, e: Event) {
+        assert!(
+            e.time_s.is_finite(),
+            "event time must be finite, got {} ({:?})",
+            e.time_s,
+            e.kind
+        );
+        assert!(
+            e.time_s >= self.now_s,
+            "cannot schedule into the past: {} < {} ({:?})",
+            e.time_s,
+            self.now_s,
+            e.kind
+        );
+        let lane = self.lane_for(&e.kind);
+        self.heaps[lane].push(Entry { time_s: e.time_s, seq: self.seq, event: e });
+        self.seq += 1;
+        self.total += 1;
+        if self.total > self.high_water {
+            self.high_water = self.total;
+        }
+    }
+
+    /// Schedule `kind` at `now + delay`.
+    pub fn push_in(&mut self, delay_s: f64, kind: EventKind) {
+        let t = self.now_s + delay_s.max(0.0);
+        self.push(Event::new(t, kind));
+    }
+
+    /// Pop the earliest event across all lanes, advancing the clock.
+    /// The winner is the lane head with the least `(time_s, seq)` —
+    /// i.e. exactly the entry a single heap would pop.
+    pub fn pop(&mut self) -> Option<Event> {
+        let mut best: Option<(usize, f64, u64)> = None;
+        for (lane, heap) in self.heaps.iter().enumerate() {
+            if let Some(head) = heap.peek() {
+                let earlier = match best {
+                    None => true,
+                    Some((_, t, s)) => {
+                        head.time_s < t || (head.time_s == t && head.seq < s)
+                    }
+                };
+                if earlier {
+                    best = Some((lane, head.time_s, head.seq));
+                }
+            }
+        }
+        best.map(|(lane, _, _)| {
+            let entry = self.heaps[lane].pop().expect("peeked head exists");
+            debug_assert!(entry.time_s >= self.now_s);
+            self.now_s = entry.time_s;
+            self.total -= 1;
+            entry.event
+        })
+    }
+
+    /// Current simulated time (time of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now_s
+    }
+
+    /// Total pending events across all lanes.
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Deepest the queue has ever been (total across lanes) — equal to
+    /// what the single queue's mark would read.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Time of the next event without popping.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heaps
+            .iter()
+            .filter_map(|h| h.peek())
+            .map(|e| (e.time_s, e.seq))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).expect("finite").then(a.1.cmp(&b.1)))
+            .map(|(t, _)| t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::EventQueue;
+
+    fn mixed_kinds(i: usize) -> EventKind {
+        match i % 5 {
+            0 => EventKind::TrainingDone { sat: i },
+            1 => EventKind::HapLocalArrival { hap: i, origin_sat: i, epoch: 1 },
+            2 => EventKind::Sweep,
+            3 => EventKind::SatChurn { sat: i, up: true },
+            _ => EventKind::OutageStart { site: i },
+        }
+    }
+
+    #[test]
+    fn default_options_are_the_historical_path() {
+        assert_eq!(RunOptions::default().lanes, 1);
+    }
+
+    #[test]
+    fn pop_order_matches_single_queue_with_ties() {
+        for lanes in [1, 2, 3, 4, 7] {
+            let mut single = EventQueue::new();
+            let mut laned = LanedQueue::new(lanes, vec![0, 0, 1, 1, 2, 2]);
+            for i in 0..60 {
+                // coarse grid forces time ties so the seq tie-break is
+                // exercised across lanes
+                let t = ((i * 7) % 10) as f64;
+                let e = Event::new(t, mixed_kinds(i));
+                single.push(e.clone());
+                laned.push(e);
+            }
+            loop {
+                let a = single.pop();
+                let b = laned.pop();
+                assert_eq!(a, b, "lanes={lanes}");
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn len_and_high_water_match_single_queue() {
+        let mut single = EventQueue::new();
+        let mut laned = LanedQueue::new(4, Vec::new());
+        for i in 0..30 {
+            let e = Event::new(i as f64, mixed_kinds(i));
+            single.push(e.clone());
+            laned.push(e);
+        }
+        for _ in 0..10 {
+            single.pop();
+            laned.pop();
+        }
+        assert_eq!(laned.len(), single.len());
+        assert_eq!(laned.high_water(), single.high_water());
+        assert_eq!(laned.now(), single.now());
+        assert_eq!(laned.peek_time(), single.peek_time());
+    }
+
+    #[test]
+    fn routing_uses_planes_and_barrier_lane() {
+        let q = LanedQueue::new(3, vec![0, 1, 2, 0]);
+        assert_eq!(q.lane_for(&EventKind::TrainingDone { sat: 3 }), 0);
+        assert_eq!(q.lane_for(&EventKind::TrainingDone { sat: 2 }), 2);
+        // beyond the plane map: id-mod fallback
+        assert_eq!(q.lane_for(&EventKind::TrainingDone { sat: 100 }), 1);
+        assert_eq!(q.lane_for(&EventKind::AggregationTick), 0);
+        assert_eq!(q.lane_for(&EventKind::Sweep), 0);
+        assert_eq!(q.lane_for(&EventKind::HapGlobalArrival { hap: 5, epoch: 0 }), 2);
+        assert_eq!(q.lane_for(&EventKind::SinkBatchArrival { from_hap: 4, count: 1 }), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot schedule into the past")]
+    fn rejects_past_events_like_single_queue() {
+        let mut q = LanedQueue::new(2, Vec::new());
+        q.push(Event::new(5.0, EventKind::Sweep));
+        q.pop();
+        q.push(Event::new(1.0, EventKind::Sweep));
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nonfinite_time() {
+        let mut q = LanedQueue::new(2, Vec::new());
+        q.push(Event { time_s: f64::NAN, kind: EventKind::Sweep });
+    }
+
+    #[test]
+    fn push_in_is_relative_and_clamped() {
+        let mut q = LanedQueue::new(2, Vec::new());
+        q.push(Event::new(10.0, EventKind::Sweep));
+        q.pop();
+        q.push_in(-3.0, EventKind::Sweep);
+        assert_eq!(q.peek_time(), Some(10.0));
+        q.push_in(5.0, EventKind::AggregationTick);
+        q.pop();
+        assert_eq!(q.peek_time(), Some(15.0));
+    }
+
+    #[test]
+    fn event_sink_is_object_safe_over_both_queues() {
+        let mut single = EventQueue::new();
+        let mut laned = LanedQueue::new(2, Vec::new());
+        for q in [&mut single as &mut dyn EventSink, &mut laned as &mut dyn EventSink] {
+            q.push(Event::new(1.0, EventKind::Sweep));
+        }
+        assert_eq!(single.len(), 1);
+        assert_eq!(laned.len(), 1);
+    }
+}

@@ -5,9 +5,17 @@
 //! coordinator schedules typed [`event::Event`]s (contact edges, model
 //! arrivals, training completions, aggregations) and consumes them in
 //! time order.
+//!
+//! [`lanes`] adds the multi-lane variant: events sharded by their
+//! natural independence domain (orbital plane, HAP star group) into
+//! per-lane heaps sharing one global push counter, merged back with a
+//! deterministic k-way pop that is provably identical to the single
+//! queue — the substrate for intra-run parallelism.
 
 pub mod event;
+pub mod lanes;
 pub mod queue;
 
 pub use event::{Event, EventKind};
+pub use lanes::{EventSink, LanedQueue, RunOptions};
 pub use queue::EventQueue;

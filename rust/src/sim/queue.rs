@@ -7,10 +7,13 @@ use std::collections::BinaryHeap;
 /// Heap entry: ordered by time, then insertion sequence (so two events
 /// at the same instant pop in scheduling order — determinism matters
 /// because experiment tables must regenerate bit-identically).
-struct Entry {
-    time_s: f64,
-    seq: u64,
-    event: Event,
+///
+/// Shared with the multi-lane queue (`sim::lanes`), whose per-lane
+/// heaps must order entries exactly like the single queue does.
+pub(crate) struct Entry {
+    pub(crate) time_s: f64,
+    pub(crate) seq: u64,
+    pub(crate) event: Event,
 }
 
 impl PartialEq for Entry {
@@ -50,6 +53,29 @@ pub struct EventQueue {
 impl EventQueue {
     pub fn new() -> Self {
         EventQueue { heap: BinaryHeap::new(), seq: 0, now_s: 0.0, high_water: 0 }
+    }
+
+    /// A queue whose heap starts out sized for `cap` events, so a run
+    /// that knows its backlog shape skips the doubling re-allocations.
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue { heap: BinaryHeap::with_capacity(cap), seq: 0, now_s: 0.0, high_water: 0 }
+    }
+
+    /// Reset the queue to its pristine state — clock at zero, sequence
+    /// counter at zero, high-water mark at zero — while **retaining**
+    /// the heap's allocation, so repeated runs in a sweep cell reuse
+    /// one buffer instead of growing a fresh heap each time.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.now_s = 0.0;
+        self.high_water = 0;
+    }
+
+    /// Events the heap can hold without reallocating (capacity survives
+    /// [`EventQueue::clear`]).
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
     }
 
     /// Current simulated time (time of the last popped event).
@@ -224,6 +250,48 @@ mod tests {
     fn past_event_panic_names_the_event_kind() {
         let mut q = EventQueue::new();
         q.push(Event::new(5.0, EventKind::Sweep));
+        q.pop();
+        q.push(Event::new(1.0, EventKind::Sweep));
+    }
+
+    #[test]
+    fn with_capacity_preallocates() {
+        let q = EventQueue::with_capacity(64);
+        assert!(q.capacity() >= 64);
+        assert!(q.is_empty());
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.high_water(), 0);
+    }
+
+    #[test]
+    fn clear_resets_state_but_keeps_capacity() {
+        let mut q = EventQueue::with_capacity(32);
+        for i in 0..20 {
+            q.push(Event::new(100.0 + i as f64, EventKind::Sweep));
+        }
+        q.pop();
+        assert!(q.now() > 0.0);
+        assert_eq!(q.high_water(), 20);
+        let cap_before = q.capacity();
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.high_water(), 0);
+        assert!(q.capacity() >= cap_before, "clear must retain the heap allocation");
+        // the clock reset means early times are schedulable again …
+        q.push(Event::new(1.0, EventKind::Sweep));
+        assert_eq!(q.pop().unwrap().time_s, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot schedule into the past")]
+    fn cleared_queue_still_rejects_past_events() {
+        // … and the push asserts stay armed after a clear.
+        let mut q = EventQueue::new();
+        q.push(Event::new(5.0, EventKind::Sweep));
+        q.pop();
+        q.clear();
+        q.push(Event::new(2.0, EventKind::Sweep));
         q.pop();
         q.push(Event::new(1.0, EventKind::Sweep));
     }

@@ -106,6 +106,39 @@ impl PjrtBackend {
     fn manifest(&self) -> &crate::runtime::Manifest {
         &self.runtime.manifest
     }
+
+    /// Shared slab set-up + agg-artifact execution of [`Backend::aggregate`]
+    /// and [`Backend::aggregate_into`] — one definition, same floats.
+    fn agg_slab_run(
+        &mut self,
+        prev: &ModelParams,
+        models: &[&ModelParams],
+        coeffs: &[f32],
+        coeff_prev: f32,
+    ) -> Vec<f32> {
+        assert_eq!(models.len(), coeffs.len());
+        let slab_rows = self.manifest().n_sats + 1;
+        assert!(
+            models.len() <= slab_rows - 1,
+            "{} models exceed the aggregation slab",
+            models.len()
+        );
+        let d = self.dim;
+        self.slab_buf.clear();
+        self.slab_buf.resize(slab_rows * d, 0.0);
+        self.slab_buf[..d].copy_from_slice(&prev.data);
+        let mut cvec = vec![0.0f32; slab_rows];
+        cvec[0] = coeff_prev;
+        for (i, (m, &c)) in models.iter().zip(coeffs).enumerate() {
+            self.slab_buf[(i + 1) * d..(i + 2) * d].copy_from_slice(&m.data);
+            cvec[i + 1] = c;
+        }
+        let out = self
+            .agg_exe
+            .run(&[Input::F32(&self.slab_buf), Input::F32(&cvec)])
+            .expect("agg artifact");
+        out.into_iter().next().unwrap()
+    }
 }
 
 impl Backend for PjrtBackend {
@@ -163,6 +196,44 @@ impl Backend for PjrtBackend {
         (cur, loss_sum / dispatches as f64)
     }
 
+    fn train_local_into(
+        &mut self,
+        sat: usize,
+        params: &ModelParams,
+        dispatches: usize,
+        out: &mut ModelParams,
+    ) -> f64 {
+        assert!(dispatches > 0);
+        let n = self.manifest().dispatch_samples();
+        let mut loss_sum = 0.0f64;
+        for k in 0..dispatches {
+            let mut xs = std::mem::take(&mut self.xs_buf);
+            let mut ys = std::mem::take(&mut self.ys_buf);
+            self.samplers[sat].fill(&self.train_data, n, &mut xs, &mut ys);
+            // dispatch 0 reads the caller's params, later ones chain on
+            // `out` — same sampler stream, same floats as train_local,
+            // but the result lands in the caller's reused buffer
+            let cur: &[f32] = if k == 0 { &params.data } else { &out.data };
+            let res = self
+                .train_exe
+                .run(&[
+                    Input::F32(cur),
+                    Input::F32(&xs),
+                    Input::F32(&ys),
+                    Input::F32(&[self.lr]),
+                ])
+                .expect("train artifact");
+            self.xs_buf = xs;
+            self.ys_buf = ys;
+            let mut it = res.into_iter();
+            let new = it.next().unwrap();
+            out.data.clear();
+            out.data.extend_from_slice(&new);
+            loss_sum += it.next().unwrap()[0] as f64;
+        }
+        loss_sum / dispatches as f64
+    }
+
     fn evaluate(&mut self, params: &ModelParams) -> EvalResult {
         let chunk = self.manifest().eval_batch;
         let mut correct = 0.0f64;
@@ -193,28 +264,20 @@ impl Backend for PjrtBackend {
         coeffs: &[f32],
         coeff_prev: f32,
     ) -> ModelParams {
-        assert_eq!(models.len(), coeffs.len());
-        let slab_rows = self.manifest().n_sats + 1;
-        assert!(
-            models.len() <= slab_rows - 1,
-            "{} models exceed the aggregation slab",
-            models.len()
-        );
-        let d = self.dim;
-        self.slab_buf.clear();
-        self.slab_buf.resize(slab_rows * d, 0.0);
-        self.slab_buf[..d].copy_from_slice(&prev.data);
-        let mut cvec = vec![0.0f32; slab_rows];
-        cvec[0] = coeff_prev;
-        for (i, (m, &c)) in models.iter().zip(coeffs).enumerate() {
-            self.slab_buf[(i + 1) * d..(i + 2) * d].copy_from_slice(&m.data);
-            cvec[i + 1] = c;
-        }
-        let out = self
-            .agg_exe
-            .run(&[Input::F32(&self.slab_buf), Input::F32(&cvec)])
-            .expect("agg artifact");
-        ModelParams { data: out.into_iter().next().unwrap() }
+        ModelParams { data: self.agg_slab_run(prev, models, coeffs, coeff_prev) }
+    }
+
+    fn aggregate_into(
+        &mut self,
+        prev: &ModelParams,
+        models: &[&ModelParams],
+        coeffs: &[f32],
+        coeff_prev: f32,
+        out: &mut ModelParams,
+    ) {
+        let new = self.agg_slab_run(prev, models, coeffs, coeff_prev);
+        out.data.clear();
+        out.data.extend_from_slice(&new);
     }
 
     fn distances(&mut self, models: &[&ModelParams], reference: &ModelParams) -> Vec<f64> {

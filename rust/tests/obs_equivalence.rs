@@ -82,6 +82,51 @@ fn run_observed(cfg: &ExperimentConfig) -> (RunResult, Box<RunObs>) {
     (r, obs)
 }
 
+/// [`run_observed`] with the PR-9 multi-lane event core enabled.
+fn run_observed_lanes(cfg: &ExperimentConfig, lanes: usize) -> (RunResult, Box<RunObs>) {
+    let mut b = SurrogateBackend::for_config(cfg);
+    let mut env = SimEnv::new(cfg, &mut b);
+    env.set_lanes(lanes);
+    let mut obs = RunObs::to_memory();
+    obs.meta(
+        "test",
+        cfg.fl.scheme.name(),
+        cfg.seed,
+        cfg.fl.horizon_s,
+        cfg.n_sats(),
+        cfg.placement.sites().len(),
+    );
+    env.enable_obs(obs);
+    let r = make_strategy(cfg.fl.scheme).run(&mut env);
+    let obs = env.take_obs().expect("run was observed");
+    (r, obs)
+}
+
+#[test]
+fn traces_are_byte_identical_at_any_lane_count() {
+    // The PR-9 contract: lanes parallelize pure probes between pops,
+    // never the observed effects — so the JSONL trace of a multi-lane
+    // run is byte-for-byte the single-lane trace.
+    let reg = ScenarioRegistry::builtin();
+    for name in PRESETS {
+        let sc = reg.get(name).unwrap_or_else(|| panic!("missing preset {name}"));
+        for &scheme in SCHEMES {
+            let mut cfg = trimmed(&sc.cfg);
+            cfg.fl.scheme = scheme;
+            let what = format!("{name}/{}", scheme.name());
+            let (one, obs_one) = run_observed_lanes(&cfg, 1);
+            let (four, obs_four) = run_observed_lanes(&cfg, 4);
+            assert_runs_identical(&four, &one, &what);
+            assert_eq!(
+                obs_four.sink.lines(),
+                obs_one.sink.lines(),
+                "{what}: lanes=4 must emit the lanes=1 JSONL byte-for-byte"
+            );
+            assert!(!obs_one.sink.lines().is_empty(), "{what}: trace must be non-empty");
+        }
+    }
+}
+
 #[test]
 fn tracing_on_vs_off_is_bit_identical_and_traces_are_deterministic() {
     let reg = ScenarioRegistry::builtin();

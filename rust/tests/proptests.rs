@@ -10,7 +10,7 @@ use asyncfleo::model::{ModelMetadata, ModelParams};
 use asyncfleo::orbit::{
     contact_windows, GeodeticSite, OrbitalElements, SiteKind, WalkerConstellation,
 };
-use asyncfleo::sim::{Event, EventKind, EventQueue};
+use asyncfleo::sim::{Event, EventKind, EventQueue, LanedQueue};
 use asyncfleo::testkit::{forall, forall_seeded};
 use asyncfleo::topology::HapRing;
 use asyncfleo::util::Rng;
@@ -349,6 +349,61 @@ fn event_queue_total_order_random_times() {
             count += 1;
         }
         assert_eq!(count, n);
+    });
+}
+
+#[test]
+fn laned_queue_pop_order_matches_single_queue() {
+    // The PR-9 determinism contract: a k-way merge over per-lane heaps
+    // keyed by (time, global seq) pops in exactly single-queue order,
+    // for any lane count, any plane map, time ties on purpose, and
+    // pushes interleaved with partial drains (events landing in other
+    // lanes mid-run must not reorder anything).
+    fn random_kind(rng: &mut Rng) -> EventKind {
+        let id = rng.below(64);
+        match rng.below(6) {
+            0 => EventKind::TrainingDone { sat: id },
+            1 => EventKind::SatChurn { sat: id, up: true },
+            2 => EventKind::HapLocalArrival { hap: id, origin_sat: id, epoch: 0 },
+            3 => EventKind::OutageEnd { site: id },
+            4 => EventKind::AggregationTick,
+            _ => EventKind::Sweep,
+        }
+    }
+    forall(|rng| {
+        let lanes = rng.range_usize(1, 6);
+        let n_planes = rng.range_usize(1, 8);
+        let plane_of: Vec<usize> =
+            (0..rng.range_usize(0, 48)).map(|_| rng.below(n_planes)).collect();
+        let mut single = EventQueue::new();
+        let mut laned = LanedQueue::new(lanes, plane_of);
+        for _round in 0..3 {
+            // the coarse half-second grid forces cross-lane time ties,
+            // exercising the global-seq tie-break
+            let n = rng.range_usize(1, 60);
+            let base = single.now();
+            for _ in 0..n {
+                let t = base + (rng.below(40) as f64) * 0.5;
+                let e = Event::new(t, random_kind(rng));
+                single.push(e.clone());
+                laned.push(e);
+            }
+            // drain part of the backlog, then push the next wave on top
+            let drain = rng.below(single.len() + 1);
+            for _ in 0..drain {
+                assert_eq!(laned.pop(), single.pop());
+                assert_eq!(laned.now(), single.now());
+            }
+        }
+        loop {
+            let a = single.pop();
+            let b = laned.pop();
+            assert_eq!(b, a);
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(laned.high_water(), single.high_water());
     });
 }
 

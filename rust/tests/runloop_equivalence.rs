@@ -72,6 +72,55 @@ fn run_reference(cfg: &ExperimentConfig) -> RunResult {
     make_strategy(cfg.fl.scheme).run(&mut env)
 }
 
+/// One run on the fast path with the PR-9 multi-lane event core.
+fn run_lanes(cfg: &ExperimentConfig, lanes: usize) -> RunResult {
+    let mut b = SurrogateBackend::for_config(cfg);
+    let mut env = SimEnv::new(cfg, &mut b);
+    env.set_lanes(lanes);
+    make_strategy(cfg.fl.scheme).run(&mut env)
+}
+
+/// The schemes with laned run loops (PR 9): the async event core, one
+/// synchronous baseline, and the ISL-graph collection scheme.
+const LANE_SCHEMES: &[SchemeKind] =
+    &[SchemeKind::AsyncFleo, SchemeKind::FedHap, SchemeKind::SinkSat];
+
+#[test]
+fn all_existing_presets_bitwise_equal_across_lane_counts() {
+    let reg = ScenarioRegistry::builtin();
+    for name in EXISTING_PRESETS {
+        let sc = reg.get(name).unwrap_or_else(|| panic!("missing preset {name}"));
+        for &scheme in LANE_SCHEMES {
+            let mut cfg = trimmed(&sc.cfg);
+            cfg.fl.scheme = scheme;
+            let one = run_lanes(&cfg, 1);
+            for lanes in [2, 4] {
+                let n = run_lanes(&cfg, lanes);
+                assert_runs_identical(
+                    &n,
+                    &one,
+                    &format!("{name}/{}/lanes{lanes}", scheme.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn starlink_gen2_smoke_bitwise_equal_lanes_1_vs_4() {
+    let reg = ScenarioRegistry::builtin();
+    let sc = reg.get("starlink-gen2").expect("mega preset in catalog");
+    let mut cfg = trimmed(&sc.cfg);
+    cfg.fl.scheme = SchemeKind::AsyncFleo;
+    let one = run_lanes(&cfg, 1);
+    let four = run_lanes(&cfg, 4);
+    assert_runs_identical(&four, &one, "starlink-gen2/asyncfleo/lanes4");
+    assert!(
+        !one.curve.points.is_empty(),
+        "the mega-constellation run must record at least the initial evaluation"
+    );
+}
+
 #[test]
 fn all_existing_presets_bitwise_equal_fast_vs_reference() {
     let reg = ScenarioRegistry::builtin();
