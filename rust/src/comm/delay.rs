@@ -18,6 +18,15 @@ impl DelayBreakdown {
     pub fn total_s(&self) -> f64 {
         self.transmission_s + self.propagation_s + self.processing_s
     }
+
+    /// How long the transfer *occupies the channel*: the transmission
+    /// term only. Propagation is pipelined (bits in flight don't block
+    /// the transmitter) and processing happens at the endpoints, so
+    /// this is the physical floor for a FIFO link queue's service time
+    /// (`faults::LinkQueue`).
+    pub fn occupancy_s(&self) -> f64 {
+        self.transmission_s
+    }
 }
 
 /// Delay of transferring `payload_bits` over `distance_km` with `p`.
@@ -86,6 +95,15 @@ mod tests {
         assert!((d.processing_s - 0.1).abs() < 1e-12, "2 x 50 ms, not 1 x");
         let want = 0.5 + 1499.0 / SPEED_OF_LIGHT_KM_S + 0.1;
         assert!((total_delay_s(&p, 8e6, 1499.0) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_is_the_transmission_term_only() {
+        let p = LinkParams::default();
+        let d = delay_breakdown(&p, 8e6, 1499.0);
+        assert_eq!(d.occupancy_s(), d.transmission_s);
+        assert!(d.occupancy_s() < d.total_s());
+        assert_eq!(delay_breakdown(&p, 0.0, 1499.0).occupancy_s(), 0.0);
     }
 
     #[test]

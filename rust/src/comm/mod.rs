@@ -5,6 +5,15 @@
 //! parameters are the defaults. The model computes free-space path
 //! loss, SNR, Shannon capacity, and the total delay decomposition
 //! `t_c = t_t + t_p + t_x + t_y`.
+//!
+//! The network impairment engine (`crate::faults`) layers on top of
+//! this one-shot model: its per-link FIFO queues serialize *channel
+//! occupancy* — physically the transmission term `t_t`
+//! ([`DelayBreakdown::occupancy_s`]) — which the engine approximates
+//! as `queue_service_factor × total delay` since the configured data
+//! rate is already folded into the delay it is handed. Jitter,
+//! partitions and eclipses likewise perturb or gate the total, never
+//! the underlying link budget.
 
 pub mod delay;
 pub mod link;

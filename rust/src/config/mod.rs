@@ -9,7 +9,7 @@ pub mod parser;
 
 use crate::comm::LinkParams;
 use crate::data::{DatasetKind, Partition};
-use crate::faults::{FaultConfig, FaultScenario};
+use crate::faults::{FaultConfig, FaultScenario, NetworkConfig, PartitionScope};
 use crate::orbit::{ShellSpec, WalkerPattern};
 use crate::topology::{IslConfig, IslTopology};
 use parser::{Doc, ParseError, Value};
@@ -265,6 +265,9 @@ pub struct ExperimentConfig {
     pub data: DataConfig,
     /// Fault-injection knobs (nominal = the perfect network).
     pub faults: FaultConfig,
+    /// Network-impairment knobs: latency jitter, bandwidth queueing,
+    /// partitions, Sun-vector eclipses (nominal = provably invisible).
+    pub network: NetworkConfig,
     pub seed: u64,
     /// Minimum elevation angle θ_min, degrees (Table: 10°).
     pub min_elevation_deg: f64,
@@ -302,6 +305,7 @@ impl ExperimentConfig {
             },
             data: DataConfig { train_samples: 8000, test_samples: 2000 },
             faults: FaultConfig::nominal(),
+            network: NetworkConfig::nominal(),
             seed: 42,
             min_elevation_deg: 10.0,
         }
@@ -381,6 +385,7 @@ impl ExperimentConfig {
             errs.push(format!("min elevation {} out of [0, 90)", self.min_elevation_deg));
         }
         errs.extend(self.faults.validate());
+        errs.extend(self.network.validate());
         errs
     }
 
@@ -517,6 +522,22 @@ impl ExperimentConfig {
             }
             "faults.isl_edge_outage_duration_s" => {
                 self.faults.isl_edge_outage_duration_s = need_f64()?
+            }
+            // Network impairment engine ([network]): jitter, queueing,
+            // partitions, Sun-vector eclipses.
+            "network.jitter_sigma" => self.network.jitter_sigma = need_f64()?,
+            "network.queue_service_factor" => self.network.queue_service_factor = need_f64()?,
+            "network.queue_max_wait_s" => self.network.queue_max_wait_s = need_f64()?,
+            "network.partition_period_s" => self.network.partition_period_s = need_f64()?,
+            "network.partition_duration_s" => self.network.partition_duration_s = need_f64()?,
+            "network.partition_scope" => {
+                self.network.partition_scope = PartitionScope::parse(need_str()?)
+                    .ok_or(format!("{key}: unknown scope (ground|hap|shell)"))?
+            }
+            "network.partition_shell" => self.network.partition_shell = need_usize()?,
+            "network.eclipse_from_sun" => {
+                self.network.eclipse_from_sun =
+                    val.as_bool().ok_or(format!("{key}: expected bool"))?
             }
             "seed" => self.seed = need_usize()? as u64,
             other => {
@@ -673,6 +694,17 @@ impl ExperimentConfig {
             self.faults.isl_edge_outage_period_s,
             self.faults.isl_edge_outage_duration_s,
         );
+        out.push_str(&format!(
+            "\n[network]\njitter_sigma = {}\nqueue_service_factor = {}\nqueue_max_wait_s = {}\npartition_period_s = {}\npartition_duration_s = {}\npartition_scope = \"{}\"\npartition_shell = {}\neclipse_from_sun = {}\n",
+            self.network.jitter_sigma,
+            self.network.queue_service_factor,
+            self.network.queue_max_wait_s,
+            self.network.partition_period_s,
+            self.network.partition_duration_s,
+            self.network.partition_scope.name(),
+            self.network.partition_shell,
+            self.network.eclipse_from_sun,
+        ));
         out.push_str(&format!(
             "\n[isl]\ntopology = \"{}\"\ncross_shell = {}\ndoppler = {}\n",
             self.isl.topology.name(),
@@ -961,6 +993,42 @@ mod tests {
         assert!(!c.validate().is_empty());
         c.constellation.extra_shells = vec![ShellSpec::delta(2, 2, 550.0, 53.0, 0)];
         assert!(c.validate().is_empty());
+    }
+
+    #[test]
+    fn network_config_roundtrips_through_toml() {
+        let mut c0 = ExperimentConfig::paper_defaults();
+        c0.network = NetworkConfig::preset(FaultScenario::Partition, 0.8);
+        c0.network.partition_scope = PartitionScope::Shell;
+        c0.network.partition_shell = 1;
+        let c1 = ExperimentConfig::from_toml(&c0.to_toml()).unwrap();
+        assert_eq!(c0, c1);
+        let mut c0 = ExperimentConfig::paper_defaults();
+        c0.network = NetworkConfig::preset(FaultScenario::Jitter, 0.5);
+        c0.network.eclipse_from_sun = true;
+        assert_eq!(ExperimentConfig::from_toml(&c0.to_toml()).unwrap(), c0);
+        // defaults round-trip (nominal [network] is always dumped)
+        let d0 = ExperimentConfig::paper_defaults();
+        assert_eq!(ExperimentConfig::from_toml(&d0.to_toml()).unwrap(), d0);
+    }
+
+    #[test]
+    fn network_keys_parse_and_validate() {
+        let c = ExperimentConfig::from_toml(
+            "[network]\njitter_sigma = 0.2\nqueue_service_factor = 1.5\npartition_scope = \"shell\"\npartition_shell = 1\neclipse_from_sun = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.network.jitter_sigma, 0.2);
+        assert_eq!(c.network.queue_service_factor, 1.5);
+        assert_eq!(c.network.partition_scope, PartitionScope::Shell);
+        assert_eq!(c.network.partition_shell, 1);
+        assert!(c.network.eclipse_from_sun);
+        assert!(
+            ExperimentConfig::from_toml("[network]\npartition_scope = \"bogus\"\n").is_err()
+        );
+        let mut bad = ExperimentConfig::paper_defaults();
+        bad.network.jitter_sigma = -1.0;
+        assert!(!bad.validate().is_empty());
     }
 
     #[test]

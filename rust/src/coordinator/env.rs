@@ -43,10 +43,10 @@ use super::contact::ContactPlan;
 use super::geometry::Geometry;
 use crate::comm::delay::{model_bits, total_delay_s};
 use crate::config::ExperimentConfig;
-use crate::faults::{FaultPlan, FaultSchedule, FaultStats, LinkClass};
+use crate::faults::{FaultPlan, FaultSchedule, FaultStats, LinkClass, NetWorld};
 use crate::metrics::{Curve, CurvePoint};
 use crate::obs::{ObsReport, RunObs};
-use crate::orbit::{GeodeticSite, WalkerConstellation};
+use crate::orbit::{GeodeticSite, SiteKind, WalkerConstellation};
 use crate::sim::RunOptions;
 use crate::train::Backend;
 use crate::util::{Rng, SPEED_OF_LIGHT_KM_S};
@@ -121,16 +121,30 @@ impl<'a> SimEnv<'a> {
         // The immutable timeline is fetched from the process-wide
         // schedule cache: schemes of a sweep cell group that share
         // (scenario, intensity, seed, layout) share one schedule and
-        // only the per-run counters are fresh.
-        let faults = FaultPlan::from_schedule(FaultSchedule::shared(
+        // only the per-run counters are fresh. The network axes get the
+        // node layout (shells, HAP sites, geometry) for partition
+        // scoping and Sun-vector umbra windows; the cache key is
+        // normalized so a nominal network config keys exactly like the
+        // pre-engine code.
+        let shell_of: Vec<usize> =
+            (0..geo.constellation.len()).map(|s| geo.constellation.shell_of(s)).collect();
+        let hap_site: Vec<bool> = geo.sites.iter().map(|s| s.kind == SiteKind::Hap).collect();
+        let mut faults = FaultPlan::from_schedule(FaultSchedule::shared_with_network(
             &cfg.faults,
+            &cfg.network,
             cfg.seed,
             &geo.constellation.plane_of(),
+            &NetWorld {
+                shell_of: &shell_of,
+                hap_site: &hap_site,
+                constellation: Some(&geo.constellation),
+            },
             geo.sites.len(),
             cfg.fl.horizon_s,
         ));
         // run-constant delay terms, hoisted out of the per-transfer path
         let payload_bits = model_bits(backend.dim());
+        faults.set_payload_bits(payload_bits as u64);
         let transmission_s = payload_bits / geo.link.data_rate_bps;
         let processing_s = 2.0 * geo.link.processing_delay_s;
         SimEnv {
@@ -162,9 +176,11 @@ impl<'a> SimEnv<'a> {
     /// Effective lane count for this run. The reference path always
     /// runs single-lane: probe lanes evaluate the *fast-path* base
     /// formulas, so the executable specification keeps its own serial
-    /// call sequence.
+    /// call sequence. Active bandwidth queueing also forces one lane —
+    /// queue waits depend on commit order, the one impairment axis the
+    /// pure probe oracle cannot replay.
     pub fn lanes(&self) -> usize {
-        if self.state.reference_path {
+        if self.state.reference_path || self.state.faults.queueing_active() {
             1
         } else {
             self.state.options.lanes.max(1)
@@ -361,6 +377,24 @@ impl<'a> SimEnv<'a> {
             if after.deferrals > before.deferrals {
                 obs.fault_hit(t, "defer", after.deferrals - before.deferrals);
             }
+            if after.queued_s > before.queued_s {
+                obs.fault_hit(t, "queue", 1);
+            }
+            if after.queue_drops > before.queue_drops {
+                obs.fault_hit(t, "queue_drop", after.queue_drops - before.queue_drops);
+            }
+            if after.partition_hits > before.partition_hits {
+                obs.fault_hit(t, "partition", after.partition_hits - before.partition_hits);
+            }
+            if after.reorders > before.reorders {
+                obs.fault_hit(t, "reorder", after.reorders - before.reorders);
+            }
+            if after.eclipse_blocked > before.eclipse_blocked {
+                obs.fault_hit(t, "eclipse", after.eclipse_blocked - before.eclipse_blocked);
+            }
+            if after.retry_drops > before.retry_drops {
+                obs.fault_hit(t, "retry_drop", after.retry_drops - before.retry_drops);
+            }
             (
                 out.delay_s,
                 if out.newly_observed { out.retransmits } else { 0 },
@@ -470,6 +504,9 @@ impl LaneProbe {
 
     /// Fault-adjusted delay for `action` — the pure half of
     /// `SimEnv::apply_faults` (identical arithmetic, no accounting).
+    /// Matches the serial delay bit for bit because the only stateful
+    /// delay term — the FIFO queue wait — forces single-lane runs
+    /// (`SimEnv::lanes`), so probes never race it.
     #[inline]
     fn channel_delay(&self, action: &TxAction) -> f64 {
         if !self.schedule.enabled() {

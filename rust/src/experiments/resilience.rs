@@ -16,12 +16,19 @@
 //! loss, ring re-healing, post-outage re-offers — exist only in
 //! AsyncFLEO's event loop, so the `dropped_results` column is
 //! AsyncFLEO instrumentation, not a cross-scheme metric.
+//!
+//! The network impairment scenarios (PR 10: `jitter`, `congestion`,
+//! `partition`, `sun-eclipse`) sweep through the same grid — each cell
+//! sets the matching [`NetworkConfig`] preset alongside the (nominal)
+//! fault knobs, and the new counters (queueing delay, partition hits,
+//! reorders, eclipse blocks, retry drops) land in their own CSV
+//! columns.
 
 use super::drivers::{base_config, summary_of, ExpOptions};
 use super::executor::{run_cells_streaming, Cell};
 use crate::config::{ModelKind, PsPlacement, SchemeKind};
 use crate::data::{DatasetKind, Partition};
-use crate::faults::{FaultConfig, FaultScenario};
+use crate::faults::{FaultConfig, FaultScenario, NetworkConfig};
 use crate::metrics::csv::{f, i, s, CsvWriter};
 use crate::util::fmt_hm;
 use anyhow::Result;
@@ -52,8 +59,26 @@ pub fn sweep_cells() -> Vec<(FaultScenario, f64)> {
     cells
 }
 
+/// [`sweep_cells`] restricted to a scenario subset (the nominal
+/// reference cell is always kept). `None` = the full grid.
+pub fn sweep_cells_filtered(filter: Option<&[FaultScenario]>) -> Vec<(FaultScenario, f64)> {
+    sweep_cells()
+        .into_iter()
+        .filter(|&(sc, _)| {
+            filter.map_or(true, |keep| sc == FaultScenario::Nominal || keep.contains(&sc))
+        })
+        .collect()
+}
+
 /// Run the sweep, writing `results/resilience.csv`.
 pub fn run(opts: &ExpOptions) -> Result<()> {
+    run_filtered(opts, None)
+}
+
+/// [`run`] restricted to a scenario subset (what the CLI's
+/// `--scenarios` flag and the CI resilience smoke use). `None` runs
+/// the full grid.
+pub fn run_filtered(opts: &ExpOptions, filter: Option<&[FaultScenario]>) -> Result<()> {
     let mut cfg0 = base_config(opts);
     // the coordinator dynamics are the object of study: MLP keeps the
     // compute cheap without changing visit/staleness behaviour
@@ -87,6 +112,12 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
             "losses",
             "outages_hit",
             "churn_deaths",
+            "queued_s",
+            "queue_drops",
+            "partition_hits",
+            "reorders",
+            "eclipse_blocked",
+            "retry_drops",
         ],
     )?
     .autoflush(true);
@@ -95,12 +126,13 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     // cells, in the deterministic order the CSV has always used
     let mut rows: Vec<(FaultScenario, f64, &str, SchemeKind, PsPlacement)> = Vec::new();
     let mut cells: Vec<Cell> = Vec::new();
-    for (scenario, intensity) in sweep_cells() {
+    for (scenario, intensity) in sweep_cells_filtered(filter) {
         for &(label, scheme, placement) in RESILIENCE_SCHEMES {
             let mut cfg = cfg0.clone();
             cfg.fl.scheme = scheme;
             cfg.placement = placement;
             cfg.faults = FaultConfig::preset(scenario, intensity);
+            cfg.network = NetworkConfig::preset(scenario, intensity);
             rows.push((scenario, intensity, label, scheme, placement));
             cells.push(Cell::new(format!("{}@{intensity}/{label}", scenario.name()), cfg));
         }
@@ -135,6 +167,12 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
             i(fs.losses),
             i(fs.outages_hit),
             i(fs.churn_deaths),
+            f(fs.queued_s),
+            i(fs.queue_drops),
+            i(fs.partition_hits),
+            i(fs.reorders),
+            i(fs.eclipse_blocked),
+            i(fs.retry_drops),
         ])?;
         println!(
             "{:<12} {:>4.2} {:<10} {:>8.2} {:>10} {:>7} {:>9} {:>8}",
@@ -165,6 +203,17 @@ mod tests {
         for &scenario in FaultScenario::ALL {
             assert!(cells.iter().any(|&(sc, _)| sc == scenario), "{scenario:?} missing");
         }
+    }
+
+    #[test]
+    fn filtered_sweep_keeps_nominal_and_the_requested_scenarios() {
+        let keep = [FaultScenario::Partition, FaultScenario::Congestion];
+        let cells = sweep_cells_filtered(Some(&keep));
+        assert_eq!(cells[0], (FaultScenario::Nominal, 0.0));
+        assert_eq!(cells.len(), 1 + keep.len() * INTENSITIES.len());
+        assert!(cells.iter().skip(1).all(|&(sc, _)| keep.contains(&sc)));
+        // no filter = the full grid
+        assert_eq!(sweep_cells_filtered(None), sweep_cells());
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! [`FaultScenario`] presets are constructors scaled by an `intensity`
 //! in `[0, 1]`. Intensity 0 of *any* scenario is exactly
 //! [`FaultConfig::nominal`] — the provably fault-free configuration.
+//!
+//! [`NetworkConfig`] is the companion knob bag for the network
+//! impairment engine (`faults::network`): latency jitter, per-link
+//! bandwidth queueing, scheduled partitions and Sun-vector eclipses.
+//! The same contracts hold: `PartialEq` + TOML round-trip through the
+//! `[network]` section, and intensity 0 of any scenario is exactly
+//! [`NetworkConfig::nominal`].
 
 /// Named resilience scenarios (the `experiments::resilience` sweep).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -21,6 +28,21 @@ pub enum FaultScenario {
     Churn,
     /// HAP failures with ring re-healing in `topology::HapRing`.
     HapFailure,
+    /// Log-normal latency jitter around the geometric delay (network
+    /// axis): deterministic per-link draws reorder messages through the
+    /// event queue without any loss.
+    Jitter,
+    /// Per-link bandwidth queueing (network axis): concurrent transfers
+    /// contend FIFO for each link's capacity instead of all seeing a
+    /// fixed rate.
+    Congestion,
+    /// Scheduled network partitions (network axis): the ground segment
+    /// is isolated for minutes at a time; async schemes hold models and
+    /// re-relay on heal, sync baselines stall honestly.
+    Partition,
+    /// Eclipse windows computed from the actual Sun vector
+    /// (`orbit::sun` umbra test) instead of the periodic approximation.
+    SunEclipse,
 }
 
 impl FaultScenario {
@@ -31,6 +53,10 @@ impl FaultScenario {
         FaultScenario::Eclipse,
         FaultScenario::Churn,
         FaultScenario::HapFailure,
+        FaultScenario::Jitter,
+        FaultScenario::Congestion,
+        FaultScenario::Partition,
+        FaultScenario::SunEclipse,
     ];
 
     pub fn parse(s: &str) -> Option<Self> {
@@ -40,6 +66,10 @@ impl FaultScenario {
             "eclipse" => FaultScenario::Eclipse,
             "churn" => FaultScenario::Churn,
             "hap-failure" | "hap_failure" => FaultScenario::HapFailure,
+            "jitter" => FaultScenario::Jitter,
+            "congestion" => FaultScenario::Congestion,
+            "partition" => FaultScenario::Partition,
+            "sun-eclipse" | "sun_eclipse" => FaultScenario::SunEclipse,
             _ => return None,
         })
     }
@@ -51,6 +81,10 @@ impl FaultScenario {
             FaultScenario::Eclipse => "eclipse",
             FaultScenario::Churn => "churn",
             FaultScenario::HapFailure => "hap-failure",
+            FaultScenario::Jitter => "jitter",
+            FaultScenario::Congestion => "congestion",
+            FaultScenario::Partition => "partition",
+            FaultScenario::SunEclipse => "sun-eclipse",
         }
     }
 }
@@ -152,6 +186,12 @@ impl FaultConfig {
                 cfg.max_retransmits = 2;
                 cfg.retransmit_backoff_s = 0.5;
             }
+            // pure network axes: the fault knobs stay nominal, the
+            // impairment lives in `NetworkConfig::preset`
+            FaultScenario::Jitter
+            | FaultScenario::Congestion
+            | FaultScenario::Partition
+            | FaultScenario::SunEclipse => {}
         }
         cfg
     }
@@ -214,6 +254,164 @@ impl FaultConfig {
     }
 }
 
+/// What a scheduled network partition isolates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PartitionScope {
+    /// The whole ground segment: every ground-station site is
+    /// unreachable (HAPs keep flying and relaying).
+    Ground,
+    /// The HAP layer: HAP sites and the IHL backbone are unreachable.
+    Hap,
+    /// One orbital shell: its satellites lose every link that crosses
+    /// the shell boundary (intra-shell ISLs keep working — the island
+    /// stays internally connected, but isolated).
+    Shell,
+}
+
+impl PartitionScope {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "ground" => PartitionScope::Ground,
+            "hap" => PartitionScope::Hap,
+            "shell" => PartitionScope::Shell,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionScope::Ground => "ground",
+            PartitionScope::Hap => "hap",
+            PartitionScope::Shell => "shell",
+        }
+    }
+}
+
+/// The network impairment knobs (`faults::network`). A zero value
+/// disables the corresponding axis; [`NetworkConfig::is_nop`] true
+/// means the engine stays out of the hot path entirely — the
+/// zero-intensity-is-bit-identical contract of the fault subsystem.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetworkConfig {
+    /// Log-normal latency jitter: sigma of the per-transfer multiplier
+    /// `exp(sigma * z)` applied to the clean link delay (0 = off).
+    /// Draws are hash-derived per (link, coherence window), so they are
+    /// order-independent and idempotent within a window.
+    pub jitter_sigma: f64,
+    /// Per-link bandwidth queueing: each committed transfer occupies
+    /// its link FIFO for `factor * clean_delay` seconds; later offers
+    /// wait for the residual capacity (0 = off).
+    pub queue_service_factor: f64,
+    /// Queue waits beyond this cap become typed drops instead of
+    /// unbounded head-of-line blocking (0 = unbounded).
+    pub queue_max_wait_s: f64,
+    /// Partition cycle period, seconds (0 = no partitions).
+    pub partition_period_s: f64,
+    /// Partition window length within each period, seconds.
+    pub partition_duration_s: f64,
+    /// What each partition window isolates.
+    pub partition_scope: PartitionScope,
+    /// Shell index isolated when `partition_scope` is `Shell`.
+    pub partition_shell: usize,
+    /// Replace the periodic eclipse approximation with per-satellite
+    /// umbra windows computed from the actual Sun vector
+    /// (`orbit::sun`).
+    pub eclipse_from_sun: bool,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self::nominal()
+    }
+}
+
+impl NetworkConfig {
+    /// The perfect network: every impairment off.
+    pub fn nominal() -> Self {
+        NetworkConfig {
+            jitter_sigma: 0.0,
+            queue_service_factor: 0.0,
+            queue_max_wait_s: 0.0,
+            partition_period_s: 0.0,
+            partition_duration_s: 0.0,
+            partition_scope: PartitionScope::Ground,
+            partition_shell: 0,
+            eclipse_from_sun: false,
+        }
+    }
+
+    /// The network half of a named scenario scaled by `intensity` in
+    /// `[0, 1]`. Intensity 0 always yields [`Self::nominal`]; the
+    /// pre-network scenarios yield it at any intensity.
+    pub fn preset(scenario: FaultScenario, intensity: f64) -> Self {
+        let x = intensity.clamp(0.0, 1.0);
+        let mut net = Self::nominal();
+        if x == 0.0 {
+            return net;
+        }
+        match scenario {
+            FaultScenario::Jitter => {
+                // up to sigma 0.35 at full intensity: occasional 2x+
+                // delay spikes, visible message reordering
+                net.jitter_sigma = 0.35 * x;
+            }
+            FaultScenario::Congestion => {
+                // each transfer occupies its link for up to its whole
+                // clean delay; contenders queue FIFO, waits beyond
+                // 15 min become typed drops
+                net.queue_service_factor = x;
+                net.queue_max_wait_s = 900.0;
+            }
+            FaultScenario::Partition => {
+                // the ground segment drops out for up to 30 min every
+                // 4 h
+                net.partition_period_s = 14_400.0;
+                net.partition_duration_s = 1800.0 * x;
+                net.partition_scope = PartitionScope::Ground;
+            }
+            FaultScenario::SunEclipse => {
+                // a switch, not a dial: any positive intensity turns
+                // the Sun-vector umbra model on
+                net.eclipse_from_sun = true;
+            }
+            _ => {}
+        }
+        net
+    }
+
+    /// True when every network axis is disabled — the engine then never
+    /// touches the delay path, the RNG or the schedule cache key.
+    pub fn is_nop(&self) -> bool {
+        self.jitter_sigma <= 0.0
+            && self.queue_service_factor <= 0.0
+            && (self.partition_period_s <= 0.0 || self.partition_duration_s <= 0.0)
+            && !self.eclipse_from_sun
+    }
+
+    /// Validate invariants; returns a list of problems (empty = OK).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        if self.partition_period_s > 0.0 && self.partition_duration_s >= self.partition_period_s {
+            errs.push(format!(
+                "network.partition_duration_s {} must be shorter than the period {}",
+                self.partition_duration_s, self.partition_period_s
+            ));
+        }
+        for (name, v) in [
+            ("jitter_sigma", self.jitter_sigma),
+            ("queue_service_factor", self.queue_service_factor),
+            ("queue_max_wait_s", self.queue_max_wait_s),
+            ("partition_period_s", self.partition_period_s),
+            ("partition_duration_s", self.partition_duration_s),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                errs.push(format!("network.{name} {v} must be finite and >= 0"));
+            }
+        }
+        errs
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,11 +434,66 @@ mod tests {
     fn presets_are_active_and_valid() {
         for &s in FaultScenario::ALL {
             let c = FaultConfig::preset(s, 1.0);
+            let n = NetworkConfig::preset(s, 1.0);
             assert!(c.validate().is_empty(), "{s:?}: {:?}", c.validate());
+            assert!(n.validate().is_empty(), "{s:?}: {:?}", n.validate());
             if s != FaultScenario::Nominal {
-                assert!(!c.is_nop(), "{s:?} at full intensity must be active");
+                assert!(
+                    !(c.is_nop() && n.is_nop()),
+                    "{s:?} at full intensity must be active on some axis"
+                );
             }
         }
+    }
+
+    #[test]
+    fn network_nominal_is_nop_and_valid() {
+        let n = NetworkConfig::nominal();
+        assert!(n.is_nop());
+        assert!(n.validate().is_empty());
+        assert_eq!(n, NetworkConfig::default());
+    }
+
+    #[test]
+    fn zero_intensity_network_of_any_scenario_is_nominal() {
+        for &s in FaultScenario::ALL {
+            assert_eq!(NetworkConfig::preset(s, 0.0), NetworkConfig::nominal(), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn partition_scope_parse_roundtrip() {
+        for scope in [PartitionScope::Ground, PartitionScope::Hap, PartitionScope::Shell] {
+            assert_eq!(PartitionScope::parse(scope.name()), Some(scope));
+        }
+        assert_eq!(PartitionScope::parse("bogus"), None);
+    }
+
+    #[test]
+    fn network_validation_catches_bad_knobs() {
+        let mut n = NetworkConfig::preset(FaultScenario::Partition, 1.0);
+        n.partition_duration_s = n.partition_period_s + 1.0;
+        assert_eq!(n.validate().len(), 1, "{:?}", n.validate());
+        let mut n = NetworkConfig::nominal();
+        n.jitter_sigma = f64::NAN;
+        assert_eq!(n.validate().len(), 1);
+        n.jitter_sigma = -0.5;
+        assert_eq!(n.validate().len(), 1);
+    }
+
+    #[test]
+    fn network_presets_only_touch_their_axis() {
+        let j = NetworkConfig::preset(FaultScenario::Jitter, 1.0);
+        assert!(j.jitter_sigma > 0.0 && j.queue_service_factor == 0.0);
+        let c = NetworkConfig::preset(FaultScenario::Congestion, 1.0);
+        assert!(c.queue_service_factor > 0.0 && c.jitter_sigma == 0.0);
+        let p = NetworkConfig::preset(FaultScenario::Partition, 1.0);
+        assert!(p.partition_period_s > 0.0 && !p.eclipse_from_sun);
+        let e = NetworkConfig::preset(FaultScenario::SunEclipse, 1.0);
+        assert!(e.eclipse_from_sun && e.partition_period_s == 0.0);
+        // the pre-network scenarios leave the network axes untouched
+        let l = NetworkConfig::preset(FaultScenario::Lossy, 1.0);
+        assert!(l.is_nop());
     }
 
     #[test]

@@ -14,11 +14,47 @@
 //! * **HAP failures** — a PS node goes dark and the
 //!   [`crate::topology::HapRing`] re-heals around it.
 //!
+//! The network impairment engine ([`NetworkConfig`], PR 10) layers four
+//! more axes on the same delay path:
+//!
+//! * **latency jitter** — log-normal distributions around the geometric
+//!   delay, with consequent message reordering through the event queue;
+//! * **bandwidth queueing** — a FIFO [`LinkQueue`] per (endpoint-pair,
+//!   link-class) serializes contending transfers over the residual
+//!   capacity instead of a fixed rate;
+//! * **network partitions** — scheduled windows isolate a shell, the
+//!   HAP layer or the ground segment ([`PartitionScope`]);
+//! * **Sun-vector eclipses** — umbra windows from the actual solar
+//!   ephemeris (`orbit::sun`) replace the periodic approximation.
+//!
 //! Everything is derived from the experiment seed through
 //! [`crate::util::Rng`] (never wall-clock), so the same seed reproduces
-//! bit-identical impairment timelines, and a [`FaultConfig`] with all
-//! intensities at zero is provably invisible: the plan never touches
-//! the delay path or the RNG ([`FaultPlan::enabled`] is false).
+//! bit-identical impairment timelines, and a [`FaultConfig`] +
+//! [`NetworkConfig`] with all intensities at zero is provably
+//! invisible: the plan never touches the delay path or the RNG
+//! ([`FaultPlan::enabled`] is false) and the schedule cache key
+//! normalizes to the pre-engine key.
+//!
+//! # The oracle / commit split, per axis
+//!
+//! The multi-lane event core (PR 9) probes delays concurrently and
+//! replays effects in pop order, so every axis declares which side of
+//! `FaultSchedule::channel_outcome` (pure oracle) vs
+//! `FaultPlan::commit` (per-run fold) it lives on:
+//!
+//! * *loss + exponential backoff*: oracle — channel-state hash per
+//!   (link, coherence window); commit counts `losses` / `retransmits` /
+//!   `retry_drops` once per event.
+//! * *jitter*: oracle — the draw is hash-derived per channel event
+//!   (order-independent); commit counts `reorders` against the
+//!   per-link last-arrival watermark.
+//! * *partitions / eclipses / outages / churn*: oracle — deferral to
+//!   the next clear instant of precomputed windows; commit counts
+//!   `partition_hits` / `eclipse_blocked` / `deferrals`.
+//! * *queueing*: the **one stateful axis** — the oracle supplies the
+//!   pure terms (send instant, service time, queue identity), the FIFO
+//!   wait itself is folded in commit order. Active queues therefore
+//!   force single-lane runs ([`FaultPlan::queueing_active`]).
 //!
 //! Integration: `coordinator::RunState` carries a [`FaultPlan`] and
 //! the env routes every `site_link_delay` / `isl_hop_delay` /
@@ -31,9 +67,11 @@
 //! intensities.
 
 pub mod config;
+pub mod network;
 pub mod plan;
 pub mod schedule;
 
-pub use config::{FaultConfig, FaultScenario};
-pub use plan::{FaultPlan, FaultSchedule, FaultStats, LinkClass, LinkOutcome};
+pub use config::{FaultConfig, FaultScenario, NetworkConfig, PartitionScope};
+pub use network::{partition_blocks, LinkQueue, NetWorld, QueueOutcome};
+pub use plan::{ChannelOutcome, FaultPlan, FaultSchedule, FaultStats, LinkClass, LinkOutcome};
 pub use schedule::{ChurnSchedule, OutageWindows};

@@ -1,0 +1,276 @@
+//! The network impairment engine: latency jitter, per-link bandwidth
+//! queueing, scheduled partitions and Sun-vector eclipses
+//! ([`NetworkConfig`](super::config::NetworkConfig)).
+//!
+//! Every axis keeps the fault subsystem's two contracts:
+//!
+//! * **Zero intensity is bit-identical.** A nominal `NetworkConfig`
+//!   never touches the delay path, the RNG or the schedule cache key —
+//!   runs are provably byte-equal to the pre-engine code
+//!   (`tests/network_equivalence.rs`).
+//! * **Pure oracle / per-run commit.** The *pure* terms — jitter draws
+//!   (hash-derived per (link, coherence window)), partition deferral
+//!   and umbra deferral — live in `FaultSchedule::channel_outcome`, so
+//!   probe lanes evaluate them concurrently and order-independently.
+//!   The *stateful* terms — FIFO queue waits, reorder detection and
+//!   every counter — live in `FaultPlan::commit`, folded exactly once
+//!   per channel event in serial replay order. Queueing is the one axis
+//!   whose outcome depends on commit order, so an active queue forces
+//!   the run to a single lane (`SimEnv::lanes`), the same way the
+//!   reference path does.
+//!
+//! This module holds the order-sensitive half: the [`LinkQueue`] a
+//! `FaultPlan` keeps per (endpoint-pair, link-class), and the partition
+//! scope test shared by the oracle and the tests. The pure halves live
+//! where their inputs are: jitter and window deferral in
+//! `faults::plan`, the solar ephemeris in `orbit::sun`.
+
+use super::config::PartitionScope;
+use super::plan::LinkClass;
+use crate::orbit::WalkerConstellation;
+
+/// Node-layout inputs of the network axes, alongside the `plane_of`
+/// mapping the fault schedule already takes: which shell each satellite
+/// flies in (partition scope `Shell`), which sites are HAPs (scopes
+/// `Ground`/`Hap`), and the constellation geometry for umbra windows.
+#[derive(Clone, Copy)]
+pub struct NetWorld<'a> {
+    /// Orbital shell per satellite id (empty = everything shell 0).
+    pub shell_of: &'a [usize],
+    /// Which sites are HAPs (true) vs ground stations (false; empty =
+    /// all ground).
+    pub hap_site: &'a [bool],
+    /// Constellation geometry, needed when `eclipse_from_sun` computes
+    /// umbra windows at schedule build time.
+    pub constellation: Option<&'a WalkerConstellation>,
+}
+
+impl NetWorld<'static> {
+    /// No layout information: single-shell, all-ground, no geometry.
+    /// What the legacy build entry points pass — only valid alongside a
+    /// nominal `NetworkConfig`.
+    pub fn empty() -> Self {
+        NetWorld { shell_of: &[], hap_site: &[], constellation: None }
+    }
+}
+
+/// Does a partition of `scope` cut this link? Pure — both the channel
+/// oracle and the tests query it.
+///
+/// * `Ground` isolates every ground-station site: SAT↔GS star links and
+///   any IHL leg touching a GS are unreachable; the HAP layer keeps
+///   flying and relaying.
+/// * `Hap` isolates the HAP layer: SAT↔HAP links and the IHL backbone
+///   go dark; SAT↔GS links survive.
+/// * `Shell` cuts shell `shell` off the rest of the system: its star
+///   links and every boundary-crossing ISL are unreachable, while
+///   intra-shell ISLs keep working (the island stays internally
+///   connected, but isolated).
+pub fn partition_blocks(
+    scope: PartitionScope,
+    shell: usize,
+    class: &LinkClass,
+    shell_of: &[usize],
+    hap_site: &[bool],
+) -> bool {
+    let is_hap = |site: usize| hap_site.get(site).copied().unwrap_or(false);
+    let in_shell = |sat: usize| shell_of.get(sat).copied().unwrap_or(0) == shell;
+    match (scope, *class) {
+        (PartitionScope::Ground, LinkClass::SatSite { site, .. }) => !is_hap(site),
+        (PartitionScope::Ground, LinkClass::Ihl { site_a, site_b }) => {
+            !is_hap(site_a) || !is_hap(site_b)
+        }
+        (PartitionScope::Ground, LinkClass::Isl { .. }) => false,
+        (PartitionScope::Hap, LinkClass::SatSite { site, .. }) => is_hap(site),
+        (PartitionScope::Hap, LinkClass::Ihl { site_a, site_b }) => {
+            is_hap(site_a) || is_hap(site_b)
+        }
+        (PartitionScope::Hap, LinkClass::Isl { .. }) => false,
+        (PartitionScope::Shell, LinkClass::SatSite { sat, .. }) => in_shell(sat),
+        (PartitionScope::Shell, LinkClass::Isl { sat_a, sat_b }) => {
+            in_shell(sat_a) != in_shell(sat_b)
+        }
+        (PartitionScope::Shell, LinkClass::Ihl { .. }) => false,
+    }
+}
+
+/// What one offer did at a [`LinkQueue`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QueueOutcome {
+    /// Head-of-line wait before the transfer starts transmitting.
+    pub wait_s: f64,
+    /// The wait exceeded the cap: a typed drop — the transfer never
+    /// occupies the link and its model never arrives.
+    pub dropped: bool,
+}
+
+/// One link's FIFO transmission queue: each committed transfer occupies
+/// the link for its service time, later offers wait for the residual
+/// capacity instead of all seeing a fixed rate.
+///
+/// Deterministic and order-sensitive by design: offers arrive in the
+/// run's serial commit order (event pop order, nondecreasing time), so
+/// a queue never needs timers or reentrancy — `busy_until` is the whole
+/// state. Conservation (`serviced == offered - dropped`, in bits and in
+/// offers) and FIFO start order are pinned by a seeded property test
+/// below.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkQueue {
+    busy_until_s: f64,
+    offered_bits: u64,
+    serviced_bits: u64,
+    dropped_bits: u64,
+    offers: u64,
+    drops: u64,
+}
+
+impl LinkQueue {
+    /// Offer a `bits`-sized transfer at time `t` that will occupy the
+    /// link for `service_s` once it starts. Returns the FIFO wait, or a
+    /// typed drop when the wait would exceed `max_wait_s` (> 0).
+    pub fn offer(&mut self, t: f64, bits: u64, service_s: f64, max_wait_s: f64) -> QueueOutcome {
+        self.offers += 1;
+        self.offered_bits += bits;
+        let start = self.busy_until_s.max(t);
+        let wait = start - t;
+        if max_wait_s > 0.0 && wait > max_wait_s {
+            self.drops += 1;
+            self.dropped_bits += bits;
+            return QueueOutcome { wait_s: wait, dropped: true };
+        }
+        self.busy_until_s = start + service_s.max(0.0);
+        self.serviced_bits += bits;
+        QueueOutcome { wait_s: wait, dropped: false }
+    }
+
+    /// The instant the link finishes its last accepted transfer.
+    pub fn busy_until_s(&self) -> f64 {
+        self.busy_until_s
+    }
+
+    pub fn offered_bits(&self) -> u64 {
+        self.offered_bits
+    }
+
+    pub fn serviced_bits(&self) -> u64 {
+        self.serviced_bits
+    }
+
+    pub fn dropped_bits(&self) -> u64 {
+        self.dropped_bits
+    }
+
+    pub fn offers(&self) -> u64 {
+        self.offers
+    }
+
+    pub fn drops(&self) -> u64 {
+        self.drops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn queue_serializes_concurrent_offers_fifo() {
+        let mut q = LinkQueue::default();
+        let a = q.offer(0.0, 100, 10.0, 0.0);
+        assert_eq!(a, QueueOutcome { wait_s: 0.0, dropped: false });
+        // offered while busy: waits for the residual capacity
+        let b = q.offer(1.0, 100, 10.0, 0.0);
+        assert_eq!(b, QueueOutcome { wait_s: 9.0, dropped: false });
+        let c = q.offer(2.0, 100, 10.0, 0.0);
+        assert_eq!(c, QueueOutcome { wait_s: 18.0, dropped: false });
+        // offered after the backlog drains: untouched
+        let d = q.offer(40.0, 100, 10.0, 0.0);
+        assert_eq!(d, QueueOutcome { wait_s: 0.0, dropped: false });
+        assert_eq!(q.serviced_bits(), 400);
+    }
+
+    #[test]
+    fn queue_cap_surfaces_typed_drops() {
+        let mut q = LinkQueue::default();
+        q.offer(0.0, 10, 100.0, 30.0);
+        let dropped = q.offer(1.0, 10, 100.0, 30.0);
+        assert!(dropped.dropped, "99 s wait exceeds the 30 s cap");
+        // a drop never occupies the link: the next offer sees the
+        // first transfer's backlog only
+        let after = q.offer(50.0, 10, 100.0, 60.0);
+        assert_eq!(after, QueueOutcome { wait_s: 50.0, dropped: false });
+        assert_eq!(q.offers(), 3);
+        assert_eq!(q.drops(), 1);
+        assert_eq!(q.offered_bits(), 30);
+        assert_eq!(q.serviced_bits(), 20);
+        assert_eq!(q.dropped_bits(), 10);
+    }
+
+    #[test]
+    fn queue_conservation_and_fifo_order_hold_under_random_offers() {
+        // the satellite-task proptest: bits serviced == bits offered -
+        // typed drops, and accepted transfers start in FIFO order, for
+        // random concurrent offer sequences
+        forall(|rng| {
+            let mut q = LinkQueue::default();
+            let n = 1 + rng.below(60);
+            let max_wait = if rng.f64() < 0.5 { 0.0 } else { rng.range_f64(1.0, 50.0) };
+            let mut t = 0.0;
+            let mut last_start = f64::NEG_INFINITY;
+            for _ in 0..n {
+                t += rng.range_f64(0.0, 8.0);
+                let bits = rng.below(10_000) as u64;
+                let service = rng.range_f64(0.0, 12.0);
+                let out = q.offer(t, bits, service, max_wait);
+                assert!(out.wait_s >= 0.0);
+                if !out.dropped {
+                    let start = t + out.wait_s;
+                    assert!(
+                        start >= last_start,
+                        "FIFO start order violated: {start} < {last_start}"
+                    );
+                    last_start = start;
+                    if max_wait > 0.0 {
+                        assert!(out.wait_s <= max_wait);
+                    }
+                }
+            }
+            assert_eq!(
+                q.serviced_bits(),
+                q.offered_bits() - q.dropped_bits(),
+                "queue must conserve bits"
+            );
+            assert!(q.drops() <= q.offers());
+        });
+    }
+
+    #[test]
+    fn partition_scopes_cut_the_right_links() {
+        let shell_of = [0, 0, 1, 1];
+        let hap_site = [true, false]; // site 0 = HAP, site 1 = GS
+        let sat_hap = LinkClass::SatSite { sat: 0, site: 0 };
+        let sat_gs = LinkClass::SatSite { sat: 0, site: 1 };
+        let isl_intra = LinkClass::Isl { sat_a: 2, sat_b: 3 };
+        let isl_cross = LinkClass::Isl { sat_a: 1, sat_b: 2 };
+        let ihl = LinkClass::Ihl { site_a: 0, site_b: 1 };
+        let blocks = |scope, shell, class: &LinkClass| {
+            partition_blocks(scope, shell, class, &shell_of, &hap_site)
+        };
+        // ground segment out: GS links dark, HAP layer keeps relaying
+        assert!(blocks(PartitionScope::Ground, 0, &sat_gs));
+        assert!(!blocks(PartitionScope::Ground, 0, &sat_hap));
+        assert!(blocks(PartitionScope::Ground, 0, &ihl), "IHL leg touches a GS");
+        assert!(!blocks(PartitionScope::Ground, 0, &isl_cross));
+        // HAP layer out: the backbone and HAP star links go dark
+        assert!(blocks(PartitionScope::Hap, 0, &sat_hap));
+        assert!(!blocks(PartitionScope::Hap, 0, &sat_gs));
+        assert!(blocks(PartitionScope::Hap, 0, &ihl));
+        // shell 1 isolated: boundary ISLs cut, the island survives
+        assert!(blocks(PartitionScope::Shell, 1, &isl_cross));
+        assert!(!blocks(PartitionScope::Shell, 1, &isl_intra));
+        assert!(blocks(PartitionScope::Shell, 1, &LinkClass::SatSite { sat: 2, site: 0 }));
+        assert!(!blocks(PartitionScope::Shell, 1, &sat_hap));
+        assert!(!blocks(PartitionScope::Shell, 1, &ihl));
+    }
+}

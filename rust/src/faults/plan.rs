@@ -2,12 +2,20 @@
 //! against, plus the per-transfer injection oracle.
 //!
 //! Split along the sweep axis (PR 2): [`FaultSchedule`] is the
-//! immutable, `Send + Sync` timeline — outage windows, churn intervals
-//! and the channel-state seed, all precomputed from `(config, seed)` at
-//! build time — while [`FaultPlan`] wraps it in an `Arc` and adds the
-//! per-run mutable counters (`seen` channel events, [`FaultStats`]).
-//! Runs that share a `(config, seed)` pair can therefore share one
-//! schedule without sharing accounting.
+//! immutable, `Send + Sync` timeline — outage windows, churn intervals,
+//! partition windows, Sun-vector umbra windows and the channel-state
+//! seed, all precomputed from `(config, seed)` at build time — while
+//! [`FaultPlan`] wraps it in an `Arc` and adds the per-run mutable
+//! state (`seen` channel events, the FIFO [`LinkQueue`]s, reorder
+//! tracking, [`FaultStats`]). Runs that share a `(config, seed)` pair
+//! can therefore share one schedule without sharing accounting.
+//!
+//! The network axes ([`NetworkConfig`], PR 10) keep the PR-9 replay
+//! split: jitter, partition deferral and umbra deferral are pure terms
+//! of [`FaultSchedule::channel_outcome`]; queue waits, reorder counts
+//! and every counter fold in [`FaultPlan::commit`]. Queueing is the one
+//! order-sensitive axis, so an active queue forces single-lane runs
+//! ([`FaultPlan::queueing_active`]).
 //!
 //! [`FaultPlan`] is carried by `coordinator::RunState`; the env's
 //! `site_link_delay` / `isl_hop_delay` / `ihl_hop_delay` route every
@@ -16,8 +24,10 @@
 //! config is a no-op the plan never draws from the RNG and returns the
 //! base delay unchanged — the disabled subsystem is provably invisible.
 
-use super::config::FaultConfig;
+use super::config::{FaultConfig, NetworkConfig, PartitionScope};
+use super::network::{partition_blocks, LinkQueue, NetWorld};
 use super::schedule::{exp_draw, ChurnSchedule, OutageWindows};
+use crate::orbit::WalkerConstellation;
 use crate::sim::{Event, EventKind, EventSink};
 use crate::util::Rng;
 use std::collections::HashMap;
@@ -56,7 +66,8 @@ pub struct LinkOutcome {
 /// [`FaultPlan::commit`] with bit-identical results.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ChannelOutcome {
-    /// Effective delay replacing the clean link delay.
+    /// Effective delay replacing the clean link delay (before any
+    /// per-run queue wait, which [`FaultPlan::commit`] folds in).
     pub delay_s: f64,
     /// Retransmission attempts this transfer suffered.
     pub retransmits: u32,
@@ -69,6 +80,27 @@ pub struct ChannelOutcome {
     /// Whether an outage window (not just endpoint churn) contributed
     /// to the deferral.
     pub outage_hit: bool,
+    /// The deferred send instant (`t + deferred_s`) — the time the
+    /// commit side offers this transfer to its link queue.
+    pub send_t: f64,
+    /// Link occupancy under bandwidth queueing
+    /// (`queue_service_factor * clean_delay`; 0 when queueing is off).
+    pub service_s: f64,
+    /// Window-independent identity of the (endpoint-pair, link-class) —
+    /// the key of the FIFO [`LinkQueue`] and of reorder tracking.
+    pub queue_key: u64,
+    /// Log-normal latency jitter already folded into `delay_s`
+    /// (0 when `jitter_sigma` is 0; may be negative).
+    pub jitter_s: f64,
+    /// Whether a scheduled network partition contributed to the
+    /// deferral.
+    pub partition_hit: bool,
+    /// Whether a Sun-vector umbra window contributed to the deferral.
+    pub eclipse_hit: bool,
+    /// The retry budget was exhausted: a typed drop — `delay_s` lands
+    /// the arrival past every horizon so the strategies' past-horizon
+    /// discard applies (never an infinite retry loop).
+    pub dropped: bool,
 }
 
 /// Cumulative injection accounting for one run (reported in
@@ -94,6 +126,19 @@ pub struct FaultStats {
     /// (satellite deaths + HAP failures) — a schedule property, set at
     /// plan construction rather than accumulated per transfer.
     pub churn_deaths: u64,
+    /// Total FIFO queueing delay under bandwidth contention, seconds.
+    pub queued_s: f64,
+    /// Transfers dropped because their queue wait exceeded the cap.
+    pub queue_drops: u64,
+    /// Channel events deferred by a scheduled network partition.
+    pub partition_hits: u64,
+    /// Arrivals that landed before an earlier-committed arrival on the
+    /// same link (message reordering under latency jitter).
+    pub reorders: u64,
+    /// Channel events deferred by a Sun-vector umbra window.
+    pub eclipse_blocked: u64,
+    /// Transfers dropped after exhausting their retransmission budget.
+    pub retry_drops: u64,
 }
 
 /// Never defer a transfer more than this far past the horizon (keeps
@@ -106,10 +151,15 @@ const DEFER_CAP_SLACK_S: f64 = 7200.0;
 /// re-rolling the dice per query.
 const LOSS_COHERENCE_S: f64 = 1.0;
 
+/// Salt separating the latency-jitter stream from the loss stream of
+/// the same channel event (both are pure functions of the channel key).
+const JITTER_SALT: u64 = 0x4A17_7E2D;
+
 /// The immutable half of the fault engine: everything precomputed from
 /// `(config, seed)` — pure data, shareable across runs and threads.
 pub struct FaultSchedule {
     cfg: FaultConfig,
+    net: NetworkConfig,
     enabled: bool,
     horizon_s: f64,
     /// Seed for the per-(link, window) channel-state hash — loss draws
@@ -125,19 +175,41 @@ pub struct FaultSchedule {
     /// constellations have non-uniform plane sizes, so the mapping is
     /// explicit rather than a division by `sats_per_orbit`).
     plane_of: Vec<usize>,
+    /// Scheduled partition windows (`OutageWindows::none()` when off);
+    /// which links they cut is decided by `net.partition_scope` over
+    /// `shell_of` / `hap_site`.
+    partition: OutageWindows,
+    /// Orbital shell per satellite id (partition scope `Shell`).
+    shell_of: Vec<usize>,
+    /// Which sites are HAPs (partition scopes `Ground` / `Hap`).
+    hap_site: Vec<bool>,
+    /// Per-satellite umbra windows from the actual Sun vector
+    /// (`orbit::sun`), precomputed at build when `eclipse_from_sun`.
+    sun_umbra: Vec<Vec<(f64, f64)>>,
 }
 
 /// Identity of a shareable [`FaultSchedule`]: every input of
-/// [`FaultSchedule::build`], with `f64`s keyed by bit pattern (configs
-/// are copied or parsed from the same text; NaN is rejected by
-/// `FaultConfig::validate`).
+/// [`FaultSchedule::build_with_network`], with `f64`s keyed by bit
+/// pattern (configs are copied or parsed from the same text; NaN is
+/// rejected by `validate`). Network inputs are normalized: a nominal
+/// `NetworkConfig` contributes all-zero fields, the layout vectors are
+/// kept only for the axes that read them (partitions) and the geometry
+/// signature only when Sun eclipses are on — so a nominal-network key
+/// is exactly the pre-engine key and old cache entries keep hitting.
 #[derive(Clone, PartialEq, Eq, Hash)]
 struct ScheduleKey {
     cfg_bits: [u64; 10],
     max_retransmits: u32,
     isl_outage: bool,
+    net_bits: [u64; 5],
+    partition_scope: u8,
+    partition_shell: usize,
+    eclipse_from_sun: bool,
     seed: u64,
     plane_of: Vec<usize>,
+    shell_of: Vec<usize>,
+    hap_site: Vec<bool>,
+    geom_sig: u64,
     n_sites: usize,
     horizon_bits: u64,
 }
@@ -145,11 +217,17 @@ struct ScheduleKey {
 impl ScheduleKey {
     fn of(
         cfg: &FaultConfig,
+        net: &NetworkConfig,
         seed: u64,
         plane_of: &[usize],
+        world: &NetWorld,
         n_sites: usize,
         horizon_s: f64,
     ) -> Self {
+        let net_on = !net.is_nop();
+        let partition_on =
+            net_on && net.partition_period_s > 0.0 && net.partition_duration_s > 0.0;
+        let eclipse_on = net_on && net.eclipse_from_sun;
         ScheduleKey {
             cfg_bits: [
                 cfg.loss_prob.to_bits(),
@@ -165,12 +243,59 @@ impl ScheduleKey {
             ],
             max_retransmits: cfg.max_retransmits,
             isl_outage: cfg.isl_outage,
+            net_bits: if net_on {
+                [
+                    net.jitter_sigma.to_bits(),
+                    net.queue_service_factor.to_bits(),
+                    net.queue_max_wait_s.to_bits(),
+                    net.partition_period_s.to_bits(),
+                    net.partition_duration_s.to_bits(),
+                ]
+            } else {
+                [0; 5]
+            },
+            partition_scope: if partition_on {
+                match net.partition_scope {
+                    PartitionScope::Ground => 0,
+                    PartitionScope::Hap => 1,
+                    PartitionScope::Shell => 2,
+                }
+            } else {
+                0
+            },
+            partition_shell: if partition_on { net.partition_shell } else { 0 },
+            eclipse_from_sun: eclipse_on,
             seed,
             plane_of: plane_of.to_vec(),
+            shell_of: if partition_on { world.shell_of.to_vec() } else { Vec::new() },
+            hap_site: if partition_on { world.hap_site.to_vec() } else { Vec::new() },
+            geom_sig: if eclipse_on {
+                geom_signature(world.constellation, plane_of.len())
+            } else {
+                0
+            },
             n_sites,
             horizon_bits: horizon_s.to_bits(),
         }
     }
+}
+
+/// Positional fingerprint of the constellation geometry — part of the
+/// schedule key when Sun-vector eclipse windows are baked in, so two
+/// scenarios sharing fault knobs but flying different orbits never
+/// share umbra timelines.
+fn geom_signature(c: Option<&WalkerConstellation>, n_sats: usize) -> u64 {
+    let Some(c) = c else { return 0 };
+    let mut h = 0xEC11_u64;
+    for sat in 0..n_sats.min(c.len()) {
+        for t in [0.0, 1000.0] {
+            let p = c.position(sat, t);
+            for v in [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()] {
+                h = mix64(h ^ v.wrapping_mul(0x9E3779B97F4A7C15));
+            }
+        }
+    }
+    h
 }
 
 /// Cache of per-key build cells (the `coordinator::Geometry` pattern):
@@ -202,6 +327,7 @@ impl FaultSchedule {
     pub fn disabled() -> Self {
         FaultSchedule {
             cfg: FaultConfig::nominal(),
+            net: NetworkConfig::nominal(),
             enabled: false,
             horizon_s: 0.0,
             channel_seed: 0,
@@ -210,11 +336,17 @@ impl FaultSchedule {
             sat_churn: Vec::new(),
             hap_churn: Vec::new(),
             plane_of: Vec::new(),
+            partition: OutageWindows::none(),
+            shell_of: Vec::new(),
+            hap_site: Vec::new(),
+            sun_umbra: Vec::new(),
         }
     }
 
-    /// Build the impairment timeline. `plane_of` maps each satellite id
-    /// to its global orbital-plane index (one entry per satellite; see
+    /// Build the impairment timeline with a nominal network config (the
+    /// pre-engine entry point; see [`Self::build_with_network`]).
+    /// `plane_of` maps each satellite id to its global orbital-plane
+    /// index (one entry per satellite; see
     /// `WalkerConstellation::plane_of`). All randomness comes from
     /// `seed`: the same seed gives bit-identical schedules and
     /// per-transfer draws for any strategy with deterministic call
@@ -226,9 +358,34 @@ impl FaultSchedule {
         n_sites: usize,
         horizon_s: f64,
     ) -> Self {
-        if cfg.is_nop() {
+        Self::build_with_network(
+            cfg,
+            &NetworkConfig::nominal(),
+            seed,
+            plane_of,
+            &NetWorld::empty(),
+            n_sites,
+            horizon_s,
+        )
+    }
+
+    /// Build the impairment timeline including the network axes. The
+    /// RNG draw order is exactly [`Self::build`]'s — the network terms
+    /// are hash-derived (partition phase) or pure geometry (umbra
+    /// windows), so a nominal `net` yields a bit-identical schedule.
+    pub fn build_with_network(
+        cfg: &FaultConfig,
+        net: &NetworkConfig,
+        seed: u64,
+        plane_of: &[usize],
+        world: &NetWorld,
+        n_sites: usize,
+        horizon_s: f64,
+    ) -> Self {
+        if cfg.is_nop() && net.is_nop() {
             let mut sched = Self::disabled();
             sched.cfg = *cfg;
+            sched.net = *net;
             return sched;
         }
         let n_sats = plane_of.len();
@@ -271,8 +428,33 @@ impl FaultSchedule {
             })
             .collect();
 
+        // scheduled partitions: one global window train whose phase is
+        // hash-derived from the channel seed (never an RNG draw, so the
+        // legacy draw order above is untouched)
+        let partition = if net.partition_period_s > 0.0 && net.partition_duration_s > 0.0 {
+            let frac =
+                (mix64(channel_seed ^ 0x9A27_1710) >> 11) as f64 / (1u64 << 53) as f64;
+            OutageWindows {
+                period_s: net.partition_period_s,
+                duration_s: net.partition_duration_s,
+                phase_s: frac * net.partition_period_s,
+            }
+        } else {
+            OutageWindows::none()
+        };
+
+        // ground-truth eclipses: per-satellite umbra windows from the
+        // actual Sun vector, pure geometry precomputed once per key
+        let sun_umbra = match (net.eclipse_from_sun, world.constellation) {
+            (true, Some(c)) => (0..n_sats.min(c.len()))
+                .map(|sat| crate::orbit::umbra_windows(c, sat, horizon_s))
+                .collect(),
+            _ => Vec::new(),
+        };
+
         FaultSchedule {
             cfg: *cfg,
+            net: *net,
             enabled: true,
             horizon_s,
             channel_seed,
@@ -287,6 +469,10 @@ impl FaultSchedule {
                 horizon_s,
             ),
             plane_of: plane_of.to_vec(),
+            partition,
+            shell_of: world.shell_of.to_vec(),
+            hap_site: world.hap_site.to_vec(),
+            sun_umbra,
         }
     }
 
@@ -304,25 +490,52 @@ impl FaultSchedule {
         n_sites: usize,
         horizon_s: f64,
     ) -> Arc<FaultSchedule> {
-        if cfg.is_nop() {
+        Self::shared_with_network(
+            cfg,
+            &NetworkConfig::nominal(),
+            seed,
+            plane_of,
+            &NetWorld::empty(),
+            n_sites,
+            horizon_s,
+        )
+    }
+
+    /// [`Self::shared`] including the network axes. The cache key is
+    /// normalized so a nominal `net` resolves to exactly the pre-engine
+    /// key (see [`ScheduleKey`]).
+    pub fn shared_with_network(
+        cfg: &FaultConfig,
+        net: &NetworkConfig,
+        seed: u64,
+        plane_of: &[usize],
+        world: &NetWorld,
+        n_sites: usize,
+        horizon_s: f64,
+    ) -> Arc<FaultSchedule> {
+        if cfg.is_nop() && net.is_nop() {
             let mut sched = Self::disabled();
             sched.cfg = *cfg;
+            sched.net = *net;
             return Arc::new(sched);
         }
-        let key = ScheduleKey::of(cfg, seed, plane_of, n_sites, horizon_s);
+        let key = ScheduleKey::of(cfg, net, seed, plane_of, world, n_sites, horizon_s);
         let cell: ScheduleCell = {
             let mut map = schedule_cache().lock().unwrap();
             map.entry(key.clone()).or_default().clone()
         };
         cell.get_or_init(|| {
             *schedule_build_counts().lock().unwrap().entry(key).or_insert(0) += 1;
-            Arc::new(Self::build(cfg, seed, plane_of, n_sites, horizon_s))
+            Arc::new(Self::build_with_network(
+                cfg, net, seed, plane_of, world, n_sites, horizon_s,
+            ))
         })
         .clone()
     }
 
-    /// How many times [`Self::shared`] actually built this key's
+    /// How many times the shared cache actually built this key's
     /// schedule (0 = never requested; 1 = the share contract held).
+    /// Keys with a nominal network config, as built by [`Self::shared`].
     pub fn shared_build_count(
         cfg: &FaultConfig,
         seed: u64,
@@ -330,12 +543,16 @@ impl FaultSchedule {
         n_sites: usize,
         horizon_s: f64,
     ) -> u64 {
-        schedule_build_counts()
-            .lock()
-            .unwrap()
-            .get(&ScheduleKey::of(cfg, seed, plane_of, n_sites, horizon_s))
-            .copied()
-            .unwrap_or(0)
+        let key = ScheduleKey::of(
+            cfg,
+            &NetworkConfig::nominal(),
+            seed,
+            plane_of,
+            &NetWorld::empty(),
+            n_sites,
+            horizon_s,
+        );
+        schedule_build_counts().lock().unwrap().get(&key).copied().unwrap_or(0)
     }
 
     pub fn enabled(&self) -> bool {
@@ -344,6 +561,19 @@ impl FaultSchedule {
 
     pub fn config(&self) -> &FaultConfig {
         &self.cfg
+    }
+
+    pub fn network(&self) -> &NetworkConfig {
+        &self.net
+    }
+
+    /// The umbra windows baked in for one satellite (empty unless
+    /// `eclipse_from_sun` was built with a constellation).
+    pub fn sun_umbra_windows(&self, sat: usize) -> &[(f64, f64)] {
+        match self.sun_umbra.get(sat) {
+            Some(ws) => ws,
+            None => &[],
+        }
     }
 
     /// Is satellite `sat` alive at `t`? (Always true when disabled.)
@@ -420,6 +650,78 @@ impl FaultSchedule {
         }
     }
 
+    /// Window-independent identity of a link — the key of its FIFO
+    /// transmission queue and its reorder tracker. Direction-normalized
+    /// like [`Self::channel_key`].
+    fn link_key(&self, class: &LinkClass) -> u64 {
+        let (tag, a, b) = match *class {
+            LinkClass::SatSite { sat, site } => (1u64, sat as u64, site as u64),
+            LinkClass::Isl { sat_a, sat_b } => {
+                (2, sat_a.min(sat_b) as u64, sat_a.max(sat_b) as u64)
+            }
+            LinkClass::Ihl { site_a, site_b } => {
+                (3, site_a.min(site_b) as u64, site_a.max(site_b) as u64)
+            }
+        };
+        let mut h = self.channel_seed ^ 0x11_4B_51;
+        for v in [tag, a, b] {
+            h = mix64(h ^ v.wrapping_mul(0x9E3779B97F4A7C15));
+        }
+        h
+    }
+
+    /// Earliest time `>= t` at which this link is not cut by a
+    /// scheduled network partition. Identity when partitions are off or
+    /// the link is outside the partitioned scope.
+    fn partition_clear(&self, class: &LinkClass, t: f64) -> f64 {
+        if self.partition.period_s <= 0.0 || self.partition.duration_s <= 0.0 {
+            return t;
+        }
+        if !partition_blocks(
+            self.net.partition_scope,
+            self.net.partition_shell,
+            class,
+            &self.shell_of,
+            &self.hap_site,
+        ) {
+            return t;
+        }
+        self.partition.clear_time(t)
+    }
+
+    /// Earliest time `>= t` at which satellite `sat` is out of Earth's
+    /// umbra (per the precomputed Sun-vector windows).
+    fn umbra_clear_sat(&self, sat: usize, t: f64) -> f64 {
+        let Some(ws) = self.sun_umbra.get(sat) else {
+            return t;
+        };
+        // windows are sorted and disjoint: find the first whose end is
+        // past t and check whether it already covers t
+        let i = ws.partition_point(|&(_, e)| e <= t);
+        match ws.get(i) {
+            Some(&(s, e)) if s <= t => e,
+            _ => t,
+        }
+    }
+
+    /// Earliest time `>= t` at which no satellite endpoint of this link
+    /// sits in Earth's umbra. Identity unless Sun-vector eclipse
+    /// windows were baked in.
+    fn eclipse_clear(&self, class: &LinkClass, t: f64) -> f64 {
+        if self.sun_umbra.is_empty() {
+            return t;
+        }
+        match *class {
+            LinkClass::SatSite { sat, .. } => self.umbra_clear_sat(sat, t),
+            LinkClass::Isl { sat_a, sat_b } => {
+                // a clear instant landing inside the partner's window
+                // converges through the transfer fixpoint
+                self.umbra_clear_sat(sat_a, t).max(self.umbra_clear_sat(sat_b, t))
+            }
+            LinkClass::Ihl { .. } => t,
+        }
+    }
+
     /// Earliest time `>= t` outside the typed per-edge outage window of
     /// ISL edge `(a, b)`. Each edge gets its own deterministic phase,
     /// hashed from the channel seed and the direction-normalized
@@ -471,12 +773,16 @@ impl FaultSchedule {
     /// serial replay commits the identical outcome via
     /// [`FaultPlan::commit`].
     pub fn channel_outcome(&self, class: &LinkClass, t: f64, base_delay_s: f64) -> ChannelOutcome {
-        // -- deferral: availability + outage, to a fixpoint --
+        // -- deferral: availability + outage + partition + umbra, to a
+        // fixpoint (the network clears are identity when their axis is
+        // off, so legacy configs converge through the same iterates) --
         let mut start = t;
         for _ in 0..4 {
             let before = start;
             start = self.avail_time(class, start);
             start = self.outage_clear(class, start);
+            start = self.partition_clear(class, start);
+            start = self.eclipse_clear(class, start);
             if start == before {
                 break;
             }
@@ -485,27 +791,61 @@ impl FaultSchedule {
         if start > cap {
             start = cap;
         }
-        // -- loss + retransmission from the channel state at send time --
+        // -- loss + retransmission from the channel state at send time:
+        // bounded exponential backoff with seeded jitter per attempt; a
+        // still-lossy channel past the budget is a typed drop, never a
+        // longer loop --
         let key = self.channel_key(class, start);
+        let backoff_s = self.cfg.retransmit_backoff_s;
         let mut retransmits = 0u32;
+        let mut retry_wait_s = 0.0;
+        let mut dropped = false;
         if self.cfg.loss_prob > 0.0 {
             let mut chan = Rng::new(key);
-            while retransmits < self.cfg.max_retransmits && chan.f64() < self.cfg.loss_prob {
+            while chan.f64() < self.cfg.loss_prob {
+                if retransmits >= self.cfg.max_retransmits {
+                    dropped = true;
+                    break;
+                }
                 retransmits += 1;
+                // attempt i backs off backoff * 2^(i-1), jittered by a
+                // seeded [0.75, 1.25) factor to decorrelate contenders
+                let expo = (1u64 << (retransmits - 1).min(6)) as f64;
+                retry_wait_s += backoff_s * expo * (0.75 + 0.5 * chan.f64());
             }
         }
-        let backoff_s = self.cfg.retransmit_backoff_s;
-        let delay =
-            (start - t) + base_delay_s + retransmits as f64 * (backoff_s + base_delay_s);
+        // -- log-normal latency jitter, hash-derived per channel event
+        // so draws are order-independent and idempotent per window --
+        let jitter_s = if self.net.jitter_sigma > 0.0 {
+            let z = Rng::new(mix64(key ^ JITTER_SALT)).gaussian();
+            base_delay_s * ((self.net.jitter_sigma * z).exp() - 1.0)
+        } else {
+            0.0
+        };
+        let deferred_s = start - t;
+        let delay = if dropped {
+            // the model never arrives: land past every horizon so the
+            // strategies' past-horizon discard applies
+            (cap - t).max(0.0) + DEFER_CAP_SLACK_S + base_delay_s
+        } else {
+            deferred_s + base_delay_s + jitter_s + retransmits as f64 * base_delay_s + retry_wait_s
+        };
         ChannelOutcome {
             delay_s: delay,
             retransmits,
             key,
-            deferred_s: start - t,
-            // attribute the deferral: did an outage window (not just
-            // endpoint churn) push the send time? pure re-query of the
-            // deterministic window oracle.
+            deferred_s,
+            // attribute the deferral: did an outage window / partition /
+            // umbra (not just endpoint churn) push the send time? pure
+            // re-queries of the deterministic window oracles.
             outage_hit: self.outage_clear(class, t) > t,
+            send_t: start,
+            service_s: self.net.queue_service_factor * base_delay_s,
+            queue_key: self.link_key(class),
+            jitter_s,
+            partition_hit: self.partition_clear(class, t) > t,
+            eclipse_hit: self.eclipse_clear(class, t) > t,
+            dropped,
         }
     }
 
@@ -547,11 +887,23 @@ impl FaultSchedule {
 }
 
 /// The deterministic fault engine one run carries: a shared immutable
-/// [`FaultSchedule`] plus this run's observation set and accounting.
+/// [`FaultSchedule`] plus this run's observation set, FIFO link queues
+/// and accounting.
 pub struct FaultPlan {
     schedule: Arc<FaultSchedule>,
-    /// Channel events already observed (stats idempotency).
-    seen: std::collections::HashSet<u64>,
+    /// Channel events already observed, each with its committed queue
+    /// wait (0 without queueing) — stats idempotency *and* delay
+    /// idempotency: repeated probes of one event see one answer.
+    seen: HashMap<u64, f64>,
+    /// FIFO transmission queue per (endpoint-pair, link-class), the one
+    /// order-sensitive axis (active queues force single-lane runs).
+    queues: HashMap<u64, LinkQueue>,
+    /// Latest committed arrival per link (reorder detection under
+    /// latency jitter).
+    last_arrival: HashMap<u64, f64>,
+    /// Model size offered to the link queues (set by the env; 0 keeps
+    /// the bit ledger empty without changing any wait).
+    payload_bits: u64,
     stats: FaultStats,
 }
 
@@ -598,9 +950,31 @@ impl FaultPlan {
         };
         FaultPlan {
             schedule,
-            seen: std::collections::HashSet::new(),
+            seen: HashMap::new(),
+            queues: HashMap::new(),
+            last_arrival: HashMap::new(),
+            payload_bits: 0,
             stats,
         }
+    }
+
+    /// Model size the link queues account per transfer (pure ledger —
+    /// waits depend on service time only).
+    pub fn set_payload_bits(&mut self, bits: u64) {
+        self.payload_bits = bits;
+    }
+
+    /// Is per-link bandwidth queueing active? Queue waits depend on
+    /// commit order, so an active queue forces the run to a single lane
+    /// (`SimEnv::lanes`) — every other axis stays pure and probe-safe.
+    pub fn queueing_active(&self) -> bool {
+        self.schedule.enabled && self.schedule.net.queue_service_factor > 0.0
+    }
+
+    /// The queue wait committed for a channel event (0 for unseen keys
+    /// and for every axis but queueing).
+    pub fn committed_wait(&self, key: u64) -> f64 {
+        self.seen.get(&key).copied().unwrap_or(0.0)
     }
 
     /// The immutable timeline this plan injects from.
@@ -665,31 +1039,74 @@ impl FaultPlan {
         }
         let out = self.schedule.channel_outcome(&class, t, base_delay_s);
         let newly_observed = self.commit(&out);
-        LinkOutcome { delay_s: out.delay_s, retransmits: out.retransmits, newly_observed }
+        LinkOutcome {
+            delay_s: out.delay_s + self.committed_wait(out.key),
+            retransmits: out.retransmits,
+            newly_observed,
+        }
     }
 
     /// Fold one pure [`ChannelOutcome`] (from
     /// [`FaultSchedule::channel_outcome`], possibly computed on a probe
-    /// lane) into this run's accounting. Returns whether the channel
-    /// event was newly observed. `transfer` ≡ `channel_outcome` +
-    /// `commit`, bit for bit — the replay contract the lane probes
-    /// stand on.
+    /// lane) into this run's accounting — counters, the FIFO link
+    /// queues and reorder tracking. Returns whether the channel event
+    /// was newly observed; the committed queue wait is readable via
+    /// [`Self::committed_wait`]. `transfer` ≡ `channel_outcome` +
+    /// `commit` + `committed_wait`, bit for bit — the replay contract
+    /// the lane probes stand on.
     pub fn commit(&mut self, out: &ChannelOutcome) -> bool {
-        let newly_observed = self.seen.insert(out.key);
-        if newly_observed {
-            if out.deferred_s > 0.0 {
-                self.stats.deferrals += 1;
-                self.stats.deferred_s += out.deferred_s;
-                if out.outage_hit {
-                    self.stats.outages_hit += 1;
-                }
-            }
-            if out.retransmits > 0 {
-                self.stats.losses += 1;
-            }
-            self.stats.retransmits += out.retransmits as u64;
+        if self.seen.contains_key(&out.key) {
+            return false;
         }
-        newly_observed
+        if out.deferred_s > 0.0 {
+            self.stats.deferrals += 1;
+            self.stats.deferred_s += out.deferred_s;
+            if out.outage_hit {
+                self.stats.outages_hit += 1;
+            }
+        }
+        if out.partition_hit {
+            self.stats.partition_hits += 1;
+        }
+        if out.eclipse_hit {
+            self.stats.eclipse_blocked += 1;
+        }
+        if out.retransmits > 0 {
+            self.stats.losses += 1;
+        }
+        self.stats.retransmits += out.retransmits as u64;
+        if out.dropped {
+            self.stats.retry_drops += 1;
+        }
+        // per-link bandwidth queueing: the one order-sensitive fold,
+        // applied in serial commit order (active queues force lanes = 1)
+        let mut wait = 0.0;
+        if out.service_s > 0.0 && !out.dropped {
+            let max_wait = self.schedule.net.queue_max_wait_s;
+            let q = self.queues.entry(out.queue_key).or_default();
+            let qo = q.offer(out.send_t, self.payload_bits, out.service_s, max_wait);
+            if qo.dropped {
+                self.stats.queue_drops += 1;
+                // past-horizon arrival: the strategies' discard applies
+                wait = (self.schedule.horizon_s - out.send_t).max(0.0) + 2.0 * DEFER_CAP_SLACK_S;
+            } else {
+                wait = qo.wait_s;
+                self.stats.queued_s += wait;
+            }
+        }
+        // jitter reorders messages: count arrivals landing before an
+        // earlier-committed arrival on the same link
+        if self.schedule.net.jitter_sigma > 0.0 && !out.dropped {
+            let arrival = out.send_t - out.deferred_s + out.delay_s + wait;
+            let last = self.last_arrival.entry(out.queue_key).or_insert(f64::NEG_INFINITY);
+            if arrival < *last {
+                self.stats.reorders += 1;
+            } else {
+                *last = arrival;
+            }
+        }
+        self.seen.insert(out.key, wait);
+        true
     }
 
     /// [`Self::transfer`] for one typed ISL graph edge `(a, b)` — the
@@ -1024,7 +1441,8 @@ mod tests {
                 let a = mono.transfer(class, t, 0.2);
                 let out = split.schedule().clone().channel_outcome(&class, t, 0.2);
                 let newly = split.commit(&out);
-                assert_eq!(a.delay_s.to_bits(), out.delay_s.to_bits(), "{scenario:?} #{i}");
+                let replayed = out.delay_s + split.committed_wait(out.key);
+                assert_eq!(a.delay_s.to_bits(), replayed.to_bits(), "{scenario:?} #{i}");
                 assert_eq!(a.retransmits, out.retransmits);
                 assert_eq!(a.newly_observed, newly);
             }
@@ -1068,5 +1486,288 @@ mod tests {
                 assert!(t + out.delay_s <= 3600.0 + DEFER_CAP_SLACK_S + 1.0);
             }
         }
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_is_a_typed_drop_not_a_loop() {
+        // the satellite-task boundary test: a channel that stays lossy
+        // past the retry budget surfaces as a typed drop whose arrival
+        // lands past every horizon — never an unbounded retry loop
+        let mut cfg = FaultConfig::nominal();
+        cfg.loss_prob = 1.0; // every attempt lost, budget must bound it
+        cfg.retransmit_backoff_s = 0.05;
+        cfg.max_retransmits = 4;
+        let horizon = 3600.0;
+        let mut p = FaultPlan::new(&cfg, 17, 8, 2, 8, horizon);
+        let t = 100.0;
+        let out = p.transfer(LinkClass::SatSite { sat: 1, site: 0 }, t, 0.2);
+        assert_eq!(out.retransmits, 4, "every budgeted attempt was spent");
+        assert!(
+            t + out.delay_s > horizon + DEFER_CAP_SLACK_S,
+            "a dropped transfer must arrive past the discard horizon"
+        );
+        assert_eq!(p.stats().retry_drops, 1);
+        assert_eq!(p.stats().losses, 1);
+        assert_eq!(p.stats().retransmits, 4);
+        // idempotent like every channel event: a re-probe of the same
+        // window replays the drop without recounting it
+        let again = p.transfer(LinkClass::SatSite { sat: 1, site: 0 }, t + 0.4, 0.2);
+        assert_eq!(again.delay_s.to_bits(), out.delay_s.to_bits());
+        assert_eq!(p.stats().retry_drops, 1);
+    }
+
+    #[test]
+    fn retransmission_backoff_is_exponential_with_bounded_jitter() {
+        // attempt i waits backoff * 2^(i-1), jittered in [0.75, 1.25):
+        // a k-retransmit transfer pays between 0.75 and 1.25 times
+        // backoff * (2^k - 1) on top of deferral and re-sends
+        let mut cfg = FaultConfig::nominal();
+        cfg.loss_prob = 0.5;
+        cfg.retransmit_backoff_s = 0.1;
+        cfg.max_retransmits = 6;
+        let sched = FaultSchedule::build(&cfg, 23, &[0; 8], 2, 72.0 * 3600.0);
+        let base = 0.2;
+        let mut saw_multi = false;
+        for i in 0..400 {
+            let t = i as f64 * 3.0;
+            let out = sched.channel_outcome(&LinkClass::SatSite { sat: 0, site: 0 }, t, base);
+            if out.dropped {
+                continue;
+            }
+            let k = out.retransmits;
+            saw_multi |= k >= 2;
+            let resend = base * (1.0 + k as f64);
+            let geo = cfg.retransmit_backoff_s * ((1u64 << k) - 1) as f64;
+            let wait = out.delay_s - out.deferred_s - resend;
+            assert!(
+                wait >= 0.75 * geo - 1e-12 && wait < 1.25 * geo + 1e-12,
+                "#{i}: k={k}, backoff wait {wait} outside [{}, {})",
+                0.75 * geo,
+                1.25 * geo
+            );
+        }
+        assert!(saw_multi, "50% loss over 400 windows must back off at least twice");
+    }
+
+    #[test]
+    fn nominal_network_is_bit_identical_to_the_legacy_build() {
+        // the zero-intensity contract at the oracle level: an explicit
+        // nominal NetworkConfig (with a populated NetWorld) changes no
+        // bit of any channel outcome vs the legacy entry point
+        let cfg = FaultConfig::preset(FaultScenario::Lossy, 1.0);
+        let plane_of: Vec<usize> = (0..40).map(|s| s / 8).collect();
+        let shell_of = vec![0usize; 40];
+        let hap_site = vec![true, false];
+        let horizon = 72.0 * 3600.0;
+        let legacy = FaultSchedule::build(&cfg, 41, &plane_of, 2, horizon);
+        let net = FaultSchedule::build_with_network(
+            &cfg,
+            &NetworkConfig::nominal(),
+            41,
+            &plane_of,
+            &NetWorld { shell_of: &shell_of, hap_site: &hap_site, constellation: None },
+            2,
+            horizon,
+        );
+        for i in 0..120 {
+            let class = match i % 3 {
+                0 => LinkClass::SatSite { sat: i % 40, site: i % 2 },
+                1 => LinkClass::Isl { sat_a: i % 40, sat_b: (i + 1) % 40 },
+                _ => LinkClass::Ihl { site_a: 0, site_b: 1 },
+            };
+            let t = i as f64 * 211.7;
+            let a = legacy.channel_outcome(&class, t, 0.2);
+            let b = net.channel_outcome(&class, t, 0.2);
+            assert_eq!(a.delay_s.to_bits(), b.delay_s.to_bits(), "#{i}");
+            assert_eq!(a, b);
+            assert_eq!(b.jitter_s, 0.0);
+            assert_eq!(b.service_s, 0.0);
+            assert!(!b.partition_hit && !b.eclipse_hit);
+        }
+    }
+
+    #[test]
+    fn latency_jitter_is_seeded_idempotent_and_reorders_messages() {
+        let cfg = FaultConfig::nominal();
+        let net = NetworkConfig::preset(FaultScenario::Jitter, 1.0);
+        assert!(net.jitter_sigma > 0.0);
+        let plane_of: Vec<usize> = (0..8).collect();
+        let sched = Arc::new(FaultSchedule::build_with_network(
+            &cfg,
+            &net,
+            29,
+            &plane_of,
+            &NetWorld::empty(),
+            2,
+            72.0 * 3600.0,
+        ));
+        let class = LinkClass::SatSite { sat: 2, site: 0 };
+        // hash-derived per channel event: order-independent, idempotent,
+        // and multiplicative around the clean delay
+        let a = sched.channel_outcome(&class, 50.25, 10.0);
+        let b = sched.channel_outcome(&class, 50.75, 10.0);
+        assert_eq!(a, b, "one jitter truth per coherence window");
+        assert!(a.jitter_s != 0.0);
+        assert!(a.delay_s > 0.0, "log-normal jitter keeps delays positive");
+        let c = sched.channel_outcome(&class, 999.0, 10.0);
+        assert_ne!(a.jitter_s.to_bits(), c.jitter_s.to_bits(), "windows re-draw");
+        // consequent reordering: a long-delay link with 1 s send spacing
+        // must commit some arrival before an earlier one
+        let mut p = FaultPlan::from_schedule(sched);
+        for i in 0..300 {
+            p.transfer(class, i as f64, 10.0);
+        }
+        assert!(p.stats().reorders > 0, "σ=0.35 on a 10 s link must reorder");
+        // deterministic accounting: a twin run sees the same count
+        let twin = {
+            let mut q = FaultPlan::from_schedule(p.schedule().clone());
+            for i in 0..300 {
+                q.transfer(class, i as f64, 10.0);
+            }
+            q.stats()
+        };
+        assert_eq!(p.stats(), twin);
+    }
+
+    #[test]
+    fn partitions_defer_scoped_links_and_count_hits() {
+        let cfg = FaultConfig::nominal();
+        let net = NetworkConfig::preset(FaultScenario::Partition, 1.0);
+        assert_eq!(net.partition_scope, PartitionScope::Ground);
+        let plane_of: Vec<usize> = (0..8).map(|s| s / 4).collect();
+        let hap_site = vec![true, false]; // site 0 = HAP, site 1 = GS
+        let sched = Arc::new(FaultSchedule::build_with_network(
+            &cfg,
+            &net,
+            59,
+            &plane_of,
+            &NetWorld { shell_of: &[], hap_site: &hap_site, constellation: None },
+            2,
+            72.0 * 3600.0,
+        ));
+        let o = sched.partition;
+        assert!(o.active(), "partition preset must schedule windows");
+        let t_in = o.phase_s + 0.5 * o.duration_s;
+        let mut p = FaultPlan::from_schedule(sched);
+        // a GS star link inside the window defers to the heal instant
+        let out = p.transfer(LinkClass::SatSite { sat: 0, site: 1 }, t_in, 0.2);
+        let expect = 0.5 * o.duration_s + 0.2;
+        assert!((out.delay_s - expect).abs() < 1e-9, "{} vs {expect}", out.delay_s);
+        assert_eq!(p.stats().partition_hits, 1);
+        assert_eq!(p.stats().deferrals, 1);
+        // the HAP layer keeps flying: HAP star links and ISLs untouched
+        let out = p.transfer(LinkClass::SatSite { sat: 1, site: 0 }, t_in, 0.2);
+        assert_eq!(out.delay_s, 0.2);
+        let out = p.transfer(LinkClass::Isl { sat_a: 2, sat_b: 3 }, t_in, 0.1);
+        assert_eq!(out.delay_s, 0.1);
+        assert_eq!(p.stats().partition_hits, 1);
+    }
+
+    #[test]
+    fn sun_vector_eclipses_defer_transfers_through_umbra_windows() {
+        let c = WalkerConstellation::paper();
+        let cfg = FaultConfig::nominal();
+        let net = NetworkConfig::preset(FaultScenario::SunEclipse, 1.0);
+        assert!(net.eclipse_from_sun);
+        let horizon = 7200.0;
+        let plane_of = c.plane_of();
+        let sched = Arc::new(FaultSchedule::build_with_network(
+            &cfg,
+            &net,
+            67,
+            &plane_of,
+            &NetWorld { shell_of: &[], hap_site: &[], constellation: Some(&c) },
+            2,
+            horizon,
+        ));
+        // find a satellite with an umbra window strictly inside the
+        // horizon (most LEO sats cross the shadow within two hours)
+        let (sat, s, e) = (0..c.len())
+            .find_map(|sat| {
+                sched
+                    .sun_umbra_windows(sat)
+                    .iter()
+                    .find(|&&(s, e)| s > 1.0 && e < horizon - 1.0)
+                    .map(|&(s, e)| (sat, s, e))
+            })
+            .expect("a LEO constellation must cross Earth's shadow within 2 h");
+        let t_in = 0.5 * (s + e);
+        let mut p = FaultPlan::from_schedule(sched);
+        let out = p.transfer(LinkClass::SatSite { sat, site: 0 }, t_in, 0.2);
+        let expect = (e - t_in) + 0.2;
+        assert!((out.delay_s - expect).abs() < 1e-9, "{} vs {expect}", out.delay_s);
+        assert_eq!(p.stats().eclipse_blocked, 1);
+        // the site-to-site backbone has no satellite endpoint to shadow
+        let out = p.transfer(LinkClass::Ihl { site_a: 0, site_b: 1 }, t_in, 0.5);
+        assert_eq!(out.delay_s, 0.5);
+        // just after the exit edge the link is clear again
+        let out = p.transfer(LinkClass::SatSite { sat, site: 0 }, e + 1.0, 0.2);
+        assert_eq!(out.delay_s, 0.2);
+    }
+
+    #[test]
+    fn queueing_serializes_contending_transfers_and_replays_idempotently() {
+        let cfg = FaultConfig::nominal();
+        let net = NetworkConfig::preset(FaultScenario::Congestion, 1.0);
+        assert!(net.queue_service_factor > 0.0);
+        let plane_of: Vec<usize> = (0..8).collect();
+        let sched = Arc::new(FaultSchedule::build_with_network(
+            &cfg,
+            &net,
+            71,
+            &plane_of,
+            &NetWorld::empty(),
+            2,
+            72.0 * 3600.0,
+        ));
+        let mut p = FaultPlan::from_schedule(sched);
+        p.set_payload_bits(1_000);
+        assert!(p.queueing_active(), "congestion preset must force single-lane runs");
+        let class = LinkClass::SatSite { sat: 3, site: 0 };
+        // first transfer occupies the link for service = factor * base
+        let a = p.transfer(class, 0.0, 10.0);
+        assert_eq!(a.delay_s, 10.0, "an idle link adds no wait");
+        // a second window one second later waits for the residual 9 s
+        let b = p.transfer(class, 1.0, 10.0);
+        assert!((b.delay_s - 19.0).abs() < 1e-9, "FIFO residual wait: {}", b.delay_s);
+        assert!((p.stats().queued_s - 9.0).abs() < 1e-9);
+        // a replayed probe of the same window sees the committed wait,
+        // bit for bit, without re-offering to the queue
+        let b2 = p.transfer(class, 1.5, 10.0);
+        assert_eq!(b2.delay_s.to_bits(), b.delay_s.to_bits());
+        assert!((p.stats().queued_s - 9.0).abs() < 1e-9, "no double offer");
+        // a different link has its own queue
+        let other = p.transfer(LinkClass::SatSite { sat: 4, site: 0 }, 1.0, 10.0);
+        assert_eq!(other.delay_s, 10.0);
+        // and a nominal plan never queues
+        assert!(!FaultPlan::disabled().queueing_active());
+    }
+
+    #[test]
+    fn queue_wait_cap_surfaces_as_past_horizon_drop() {
+        let cfg = FaultConfig::nominal();
+        let mut net = NetworkConfig::preset(FaultScenario::Congestion, 1.0);
+        net.queue_max_wait_s = 5.0;
+        let plane_of: Vec<usize> = (0..8).collect();
+        let horizon = 3600.0;
+        let sched = Arc::new(FaultSchedule::build_with_network(
+            &cfg,
+            &net,
+            73,
+            &plane_of,
+            &NetWorld::empty(),
+            2,
+            horizon,
+        ));
+        let mut p = FaultPlan::from_schedule(sched);
+        let class = LinkClass::SatSite { sat: 0, site: 0 };
+        p.transfer(class, 0.0, 10.0); // occupies the link until t = 10
+        let dropped = p.transfer(class, 1.0, 10.0); // 9 s wait > 5 s cap
+        assert!(
+            1.0 + dropped.delay_s > horizon + DEFER_CAP_SLACK_S,
+            "a queue drop must arrive past the discard horizon"
+        );
+        assert_eq!(p.stats().queue_drops, 1);
+        assert_eq!(p.stats().queued_s, 0.0, "drops never accumulate wait time");
     }
 }

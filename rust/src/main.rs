@@ -4,6 +4,7 @@
 //! asyncfleo exp <name>|all [--out DIR] [--fast] [--surrogate] [--seed N] [--jobs N]
 //! asyncfleo run [--config FILE] [--scheme S] [--placement P] ...
 //! asyncfleo resilience [--out DIR] [--fast] [--surrogate] [--seed N] [--jobs N]
+//!                      [--scenarios NAME[,NAME..]]
 //! asyncfleo scenario [--list | --dump NAME | --preset NAME[,NAME..] | --all | --config FILE]
 //! asyncfleo trace [--preset NAME] [--scheme S] [--seed N] [--out FILE] [--lanes N]
 //! asyncfleo report [TRACE.jsonl]
@@ -32,14 +33,21 @@ USAGE:
                 [--model mlp|cnn] [--dataset digits|cifar]
                 [--partition iid|non-iid] [--horizon-hours H]
                 [--max-epochs N] [--seed N] [--surrogate]
-                [--fault-scenario nominal|lossy|eclipse|churn|hap-failure]
+                [--fault-scenario nominal|lossy|eclipse|churn|hap-failure
+                                  |jitter|congestion|partition|sun-eclipse]
                 [--fault-intensity X]
-      Run a single FL experiment and print its curve.
+      Run a single FL experiment and print its curve. Scenario presets
+      set both the fault knobs and the network impairment engine
+      (latency jitter, per-link queueing, partitions, Sun-vector
+      eclipses).
 
   asyncfleo resilience [--out DIR] [--fast] [--surrogate] [--seed N] [--jobs N]
-      Sweep the fault scenarios (lossy, eclipse, churn, hap-failure)
+                       [--scenarios NAME[,NAME...]]
+      Sweep the fault + network-impairment scenarios (lossy, eclipse,
+      churn, hap-failure, jitter, congestion, partition, sun-eclipse)
       across AsyncFLEO + baselines and tabulate graceful degradation
-      (alias for `exp resilience`).
+      (alias for `exp resilience`). --scenarios restricts the sweep to
+      the named subset (the nominal reference cell always runs).
 
   asyncfleo scenario --list
   asyncfleo scenario --dump NAME
@@ -145,6 +153,19 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_resilience(args: &Args) -> anyhow::Result<()> {
+    if let Some(names) = args.opt("scenarios") {
+        let filter = names
+            .split(',')
+            .map(|n| {
+                asyncfleo::faults::FaultScenario::parse(n.trim())
+                    .ok_or_else(|| anyhow::anyhow!("unknown fault scenario {:?}", n.trim()))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        return asyncfleo::experiments::resilience::run_filtered(
+            &sweep_options(args)?,
+            Some(&filter),
+        );
+    }
     run_experiment("resilience", &sweep_options(args)?)
 }
 
@@ -341,6 +362,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             .map_err(anyhow::Error::msg)?
             .unwrap_or(1.0);
         cfg.faults = asyncfleo::faults::FaultConfig::preset(scenario, intensity);
+        cfg.network = asyncfleo::faults::NetworkConfig::preset(scenario, intensity);
     } else if args.opt("fault-intensity").is_some() {
         anyhow::bail!("--fault-intensity requires --fault-scenario");
     }
@@ -398,6 +420,21 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             fs.dropped_results,
             fs.churn_deaths
         );
+        let impaired = fs.queued_s > 0.0
+            || fs.queue_drops + fs.partition_hits + fs.reorders + fs.eclipse_blocked > 0
+            || fs.retry_drops > 0;
+        if impaired {
+            println!(
+                "network: {:.1} s queued ({} queue drops), {} partition hits, \
+                 {} reorders, {} eclipse-blocked passes, {} retry-budget drops",
+                fs.queued_s,
+                fs.queue_drops,
+                fs.partition_hits,
+                fs.reorders,
+                fs.eclipse_blocked,
+                fs.retry_drops
+            );
+        }
     }
     Ok(())
 }

@@ -16,8 +16,10 @@
 //!   `contact_close`, `model_tx` (every fault-adjusted link-delay call:
 //!   src, dst, link class, base vs effective delay, retransmissions),
 //!   `relay_hop`, `aggregate` (group count, staleness, discount factor,
-//!   models folded), `model_dropped` / `model_retained`, `fault_hit`,
-//!   `eval`;
+//!   models folded), `model_dropped` / `model_retained`, `fault_hit`
+//!   (with a `kind` tag: `loss` / `defer` from the legacy axes, plus
+//!   `queue` / `queue_drop` / `partition` / `reorder` / `eclipse` /
+//!   `retry_drop` from the network impairment engine), `eval`;
 //! * **metrics registry** ([`metrics`]) — counters and fixed-bucket
 //!   histograms (staleness at aggregation, per-link busy-time and
 //!   bits, event-queue depth, delay calls, retransmissions, pool
@@ -255,11 +257,19 @@ impl RunObs {
     }
 
     /// The faults engine impaired a transfer (`kind`: `"loss"`,
-    /// `"defer"`), `n` events.
+    /// `"defer"`, or a network-impairment kind — `"queue"` /
+    /// `"queue_drop"` / `"partition"` / `"reorder"` / `"eclipse"` /
+    /// `"retry_drop"`), `n` events.
     pub fn fault_hit(&mut self, t: f64, kind: &'static str, n: u64) {
         match kind {
             "loss" => self.metrics.add("faults.loss", n),
             "defer" => self.metrics.add("faults.defer", n),
+            "queue" => self.metrics.add("faults.queue", n),
+            "queue_drop" => self.metrics.add("faults.queue_drop", n),
+            "partition" => self.metrics.add("faults.partition", n),
+            "reorder" => self.metrics.add("faults.reorder", n),
+            "eclipse" => self.metrics.add("faults.eclipse", n),
+            "retry_drop" => self.metrics.add("faults.retry_drop", n),
             _ => self.metrics.add("faults.other", n),
         }
         if self.sink.enabled() {

@@ -2,6 +2,7 @@
 //! histograms, link loads and phase timings folded into one
 //! serializable value, plus [`summarize_trace`] — the renderer behind
 //! `asyncfleo report` (staleness histogram, top links by utilization,
+//! fault/network-impairment table from the `fault_hit` record kinds,
 //! time-in-phase table, accuracy curve via [`crate::metrics::chart`]).
 //!
 //! JSON is emitted by the same hand-rolled writer as the trace
@@ -207,6 +208,7 @@ pub fn summarize_trace(trace: &str, report_json: Option<&str>) -> String {
     let mut counts: Vec<(String, u64)> = Vec::new();
     let mut horizon_s = 0.0f64;
     let mut staleness: Vec<f64> = Vec::new();
+    let mut fault_kinds: Vec<(String, u64)> = Vec::new();
     let mut links: HashMap<(String, String, String), (f64, u64)> = HashMap::new();
     let mut curve = Curve::default();
     let mut n_lines = 0u64;
@@ -249,6 +251,14 @@ pub fn summarize_trace(trace: &str, report_json: Option<&str>) -> String {
                 let e = links.entry(key).or_insert((0.0, 0));
                 e.0 += fnum(line, "delay_s").unwrap_or(0.0);
                 e.1 += 1;
+            }
+            "fault_hit" => {
+                let kind = field(line, "kind").unwrap_or("?").to_string();
+                let n = fnum(line, "n").unwrap_or(1.0) as u64;
+                match fault_kinds.iter_mut().find(|(k, _)| *k == kind) {
+                    Some((_, c)) => *c += n,
+                    None => fault_kinds.push((kind, n)),
+                }
             }
             "eval" => {
                 curve.push(CurvePoint {
@@ -314,6 +324,15 @@ pub fn summarize_trace(trace: &str, report_json: Option<&str>) -> String {
         }
         if rows.len() > 10 {
             out.push_str(&format!("  ({} more links)\n", rows.len() - 10));
+        }
+    }
+
+    // -- fault & network impairments (from fault_hit records) --
+    if !fault_kinds.is_empty() {
+        out.push_str("\n== fault & network impairments ==\n");
+        out.push_str(&format!("  {:<12} {:>8}\n", "kind", "events"));
+        for (kind, n) in &fault_kinds {
+            out.push_str(&format!("  {kind:<12} {n:>8}\n"));
         }
     }
 
@@ -426,6 +445,25 @@ mod tests {
         // without a report, phases degrade gracefully
         let s2 = summarize_trace(&trace, None);
         assert!(s2.contains("wall-clock phases unavailable"), "{s2}");
+    }
+
+    #[test]
+    fn summarize_tabulates_fault_hit_kinds() {
+        let mut obs = sample_obs();
+        obs.fault_hit(5.0, "loss", 1);
+        obs.fault_hit(6.0, "queue", 3);
+        obs.fault_hit(7.0, "queue", 2);
+        obs.fault_hit(8.0, "partition", 1);
+        let trace = obs.sink.lines().join("\n");
+        let s = summarize_trace(&trace, None);
+        assert!(s.contains("fault & network impairments"), "{s}");
+        assert!(s.contains("loss"), "{s}");
+        // the two queue records fold into one row of 5 events
+        assert!(s.contains("queue              5"), "{s}");
+        assert!(s.contains("partition"), "{s}");
+        // a trace with no fault_hit records omits the section entirely
+        let s2 = summarize_trace(&sample_obs().sink.lines().join("\n"), None);
+        assert!(!s2.contains("impairments"), "{s2}");
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod doppler;
 pub mod elements;
 pub mod ground;
 pub mod propagation;
+pub mod sun;
 pub mod visibility;
 pub mod walker;
 
@@ -32,6 +33,7 @@ pub use doppler::{doppler_shift_hz, sat_sat_doppler_hz};
 pub use elements::{OrbitalElements, EARTH_RADIUS_KM, EARTH_ROTATION_RAD_S, MU_EARTH};
 pub use ground::{GeodeticSite, SiteKind, SitePropagator};
 pub use propagation::{satellite_position_eci, satellite_velocity_eci, PlaneBasis};
+pub use sun::{in_umbra, sat_in_umbra, sun_direction_eci, umbra_windows};
 pub use visibility::{
     contact_windows, elevation_deg, max_central_angle_rad, sat_sat_los, scan_grid, ContactWindow,
 };

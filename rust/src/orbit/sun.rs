@@ -1,0 +1,190 @@
+//! Solar ephemeris + Earth-shadow (umbra) test.
+//!
+//! The fault engine's original eclipse model is a periodic
+//! approximation (fixed outage windows per site/orbit). This module
+//! provides the ground-truth alternative behind the
+//! `network.eclipse_from_sun` switch: a circular-ecliptic Sun vector
+//! and a cylindrical umbra test, from which `faults::plan` precomputes
+//! per-satellite shadow windows at schedule build time.
+//!
+//! The ephemeris is deliberately simple — a mean Sun on a circular
+//! ecliptic orbit (no equation of time, no eccentricity): eclipse
+//! *timing* in LEO is dominated by the orbit geometry and the ~23.4°
+//! obliquity, which this captures, while the neglected terms shift
+//! window edges by well under the contact-scan resolution. Everything
+//! is a pure function of simulated time, so schedules stay
+//! byte-deterministic per (config, seed).
+
+use super::elements::EARTH_RADIUS_KM;
+use super::walker::WalkerConstellation;
+use crate::util::Vec3;
+
+/// Mean obliquity of the ecliptic, degrees (J2000).
+pub const OBLIQUITY_DEG: f64 = 23.439_291;
+
+/// One Julian year, seconds — the period of the mean Sun.
+pub const YEAR_S: f64 = 365.25 * 86_400.0;
+
+/// Unit vector from Earth's center toward the Sun in the ECI frame at
+/// simulated time `t` (seconds). The mean ecliptic longitude is zero at
+/// `t = 0`, i.e. the simulation epoch is aligned with a vernal equinox.
+pub fn sun_direction_eci(t: f64) -> Vec3 {
+    let lon = std::f64::consts::TAU * (t / YEAR_S);
+    let (sin_l, cos_l) = lon.sin_cos();
+    let (sin_e, cos_e) = OBLIQUITY_DEG.to_radians().sin_cos();
+    Vec3::new(cos_l, cos_e * sin_l, sin_e * sin_l)
+}
+
+/// Is an ECI position (km, Earth-centered) inside Earth's umbra? The
+/// shadow is modeled as the classical cylinder: behind the terminator
+/// plane and within one Earth radius of the anti-Sun axis (the Sun is
+/// ~215 Earth-orbit-radii away, so the cone/cylinder difference is
+/// negligible at LEO altitudes).
+pub fn in_umbra(pos_km: Vec3, sun_dir: Vec3) -> bool {
+    let along = pos_km.dot(sun_dir);
+    if along >= 0.0 {
+        return false; // sunside of the terminator plane
+    }
+    let radial2 = pos_km.norm2() - along * along;
+    radial2 < EARTH_RADIUS_KM * EARTH_RADIUS_KM
+}
+
+/// Is satellite `sat` of `c` in Earth's shadow at `t`?
+pub fn sat_in_umbra(c: &WalkerConstellation, sat: usize, t: f64) -> bool {
+    in_umbra(c.position(sat, t), sun_direction_eci(t))
+}
+
+/// The umbra windows of one satellite over `[0, horizon_s]`, as sorted
+/// disjoint `(enter, exit)` pairs. Found by a grid scan at 1/128 of the
+/// orbital period (a LEO shadow arc spans dozens of steps, so none is
+/// skipped) with each crossing refined by bisection to ~1 ms.
+pub fn umbra_windows(c: &WalkerConstellation, sat: usize, horizon_s: f64) -> Vec<(f64, f64)> {
+    let n = c.propagator(sat).mean_motion_rad_s();
+    if n <= 0.0 || horizon_s <= 0.0 {
+        return Vec::new();
+    }
+    let step = std::f64::consts::TAU / n / 128.0;
+    let shadowed = |t: f64| sat_in_umbra(c, sat, t);
+    let mut windows = Vec::new();
+    let mut prev_t = 0.0;
+    let mut prev_in = shadowed(0.0);
+    let mut open = if prev_in { Some(0.0) } else { None };
+    let mut k = 1u64;
+    loop {
+        let t = (k as f64 * step).min(horizon_s);
+        let cur = shadowed(t);
+        if cur != prev_in {
+            let edge = bisect_flip(&shadowed, prev_t, t, prev_in);
+            if cur {
+                open = Some(edge);
+            } else if let Some(s) = open.take() {
+                windows.push((s, edge));
+            }
+        }
+        prev_t = t;
+        prev_in = cur;
+        if t >= horizon_s {
+            break;
+        }
+        k += 1;
+    }
+    if let Some(s) = open.take() {
+        windows.push((s, horizon_s));
+    }
+    windows
+}
+
+/// Refine the flip instant of `f` inside `(lo, hi]`, where
+/// `f(lo) == before != f(hi)`. Returns a point on the *after* side.
+fn bisect_flip(f: &impl Fn(f64) -> bool, mut lo: f64, mut hi: f64, before: bool) -> f64 {
+    for _ in 0..40 {
+        if hi - lo < 1e-3 {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        if f(mid) == before {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sun_direction_is_unit_periodic_and_equinox_aligned() {
+        for t in [0.0, 1e4, 1e6, 0.37 * YEAR_S] {
+            assert!((sun_direction_eci(t).norm() - 1.0).abs() < 1e-12, "unit at t={t}");
+            let next_year = sun_direction_eci(t + YEAR_S);
+            assert!(sun_direction_eci(t).distance(next_year) < 1e-9, "period = 1 year");
+        }
+        // vernal equinox at epoch: the Sun on +x, in the equator plane
+        let s0 = sun_direction_eci(0.0);
+        assert!(s0.distance(Vec3::new(1.0, 0.0, 0.0)) < 1e-12);
+        // half a year later: the anti-direction
+        let s_half = sun_direction_eci(0.5 * YEAR_S);
+        assert!(s_half.distance(Vec3::new(-1.0, 0.0, 0.0)) < 1e-9);
+        // the Sun leaves the equator plane by up to the obliquity
+        let s_quarter = sun_direction_eci(0.25 * YEAR_S);
+        let max_z = OBLIQUITY_DEG.to_radians().sin();
+        assert!((s_quarter.z - max_z).abs() < 1e-9, "solstice z = sin(obliquity)");
+    }
+
+    #[test]
+    fn umbra_is_the_anti_sun_cylinder() {
+        let sun = Vec3::new(1.0, 0.0, 0.0);
+        // directly behind Earth at LEO radius: shadowed
+        assert!(in_umbra(Vec3::new(-6921.0, 0.0, 0.0), sun));
+        // sunside at the same radius: lit
+        assert!(!in_umbra(Vec3::new(6921.0, 0.0, 0.0), sun));
+        // behind the terminator but outside the cylinder: lit
+        assert!(!in_umbra(Vec3::new(-100.0, 6500.0, 0.0), sun));
+        // inside the cylinder radius: shadowed
+        assert!(in_umbra(Vec3::new(-3000.0, 6000.0, 0.0), sun));
+    }
+
+    #[test]
+    fn umbra_windows_are_sorted_disjoint_and_truly_dark() {
+        let c = WalkerConstellation::paper();
+        let horizon = 86_400.0;
+        let mut total_dark = 0.0;
+        let mut any = false;
+        for sat in 0..c.len() {
+            let windows = umbra_windows(&c, sat, horizon);
+            let mut prev_end = 0.0;
+            for &(s, e) in &windows {
+                assert!(s < e, "sat {sat}: empty window ({s}, {e})");
+                assert!(s >= prev_end, "sat {sat}: overlapping windows");
+                assert!(e <= horizon);
+                prev_end = e;
+                total_dark += e - s;
+                // the midpoint is genuinely in shadow; just before the
+                // entry edge the satellite is still lit
+                assert!(sat_in_umbra(&c, sat, 0.5 * (s + e)));
+                if s > 1.0 {
+                    assert!(!sat_in_umbra(&c, sat, s - 1.0));
+                }
+            }
+            any |= !windows.is_empty();
+        }
+        assert!(any, "a LEO constellation over a day must cross Earth's shadow");
+        let frac = total_dark / (horizon * c.len() as f64);
+        assert!(
+            (0.05..0.60).contains(&frac),
+            "constellation-mean shadow fraction {frac} outside the plausible LEO band"
+        );
+    }
+
+    #[test]
+    fn umbra_windows_are_deterministic() {
+        let c = WalkerConstellation::paper();
+        let a = umbra_windows(&c, 3, 43_200.0);
+        let b = umbra_windows(&c, 3, 43_200.0);
+        assert_eq!(a, b);
+        assert!(umbra_windows(&c, 3, 0.0).is_empty());
+    }
+}

@@ -25,6 +25,12 @@
 //! computed concurrently per lane between synchronization points, then
 //! replayed serially in merged order. See `coordinator::env::LaneProbe`
 //! and `fl::propagation`.
+//!
+//! The probes demand a *pure* delay oracle, which every impairment axis
+//! honors except bandwidth queueing: a FIFO wait depends on the commit
+//! order of earlier transfers, so runs with active link queues force
+//! `lanes = 1` (`coordinator::SimEnv::lanes`, same escape hatch the
+//! reference path uses) rather than let lane probes race queue state.
 
 use super::event::{Event, EventKind};
 use super::queue::Entry;

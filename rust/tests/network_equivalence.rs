@@ -1,0 +1,238 @@
+//! Network impairment engine bit-identity suite (the PR-10 contract,
+//! `src/faults/network` + the `NetworkConfig` axes):
+//!
+//! * a **zero-intensity** network config — even one with non-default
+//!   but disabled knobs (a wait cap with no queueing, a partition
+//!   period with zero duration) — is provably invisible: every preset
+//!   × scheme run is bit-identical to the default config, at lanes 1
+//!   and 4, including the fault accounting and the JSONL trace;
+//! * every **active** axis (jitter, congestion, partition,
+//!   sun-eclipse) is deterministic — same seed, same run — and
+//!   lane-count independent (queueing forces single-lane internally,
+//!   the pure axes honor the lane-merge contract);
+//! * active impairments actually *do* something: the swept counters
+//!   (reorders, queueing delay, partition hits, eclipse blocks) are
+//!   nonzero where the scenario promises them.
+
+use asyncfleo::config::{ExperimentConfig, SchemeKind};
+use asyncfleo::coordinator::{RunResult, SimEnv};
+use asyncfleo::faults::{FaultScenario, NetworkConfig};
+use asyncfleo::fl::{make_strategy, Strategy};
+use asyncfleo::obs::RunObs;
+use asyncfleo::scenario::ScenarioRegistry;
+use asyncfleo::testkit::assert_runs_identical;
+use asyncfleo::train::SurrogateBackend;
+
+/// The schemes the contract covers (the scenario-sweep trio).
+const SCHEMES: &[SchemeKind] = &[SchemeKind::AsyncFleo, SchemeKind::FedHap, SchemeKind::SinkSat];
+
+/// Every built-in preset the suite sweeps.
+const PRESETS: &[&str] = &[
+    "paper-40",
+    "starlink-lite",
+    "polar-star",
+    "sparse-iot",
+    "equatorial-dense",
+    "haps-degraded",
+];
+
+/// Trim a preset for the suite (same clamps as the run-loop and obs
+/// equivalence suites): identity needs events, not convergence.
+fn trimmed(cfg: &ExperimentConfig) -> ExperimentConfig {
+    let mut c = cfg.clone();
+    if c.n_sats() >= 1000 {
+        c.fl.horizon_s = 2.0 * 3600.0;
+        c.fl.max_epochs = 2;
+    } else if c.n_sats() >= 100 {
+        c.fl.horizon_s = 6.0 * 3600.0;
+        c.fl.max_epochs = 3;
+    } else {
+        c.fl.horizon_s = 12.0 * 3600.0;
+        c.fl.max_epochs = 4;
+    }
+    c
+}
+
+/// A network config whose every axis is *disabled* but whose bits are
+/// not the default: the hardest zero-intensity case, because it only
+/// stays invisible if `is_nop` gates the engine and the schedule cache
+/// key normalizes to the pre-engine key.
+fn disabled_but_nondefault() -> NetworkConfig {
+    let mut net = NetworkConfig::nominal();
+    net.queue_max_wait_s = 900.0; // a cap with no queueing
+    net.partition_period_s = 14_400.0; // a period with zero duration
+    net.partition_shell = 3;
+    assert!(net.is_nop());
+    net
+}
+
+fn run_lanes(cfg: &ExperimentConfig, lanes: usize) -> RunResult {
+    let mut b = SurrogateBackend::for_config(cfg);
+    let mut env = SimEnv::new(cfg, &mut b);
+    env.set_lanes(lanes);
+    make_strategy(cfg.fl.scheme).run(&mut env)
+}
+
+/// One traced run (memory sink) at the given lane count.
+fn run_traced(cfg: &ExperimentConfig, lanes: usize) -> (RunResult, Box<RunObs>) {
+    let mut b = SurrogateBackend::for_config(cfg);
+    let mut env = SimEnv::new(cfg, &mut b);
+    env.set_lanes(lanes);
+    let mut obs = RunObs::to_memory();
+    obs.meta(
+        "test",
+        cfg.fl.scheme.name(),
+        cfg.seed,
+        cfg.fl.horizon_s,
+        cfg.n_sats(),
+        cfg.placement.sites().len(),
+    );
+    env.enable_obs(obs);
+    let r = make_strategy(cfg.fl.scheme).run(&mut env);
+    let obs = env.take_obs().expect("run was observed");
+    (r, obs)
+}
+
+#[test]
+fn zero_intensity_network_is_bitwise_invisible_on_every_preset() {
+    let reg = ScenarioRegistry::builtin();
+    for name in PRESETS {
+        let sc = reg.get(name).unwrap_or_else(|| panic!("missing preset {name}"));
+        for &scheme in SCHEMES {
+            let mut cfg = trimmed(&sc.cfg);
+            cfg.fl.scheme = scheme;
+            let baseline = run_lanes(&cfg, 1);
+            let mut nop = cfg.clone();
+            nop.network = disabled_but_nondefault();
+            for lanes in [1, 4] {
+                let r = run_lanes(&nop, lanes);
+                assert_runs_identical(
+                    &r,
+                    &baseline,
+                    &format!("{name}/{}/nop-net/lanes{lanes}", scheme.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_intensity_presets_are_exactly_nominal() {
+    // `preset(_, 0.0)` is structurally the nominal config, so the
+    // runtime invisibility above covers every zero-intensity preset.
+    for &sc in FaultScenario::ALL {
+        assert_eq!(NetworkConfig::preset(sc, 0.0), NetworkConfig::nominal(), "{sc:?}");
+    }
+}
+
+#[test]
+fn zero_intensity_network_leaves_the_trace_byte_identical() {
+    let reg = ScenarioRegistry::builtin();
+    let sc = reg.get("paper-40").expect("paper preset");
+    let mut cfg = trimmed(&sc.cfg);
+    cfg.fl.scheme = SchemeKind::AsyncFleo;
+    let (base_r, base_obs) = run_traced(&cfg, 1);
+    let mut nop = cfg.clone();
+    nop.network = disabled_but_nondefault();
+    for lanes in [1, 4] {
+        let (r, obs) = run_traced(&nop, lanes);
+        assert_runs_identical(&r, &base_r, &format!("paper-40/trace/nop-net/lanes{lanes}"));
+        assert_eq!(
+            obs.sink.lines(),
+            base_obs.sink.lines(),
+            "nop-net JSONL trace must be byte-identical (lanes {lanes})"
+        );
+    }
+}
+
+/// The active network scenarios and the counter each must move.
+const ACTIVE: &[FaultScenario] = &[
+    FaultScenario::Jitter,
+    FaultScenario::Congestion,
+    FaultScenario::Partition,
+    FaultScenario::SunEclipse,
+];
+
+#[test]
+fn active_axes_are_deterministic_and_lane_count_independent() {
+    let reg = ScenarioRegistry::builtin();
+    let sc = reg.get("paper-40").expect("paper preset");
+    for &scenario in ACTIVE {
+        for &scheme in SCHEMES {
+            let mut cfg = trimmed(&sc.cfg);
+            cfg.fl.scheme = scheme;
+            cfg.network = NetworkConfig::preset(scenario, 1.0);
+            let what = format!("paper-40/{}/{}", scenario.name(), scheme.name());
+            let one = run_lanes(&cfg, 1);
+            let twin = run_lanes(&cfg, 1);
+            assert_runs_identical(&twin, &one, &format!("{what}/twin"));
+            // congestion forces lanes = 1 internally; the pure axes
+            // satisfy the merge contract — either way, bit-identical
+            let four = run_lanes(&cfg, 4);
+            assert_runs_identical(&four, &one, &format!("{what}/lanes4"));
+        }
+    }
+}
+
+/// True when any result bit differs — the complement of
+/// [`assert_runs_identical`], for asserting an impairment *did*
+/// something.
+fn runs_differ(a: &RunResult, b: &RunResult) -> bool {
+    if a.epochs != b.epochs
+        || a.transfers != b.transfers
+        || a.fault_stats != b.fault_stats
+        || a.curve.points.len() != b.curve.points.len()
+    {
+        return true;
+    }
+    for (x, y) in a.curve.points.iter().zip(&b.curve.points) {
+        if x.time_s.to_bits() != y.time_s.to_bits()
+            || x.accuracy.to_bits() != y.accuracy.to_bits()
+        {
+            return true;
+        }
+    }
+    false
+}
+
+#[test]
+fn active_axes_move_their_counters() {
+    let reg = ScenarioRegistry::builtin();
+    let sc = reg.get("paper-40").expect("paper preset");
+    let mut cfg = trimmed(&sc.cfg);
+    cfg.fl.scheme = SchemeKind::AsyncFleo;
+    let baseline = run_lanes(&cfg, 1);
+
+    // jitter perturbs every channel delay multiplicatively, so the run
+    // must leave the nominal trajectory (reorders need bursts on one
+    // link, so they are pinned by the unit suite, not here)
+    let mut jitter = cfg.clone();
+    jitter.network = NetworkConfig::preset(FaultScenario::Jitter, 1.0);
+    let r = run_lanes(&jitter, 1);
+    assert!(runs_differ(&r, &baseline), "jitter left the run bit-identical");
+
+    // an exaggerated service factor makes IHL/uplink contention
+    // certain over a 12 h horizon; unbounded wait → no typed drops
+    let mut congested = cfg.clone();
+    congested.network.queue_service_factor = 600.0;
+    congested.network.queue_max_wait_s = 0.0;
+    let r = run_lanes(&congested, 1);
+    assert!(r.fault_stats.queued_s > 0.0, "no queueing delay: {:?}", r.fault_stats);
+
+    // a half-duty HAP-scope partition blocks every SAT<->HAP contact
+    // half the time (paper-40 places the PS on HAPs, so `Hap` scope is
+    // the one guaranteed to intersect traffic)
+    let mut parted = cfg.clone();
+    parted.network.partition_period_s = 7200.0;
+    parted.network.partition_duration_s = 3600.0;
+    parted.network.partition_scope = asyncfleo::faults::PartitionScope::Hap;
+    let r = run_lanes(&parted, 1);
+    assert!(r.fault_stats.partition_hits > 0, "no partition hits: {:?}", r.fault_stats);
+
+    // LEO satellites spend ~1/3 of each orbit in umbra, so some
+    // transfer must hit a shadow window
+    let mut eclipsed = cfg.clone();
+    eclipsed.network = NetworkConfig::preset(FaultScenario::SunEclipse, 1.0);
+    let r = run_lanes(&eclipsed, 1);
+    assert!(r.fault_stats.eclipse_blocked > 0, "no eclipse blocks: {:?}", r.fault_stats);
+}
